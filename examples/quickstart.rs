@@ -1,0 +1,107 @@
+//! Quickstart: the full three-layer stack end to end.
+//!
+//! Loads the AOT-compiled tiny transformer (JAX + Pallas paged-attention
+//! kernel → HLO text → PJRT CPU), stands up the serving engine with the
+//! Justitia scheduler, submits a handful of task-parallel agents, and
+//! reports per-agent JCT plus serving throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use justitia::config::{BackendProfile, Config, Policy};
+use justitia::cost::CostModel;
+use justitia::engine::Engine;
+use justitia::runtime::{PjrtBackend, PjrtModel};
+use justitia::workload::test_support::{agent_at, inference};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    println!("loading AOT artifacts from {} …", artifacts.display());
+    let model = PjrtModel::load(artifacts)?;
+    println!(
+        "  platform {}  |  {} layers, d_model {}, vocab {}  |  pool {} pages x {} tokens",
+        model.platform(),
+        model.manifest.n_layers,
+        model.manifest.d_model,
+        model.manifest.vocab,
+        model.manifest.n_pages,
+        model.manifest.page_size,
+    );
+
+    let mut cfg = Config::default();
+    cfg.backend = BackendProfile {
+        name: "tiny-cpu".into(),
+        kv_tokens: (model.manifest.n_pages * model.manifest.page_size) as u64,
+        page_size: model.manifest.page_size as u32,
+        alpha: 0.0,
+        beta_prefill: 0.0,
+        beta_decode: 0.0,
+        swap_cost_per_token: 0.0,
+    };
+    cfg.max_batch = model.max_decode_batch();
+
+    let scheduler = justitia::sched::build(Policy::Justitia, cfg.backend.kv_tokens, 1.0);
+    let mut engine = Engine::new(&cfg, scheduler, PjrtBackend::new(model));
+
+    // Three task-parallel agents, sized for the tiny artifact model
+    // (prompts <= 64 tokens, contexts <= 128).
+    let agents = vec![
+        // "DocMerging"-shaped: 3 parallel merges then a score.
+        agent_at(0, 0.0, vec![
+            vec![inference(0, 0, 24, 12), inference(1, 0, 28, 10), inference(2, 0, 20, 14)],
+            vec![inference(3, 1, 32, 8)],
+        ]),
+        // "Self-consistency"-shaped: 4 parallel reasoning paths.
+        agent_at(1, 0.0, vec![vec![
+            inference(0, 0, 16, 20),
+            inference(1, 0, 16, 18),
+            inference(2, 0, 16, 22),
+            inference(3, 0, 16, 16),
+        ]]),
+        // Tiny verification agent.
+        agent_at(2, 0.0, vec![vec![inference(0, 0, 10, 6), inference(1, 0, 12, 4)]]),
+    ];
+
+    let model_cost = CostModel::MemoryCentric;
+    let mut total_tokens = 0u64;
+    for a in agents {
+        total_tokens += a.total_tokens();
+        let cost = model_cost.agent_cost(&a);
+        println!(
+            "submit agent {} ({} tasks, {} tokens, KV token-time cost {:.0})",
+            a.id,
+            a.n_tasks(),
+            a.total_tokens(),
+            cost
+        );
+        engine.submit(a, cost);
+    }
+
+    let t0 = Instant::now();
+    let mut iterations = 0u64;
+    while engine.has_work() {
+        engine.step();
+        iterations += 1;
+        assert!(iterations < 10_000, "runaway");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n--- results ---");
+    for id in 0..3u32 {
+        println!(
+            "agent {id}: JCT {:.3}s (engine time)",
+            engine.metrics.jct(id).expect("completed")
+        );
+    }
+    println!(
+        "served {} agents / {} tokens in {:.2}s wall ({} engine iterations, {:.0} tok/s)",
+        engine.metrics.completed_agents(),
+        total_tokens,
+        wall,
+        iterations,
+        total_tokens as f64 / wall
+    );
+    engine.kv.check_invariants().expect("KV pool clean");
+    println!("KV pool clean: all {} pages returned", engine.kv.total_pages());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Serve-and-query demo: starts the HTTP front-end over the PJRT model on a
+//! background thread, submits a few agents over real TCP, polls for
+//! completion, and prints the serving metrics — what a downstream user's
+//! first integration looks like.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_http`
+
+use justitia::config::Policy;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const PORT: u16 = 18080;
+
+fn http(method: &str, path: &str, body: &str) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(("127.0.0.1", PORT))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let body_start = resp.find("\r\n\r\n").map(|i| i + 4).unwrap_or(0);
+    Ok(resp[body_start..].to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    // Server thread (blocks forever; the process exits when main does).
+    std::thread::spawn(|| {
+        if let Err(e) =
+            justitia::server::http::serve(std::path::Path::new("artifacts"), PORT, Policy::Justitia)
+        {
+            eprintln!("server error: {e:#}");
+            std::process::exit(1);
+        }
+    });
+
+    // Wait for readiness.
+    let mut ok = false;
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(200));
+        if let Ok(b) = http("GET", "/healthz", "") {
+            if b.contains("true") {
+                ok = true;
+                break;
+            }
+        }
+    }
+    anyhow::ensure!(ok, "server did not come up");
+    println!("server up on :{PORT}");
+
+    // Submit: one explicit-stage agent + three class-generated ones.
+    let explicit = r#"{"class": "DM", "stages": [[{"p": 20, "d": 8}, {"p": 24, "d": 6}], [{"p": 16, "d": 5}]]}"#;
+    println!("POST /agents (explicit DM): {}", http("POST", "/agents", explicit)?.trim());
+    for class in ["EV", "CC", "SC"] {
+        let body = format!(r#"{{"class": "{class}"}}"#);
+        println!("POST /agents ({class}):        {}", http("POST", "/agents", &body)?.trim());
+    }
+
+    // Poll until all four complete.
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(300));
+        let m = http("GET", "/metrics", "")?;
+        print!("\r/metrics: {}          ", m.trim());
+        std::io::stdout().flush()?;
+        if m.contains("\"completed\":4") {
+            println!();
+            break;
+        }
+        anyhow::ensure!(t0.elapsed() < Duration::from_secs(120), "timed out: {m}");
+    }
+
+    for id in 0..4 {
+        println!("GET /agents/{id}: {}", http("GET", &format!("/agents/{id}"), "")?.trim());
+    }
+    println!("done in {:.1}s wall", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,197 @@
+"""AOT compile path: lower the Layer-2 model (with its Layer-1 Pallas
+kernel) to HLO **text** artifacts the Rust runtime loads via PJRT.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to ../artifacts, gitignored):
+  model_config.json       — architecture + artifact inventory
+  weights.jtt             — seeded weights ("JTT1" container, sorted names)
+  prefill.hlo.txt         — prefill(1 sequence, padded to max_prefill)
+  decode_b{B}.hlo.txt     — one decode step per batch-size variant
+
+Parameter convention shared with rust/src/runtime: every entry point takes
+the weight arrays first (sorted by name — BTreeMap order in Rust), then its
+positional state arguments in the documented order.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--seed 0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DECODE_BATCHES = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_jtt(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write the JTT1 tensor container (reader: rust/src/util/tensor_file.rs)."""
+    entries = []
+    blobs = []
+    offset = 0
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        if arr.dtype == np.float32:
+            dtype = "f32"
+        elif arr.dtype == np.int32:
+            dtype = "i32"
+        else:
+            raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+        raw = arr.astype("<" + arr.dtype.str[1:]).tobytes()
+        entries.append(
+            {
+                "name": name,
+                "dtype": dtype,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            }
+        )
+        blobs.append(raw)
+        offset += len(raw)
+    header = json.dumps({"tensors": entries}, sort_keys=True).encode()
+    with open(path, "wb") as f:
+        f.write(b"JTT1")
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def lower_prefill(cfg: M.ModelConfig):
+    """prefill(weights..., tokens[S], seq_len[], block_table[maxp], k_pool, v_pool)"""
+    def fn(*args):
+        n_w = len(M.weight_names(cfg))
+        w_list = list(args[:n_w])
+        tokens, seq_len, block_table, k_pool, v_pool = args[n_w:]
+        return M.prefill(cfg, w_list, tokens, seq_len, block_table, k_pool, v_pool)
+
+    w_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for shape in _weight_shapes(cfg)
+    ]
+    pool = jax.ShapeDtypeStruct(cfg.pool_shape(), jnp.float32)
+    specs = w_specs + [
+        jax.ShapeDtypeStruct((cfg.max_prefill,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.max_pages_per_seq,), jnp.int32),
+        pool,
+        pool,
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int):
+    """decode(weights..., tokens[B], positions[B], block_tables[B,maxp], k_pool, v_pool)"""
+    def fn(*args):
+        n_w = len(M.weight_names(cfg))
+        w_list = list(args[:n_w])
+        tokens, positions, block_tables, k_pool, v_pool = args[n_w:]
+        return M.decode(cfg, w_list, tokens, positions, block_tables, k_pool, v_pool)
+
+    w_specs = [jax.ShapeDtypeStruct(shape, jnp.float32) for shape in _weight_shapes(cfg)]
+    pool = jax.ShapeDtypeStruct(cfg.pool_shape(), jnp.float32)
+    specs = w_specs + [
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch, cfg.max_pages_per_seq), jnp.int32),
+        pool,
+        pool,
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+@functools.lru_cache(maxsize=None)
+def _weight_shapes_cached(cfg: M.ModelConfig):
+    w = M.init_weights(cfg, seed=0)
+    return tuple(tuple(w[n].shape) for n in M.weight_names(cfg))
+
+
+def _weight_shapes(cfg: M.ModelConfig):
+    return list(_weight_shapes_cached(cfg))
+
+
+def build_artifacts(out_dir: str, cfg: M.ModelConfig, seed: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "n_pages": cfg.n_pages,
+            "page_size": cfg.page_size,
+            "max_pages_per_seq": cfg.max_pages_per_seq,
+            "max_prefill": cfg.max_prefill,
+            "max_positions": cfg.max_positions,
+            "seed": seed,
+        },
+        "weight_names": M.weight_names(cfg),
+        "decode_batches": DECODE_BATCHES,
+        "artifacts": {},
+    }
+
+    weights = M.init_weights(cfg, seed=seed)
+    jtt = os.path.join(out_dir, "weights.jtt")
+    write_jtt(jtt, weights)
+    manifest["artifacts"]["weights"] = "weights.jtt"
+    print(f"wrote {jtt} ({os.path.getsize(jtt)} bytes, {len(weights)} tensors)")
+
+    text = to_hlo_text(lower_prefill(cfg))
+    path = os.path.join(out_dir, "prefill.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"]["prefill"] = "prefill.hlo.txt"
+    print(f"wrote {path} ({len(text)} chars)")
+
+    for b in DECODE_BATCHES:
+        text = to_hlo_text(lower_decode(cfg, b))
+        path = os.path.join(out_dir, f"decode_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"decode_b{b}"] = f"decode_b{b}.hlo.txt"
+        print(f"wrote {path} ({len(text)} chars)")
+
+    cfg_path = os.path.join(out_dir, "model_config.json")
+    with open(cfg_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {cfg_path}")
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build_artifacts(os.path.abspath(args.out_dir), M.ModelConfig(), args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

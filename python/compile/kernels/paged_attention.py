@@ -1,0 +1,135 @@
+"""Layer-1 Pallas kernel: paged attention for one decode step.
+
+The compute hot-spot of the serving engine: each running sequence attends
+from its single new-token query to its whole KV history, which lives
+scattered across fixed-size pages of the global KV pool (vLLM paging). The
+Rust KV allocator owns the block tables; this kernel consumes them.
+
+HARDWARE ADAPTATION (DESIGN.md §3): vLLM's CUDA kernel gives each (seq, head)
+a threadblock that gathers KV pages from HBM via a per-block pointer array
+and reduces with warp shuffles. On TPU the same insight — keep the page
+gather off the critical path of the softmax — maps to a BlockSpec-driven
+HBM→VMEM schedule: the grid iterates (sequence, kv-page); each step pulls one
+(page_size, H·D) KV tile into VMEM and folds it into an online-softmax
+accumulator held in VMEM scratch. The MXU does the q·kᵀ and p·v contractions;
+the online softmax (running max m, normalizer l) replaces warp-level
+reductions. Block tables enter as a small int32 input, the TPU analogue of
+the pointer array.
+
+Lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated from the VMEM footprint and
+MXU utilization of these block shapes in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _paged_attn_kernel(
+    # scalar-ish inputs (blocked per grid step)
+    block_tables_ref,  # [1, max_pages] int32 — this sequence's page table
+    seq_len_ref,       # [1] int32 — this sequence's context length
+    q_ref,             # [1, H, D]
+    k_pages_ref,       # [P, page, H, D] (full pool, resident)
+    v_pages_ref,       # [P, page, H, D]
+    o_ref,             # [1, H, D]
+    *,
+    page_size: int,
+    max_pages: int,
+):
+    h = q_ref.shape[1]
+    d = q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32)  # [H, D]
+    seq_len = seq_len_ref[0]
+
+    def body(p_idx, carry):
+        m_prev, l_prev, acc = carry  # [H,1], [H,1], [H,D]
+        page_id = block_tables_ref[0, p_idx]
+        # HBM→VMEM tile pull: one KV page, all heads.
+        k_tile = pl.load(
+            k_pages_ref, (pl.dslice(page_id, 1), slice(None), slice(None), slice(None))
+        )[0].astype(jnp.float32)  # [page, H, D]
+        v_tile = pl.load(
+            v_pages_ref, (pl.dslice(page_id, 1), slice(None), slice(None), slice(None))
+        )[0].astype(jnp.float32)
+
+        # Scores for this page: [H, page] (MXU contraction over D).
+        s = jnp.einsum("hd,phd->hp", q, k_tile) * (1.0 / (d**0.5))
+        # Mask positions beyond the sequence length.
+        pos = p_idx * page_size + jax.lax.iota(jnp.int32, page_size)
+        s = jnp.where((pos < seq_len)[None, :], s, NEG_INF)
+
+        # Online softmax update.
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # [H,1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p_exp = jnp.exp(s - m_new)  # [H, page]
+        l_new = l_prev * alpha + jnp.sum(p_exp, axis=1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("hp,phd->hd", p_exp, v_tile)
+        return m_new, l_new, acc_new
+
+    n_pages = (seq_len + page_size - 1) // page_size
+    m0 = jnp.full((h, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((h, 1), jnp.float32)
+    acc0 = jnp.zeros((h, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *, interpret=True):
+    """Paged attention over a batch of decoding sequences.
+
+    Args:
+      q:            [B, H, D]
+      k_pages:      [P, page, H, D]
+      v_pages:      [P, page, H, D]
+      block_tables: [B, max_pages] int32
+      seq_lens:     [B] int32
+      interpret:    must stay True on CPU PJRT (Mosaic unavailable).
+
+    Returns:
+      [B, H, D]
+    """
+    b, h, d = q.shape
+    n_pages_total, page_size, _, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+
+    kernel = functools.partial(
+        _paged_attn_kernel, page_size=page_size, max_pages=max_pages
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, max_pages), lambda i: (i, 0)),          # block table row
+            pl.BlockSpec((1,), lambda i: (i,)),                       # seq len
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),             # q row
+            pl.BlockSpec((n_pages_total, page_size, h, d), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((n_pages_total, page_size, h, d), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pages, v_pages)
+
+
+def vmem_footprint_bytes(page_size: int, n_heads: int, d_head: int, dtype_bytes: int = 4):
+    """Estimated VMEM working set per grid step (perf model, DESIGN.md §Perf):
+    one K tile + one V tile + q + accumulators."""
+    tile = page_size * n_heads * d_head * dtype_bytes
+    q = n_heads * d_head * dtype_bytes
+    acc = n_heads * (d_head + 2) * 4
+    return 2 * tile + q + acc
+
+
+def mxu_flops_per_step(page_size: int, n_heads: int, d_head: int):
+    """MXU MACs per grid step: q·kᵀ + p·v contractions."""
+    return 2 * 2 * page_size * n_heads * d_head

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference implementation here written in
+straightforward jax.numpy; pytest sweeps shapes/dtypes (hypothesis where
+available) asserting allclose between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
+    """Reference paged attention for one decode step.
+
+    Args:
+      q:            [B, H, D]   query for the new token of each sequence.
+      k_pages:      [P, page, H, D]  paged key pool.
+      v_pages:      [P, page, H, D]  paged value pool.
+      block_tables: [B, max_pages] int32, page ids per sequence (row-padded
+                    with any valid id; positions >= seq_len are masked).
+      seq_lens:     [B] int32, current context length of each sequence
+                    (including the token being decoded).
+
+    Returns:
+      [B, H, D] attention output.
+    """
+    b, h, d = q.shape
+    _, page, _, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+
+    # Gather each sequence's KV: [B, max_pages*page, H, D].
+    k = k_pages[block_tables]  # [B, max_pages, page, H, D]
+    v = v_pages[block_tables]
+    k = k.reshape(b, max_pages * page, h, d)
+    v = v.reshape(b, max_pages * page, h, d)
+
+    # Scores per head: [B, H, T]
+    scores = jnp.einsum("bhd,bthd->bht", q, k) * scale
+    positions = jnp.arange(max_pages * page)[None, None, :]
+    mask = positions < seq_lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bht,bthd->bhd", probs, v)
+
+
+def causal_attention_ref(q, k, v):
+    """Reference causal self-attention over a full sequence (prefill path).
+
+    Args:
+      q, k, v: [S, H, D]
+
+    Returns:
+      [S, H, D]
+    """
+    s, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+def masked_causal_attention_ref(q, k, v, valid_len):
+    """Causal attention where only the first `valid_len` positions are real
+    (the rest is right-padding). Padding queries produce garbage that the
+    caller discards; padding keys are masked out of every real query's
+    softmax.
+    """
+    s, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    key_ok = (jnp.arange(s) < valid_len)[None, None, :]
+    mask = causal[None, :, :] & key_ok
+    scores = jnp.where(mask, scores, -jnp.inf)
+    # Rows with no valid key (padding queries) would be NaN; force uniform.
+    all_masked = ~mask.any(axis=-1, keepdims=True)
+    scores = jnp.where(all_masked, 0.0, scores)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, v)

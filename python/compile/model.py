@@ -1,0 +1,227 @@
+"""Layer-2 JAX model: a tiny decoder-only transformer with a PAGED KV cache.
+
+Architecture (real, weights seeded — substitution T6 in DESIGN.md):
+  token embedding + learned positional embedding
+  n_layers × [RMSNorm → multi-head attention → RMSNorm → GeLU MLP]
+  final RMSNorm → tied unembedding
+
+The KV cache is the vLLM-style paged pool the whole paper is about:
+`k_pool/v_pool: [n_layers, n_pages+1, page_size, n_heads, d_head]`, where
+page index `n_pages` is a trash page absorbing writes from padding positions.
+The Rust engine owns the block tables; `prefill` and `decode` take them as
+inputs and return updated pools. `decode`'s attention is the Layer-1 Pallas
+paged-attention kernel, so it lowers into the same HLO module.
+
+Both entry points are pure functions lowered once by `aot.py` to HLO text
+and executed from Rust via PJRT — Python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.paged_attention import paged_attention
+from .kernels.ref import masked_causal_attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 2048
+    d_model: int = 128
+    n_heads: int = 4
+    d_head: int = 32
+    n_layers: int = 2
+    d_ff: int = 512
+    n_pages: int = 64          # real pages (the Rust allocator's pool)
+    page_size: int = 16
+    max_pages_per_seq: int = 8
+    max_prefill: int = 64      # padded prefill length
+    max_positions: int = 1024
+
+    @property
+    def trash_page(self) -> int:
+        return self.n_pages
+
+    def pool_shape(self):
+        return (self.n_layers, self.n_pages + 1, self.page_size, self.n_heads, self.d_head)
+
+
+# Weight-name order is the AOT parameter convention: sorted names here must
+# match the sorted-key order the Rust runtime reads from weights.jtt.
+def weight_names(cfg: ModelConfig) -> List[str]:
+    names = ["embed", "pos_embed", "ln_f"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"layer{l:02d}.ln1",
+            f"layer{l:02d}.wqkv",
+            f"layer{l:02d}.wo",
+            f"layer{l:02d}.ln2",
+            f"layer{l:02d}.w_up",
+            f"layer{l:02d}.w_down",
+        ]
+    return sorted(names)
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Seeded random init (no network access for real checkpoints)."""
+    rng = np.random.default_rng(seed)
+
+    def dense(shape, scale=None):
+        scale = scale or (1.0 / np.sqrt(shape[0]))
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    w: Dict[str, np.ndarray] = {
+        "embed": dense((cfg.vocab, cfg.d_model), 0.02),
+        "pos_embed": dense((cfg.max_positions, cfg.d_model), 0.02),
+        "ln_f": np.ones((cfg.d_model,), np.float32),
+    }
+    for l in range(cfg.n_layers):
+        p = f"layer{l:02d}."
+        w[p + "ln1"] = np.ones((cfg.d_model,), np.float32)
+        w[p + "wqkv"] = dense((cfg.d_model, 3 * cfg.n_heads * cfg.d_head))
+        w[p + "wo"] = dense((cfg.n_heads * cfg.d_head, cfg.d_model))
+        w[p + "ln2"] = np.ones((cfg.d_model,), np.float32)
+        w[p + "w_up"] = dense((cfg.d_model, cfg.d_ff))
+        w[p + "w_down"] = dense((cfg.d_ff, cfg.d_model))
+    return w
+
+
+def weights_as_list(cfg: ModelConfig, w: Dict[str, np.ndarray]) -> List[np.ndarray]:
+    return [w[n] for n in weight_names(cfg)]
+
+
+def _wdict(cfg: ModelConfig, w_list) -> Dict[str, jnp.ndarray]:
+    return dict(zip(weight_names(cfg), w_list))
+
+
+def rms_norm(x, gain):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * gain
+
+
+def _qkv(cfg: ModelConfig, w, l, x):
+    """Project to q, k, v, each [..., H, D]."""
+    p = f"layer{l:02d}."
+    qkv = x @ w[p + "wqkv"]  # [..., 3*H*D]
+    new_shape = qkv.shape[:-1] + (3, cfg.n_heads, cfg.d_head)
+    qkv = qkv.reshape(new_shape)
+    return qkv[..., 0, :, :], qkv[..., 1, :, :], qkv[..., 2, :, :]
+
+
+def _mlp(cfg: ModelConfig, w, l, x):
+    p = f"layer{l:02d}."
+    return jax.nn.gelu(x @ w[p + "w_up"]) @ w[p + "w_down"]
+
+
+def prefill(cfg: ModelConfig, w_list, tokens, seq_len, block_table, k_pool, v_pool):
+    """Prefill ONE sequence (B=1 padded to max_prefill).
+
+    Args:
+      tokens:      [S] int32, right-padded with 0.
+      seq_len:     [] int32, true prompt length (<= S).
+      block_table: [max_pages_per_seq] int32 page ids for this sequence.
+      k_pool/v_pool: paged pools (see ModelConfig.pool_shape).
+
+    Returns:
+      (logits [vocab] for the last real token, k_pool, v_pool)
+    """
+    w = _wdict(cfg, w_list)
+    s = tokens.shape[0]
+    positions = jnp.arange(s)
+    x = w["embed"][tokens] + w["pos_embed"][positions]
+
+    # Paged write targets for every position; padding goes to the trash page.
+    page_idx = positions // cfg.page_size
+    offs = positions % cfg.page_size
+    valid = positions < seq_len
+    page_ids = jnp.where(valid, block_table[page_idx], cfg.trash_page)
+
+    for l in range(cfg.n_layers):
+        p = f"layer{l:02d}."
+        h = rms_norm(x, w[p + "ln1"])
+        q, k, v = _qkv(cfg, w, l, h)  # [S, H, D]
+        k_pool = k_pool.at[l, page_ids, offs].set(k)
+        v_pool = v_pool.at[l, page_ids, offs].set(v)
+        # Full-sequence causal attention over the in-flight activations
+        # (prefill never needs the pool — it IS the context).
+        attn = masked_causal_attention_ref(q, k, v, seq_len)
+        x = x + attn.reshape(s, cfg.n_heads * cfg.d_head) @ w[p + "wo"]
+        x = x + _mlp(cfg, w, l, rms_norm(x, w[p + "ln2"]))
+
+    x = rms_norm(x, w["ln_f"])
+    last = x[jnp.maximum(seq_len - 1, 0)]
+    logits = last @ w["embed"].T
+    return logits, k_pool, v_pool
+
+
+def decode(cfg: ModelConfig, w_list, tokens, positions, block_tables, k_pool, v_pool):
+    """One decode step for a batch of B sequences.
+
+    Args:
+      tokens:       [B] int32 last generated token per sequence.
+      positions:    [B] int32 position of `tokens` in each sequence
+                    (so the context length after this step is positions+1).
+      block_tables: [B, max_pages_per_seq] int32.
+      k_pool/v_pool: paged pools.
+
+    Returns:
+      (logits [B, vocab], k_pool, v_pool)
+    """
+    w = _wdict(cfg, w_list)
+    b = tokens.shape[0]
+    x = w["embed"][tokens] + w["pos_embed"][positions]  # [B, dm]
+    seq_lens = positions + 1
+
+    batch = jnp.arange(b)
+    page_ids = block_tables[batch, positions // cfg.page_size]
+    offs = positions % cfg.page_size
+
+    for l in range(cfg.n_layers):
+        p = f"layer{l:02d}."
+        h = rms_norm(x, w[p + "ln1"])
+        q, k, v = _qkv(cfg, w, l, h)  # [B, H, D]
+        k_pool = k_pool.at[l, page_ids, offs].set(k)
+        v_pool = v_pool.at[l, page_ids, offs].set(v)
+        # Layer-1 Pallas kernel: paged attention over the pool.
+        attn = paged_attention(q, k_pool[l], v_pool[l], block_tables, seq_lens)
+        x = x + attn.reshape(b, cfg.n_heads * cfg.d_head) @ w[p + "wo"]
+        x = x + _mlp(cfg, w, l, rms_norm(x, w[p + "ln2"]))
+
+    x = rms_norm(x, w["ln_f"])
+    logits = x @ w["embed"].T
+    return logits, k_pool, v_pool
+
+
+def decode_ref(cfg: ModelConfig, w_list, tokens, positions, block_tables, k_pool, v_pool):
+    """decode() with the attention swapped for the pure-jnp oracle — the
+    L2-level correctness check (pytest asserts decode == decode_ref)."""
+    from .kernels.ref import paged_attention_ref
+
+    w = _wdict(cfg, w_list)
+    b = tokens.shape[0]
+    x = w["embed"][tokens] + w["pos_embed"][positions]
+    seq_lens = positions + 1
+    batch = jnp.arange(b)
+    page_ids = block_tables[batch, positions // cfg.page_size]
+    offs = positions % cfg.page_size
+    for l in range(cfg.n_layers):
+        p = f"layer{l:02d}."
+        h = rms_norm(x, w[p + "ln1"])
+        q, k, v = _qkv(cfg, w, l, h)
+        k_pool = k_pool.at[l, page_ids, offs].set(k)
+        v_pool = v_pool.at[l, page_ids, offs].set(v)
+        attn = paged_attention_ref(q, k_pool[l], v_pool[l], block_tables, seq_lens)
+        x = x + attn.reshape(b, cfg.n_heads * cfg.d_head) @ w[p + "wo"]
+        x = x + _mlp(cfg, w, l, rms_norm(x, w[p + "ln2"]))
+    x = rms_norm(x, w["ln_f"])
+    return x @ w["embed"].T, k_pool, v_pool
+
+
+def empty_pools(cfg: ModelConfig):
+    shape = cfg.pool_shape()
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)

@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas paged-attention kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute hot-spot: hypothesis
+sweeps shapes (batch, heads, head dim, page size, pool size, ragged sequence
+lengths) and dtypes, asserting allclose against `ref.paged_attention_ref`.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.paged_attention import (
+    mxu_flops_per_step,
+    paged_attention,
+    vmem_footprint_bytes,
+)
+from compile.kernels import ref
+
+
+def make_case(rng, b, h, d, page, n_pages, max_pages, dtype=np.float32):
+    q = jnp.asarray(rng.normal(size=(b, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(n_pages, page, h, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(n_pages, page, h, d)), dtype)
+    bt = jnp.asarray(rng.integers(0, n_pages, size=(b, max_pages)), jnp.int32)
+    sl = jnp.asarray(rng.integers(1, max_pages * page + 1, size=(b,)), jnp.int32)
+    return q, k, v, bt, sl
+
+
+def assert_matches_ref(q, k, v, bt, sl, rtol=3e-5, atol=3e-5):
+    out = paged_attention(q, k, v, bt, sl)
+    want = ref.paged_attention_ref(q, k, v, bt, sl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=rtol, atol=atol)
+
+
+class TestPagedAttentionBasic:
+    def test_single_sequence_single_page(self):
+        rng = np.random.default_rng(1)
+        assert_matches_ref(*make_case(rng, 1, 1, 8, 4, 2, 1))
+
+    def test_batch_matches_ref(self):
+        rng = np.random.default_rng(2)
+        assert_matches_ref(*make_case(rng, 4, 4, 32, 16, 8, 4))
+
+    def test_seq_len_one(self):
+        rng = np.random.default_rng(3)
+        q, k, v, bt, _ = make_case(rng, 2, 2, 16, 8, 4, 2)
+        sl = jnp.asarray([1, 1], jnp.int32)
+        assert_matches_ref(q, k, v, bt, sl)
+
+    def test_full_pages(self):
+        # seq_len exactly fills every page.
+        rng = np.random.default_rng(4)
+        q, k, v, bt, _ = make_case(rng, 2, 2, 16, 8, 4, 3)
+        sl = jnp.asarray([24, 16], jnp.int32)
+        assert_matches_ref(q, k, v, bt, sl)
+
+    def test_partial_last_page_masked(self):
+        # Garbage beyond seq_len in the last page must not leak in.
+        rng = np.random.default_rng(5)
+        q, k, v, bt, _ = make_case(rng, 1, 2, 16, 8, 4, 2)
+        k = k.at[:, :, :, :].set(jnp.where(jnp.isnan(k), 0, k))
+        # Poison positions >= seq_len by making the last page huge.
+        k = k * 1.0
+        big = k.at[int(bt[0, 1]), 5:, :, :].set(1e4)
+        sl = jnp.asarray([13], jnp.int32)  # 8 + 5 valid
+        assert_matches_ref(q, big, v, bt, sl)
+
+    def test_shared_pages_between_sequences(self):
+        # Two sequences whose block tables alias the same pages (prefix
+        # sharing) must each read them correctly.
+        rng = np.random.default_rng(6)
+        q, k, v, _, _ = make_case(rng, 2, 2, 16, 8, 6, 2)
+        bt = jnp.asarray([[0, 1], [0, 2]], jnp.int32)
+        sl = jnp.asarray([12, 16], jnp.int32)
+        assert_matches_ref(q, k, v, bt, sl)
+
+    def test_softmax_normalization(self):
+        # Uniform values ⇒ output equals value vector regardless of length.
+        b, h, d, page, n_pages, maxp = 1, 2, 8, 4, 4, 2
+        q = jnp.ones((b, h, d), jnp.float32)
+        k = jnp.ones((n_pages, page, h, d), jnp.float32)
+        v = jnp.full((n_pages, page, h, d), 2.5, jnp.float32)
+        bt = jnp.zeros((b, maxp), jnp.int32)
+        sl = jnp.asarray([7], jnp.int32)
+        out = paged_attention(q, k, v, bt, sl)
+        np.testing.assert_allclose(np.asarray(out), 2.5, rtol=1e-6)
+
+    def test_numerical_stability_large_scores(self):
+        rng = np.random.default_rng(7)
+        q, k, v, bt, sl = make_case(rng, 2, 2, 16, 8, 4, 2)
+        assert_matches_ref(q * 50.0, k * 50.0, v, bt, sl, rtol=1e-4, atol=1e-4)
+        out = paged_attention(q * 50.0, k * 50.0, v, bt, sl)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    page=st.sampled_from([4, 8, 16]),
+    max_pages=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_attention_hypothesis_sweep(b, h, d, page, max_pages, seed):
+    rng = np.random.default_rng(seed)
+    n_pages = max_pages + int(rng.integers(1, 8))
+    assert_matches_ref(*make_case(rng, b, h, d, page, n_pages, max_pages))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_paged_attention_ragged_lengths(seed):
+    # Heavily ragged batches: lengths from 1 to max, mixed in one batch.
+    rng = np.random.default_rng(seed)
+    b, h, d, page, n_pages, maxp = 8, 2, 16, 8, 16, 4
+    q, k, v, bt, _ = make_case(rng, b, h, d, page, n_pages, maxp)
+    sl = jnp.asarray([1, 2, 7, 8, 9, 16, 31, 32], jnp.int32)
+    assert_matches_ref(q, k, v, bt, sl)
+
+
+class TestPerfModel:
+    def test_vmem_footprint_within_budget(self):
+        # DESIGN.md §Perf: the block shapes chosen for the artifact config
+        # must fit comfortably in a 16 MiB VMEM (use << 1/4 of it).
+        bytes_ = vmem_footprint_bytes(page_size=16, n_heads=4, d_head=32)
+        assert bytes_ < 4 * 1024 * 1024
+        assert bytes_ == 2 * 16 * 4 * 32 * 4 + 4 * 32 * 4 + 4 * 34 * 4
+
+    def test_mxu_flops_positive_scaling(self):
+        assert mxu_flops_per_step(16, 4, 32) == 2 * 2 * 16 * 4 * 32
+        assert mxu_flops_per_step(32, 4, 32) == 2 * mxu_flops_per_step(16, 4, 32)
+
+
+class TestCausalRefs:
+    def test_masked_matches_unmasked_when_full(self):
+        rng = np.random.default_rng(8)
+        s, h, d = 12, 2, 16
+        q = jnp.asarray(rng.normal(size=(s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(s, h, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(s, h, d)), jnp.float32)
+        full = ref.causal_attention_ref(q, k, v)
+        masked = ref.masked_causal_attention_ref(q, k, v, s)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(masked), rtol=1e-6, atol=1e-6)
+
+    def test_padding_does_not_affect_valid_rows(self):
+        rng = np.random.default_rng(9)
+        s, h, d, valid = 16, 2, 8, 9
+        q = jnp.asarray(rng.normal(size=(s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(s, h, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(s, h, d)), jnp.float32)
+        out1 = ref.masked_causal_attention_ref(q, k, v, valid)
+        # Poison the padding region; valid-row outputs must be unchanged.
+        k2 = k.at[valid:].set(1e6)
+        v2 = v.at[valid:].set(-1e6)
+        out2 = ref.masked_causal_attention_ref(q, k2, v2, valid)
+        np.testing.assert_allclose(
+            np.asarray(out1[:valid]), np.asarray(out2[:valid]), rtol=1e-5, atol=1e-5
+        )

@@ -1,0 +1,86 @@
+//! Ablations over the design choices DESIGN.md calls out (beyond the
+//! paper's own Fig. 11 cost-model ablation):
+//!
+//!  A1. KV page size — granularity vs fragmentation of the paged pool.
+//!  A2. Batch-slot cap (`max_batch`) — slot pressure vs alpha amortization.
+//!  A3. Predictor in the loop vs oracle costs for Justitia (does the real
+//!      TF-IDF+MLP close the loop at suite scale?).
+//!  A4. Bursty (Gamma, CV≈1.4) vs smooth (uniform-stretched) arrivals —
+//!      does the Mooncake-style burstiness matter for the headline gap?
+
+use justitia::config::{Config, Policy, WorkloadConfig};
+use justitia::cost::CostModel;
+use justitia::experiments::{run_policy, run_policy_oracle, CostSource};
+use justitia::util::bench::{section, ResultsFile};
+use justitia::workload::trace::build_suite;
+
+fn cfg_at(density: f64, seed: u64) -> (Config, justitia::workload::Suite) {
+    let mut cfg = Config::default();
+    cfg.workload = WorkloadConfig { n_agents: 300, seed, ..Default::default() }.with_density(density);
+    let suite = build_suite(&cfg.workload);
+    (cfg, suite)
+}
+
+fn main() {
+    let mut out = ResultsFile::new("bench_ablations.txt");
+
+    section("A1: KV page size (Justitia vs VTC, 3x)");
+    out.line(format!("{:>9} {:>12} {:>12} {:>8}", "page", "Justitia", "VTC", "gap"));
+    for page in [8u32, 16, 32, 64] {
+        let (mut cfg, suite) = cfg_at(3.0, 42);
+        cfg.backend.page_size = page; // kv_tokens constant → pages vary
+        let j = run_policy_oracle(&cfg, &suite, Policy::Justitia).avg_jct();
+        let v = run_policy_oracle(&cfg, &suite, Policy::Vtc).avg_jct();
+        out.line(format!("{page:>9} {j:>11.1}s {v:>11.1}s {:>7.1}%", (1.0 - j / v) * 100.0));
+    }
+
+    section("A2: batch-slot cap (3x)");
+    out.line(format!("{:>9} {:>12} {:>12}", "max_batch", "Justitia", "VTC"));
+    for mb in [8usize, 16, 32, 64, 128] {
+        let (mut cfg, suite) = cfg_at(3.0, 42);
+        cfg.max_batch = mb;
+        let j = run_policy_oracle(&cfg, &suite, Policy::Justitia).avg_jct();
+        let v = run_policy_oracle(&cfg, &suite, Policy::Vtc).avg_jct();
+        out.line(format!("{mb:>9} {j:>11.1}s {v:>11.1}s"));
+    }
+
+    section("A3: predictor in the loop (2x)");
+    {
+        let (cfg, suite) = cfg_at(2.0, 42);
+        let oracle = run_policy_oracle(&cfg, &suite, Policy::Justitia).avg_jct();
+        let (pred, report) =
+            justitia::predictor::train_per_class(CostModel::MemoryCentric, 100, 20, 42);
+        let mlp = run_policy(&cfg, &suite, Policy::Justitia, &CostSource::Model(&pred)).avg_jct();
+        out.line(format!(
+            "oracle costs: {oracle:.1}s | MLP predictor ({:.0}% rel-err): {mlp:.1}s ({:+.1}%)",
+            report.rel_error * 100.0,
+            (mlp / oracle - 1.0) * 100.0
+        ));
+    }
+
+    section("A4: arrival burstiness (3x)");
+    {
+        // Smooth arrivals: same count/window, uniform spacing.
+        let (cfg, bursty) = cfg_at(3.0, 42);
+        let smooth = justitia::workload::Suite::new(
+            bursty
+                .agents
+                .iter()
+                .enumerate()
+                .map(|(i, a)| {
+                    let mut a = a.clone();
+                    a.arrival = cfg.workload.window_secs * i as f64 / bursty.len() as f64;
+                    a
+                })
+                .collect(),
+        );
+        for (label, suite) in [("bursty (Gamma)", &bursty), ("smooth (uniform)", &smooth)] {
+            let j = run_policy_oracle(&cfg, suite, Policy::Justitia).avg_jct();
+            let v = run_policy_oracle(&cfg, suite, Policy::Vtc).avg_jct();
+            out.line(format!(
+                "{label:<18} Justitia {j:>7.1}s  VTC {v:>7.1}s  gap {:>5.1}%",
+                (1.0 - j / v) * 100.0
+            ));
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Fig. 11 — cost-model ablation: Justitia (memory-centric KV token-time)
+//! vs Justitia/C (VTC's compute-centric p + 2d) on the Fig. 7a workload.
+//!
+//! Paper: compute-centric cost degrades JCT by up to 42.3%.
+
+use justitia::util::bench::{section, ResultsFile};
+
+fn main() {
+    section("Fig. 11: memory-centric vs compute-centric cost modeling");
+    let mut out = ResultsFile::new("bench_fig11.txt");
+    out.line(format!("{:>7} {:<12} {:>10} {:>10}", "density", "variant", "avgJCT", "p90JCT"));
+    for density in [2.0, 3.0] {
+        let rows = justitia::experiments::fig11(300, density, 42);
+        for r in &rows {
+            out.line(format!(
+                "{:>6}x {:<12} {:>9.1}s {:>9.1}s",
+                density,
+                r.policy.name(),
+                r.avg_jct,
+                r.p90_jct
+            ));
+        }
+        out.line(format!(
+            "{:>6}x degradation: avg {:+.1}%, p90 {:+.1}% (paper: up to 42.3%)",
+            density,
+            (rows[1].avg_jct / rows[0].avg_jct - 1.0) * 100.0,
+            (rows[1].p90_jct / rows[0].p90_jct - 1.0) * 100.0
+        ));
+    }
+}

@@ -1,0 +1,47 @@
+//! Fig. 7 — average and P90 JCT for 300 mixed agents across three backend
+//! profiles × six schedulers × three workload densities.
+//!
+//! Paper headline: Justitia cuts average JCT 57.5% vs VTC and 61.1% vs
+//! Parrot, and tracks SRJF (near-optimal efficiency).
+
+use justitia::config::{BackendProfile, Policy};
+use justitia::util::bench::{section, ResultsFile};
+
+fn main() {
+    section("Fig. 7: JCT across backends x schedulers x densities (300 agents)");
+    let mut out = ResultsFile::new("bench_fig7.txt");
+    let backends = [
+        BackendProfile::llama7b_a100(),
+        BackendProfile::llama13b_4v100(),
+        BackendProfile::qwen32b_h800(),
+    ];
+    let rows = justitia::experiments::fig7(&backends, &[1.0, 2.0, 3.0], 300, 42);
+    out.line(format!(
+        "{:<16} {:>7} {:<10} {:>9} {:>9} {:>5}",
+        "backend", "density", "policy", "avgJCT", "p90JCT", "done"
+    ));
+    for r in &rows {
+        out.line(format!(
+            "{:<16} {:>6}x {:<10} {:>8.1}s {:>8.1}s {:>5}",
+            r.backend,
+            r.density,
+            r.policy.name(),
+            r.avg_jct,
+            r.p90_jct,
+            r.completed
+        ));
+    }
+    // Headline ratios on the Fig. 7a testbed at 3x.
+    let get = |p: Policy| {
+        rows.iter()
+            .find(|r| r.backend == "llama7b-a100" && r.density == 3.0 && r.policy == p)
+            .unwrap()
+            .avg_jct
+    };
+    out.line(format!(
+        "llama7b@3x: Justitia vs VTC {:.1}% better (paper 57.5%); vs Parrot {:.1}% (paper 61.1%); vs SRJF {:+.1}%",
+        (1.0 - get(Policy::Justitia) / get(Policy::Vtc)) * 100.0,
+        (1.0 - get(Policy::Justitia) / get(Policy::AgentFcfs)) * 100.0,
+        (get(Policy::Justitia) / get(Policy::Srjf) - 1.0) * 100.0,
+    ));
+}

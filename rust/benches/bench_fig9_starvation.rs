@@ -1,0 +1,28 @@
+//! Fig. 9 — starvation avoidance: one MRS "elephant" + a sustained stream
+//! of small "mice" agents (KBQAV/CC/ALFWI).
+//!
+//! Paper: elephant JCT grows without bound with the number of mice under
+//! SRJF; bounded (flat) under Justitia.
+
+use justitia::config::Policy;
+use justitia::util::bench::{section, ResultsFile};
+
+fn main() {
+    section("Fig. 9: elephant JCT vs number of mice (SRJF vs Justitia)");
+    let mut out = ResultsFile::new("bench_fig9.txt");
+    let counts = [0usize, 25, 50, 100, 200, 400, 800];
+    let rows = justitia::experiments::fig9(&counts, 42);
+    out.line(format!("{:>6} {:>12} {:>12}", "mice", "SRJF", "Justitia"));
+    let jct = |p: Policy, n: usize| {
+        rows.iter().find(|r| r.policy == p && r.n_mice == n).unwrap().elephant_jct
+    };
+    for &n in &counts {
+        out.line(format!("{:>6} {:>11.1}s {:>11.1}s", n, jct(Policy::Srjf, n), jct(Policy::Justitia, n)));
+    }
+    out.line(format!(
+        "SRJF grows {:.1}x from 0 to {} mice; Justitia {:.1}x (bounded — Thm B.1)",
+        jct(Policy::Srjf, 800) / jct(Policy::Srjf, 0),
+        800,
+        jct(Policy::Justitia, 800) / jct(Policy::Justitia, 0)
+    ));
+}

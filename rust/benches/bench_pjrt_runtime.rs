@@ -1,0 +1,40 @@
+//! PJRT runtime hot-path bench (§Perf L3/runtime): per-call prefill and
+//! decode-step latency of the AOT-compiled model, the serving engine's
+//! inner loop cost when driving the real backend.
+//!
+//! Skipped when artifacts are absent.
+
+use justitia::runtime::PjrtModel;
+use justitia::util::bench::{section, Bencher};
+use std::hint::black_box;
+use std::time::Duration;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("model_config.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let mut model = PjrtModel::load(dir).expect("load artifacts");
+    section("PJRT runtime hot path");
+    let mut b = Bencher::new().with_budget(Duration::from_secs(3));
+
+    b.bench("prefill (1 seq, 24 tokens)", |i| {
+        let toks: Vec<u32> = (0..24).map(|k| 3 + ((i + k) % 1000) as u32).collect();
+        black_box(model.prefill(&toks, &[0, 1]).unwrap());
+    });
+
+    for n in [1usize, 4, 8] {
+        // Pre-prefill n sequences at disjoint pages.
+        for s in 0..n {
+            let toks: Vec<u32> = (0..16).map(|k| 3 + (s * 31 + k) as u32).collect();
+            model.prefill(&toks, &[(2 * s) as u32 + 4, (2 * s) as u32 + 5]).unwrap();
+        }
+        let seqs: Vec<(u32, u32, Vec<u32>)> = (0..n)
+            .map(|s| (7 + s as u32, 16, vec![(2 * s) as u32 + 4, (2 * s) as u32 + 5]))
+            .collect();
+        b.bench(&format!("decode step (batch {n})"), |_| {
+            black_box(model.decode(&seqs).unwrap());
+        });
+    }
+}

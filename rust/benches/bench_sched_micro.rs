@@ -1,0 +1,96 @@
+//! Scheduler micro-benchmarks — the §4.3 complexity claims: constant-cost
+//! status refresh on arrival/completion, O(log N) next-agent selection —
+//! plus engine-step and GPS-advance costs. This is the L3 hot path the
+//! §Perf pass optimizes.
+
+use justitia::config::{Config, Policy};
+use justitia::cost::CostModel;
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::sched::{AgentInfo, Scheduler, TaskInfo};
+use justitia::util::bench::{section, Bencher};
+use justitia::workload::TaskId;
+use std::hint::black_box;
+use std::time::Duration;
+
+fn main() {
+    section("scheduler micro-ops");
+    let mut b = Bencher::new().with_budget(Duration::from_secs(1));
+
+    for n in [100u32, 1_000, 10_000] {
+        // Pre-populate a Justitia scheduler with n waiting agents.
+        let mut s = justitia::sched::justitia::Justitia::new(7344, 20.0);
+        for i in 0..n {
+            s.on_agent_arrival(&AgentInfo { id: i, arrival: i as f64 * 0.01, cost: (i % 97) as f64 * 100.0 }, i as f64 * 0.01);
+            Scheduler::push_task(
+                &mut s,
+                TaskInfo { id: TaskId { agent: i, index: 0 }, prompt_tokens: 100, predicted_decode: 50.0, seq: i as u64 },
+                i as f64 * 0.01,
+            );
+        }
+        b.bench(&format!("justitia.arrival+tag (N={n})"), |i| {
+            let id = n + (i as u32 % 1000);
+            s.on_agent_arrival(
+                &AgentInfo { id, arrival: 1e6, cost: 123.0 },
+                1e6 + i as f64,
+            );
+            black_box(s.tag(id));
+        });
+        b.bench(&format!("justitia.pop+push (N={n})"), |i| {
+            if let Some(t) = justitia::sched::Scheduler::pop_next(&mut s, 1e6) {
+                let _ = black_box(t);
+                justitia::sched::Scheduler::push_task(&mut s, t, 1e6 + i as f64);
+            }
+        });
+    }
+
+    section("virtual clock (GPS fluid)");
+    {
+        let mut vc = justitia::sched::vtime::VirtualClock::new(7344, 20.0);
+        let mut t = 0.0;
+        let mut id = 0u32;
+        b.bench("vclock.arrival+advance", |_| {
+            t += 0.01;
+            id += 1;
+            black_box(vc.on_arrival(id, 5_000.0, t));
+        });
+    }
+
+    section("engine step (simulator backend)");
+    {
+        let cfg = Config::default();
+        let sched = justitia::sched::build(Policy::Justitia, cfg.backend.kv_tokens, 20.0);
+        let mut engine = Engine::new(&cfg, sched, SimBackend::new(&cfg.backend));
+        // Keep a rolling population of agents decoding.
+        let mut next_id = 0u32;
+        let model = CostModel::MemoryCentric;
+        b.bench("engine.step (rolling ~16-seq batch)", |_| {
+            if engine.running_len() < 12 {
+                let a = justitia::workload::test_support::simple_agent(next_id, engine.now(), 2, 64, 64);
+                let cost = model.agent_cost(&a);
+                engine.submit(a, cost);
+                next_id += 1;
+            }
+            black_box(engine.step());
+        });
+    }
+
+    section("end-to-end suite runs (the Fig. 7 unit of work)");
+    {
+        let mut b2 = Bencher::new().with_budget(Duration::from_secs(5)).with_max_iters(20);
+        for policy in [Policy::Vtc, Policy::Justitia] {
+            b2.bench(&format!("run_suite 300 agents @3x ({})", policy.name()), |i| {
+                let mut cfg = Config::default();
+                cfg.workload = justitia::config::WorkloadConfig {
+                    n_agents: 300,
+                    seed: 42 + i,
+                    ..Default::default()
+                }
+                .with_density(3.0);
+                let suite = justitia::workload::trace::build_suite(&cfg.workload);
+                let m = justitia::experiments::run_policy_oracle(&cfg, &suite, policy);
+                black_box(m.avg_jct());
+            });
+        }
+    }
+}

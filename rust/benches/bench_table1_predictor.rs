@@ -1,0 +1,25 @@
+//! Table 1 — per-class MLP vs shared-model (Distillbert-style) prediction:
+//! relative error, inference overhead, end-to-end JCT under Justitia, and
+//! training time (2× workload density).
+//!
+//! Paper: MLP 53.0% err / 2.16 ms / 151.1 s JCT / ~1 min train;
+//! Distillbert 452% / 55.7 ms / 366.7 s / ~2 h.
+
+use justitia::util::bench::{section, ResultsFile};
+
+fn main() {
+    section("Table 1: MLP vs shared-model prediction (2x density)");
+    let mut out = ResultsFile::new("bench_table1.txt");
+    let rows = justitia::experiments::table1(300, 2.0, 100, 42);
+    out.line(format!(
+        "{:<32} {:>9} {:>10} {:>9} {:>9}",
+        "model", "rel-err", "infer", "avgJCT", "train"
+    ));
+    for r in &rows {
+        out.line(format!(
+            "{:<32} {:>8.1}% {:>8.2}ms {:>8.1}s {:>8.1}s",
+            r.model, r.rel_error_pct, r.infer_ms, r.avg_jct, r.train_secs
+        ));
+    }
+    out.line("(paper: MLP 53.0% / 2.16 ms / 151.1 s / ~1 min; Distillbert 452% / 55.7 ms / 366.7 s / ~2 h)".to_string());
+}

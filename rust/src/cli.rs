@@ -1,0 +1,123 @@
+//! Command-line argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `justitia <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flags may be given as `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `known_switches` lists boolean flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_switches: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&stripped) {
+                    args.switches.push(stripped.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        args.switches.push(stripped.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        args.flags.insert(stripped.to_string(), v);
+                    }
+                } else {
+                    args.switches.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_switches: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), known_switches)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(raw: &[&str]) -> Args {
+        Args::parse(raw.iter().map(|s| s.to_string()), &["verbose", "dry-run"])
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["serve", "--port", "8080", "--scheduler=justitia", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("scheduler"), Some("justitia"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("dry-run"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["run", "--n", "42", "--rate", "1.5"]);
+        assert_eq!(a.get_u64("n", 0), 42);
+        assert!((a.get_f64("rate", 0.0) - 1.5).abs() < 1e-12);
+        assert_eq!(a.get_u64("missing", 7), 7);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["bench", "fig7", "fig8"]);
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig7", "fig8"]);
+    }
+
+    #[test]
+    fn trailing_unknown_flag_is_switch() {
+        let a = parse(&["x", "--flag"]);
+        assert!(a.has("flag"));
+    }
+
+    #[test]
+    fn unknown_flag_followed_by_flag_is_switch() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.has("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,159 @@
+//! Service-cost models (paper §4.1 and the Fig. 11 ablation).
+//!
+//! The paper's central modeling claim: LLM serving is *memory*-bound, so the
+//! true service cost of an inference with prompt length `p` and decode length
+//! `d` is its cumulative KV-cache occupation over its lifetime — the
+//! *KV token-time*:
+//!
+//! ```text
+//! c = sum_{i=1..d} (p + i) = p*d + d^2/2           (paper Eq. 1)
+//! ```
+//!
+//! (quadratic in `d`), versus VTC's compute-centric `w_p*p + w_d*d` with
+//! `w_p = 1, w_d = 2` (linear). An agent's cost is the sum over all its
+//! inferences. The unit is token·iterations (paper footnote 1 normalizes KV
+//! blocks to per-token units).
+
+use crate::workload::{AgentSpec, InferenceSpec};
+
+/// A service-cost model mapping an inference's (p, d) to a scalar cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostModel {
+    /// Paper Eq. (1): KV token-time, `p*d + d^2/2`.
+    MemoryCentric,
+    /// VTC (Sheng et al. 2024): `p + 2d`.
+    ComputeCentric,
+}
+
+impl CostModel {
+    /// Cost of a single inference.
+    #[inline]
+    pub fn inference_cost(&self, prompt: u32, decode: u32) -> f64 {
+        let p = prompt as f64;
+        let d = decode as f64;
+        match self {
+            // Exact discrete sum p*d + d(d+1)/2; the paper's p*d + d^2/2 is
+            // its continuum approximation. Using the exact sum keeps
+            // `remaining_inference_cost` consistent (depletes to exactly 0).
+            CostModel::MemoryCentric => p * d + d * (d + 1.0) / 2.0,
+            CostModel::ComputeCentric => p + 2.0 * d,
+        }
+    }
+
+    /// Cost of a whole inference spec.
+    pub fn spec_cost(&self, spec: &InferenceSpec) -> f64 {
+        self.inference_cost(spec.prompt_tokens, spec.decode_tokens)
+    }
+
+    /// Total cost of an agent = sum over all its inferences (paper §4.1).
+    pub fn agent_cost(&self, agent: &AgentSpec) -> f64 {
+        agent.stages.iter().flatten().map(|s| self.spec_cost(s)).sum()
+    }
+
+    /// Remaining cost of a partially-served inference: served `g` of `d`
+    /// decode tokens (prompt already processed). Memory-centric: the KV
+    /// token-time still to be accumulated; compute-centric: remaining
+    /// weighted tokens.
+    pub fn remaining_inference_cost(&self, prompt: u32, decode: u32, generated: u32) -> f64 {
+        let g = generated.min(decode);
+        match self {
+            CostModel::MemoryCentric => {
+                // sum_{i=g+1..d} (p+i) = p(d-g) + (d(d+1) - g(g+1))/2
+                let p = prompt as f64;
+                let d = decode as f64;
+                let g = g as f64;
+                p * (d - g) + (d * (d + 1.0) - g * (g + 1.0)) / 2.0
+            }
+            CostModel::ComputeCentric => {
+                if g == 0 {
+                    prompt as f64 + 2.0 * decode as f64
+                } else {
+                    2.0 * (decode - g) as f64
+                }
+            }
+        }
+    }
+}
+
+/// Incremental cost accounting for a *running* inference, used by GPS/VTC
+/// parity accounting in the engine: the memory-centric service delivered in
+/// one iteration to a sequence currently holding `p + g` tokens of KV is
+/// exactly its occupancy `p + g` (token·iterations per iteration).
+#[inline]
+pub fn kv_occupancy_tokens(prompt: u32, generated: u32) -> u64 {
+    prompt as u64 + generated as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::test_support::inference;
+
+    #[test]
+    fn eq1_closed_form_matches_sum() {
+        let m = CostModel::MemoryCentric;
+        for (p, d) in [(10u32, 5u32), (0, 7), (100, 1), (37, 211)] {
+            let direct: f64 = (1..=d).map(|i| (p + i) as f64).sum();
+            let got = m.inference_cost(p, d);
+            assert!((got - direct).abs() < 1e-9, "p={p} d={d} got={got} direct={direct}");
+        }
+    }
+
+    #[test]
+    fn quadratic_vs_linear_growth() {
+        let m = CostModel::MemoryCentric;
+        let c = CostModel::ComputeCentric;
+        // Doubling d roughly quadruples the d^2 term in memory-centric cost
+        // but only doubles compute-centric cost.
+        let r_mem = m.inference_cost(0, 200) / m.inference_cost(0, 100);
+        let r_cmp = c.inference_cost(0, 200) / c.inference_cost(0, 100);
+        assert!(r_mem > 3.5, "{r_mem}");
+        assert!((r_cmp - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vtc_weights() {
+        assert_eq!(CostModel::ComputeCentric.inference_cost(100, 50), 200.0);
+    }
+
+    #[test]
+    fn remaining_cost_depletes_to_zero() {
+        for model in [CostModel::MemoryCentric, CostModel::ComputeCentric] {
+            let full = model.remaining_inference_cost(64, 32, 0);
+            assert!(full > 0.0);
+            let empty = model.remaining_inference_cost(64, 32, 32);
+            assert!(empty.abs() < 1e-9, "{model:?} {empty}");
+            // Monotone decreasing in g.
+            let mut prev = f64::INFINITY;
+            for g in 0..=32 {
+                let r = model.remaining_inference_cost(64, 32, g);
+                assert!(r <= prev + 1e-9);
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn remaining_memory_cost_matches_discrete_sum() {
+        let m = CostModel::MemoryCentric;
+        let (p, d, g) = (20u32, 10u32, 4u32);
+        let direct: f64 = ((g + 1)..=d).map(|i| (p + i) as f64).sum();
+        assert!((m.remaining_inference_cost(p, d, g) - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn agent_cost_sums_stages() {
+        let m = CostModel::MemoryCentric;
+        let agent = crate::workload::test_support::agent_with_stages(vec![
+            vec![inference(0, 0, 10, 4), inference(1, 0, 20, 6)],
+            vec![inference(2, 1, 30, 8)],
+        ]);
+        let want = m.inference_cost(10, 4) + m.inference_cost(20, 6) + m.inference_cost(30, 8);
+        assert!((m.agent_cost(&agent) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy() {
+        assert_eq!(kv_occupancy_tokens(100, 7), 107);
+    }
+}

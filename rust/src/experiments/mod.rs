@@ -1,0 +1,495 @@
+//! The experiment harness: one function per paper table/figure.
+//!
+//! Each function regenerates the corresponding rows/series from scratch
+//! (workload generation → engine runs → metrics) and returns structured
+//! results; the bench binaries (`rust/benches/bench_*`) and the CLI
+//! (`justitia experiment <id>`) print them. DESIGN.md §6 maps experiment ids
+//! to modules; EXPERIMENTS.md records paper-vs-measured.
+
+use crate::config::{Config, Policy, WorkloadConfig};
+use crate::cost::CostModel;
+use crate::engine::exec::SimBackend;
+use crate::engine::Engine;
+use crate::metrics::{fair_ratios, fairness_summary, RunMetrics};
+use crate::predictor::{oracle::NoisyOracle, Predictor};
+use crate::sched::cost_model_for;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::{AgentClass, Suite};
+
+/// How the scheduler learns agent costs.
+pub enum CostSource<'a> {
+    /// Ground truth under the policy's cost model.
+    Oracle,
+    /// Ground truth × log-uniform noise in [1/λ, λ] (Fig. 10).
+    Noisy { lambda: f64, seed: u64 },
+    /// A trained predictor (Table 1 / predictor-in-the-loop runs).
+    Model(&'a dyn Predictor),
+}
+
+/// Iterations/second scale used to map KV token-time into GPS real time for
+/// Justitia's virtual clock. Priority order is invariant to it; only GPS
+/// diagnostics depend on it, so a fixed nominal decode rate suffices.
+pub fn rate_scale(cfg: &Config) -> f64 {
+    let b = (cfg.max_batch / 2).max(1);
+    1.0 / (cfg.backend.alpha + cfg.backend.beta_decode * b as f64)
+}
+
+/// Run one policy over a suite on the calibrated simulator backend.
+pub fn run_policy(cfg: &Config, suite: &Suite, policy: Policy, source: &CostSource) -> RunMetrics {
+    let model = cost_model_for(policy);
+    let sched = crate::sched::build(policy, cfg.backend.kv_tokens, rate_scale(cfg));
+    let mut engine = Engine::new(cfg, sched, SimBackend::new(&cfg.backend));
+    let mut noisy = match source {
+        CostSource::Noisy { lambda, seed } => Some(NoisyOracle::new(model, *lambda, *seed)),
+        _ => None,
+    };
+    engine.run_suite(suite, |a| match source {
+        CostSource::Oracle => model.agent_cost(a),
+        CostSource::Noisy { .. } => noisy.as_mut().unwrap().cost(a),
+        CostSource::Model(p) => p.predict(a.class, &a.input_text),
+    });
+    std::mem::take(&mut engine.metrics)
+}
+
+/// Convenience: oracle-cost run.
+pub fn run_policy_oracle(cfg: &Config, suite: &Suite, policy: Policy) -> RunMetrics {
+    run_policy(cfg, suite, policy, &CostSource::Oracle)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — selective pampering vs instantaneous fair sharing (2 DM agents)
+// ---------------------------------------------------------------------------
+
+pub struct Fig3Result {
+    /// (policy label, per-agent JCTs, avg JCT).
+    pub rows: Vec<(String, Vec<f64>, f64)>,
+    /// KV-occupancy timelines: (label, samples of (t, device_tokens)).
+    pub timelines: Vec<(String, Vec<(f64, u64)>)>,
+}
+
+/// Two DocMerging agents submitted simultaneously to the llama7b-a100
+/// profile (M = 459 blocks), under VTC (instantaneous fair sharing) vs
+/// Justitia (pampering in fair order).
+pub fn fig3(seed: u64) -> Fig3Result {
+    let cfg = Config::default();
+    let mut gen = crate::workload::generator::Generator::new(seed);
+    let a = gen.agent(AgentClass::DocumentMerging, 0, 0.0);
+    let b = gen.agent(AgentClass::DocumentMerging, 1, 0.0);
+    let suite = Suite::new(vec![a, b]);
+
+    let mut rows = Vec::new();
+    let mut timelines = Vec::new();
+    for policy in [Policy::Vtc, Policy::Justitia] {
+        let model = cost_model_for(policy);
+        let sched = crate::sched::build(policy, cfg.backend.kv_tokens, rate_scale(&cfg));
+        let mut engine = Engine::new(&cfg, sched, SimBackend::new(&cfg.backend));
+        engine.record_occupancy = true;
+        engine.run_suite(&suite, |a| model.agent_cost(a));
+        let jcts: Vec<f64> = (0..2).map(|i| engine.metrics.jct(i).unwrap()).collect();
+        let avg = crate::util::stats::mean(&jcts);
+        rows.push((policy.name().to_string(), jcts, avg));
+        timelines.push((
+            policy.name().to_string(),
+            engine.metrics.kv_samples.iter().map(|s| (s.t, s.device_tokens)).collect(),
+        ));
+    }
+    Fig3Result { rows, timelines }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 — avg/P90 JCT, backends × schedulers × densities
+// ---------------------------------------------------------------------------
+
+pub struct Fig7Row {
+    pub backend: String,
+    pub density: f64,
+    pub policy: Policy,
+    pub avg_jct: f64,
+    pub p90_jct: f64,
+    pub completed: usize,
+}
+
+/// The §5.2 efficiency sweep. `n_agents` is scaled down from 300 for test
+/// use; benches use the full size.
+pub fn fig7(
+    backends: &[crate::config::BackendProfile],
+    densities: &[f64],
+    n_agents: usize,
+    seed: u64,
+) -> Vec<Fig7Row> {
+    // Parallelize across (backend, density, policy) — all independent.
+    let mut jobs = Vec::new();
+    for backend in backends {
+        for &density in densities {
+            for policy in Policy::all_paper_baselines() {
+                jobs.push((backend.clone(), density, policy));
+            }
+        }
+    }
+    let pool = ThreadPool::with_cpus();
+    pool.map(jobs, move |(backend, density, policy)| {
+        let mut cfg = Config::default();
+        cfg.backend = backend.clone();
+        cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
+        let suite = crate::workload::trace::build_suite(&cfg.workload);
+        let m = run_policy_oracle(&cfg, &suite, policy);
+        Fig7Row {
+            backend: backend.name.clone(),
+            density,
+            policy,
+            avg_jct: m.avg_jct(),
+            p90_jct: m.p90_jct(),
+            completed: m.completed_agents(),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — CDF of finish-time fair ratios at 3× density
+// ---------------------------------------------------------------------------
+
+pub struct Fig8Result {
+    /// (policy, sorted ratios) — ratio = JCT / JCT_under_VTC per agent.
+    pub ratios: Vec<(Policy, Vec<f64>)>,
+    /// (policy, frac not delayed, worst delay %, avg delay % of delayed).
+    pub summaries: Vec<(Policy, f64, f64, f64)>,
+}
+
+pub fn fig8(n_agents: usize, density: f64, seed: u64) -> Fig8Result {
+    let mut cfg = Config::default();
+    cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
+    let suite = crate::workload::trace::build_suite(&cfg.workload);
+    let baseline = run_policy_oracle(&cfg, &suite, Policy::Vtc);
+
+    let policies = [Policy::Fcfs, Policy::Sjf, Policy::AgentFcfs, Policy::Srjf, Policy::Justitia];
+    let pool = ThreadPool::with_cpus();
+    let cfg2 = cfg.clone();
+    let suite2 = suite.clone();
+    let runs = pool.map(policies.to_vec(), move |p| (p, run_policy_oracle(&cfg2, &suite2, p)));
+
+    let mut ratios = Vec::new();
+    let mut summaries = Vec::new();
+    for (p, m) in runs {
+        let r = fair_ratios(&m, &baseline);
+        let s = fairness_summary(&r);
+        summaries.push((p, s.frac_not_delayed, s.worst_delay_pct, s.avg_delay_pct_of_delayed));
+        let mut rs: Vec<f64> = r.into_iter().map(|(_, x)| x).collect();
+        rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ratios.push((p, rs));
+    }
+    Fig8Result { ratios, summaries }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — starvation: elephant (MRS) + stream of mice
+// ---------------------------------------------------------------------------
+
+pub struct Fig9Row {
+    pub n_mice: usize,
+    pub policy: Policy,
+    pub elephant_jct: f64,
+}
+
+/// One MRS elephant at t=0, then `n_mice` small agents (KBQAV/CC/ALFWI)
+/// arriving as a sustained stream. The paper submits one mouse per second,
+/// which saturates its A100 testbed; on the calibrated simulator the same
+/// *utilization* needs ~4 mice/s (EXPERIMENTS.md §Calibration) — the
+/// starvation mechanism is identical.
+pub const FIG9_MICE_PER_SEC: f64 = 1.5;
+
+pub fn fig9(mice_counts: &[usize], seed: u64) -> Vec<Fig9Row> {
+    let mut jobs = Vec::new();
+    for &n in mice_counts {
+        for policy in [Policy::Srjf, Policy::Justitia] {
+            jobs.push((n, policy));
+        }
+    }
+    let pool = ThreadPool::with_cpus();
+    pool.map(jobs, move |(n_mice, policy)| {
+        let mut cfg = Config::default();
+        // Batch slots are the second contended resource (vLLM max_num_seqs);
+        // scaled to the simulator the same way M is (§Calibration).
+        cfg.max_batch = 8;
+        let mut gen = crate::workload::generator::Generator::new(seed);
+        let mut agents = vec![gen.agent(AgentClass::MapReduceSummarization, 0, 0.0)];
+        let mice_classes =
+            [AgentClass::KbqaVerification, AgentClass::CodeChecking, AgentClass::AlfworldInteraction];
+        let mut rng = crate::util::rng::Rng::with_stream(seed, 0x91ce);
+        for i in 0..n_mice {
+            let class = *rng.choose(&mice_classes);
+            agents.push(gen.agent(class, (i + 1) as u32, 1.0 + i as f64 / FIG9_MICE_PER_SEC));
+        }
+        let suite = Suite::new(agents);
+        // After Suite::new re-sorting, the elephant is still agent 0 (t=0).
+        let m = run_policy_oracle(&cfg, &suite, policy);
+        Fig9Row { n_mice, policy, elephant_jct: m.jct(0).unwrap() }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — robustness to prediction error
+// ---------------------------------------------------------------------------
+
+pub struct Fig10Row {
+    pub lambda: f64,
+    pub avg_jct: f64,
+    pub p90_jct: f64,
+}
+
+pub fn fig10(lambdas: &[f64], n_agents: usize, density: f64, seed: u64) -> Vec<Fig10Row> {
+    let pool = ThreadPool::with_cpus();
+    pool.map(lambdas.to_vec(), move |lambda| {
+        let mut cfg = Config::default();
+        cfg.workload =
+            WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
+        let suite = crate::workload::trace::build_suite(&cfg.workload);
+        let m = run_policy(
+            &cfg,
+            &suite,
+            Policy::Justitia,
+            &CostSource::Noisy { lambda, seed: seed ^ 0xf16 },
+        );
+        Fig10Row { lambda, avg_jct: m.avg_jct(), p90_jct: m.p90_jct() }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — cost-model ablation: Justitia vs Justitia/C
+// ---------------------------------------------------------------------------
+
+pub struct Fig11Row {
+    pub policy: Policy,
+    pub avg_jct: f64,
+    pub p90_jct: f64,
+}
+
+pub fn fig11(n_agents: usize, density: f64, seed: u64) -> Vec<Fig11Row> {
+    let pool = ThreadPool::with_cpus();
+    pool.map(
+        vec![Policy::Justitia, Policy::JustitiaComputeCost],
+        move |policy| {
+            let mut cfg = Config::default();
+            cfg.workload =
+                WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
+            let suite = crate::workload::trace::build_suite(&cfg.workload);
+            let m = run_policy_oracle(&cfg, &suite, policy);
+            Fig11Row { policy, avg_jct: m.avg_jct(), p90_jct: m.p90_jct() }
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12 — scheduling overhead vs arrival rate
+// ---------------------------------------------------------------------------
+
+pub struct Fig12Row {
+    pub arrival_rate: f64,
+    pub mean_delay_ms: f64,
+    pub max_delay_ms: f64,
+    pub decisions: u64,
+}
+
+/// Host-side scheduling decision latency under increasing arrival rates.
+pub fn fig12(rates_per_sec: &[f64], n_agents: usize, seed: u64) -> Vec<Fig12Row> {
+    rates_per_sec
+        .iter()
+        .map(|&rate| {
+            let mut cfg = Config::default();
+            cfg.workload = WorkloadConfig {
+                n_agents,
+                window_secs: n_agents as f64 / rate,
+                seed,
+                ..Default::default()
+            };
+            let suite = crate::workload::trace::build_suite(&cfg.workload);
+            let m = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+            Fig12Row {
+                arrival_rate: rate,
+                mean_delay_ms: m.sched_latency_ms(),
+                max_delay_ms: m.sched_latency_max_ms(),
+                decisions: m.sched_decisions(),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 13 — demand stability (Appendix A)
+// ---------------------------------------------------------------------------
+
+pub struct Fig13Dist {
+    pub class: AgentClass,
+    pub kind: &'static str,
+    /// 10-bucket histogram of token lengths over 100 trial runs + range.
+    pub prompt_hist: Vec<usize>,
+    pub prompt_range: (u32, u32),
+    pub decode_hist: Vec<usize>,
+    pub decode_range: (u32, u32),
+}
+
+pub fn fig13(seed: u64) -> Vec<Fig13Dist> {
+    let targets = [
+        (AgentClass::MapReduceSummarization, "generate-summary"),
+        (AgentClass::FactVerification, "generate-queries"),
+    ];
+    targets
+        .iter()
+        .map(|&(class, kind)| {
+            let mut gen = crate::workload::generator::Generator::new(seed);
+            let mut prompts = Vec::new();
+            let mut decodes = Vec::new();
+            for i in 0..100 {
+                let a = gen.agent(class, i, 0.0);
+                for t in a.tasks().filter(|t| t.kind == kind) {
+                    prompts.push(t.prompt_tokens as f64);
+                    decodes.push(t.decode_tokens as f64);
+                }
+            }
+            let pr = (
+                prompts.iter().cloned().fold(f64::MAX, f64::min) as u32,
+                prompts.iter().cloned().fold(0.0f64, f64::max) as u32,
+            );
+            let dr = (
+                decodes.iter().cloned().fold(f64::MAX, f64::min) as u32,
+                decodes.iter().cloned().fold(0.0f64, f64::max) as u32,
+            );
+            Fig13Dist {
+                class,
+                kind,
+                prompt_hist: crate::util::stats::histogram(&prompts, pr.0 as f64, pr.1 as f64 + 1.0, 10),
+                prompt_range: pr,
+                decode_hist: crate::util::stats::histogram(&decodes, dr.0 as f64, dr.1 as f64 + 1.0, 10),
+                decode_range: dr,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — MLP vs shared-model (Distillbert-style) prediction
+// ---------------------------------------------------------------------------
+
+pub struct Table1Row {
+    pub model: String,
+    pub rel_error_pct: f64,
+    pub infer_ms: f64,
+    pub avg_jct: f64,
+    pub train_secs: f64,
+}
+
+pub fn table1(n_agents: usize, density: f64, samples_per_class: usize, seed: u64) -> Vec<Table1Row> {
+    let mut cfg = Config::default();
+    cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
+    let suite = crate::workload::trace::build_suite(&cfg.workload);
+
+    let (mlp_pred, mlp_report) =
+        crate::predictor::train_per_class(CostModel::MemoryCentric, samples_per_class, 30, seed);
+    let (s3_pred, s3_report) =
+        crate::predictor::s3::train_shared(CostModel::MemoryCentric, samples_per_class, 30, seed);
+
+    let m_mlp = run_policy(&cfg, &suite, Policy::Justitia, &CostSource::Model(&mlp_pred));
+    let m_s3 = run_policy(&cfg, &suite, Policy::Justitia, &CostSource::Model(&s3_pred));
+
+    vec![
+        Table1Row {
+            model: "MLP (per-class)".into(),
+            rel_error_pct: mlp_report.rel_error * 100.0,
+            infer_ms: mlp_report.infer_ms,
+            avg_jct: m_mlp.avg_jct(),
+            train_secs: mlp_report.train_secs,
+        },
+        Table1Row {
+            model: "Shared (S3/Distillbert-style)".into(),
+            rel_error_pct: s3_report.rel_error * 100.0,
+            infer_ms: s3_report.infer_ms,
+            avg_jct: m_s3.avg_jct(),
+            train_secs: s3_report.train_secs,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_pampering_beats_fair_sharing_without_delaying() {
+        let r = fig3(5);
+        let (vtc, just) = (&r.rows[0], &r.rows[1]);
+        assert_eq!(vtc.0, "VTC");
+        assert_eq!(just.0, "Justitia");
+        // Average JCT improves…
+        assert!(just.2 < vtc.2, "justitia {} vs vtc {}", just.2, vtc.2);
+        // …and no agent is delayed beyond tolerance (the paper's own
+        // worst-case bound in Fig. 8 is 26%; Fig. 3's demo shows none —
+        // low-parallelism tail stages cost a few % here).
+        for (j, v) in just.1.iter().zip(&vtc.1) {
+            assert!(j <= &(v * 1.10), "agent delayed: {j} vs {v}");
+        }
+        assert!(!r.timelines[0].1.is_empty());
+    }
+
+    #[test]
+    fn fig7_full_scale_ordering() {
+        // The full 300-agent suite at 3× density (the sim runs it in tens of
+        // milliseconds): the §5.2 headline shape must hold.
+        let rows = fig7(&[crate::config::BackendProfile::llama7b_a100()], &[3.0], 300, 42);
+        assert_eq!(rows.len(), 6);
+        let get = |p: Policy| rows.iter().find(|r| r.policy == p).unwrap().avg_jct;
+        // Justitia ≪ VTC (paper: −57.5%), ≪ Parrot (−61.1%), ≈ SRJF.
+        assert!(get(Policy::Justitia) < 0.6 * get(Policy::Vtc), "justitia must beat VTC by a wide margin");
+        assert!(get(Policy::Justitia) < 0.6 * get(Policy::AgentFcfs), "justitia must beat Parrot");
+        assert!(get(Policy::Justitia) < get(Policy::Fcfs), "justitia must beat vLLM-FCFS");
+        let (j, s) = (get(Policy::Justitia), get(Policy::Srjf));
+        assert!((j - s).abs() / s < 0.25, "justitia {j} should track SRJF {s}");
+        for r in &rows {
+            assert_eq!(r.completed, 300, "{:?} dropped agents", r.policy);
+        }
+    }
+
+    #[test]
+    fn fig9_justitia_bounded_srjf_grows() {
+        // A sustained mice stream: SRJF keeps starving the elephant while
+        // mice arrive (JCT grows with the stream length); Justitia's delay
+        // plateaus once V(t) passes the elephant's virtual finish tag.
+        let rows = fig9(&[0, 150], 13);
+        let jct = |p: Policy, n: usize| {
+            rows.iter().find(|r| r.policy == p && r.n_mice == n).unwrap().elephant_jct
+        };
+        let srjf_growth = jct(Policy::Srjf, 150) / jct(Policy::Srjf, 0);
+        let just_growth = jct(Policy::Justitia, 150) / jct(Policy::Justitia, 0);
+        assert!(
+            srjf_growth > 1.5 * just_growth,
+            "srjf growth {srjf_growth} should far exceed justitia {just_growth}"
+        );
+    }
+
+    #[test]
+    fn fig10_noise_degrades_gracefully() {
+        let rows = fig10(&[1.0, 3.0], 30, 2.0, 17);
+        let inflation = rows[1].avg_jct / rows[0].avg_jct;
+        assert!(inflation < 1.6, "λ=3 inflation {inflation} too large");
+    }
+
+    #[test]
+    fn fig12_overhead_small() {
+        let rows = fig12(&[2.0, 8.0], 30, 19);
+        for r in &rows {
+            assert!(r.mean_delay_ms < 10.0, "mean sched delay {} ms", r.mean_delay_ms);
+            assert!(r.decisions > 0);
+        }
+    }
+
+    #[test]
+    fn fig13_has_two_distributions() {
+        let dists = fig13(23);
+        assert_eq!(dists.len(), 2);
+        for d in &dists {
+            assert_eq!(d.prompt_hist.iter().sum::<usize>(), d.decode_hist.iter().sum::<usize>());
+            assert!(d.prompt_range.1 > d.prompt_range.0);
+        }
+        // FV generate-queries: tight prompt range (Appendix A: 340–390).
+        let fv = &dists[1];
+        assert!(fv.prompt_range.0 >= 340 && fv.prompt_range.1 <= 390, "{:?}", fv.prompt_range);
+    }
+}

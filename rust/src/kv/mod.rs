@@ -1,0 +1,401 @@
+//! Paged KV-cache block management (the vLLM substrate, paper §2/§4.1).
+//!
+//! GPU KV memory is divided into fixed-size pages ("blocks" in vLLM terms) of
+//! `page_size` tokens. Each running sequence holds a block table — an ordered
+//! list of page ids covering its prompt + generated tokens. The allocator
+//! tracks free pages, per-sequence tables, and the swap area (CPU memory) for
+//! preempted sequences. This is the resource whose contention the whole paper
+//! is about: the scheduler's `M` is `total_pages * page_size` token slots.
+
+use crate::workload::TaskId;
+use std::collections::HashMap;
+
+/// Page id within the device pool.
+pub type PageId = u32;
+
+/// Where a sequence's KV currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvResidence {
+    Device,
+    Swapped,
+}
+
+#[derive(Debug, Clone)]
+struct SeqAlloc {
+    pages: Vec<PageId>,
+    tokens: u32,
+    residence: KvResidence,
+}
+
+/// Errors from the allocator.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("out of KV pages (need {need}, free {free})")]
+    OutOfPages { need: u32, free: u32 },
+    #[error("unknown sequence {0}")]
+    UnknownSeq(TaskId),
+    #[error("sequence {0} already allocated")]
+    AlreadyAllocated(TaskId),
+    #[error("sequence {0} is swapped out")]
+    Swapped(TaskId),
+}
+
+/// The paged KV-cache allocator.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    page_size: u32,
+    total_pages: u32,
+    free: Vec<PageId>,
+    seqs: HashMap<TaskId, SeqAlloc>,
+    /// Token slots occupied on device (for occupancy accounting / Fig. 3).
+    device_tokens: u64,
+    swapped_tokens: u64,
+}
+
+impl BlockAllocator {
+    pub fn new(total_pages: u32, page_size: u32) -> Self {
+        assert!(page_size > 0 && total_pages > 0);
+        BlockAllocator {
+            page_size,
+            total_pages,
+            free: (0..total_pages).rev().collect(),
+            seqs: HashMap::new(),
+            device_tokens: 0,
+            swapped_tokens: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> u32 {
+        self.page_size
+    }
+
+    pub fn total_pages(&self) -> u32 {
+        self.total_pages
+    }
+
+    /// Token capacity M (paper's total KV cache space, per-token units).
+    pub fn capacity_tokens(&self) -> u64 {
+        self.total_pages as u64 * self.page_size as u64
+    }
+
+    pub fn free_pages(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    /// Pages needed to hold `tokens`.
+    pub fn pages_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Tokens currently resident on device (running sequences).
+    pub fn device_tokens(&self) -> u64 {
+        self.device_tokens
+    }
+
+    /// Tokens currently swapped to host.
+    pub fn swapped_tokens(&self) -> u64 {
+        self.swapped_tokens
+    }
+
+    /// Whether a new sequence with `prompt_tokens` can be admitted now.
+    /// vLLM admits when the prompt fits plus one page of headroom for the
+    /// first decode step.
+    pub fn can_admit(&self, prompt_tokens: u32) -> bool {
+        self.pages_for(prompt_tokens) + 1 <= self.free_pages()
+    }
+
+    /// Allocate pages for a newly-admitted sequence's prompt.
+    pub fn allocate(&mut self, seq: TaskId, prompt_tokens: u32) -> Result<(), KvError> {
+        if self.seqs.contains_key(&seq) {
+            return Err(KvError::AlreadyAllocated(seq));
+        }
+        let need = self.pages_for(prompt_tokens).max(1);
+        if need > self.free_pages() {
+            return Err(KvError::OutOfPages { need, free: self.free_pages() });
+        }
+        let pages: Vec<PageId> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.device_tokens += prompt_tokens as u64;
+        self.seqs.insert(seq, SeqAlloc { pages, tokens: prompt_tokens, residence: KvResidence::Device });
+        Ok(())
+    }
+
+    /// Extend a running sequence by one generated token; may allocate a new
+    /// page. Returns Err(OutOfPages) when the pool is exhausted — the engine
+    /// then preempts (swaps out) some sequence.
+    pub fn append_token(&mut self, seq: TaskId) -> Result<(), KvError> {
+        let alloc = self.seqs.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        if alloc.residence != KvResidence::Device {
+            return Err(KvError::Swapped(seq));
+        }
+        let cap = alloc.pages.len() as u32 * self.page_size;
+        if alloc.tokens + 1 > cap {
+            match self.free.pop() {
+                Some(p) => alloc.pages.push(p),
+                None => return Err(KvError::OutOfPages { need: 1, free: 0 }),
+            }
+        }
+        alloc.tokens += 1;
+        self.device_tokens += 1;
+        Ok(())
+    }
+
+    /// Whether `append_token` would succeed without side effects.
+    pub fn can_append(&self, seq: TaskId) -> bool {
+        match self.seqs.get(&seq) {
+            Some(a) if a.residence == KvResidence::Device => {
+                a.tokens + 1 <= a.pages.len() as u32 * self.page_size || !self.free.is_empty()
+            }
+            _ => false,
+        }
+    }
+
+    /// Free all pages of a finished sequence.
+    pub fn release(&mut self, seq: TaskId) -> Result<u32, KvError> {
+        let alloc = self.seqs.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let n = alloc.pages.len() as u32;
+        match alloc.residence {
+            KvResidence::Device => {
+                self.free.extend(alloc.pages);
+                self.device_tokens -= alloc.tokens as u64;
+            }
+            KvResidence::Swapped => {
+                self.swapped_tokens -= alloc.tokens as u64;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Swap a running sequence out to host memory, freeing its device pages.
+    /// Returns the number of tokens moved (for swap-latency accounting).
+    pub fn swap_out(&mut self, seq: TaskId) -> Result<u32, KvError> {
+        let alloc = self.seqs.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        if alloc.residence == KvResidence::Swapped {
+            return Err(KvError::Swapped(seq));
+        }
+        let pages = std::mem::take(&mut alloc.pages);
+        self.free.extend(pages);
+        alloc.residence = KvResidence::Swapped;
+        self.device_tokens -= alloc.tokens as u64;
+        self.swapped_tokens += alloc.tokens as u64;
+        Ok(alloc.tokens)
+    }
+
+    /// Whether a swapped sequence fits back on device (plus one page of
+    /// decode headroom).
+    pub fn can_swap_in(&self, seq: TaskId) -> bool {
+        match self.seqs.get(&seq) {
+            Some(a) if a.residence == KvResidence::Swapped => {
+                self.pages_for(a.tokens) + 1 <= self.free_pages()
+            }
+            _ => false,
+        }
+    }
+
+    /// Swap a sequence back onto the device. Returns tokens moved.
+    pub fn swap_in(&mut self, seq: TaskId) -> Result<u32, KvError> {
+        if !self.can_swap_in(seq) {
+            let free = self.free_pages();
+            let need = self
+                .seqs
+                .get(&seq)
+                .map(|a| self.pages_for(a.tokens) + 1)
+                .ok_or(KvError::UnknownSeq(seq))?;
+            return Err(KvError::OutOfPages { need, free });
+        }
+        let page_size = self.page_size;
+        let alloc = self.seqs.get_mut(&seq).unwrap();
+        let need = alloc.tokens.div_ceil(page_size).max(1);
+        for _ in 0..need {
+            alloc.pages.push(self.free.pop().unwrap());
+        }
+        alloc.residence = KvResidence::Device;
+        self.swapped_tokens -= alloc.tokens as u64;
+        self.device_tokens += alloc.tokens as u64;
+        Ok(alloc.tokens)
+    }
+
+    /// Current token count of a sequence.
+    pub fn seq_tokens(&self, seq: TaskId) -> Option<u32> {
+        self.seqs.get(&seq).map(|a| a.tokens)
+    }
+
+    /// Residence of a sequence.
+    pub fn residence(&self, seq: TaskId) -> Option<KvResidence> {
+        self.seqs.get(&seq).map(|a| a.residence)
+    }
+
+    /// The block table of a device-resident sequence (page ids in order) —
+    /// consumed by the PJRT paged-attention path.
+    pub fn block_table(&self, seq: TaskId) -> Option<&[PageId]> {
+        self.seqs.get(&seq).and_then(|a| {
+            if a.residence == KvResidence::Device {
+                Some(a.pages.as_slice())
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Invariant check used by tests/debug builds: every page is either free
+    /// or owned by exactly one device-resident sequence.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.total_pages as usize];
+        for &p in &self.free {
+            if seen[p as usize] {
+                return Err(format!("page {p} double-listed in free"));
+            }
+            seen[p as usize] = true;
+        }
+        let mut dev_tokens = 0u64;
+        let mut swap_tokens = 0u64;
+        for (id, a) in &self.seqs {
+            match a.residence {
+                KvResidence::Device => {
+                    dev_tokens += a.tokens as u64;
+                    if (a.pages.len() as u32 * self.page_size) < a.tokens {
+                        return Err(format!("{id}: pages don't cover tokens"));
+                    }
+                    for &p in &a.pages {
+                        if seen[p as usize] {
+                            return Err(format!("page {p} owned twice"));
+                        }
+                        seen[p as usize] = true;
+                    }
+                }
+                KvResidence::Swapped => {
+                    swap_tokens += a.tokens as u64;
+                    if !a.pages.is_empty() {
+                        return Err(format!("{id}: swapped but holds pages"));
+                    }
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked pages".into());
+        }
+        if dev_tokens != self.device_tokens {
+            return Err(format!("device_tokens {} != {}", self.device_tokens, dev_tokens));
+        }
+        if swap_tokens != self.swapped_tokens {
+            return Err(format!("swapped_tokens {} != {}", self.swapped_tokens, swap_tokens));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tid(i: u32) -> TaskId {
+        TaskId { agent: 0, index: i }
+    }
+
+    #[test]
+    fn allocate_and_release() {
+        let mut kv = BlockAllocator::new(10, 16);
+        assert_eq!(kv.capacity_tokens(), 160);
+        kv.allocate(tid(1), 33).unwrap(); // 3 pages
+        assert_eq!(kv.free_pages(), 7);
+        assert_eq!(kv.device_tokens(), 33);
+        assert_eq!(kv.block_table(tid(1)).unwrap().len(), 3);
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.release(tid(1)).unwrap(), 3);
+        assert_eq!(kv.free_pages(), 10);
+        assert_eq!(kv.device_tokens(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_allocates_new_pages() {
+        let mut kv = BlockAllocator::new(3, 4);
+        kv.allocate(tid(1), 4).unwrap(); // exactly 1 page
+        kv.append_token(tid(1)).unwrap(); // needs 2nd page
+        assert_eq!(kv.seq_tokens(tid(1)), Some(5));
+        assert_eq!(kv.free_pages(), 1);
+        for _ in 0..3 {
+            kv.append_token(tid(1)).unwrap(); // fills 2nd page (8 tokens)
+        }
+        kv.append_token(tid(1)).unwrap(); // 3rd page
+        assert_eq!(kv.free_pages(), 0);
+        // Pool exhausted at 12 tokens cap.
+        for _ in 0..3 {
+            kv.append_token(tid(1)).unwrap();
+        }
+        assert_eq!(kv.append_token(tid(1)), Err(KvError::OutOfPages { need: 1, free: 0 }));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_rule_keeps_headroom() {
+        let kv = BlockAllocator::new(4, 16);
+        assert!(kv.can_admit(48)); // 3 pages + 1 headroom = 4
+        assert!(!kv.can_admit(49)); // would need 4 + 1
+    }
+
+    #[test]
+    fn swap_out_in_cycle() {
+        let mut kv = BlockAllocator::new(4, 8);
+        kv.allocate(tid(1), 16).unwrap(); // 2 pages
+        kv.allocate(tid(2), 8).unwrap(); // 1 page
+        let moved = kv.swap_out(tid(1)).unwrap();
+        assert_eq!(moved, 16);
+        assert_eq!(kv.free_pages(), 3);
+        assert_eq!(kv.residence(tid(1)), Some(KvResidence::Swapped));
+        assert_eq!(kv.swapped_tokens(), 16);
+        assert!(kv.block_table(tid(1)).is_none());
+        assert!(!kv.can_append(tid(1)));
+        kv.check_invariants().unwrap();
+
+        assert!(kv.can_swap_in(tid(1)));
+        let back = kv.swap_in(tid(1)).unwrap();
+        assert_eq!(back, 16);
+        assert_eq!(kv.residence(tid(1)), Some(KvResidence::Device));
+        assert_eq!(kv.swapped_tokens(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_in_requires_space() {
+        let mut kv = BlockAllocator::new(4, 8);
+        kv.allocate(tid(1), 24).unwrap(); // 3 pages
+        kv.swap_out(tid(1)).unwrap();
+        kv.allocate(tid(2), 24).unwrap(); // takes 3 pages
+        assert!(!kv.can_swap_in(tid(1))); // needs 3+1, only 1 free
+        assert!(kv.swap_in(tid(1)).is_err());
+        kv.release(tid(2)).unwrap();
+        assert!(kv.can_swap_in(tid(1)));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_swapped_seq() {
+        let mut kv = BlockAllocator::new(4, 8);
+        kv.allocate(tid(1), 10).unwrap();
+        kv.swap_out(tid(1)).unwrap();
+        kv.release(tid(1)).unwrap();
+        assert_eq!(kv.swapped_tokens(), 0);
+        assert_eq!(kv.free_pages(), 4);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn errors() {
+        let mut kv = BlockAllocator::new(2, 8);
+        assert_eq!(kv.release(tid(9)), Err(KvError::UnknownSeq(tid(9))));
+        kv.allocate(tid(1), 4).unwrap();
+        assert_eq!(kv.allocate(tid(1), 4), Err(KvError::AlreadyAllocated(tid(1))));
+        assert!(matches!(kv.allocate(tid(2), 100), Err(KvError::OutOfPages { .. })));
+        kv.swap_out(tid(1)).unwrap();
+        assert_eq!(kv.swap_out(tid(1)), Err(KvError::Swapped(tid(1))));
+        assert_eq!(kv.append_token(tid(1)), Err(KvError::Swapped(tid(1))));
+    }
+
+    #[test]
+    fn zero_prompt_gets_one_page() {
+        let mut kv = BlockAllocator::new(2, 8);
+        kv.allocate(tid(1), 0).unwrap();
+        assert_eq!(kv.block_table(tid(1)).unwrap().len(), 1);
+        kv.check_invariants().unwrap();
+    }
+}

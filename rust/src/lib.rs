@@ -1,0 +1,36 @@
+//! # Justitia
+//!
+//! A reproduction of *"Justitia: Fair and Efficient Scheduling of
+//! Task-parallel LLM Agents with Selective Pampering"* as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: a vLLM-like
+//!   continuous-batching engine over a paged KV cache ([`engine`], [`kv`]),
+//!   the Justitia virtual-time fair-queuing scheduler and the five paper
+//!   baselines ([`sched`]), memory-centric cost modeling ([`cost`]),
+//!   TF-IDF + MLP demand prediction ([`predictor`]), the §5.1 workload suite
+//!   ([`workload`]), and the experiment harness ([`experiments`]).
+//! * **Layer 2** — a JAX transformer (prefill/decode over a paged KV pool),
+//!   AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **Layer 1** — a Pallas paged-attention kernel (interpret mode), called
+//!   from the Layer-2 model and verified against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT and exposes them
+//! as an [`engine::exec::ExecBackend`], so the same engine code drives both
+//! the calibrated simulator and the real model. Python never runs on the
+//! request path.
+
+pub mod cli;
+pub mod config;
+pub mod cost;
+pub mod engine;
+pub mod experiments;
+pub mod kv;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

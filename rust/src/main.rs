@@ -1,0 +1,353 @@
+//! `justitia` CLI: serve agents, run experiments, generate workloads,
+//! train predictors.
+//!
+//! ```text
+//! justitia serve        [--artifacts DIR] [--policy P] [--port N]
+//! justitia run          [--policy P] [--backend B] [--agents N] [--density D] [--seed S]
+//! justitia experiment   <fig3|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table1|all> [--agents N] [--seed S]
+//! justitia gen-workload [--agents N] [--density D] [--seed S] --out FILE
+//! justitia train-predictor [--samples N] [--seed S]
+//! justitia gps          [--agents N] [--density D] [--seed S]   (GPS reference dump)
+//! ```
+
+use anyhow::{bail, Result};
+use justitia::cli::Args;
+use justitia::config::{BackendProfile, Config, Policy};
+use justitia::cost::CostModel;
+use justitia::experiments as exp;
+use justitia::util::bench::{fmt_ns, ResultsFile};
+use justitia::workload::trace;
+
+fn main() {
+    let args = Args::from_env(&["predict", "verbose", "with-text", "occupancy"]);
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(args),
+        Some("run") => cmd_run(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("gen-workload") => cmd_gen_workload(args),
+        Some("train-predictor") => cmd_train_predictor(args),
+        Some("gps") => cmd_gps(args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try `justitia help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "justitia — fair and efficient scheduling of task-parallel LLM agents\n\n\
+         USAGE:\n  justitia <serve|run|experiment|gen-workload|train-predictor|gps> [flags]\n\n\
+         SUBCOMMANDS:\n\
+           serve            HTTP front-end over the PJRT model (POST /agents)\n\
+           run              run one policy over a generated suite (simulator)\n\
+           experiment       regenerate a paper figure/table (fig3..fig13, table1, all)\n\
+           gen-workload     write a workload trace JSON\n\
+           train-predictor  train + evaluate the per-class MLP predictor\n\
+           gps              dump the GPS fluid reference for a suite\n\n\
+         COMMON FLAGS:\n\
+           --policy fcfs|sjf|parrot|vtc|srjf|justitia|justitia-c\n\
+           --backend llama7b-a100|llama13b-4v100|qwen32b-h800|tiny-cpu\n\
+           --agents N   --density 1|2|3   --seed S   --lambda L   --predict"
+    );
+}
+
+fn config_from(args: &Args) -> Result<Config> {
+    let base = match args.get("config") {
+        Some(path) => Config::from_json_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    base.apply_args(args)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let suite = trace::build_suite(&cfg.workload);
+    println!(
+        "workload: {} agents over {:.0}s on {} (M={} tokens), policy {}",
+        suite.len(),
+        cfg.workload.window_secs,
+        cfg.backend.name,
+        cfg.backend.kv_tokens,
+        cfg.policy.name()
+    );
+    let t0 = std::time::Instant::now();
+    let metrics = if cfg.use_predictor {
+        let (pred, report) =
+            justitia::predictor::train_per_class(CostModel::MemoryCentric, 100, 20, cfg.workload.seed);
+        println!(
+            "predictor: rel_error {:.1}%, infer {:.2} ms, trained in {:.1}s",
+            report.rel_error * 100.0,
+            report.infer_ms,
+            report.train_secs
+        );
+        exp::run_policy(&cfg, &suite, cfg.policy, &exp::CostSource::Model(&pred))
+    } else if cfg.noise_lambda > 1.0 {
+        exp::run_policy(
+            &cfg,
+            &suite,
+            cfg.policy,
+            &exp::CostSource::Noisy { lambda: cfg.noise_lambda, seed: cfg.workload.seed },
+        )
+    } else {
+        exp::run_policy_oracle(&cfg, &suite, cfg.policy)
+    };
+    println!(
+        "completed {}/{} agents | avg JCT {:.1}s | P90 JCT {:.1}s | engine time {:.1}s | \
+         iterations {} | swaps {} | sched delay mean {} (host wall {:.2}s)",
+        metrics.completed_agents(),
+        suite.len(),
+        metrics.avg_jct(),
+        metrics.p90_jct(),
+        metrics.engine_time(),
+        metrics.iterations(),
+        metrics.swap_out_count(),
+        fmt_ns(metrics.sched_latency_ms() * 1e6),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_gen_workload(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let out = args.get("out").unwrap_or("workload.json");
+    let suite = trace::build_suite(&cfg.workload);
+    trace::save_suite(&suite, std::path::Path::new(out), args.has("with-text"))?;
+    println!("wrote {} agents to {out}", suite.len());
+    Ok(())
+}
+
+fn cmd_train_predictor(args: &Args) -> Result<()> {
+    let samples = args.get_usize("samples", 100);
+    let seed = args.get_u64("seed", 42);
+    println!("training per-class MLP predictors ({samples} samples/class)…");
+    let (_, mlp) = justitia::predictor::train_per_class(CostModel::MemoryCentric, samples, 30, seed);
+    println!(
+        "MLP      : rel_error {:.1}%  infer {:.2} ms  train {:.1}s",
+        mlp.rel_error * 100.0,
+        mlp.infer_ms,
+        mlp.train_secs
+    );
+    println!("training shared (S3-style) baseline…");
+    let (_, s3) = justitia::predictor::s3::train_shared(CostModel::MemoryCentric, samples, 30, seed);
+    println!(
+        "Shared   : rel_error {:.1}%  infer {:.2} ms  train {:.1}s",
+        s3.rel_error * 100.0,
+        s3.infer_ms,
+        s3.train_secs
+    );
+    Ok(())
+}
+
+fn cmd_gps(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let suite = trace::build_suite(&cfg.workload);
+    let scale = exp::rate_scale(&cfg);
+    let gps =
+        justitia::sched::gps::run_suite(&suite, CostModel::MemoryCentric, cfg.backend.kv_tokens, scale);
+    println!("agent  class  arrival  gps_finish  gps_jct");
+    for a in &suite.agents {
+        println!(
+            "{:>5}  {:>5}  {:>7.1}  {:>10.1}  {:>7.1}",
+            a.id,
+            a.class.short_name(),
+            a.arrival,
+            gps.finish_of(a.id),
+            gps.jct(a.id, a.arrival)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let port: u16 = args.get_u64("port", 8080) as u16;
+    let policy = Policy::by_name(args.get_or("policy", "justitia"))?;
+    justitia::server::http::serve(std::path::Path::new(artifacts), port, policy)
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let seed = args.get_u64("seed", 42);
+    let n = args.get_usize("agents", 300);
+    let run_all = which == "all";
+
+    if run_all || which == "fig3" {
+        let mut out = ResultsFile::new("fig3.txt");
+        out.line("=== Fig. 3: selective pampering vs instantaneous fair sharing (2 DM agents) ===");
+        let r = exp::fig3(seed);
+        for (name, jcts, avg) in &r.rows {
+            out.line(format!(
+                "{name:<10} JCTs: {:?}  avg {avg:.1}s",
+                jcts.iter().map(|j| (j * 10.0).round() / 10.0).collect::<Vec<_>>()
+            ));
+        }
+        for (name, tl) in &r.timelines {
+            let peak = tl.iter().map(|(_, v)| *v).max().unwrap_or(0);
+            out.line(format!("{name:<10} occupancy samples: {}, peak {} tokens", tl.len(), peak));
+        }
+    }
+    if run_all || which == "fig7" {
+        let mut out = ResultsFile::new("fig7.txt");
+        out.line("=== Fig. 7: JCT across backends × schedulers × densities ===");
+        let backends = [
+            BackendProfile::llama7b_a100(),
+            BackendProfile::llama13b_4v100(),
+            BackendProfile::qwen32b_h800(),
+        ];
+        let rows = exp::fig7(&backends, &[1.0, 2.0, 3.0], n, seed);
+        out.line(format!(
+            "{:<16} {:>7} {:<10} {:>9} {:>9} {:>6}",
+            "backend", "density", "policy", "avgJCT", "p90JCT", "done"
+        ));
+        for r in rows {
+            out.line(format!(
+                "{:<16} {:>6}x {:<10} {:>8.1}s {:>8.1}s {:>6}",
+                r.backend,
+                r.density,
+                r.policy.name(),
+                r.avg_jct,
+                r.p90_jct,
+                r.completed
+            ));
+        }
+    }
+    if run_all || which == "fig8" {
+        let mut out = ResultsFile::new("fig8.txt");
+        out.line("=== Fig. 8: CDF of finish-time fair ratios (vs VTC), 3x density ===");
+        let r = exp::fig8(n, 3.0, seed);
+        for (p, frac, worst, avg_delay) in &r.summaries {
+            out.line(format!(
+                "{:<10} not-delayed {:>5.1}%  worst-delay {:>6.1}%  avg-delay-of-delayed {:>5.1}%",
+                p.name(),
+                frac * 100.0,
+                worst,
+                avg_delay
+            ));
+        }
+        for (p, rs) in &r.ratios {
+            let q = |x: f64| justitia::util::stats::percentile_sorted(rs, x);
+            out.line(format!(
+                "{:<10} ratio p10 {:.2}  p50 {:.2}  p90 {:.2}  p99 {:.2}  max {:.2}",
+                p.name(),
+                q(10.0),
+                q(50.0),
+                q(90.0),
+                q(99.0),
+                rs.last().copied().unwrap_or(0.0)
+            ));
+        }
+    }
+    if run_all || which == "fig9" {
+        let mut out = ResultsFile::new("fig9.txt");
+        out.line("=== Fig. 9: elephant JCT vs number of mice (SRJF vs Justitia) ===");
+        let rows = exp::fig9(&[0, 10, 20, 40, 80, 160], seed);
+        out.line(format!("{:>6} {:>12} {:>12}", "mice", "SRJF", "Justitia"));
+        let mut by_n: std::collections::BTreeMap<usize, (f64, f64)> = Default::default();
+        for r in rows {
+            let e = by_n.entry(r.n_mice).or_default();
+            match r.policy {
+                Policy::Srjf => e.0 = r.elephant_jct,
+                Policy::Justitia => e.1 = r.elephant_jct,
+                _ => {}
+            }
+        }
+        for (mice, (srjf, just)) in by_n {
+            out.line(format!("{mice:>6} {srjf:>11.1}s {just:>11.1}s"));
+        }
+    }
+    if run_all || which == "fig10" {
+        let mut out = ResultsFile::new("fig10.txt");
+        out.line("=== Fig. 10: robustness to prediction error (lambda scaling) ===");
+        let rows = exp::fig10(&[1.0, 1.5, 2.0, 3.0], n, 2.0, seed);
+        let base = rows[0].avg_jct;
+        for r in &rows {
+            out.line(format!(
+                "lambda {:>3.1}x  avg JCT {:>7.1}s ({:+.1}%)  p90 {:>7.1}s",
+                r.lambda,
+                r.avg_jct,
+                (r.avg_jct / base - 1.0) * 100.0,
+                r.p90_jct
+            ));
+        }
+    }
+    if run_all || which == "fig11" {
+        let mut out = ResultsFile::new("fig11.txt");
+        out.line("=== Fig. 11: memory-centric vs compute-centric cost modeling ===");
+        let rows = exp::fig11(n, 2.0, seed);
+        for r in &rows {
+            out.line(format!(
+                "{:<11} avg JCT {:>7.1}s  p90 {:>7.1}s",
+                r.policy.name(),
+                r.avg_jct,
+                r.p90_jct
+            ));
+        }
+        if rows.len() == 2 {
+            out.line(format!(
+                "degradation from compute-centric cost: avg {:+.1}%, p90 {:+.1}%",
+                (rows[1].avg_jct / rows[0].avg_jct - 1.0) * 100.0,
+                (rows[1].p90_jct / rows[0].p90_jct - 1.0) * 100.0
+            ));
+        }
+    }
+    if run_all || which == "fig12" {
+        let mut out = ResultsFile::new("fig12.txt");
+        out.line("=== Fig. 12: scheduling delay vs arrival rate ===");
+        let rows = exp::fig12(&[1.0, 2.0, 4.0, 8.0, 16.0], n.min(200), seed);
+        for r in &rows {
+            out.line(format!(
+                "rate {:>5.1}/s  mean {:>8}  max {:>8}  ({} decisions)",
+                r.arrival_rate,
+                fmt_ns(r.mean_delay_ms * 1e6),
+                fmt_ns(r.max_delay_ms * 1e6),
+                r.decisions
+            ));
+        }
+    }
+    if run_all || which == "fig13" {
+        let mut out = ResultsFile::new("fig13.txt");
+        out.line("=== Fig. 13: per-stage demand stability over 100 trial runs ===");
+        for d in exp::fig13(seed) {
+            out.line(format!(
+                "{} / {}: prompt range {:?} hist {:?}",
+                d.class.short_name(),
+                d.kind,
+                d.prompt_range,
+                d.prompt_hist
+            ));
+            out.line(format!(
+                "{} / {}: decode range {:?} hist {:?}",
+                d.class.short_name(),
+                d.kind,
+                d.decode_range,
+                d.decode_hist
+            ));
+        }
+    }
+    if run_all || which == "table1" {
+        let mut out = ResultsFile::new("table1.txt");
+        out.line("=== Table 1: MLP vs shared-model (Distillbert-style) prediction ===");
+        let rows = exp::table1(n.min(150), 2.0, 100, seed);
+        out.line(format!(
+            "{:<32} {:>10} {:>10} {:>9} {:>9}",
+            "model", "rel-err", "infer", "avgJCT", "train"
+        ));
+        for r in &rows {
+            out.line(format!(
+                "{:<32} {:>9.1}% {:>7.2}ms {:>8.1}s {:>8.1}s",
+                r.model, r.rel_error_pct, r.infer_ms, r.avg_jct, r.train_secs
+            ));
+        }
+        out.line("(paper Distillbert reference: 452% rel-err, 55.7 ms, ~2 h train)");
+    }
+    Ok(())
+}

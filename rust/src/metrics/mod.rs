@@ -1,0 +1,261 @@
+//! Run metrics: JCT, finish-time fair ratios, KV occupancy timelines,
+//! scheduling-decision latency (paper §5 metrics).
+
+use crate::util::stats::{self, Welford};
+use crate::workload::{AgentId, TaskId};
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Metrics collected over one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    arrival: HashMap<AgentId, f64>,
+    complete: HashMap<AgentId, f64>,
+    task_admit: HashMap<TaskId, f64>,
+    task_complete: HashMap<TaskId, f64>,
+    iterations: u64,
+    total_prefill_seqs: u64,
+    total_decode_seqs: u64,
+    engine_time: f64,
+    swap_outs: u64,
+    /// Host-side scheduling decision latency (Fig. 12): wall-clock time the
+    /// scheduler spends per decision point.
+    sched_latency: Welford,
+    /// (engine time, device tokens, per-agent tokens) — Fig. 3 timeline.
+    pub kv_samples: Vec<KvSample>,
+}
+
+#[derive(Debug, Clone)]
+pub struct KvSample {
+    pub t: f64,
+    pub device_tokens: u64,
+    pub per_agent: Vec<(AgentId, u64)>,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- recording hooks (called by the engine) -------------------------
+
+    pub fn on_agent_arrival(&mut self, agent: AgentId, t: f64) {
+        self.arrival.insert(agent, t);
+    }
+
+    pub fn on_agent_complete(&mut self, agent: AgentId, t: f64) {
+        self.complete.insert(agent, t);
+    }
+
+    pub fn on_task_admitted(&mut self, task: TaskId, t: f64) {
+        self.task_admit.insert(task, t);
+    }
+
+    pub fn on_task_complete(&mut self, task: TaskId, t: f64) {
+        self.task_complete.insert(task, t);
+    }
+
+    pub fn on_iteration(&mut self, now: f64, elapsed: f64, prefill: usize, decode: usize) {
+        self.iterations += 1;
+        self.total_prefill_seqs += prefill as u64;
+        self.total_decode_seqs += decode as u64;
+        self.engine_time = now;
+        let _ = elapsed;
+    }
+
+    pub fn on_swap_out(&mut self, _task: TaskId, _t: f64) {
+        self.swap_outs += 1;
+    }
+
+    pub fn record_sched_decision(&mut self, d: Duration) {
+        self.sched_latency.push(d.as_secs_f64());
+    }
+
+    pub fn sample_kv(&mut self, t: f64, device_tokens: u64, per_agent: Vec<(AgentId, u64)>) {
+        self.kv_samples.push(KvSample { t, device_tokens, per_agent });
+    }
+
+    // ---- derived quantities ---------------------------------------------
+
+    pub fn completed_agents(&self) -> usize {
+        self.complete.len()
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    pub fn engine_time(&self) -> f64 {
+        self.engine_time
+    }
+
+    pub fn swap_out_count(&self) -> u64 {
+        self.swap_outs
+    }
+
+    pub fn agent_arrival_time(&self, agent: AgentId) -> Option<f64> {
+        self.arrival.get(&agent).copied()
+    }
+
+    pub fn agent_complete_time(&self, agent: AgentId) -> Option<f64> {
+        self.complete.get(&agent).copied()
+    }
+
+    pub fn task_admit_time(&self, task: TaskId) -> Option<f64> {
+        self.task_admit.get(&task).copied()
+    }
+
+    pub fn task_complete_time(&self, task: TaskId) -> Option<f64> {
+        self.task_complete.get(&task).copied()
+    }
+
+    /// Job completion time of one agent.
+    pub fn jct(&self, agent: AgentId) -> Option<f64> {
+        Some(self.complete.get(&agent)? - self.arrival.get(&agent)?)
+    }
+
+    /// All JCTs, ordered by agent id.
+    pub fn jcts(&self) -> Vec<(AgentId, f64)> {
+        let mut v: Vec<(AgentId, f64)> = self
+            .complete
+            .iter()
+            .filter_map(|(a, &c)| self.arrival.get(a).map(|&ar| (*a, c - ar)))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Average JCT (s).
+    pub fn avg_jct(&self) -> f64 {
+        let v: Vec<f64> = self.jcts().into_iter().map(|(_, j)| j).collect();
+        stats::mean(&v)
+    }
+
+    /// P90 JCT (s).
+    pub fn p90_jct(&self) -> f64 {
+        let v: Vec<f64> = self.jcts().into_iter().map(|(_, j)| j).collect();
+        stats::percentile(&v, 90.0)
+    }
+
+    /// Mean scheduling-decision latency in milliseconds (Fig. 12).
+    pub fn sched_latency_ms(&self) -> f64 {
+        self.sched_latency.mean() * 1e3
+    }
+
+    pub fn sched_latency_max_ms(&self) -> f64 {
+        self.sched_latency.max() * 1e3
+    }
+
+    pub fn sched_decisions(&self) -> u64 {
+        self.sched_latency.count()
+    }
+}
+
+/// Finish-time fair ratios (Fig. 8): each agent's JCT under a scheduler
+/// normalized by its JCT under the fairness baseline run (the paper uses
+/// VTC). Ratio ≤ 1 means the agent finished no later than under the
+/// baseline.
+pub fn fair_ratios(run: &RunMetrics, baseline: &RunMetrics) -> Vec<(AgentId, f64)> {
+    let base: HashMap<AgentId, f64> = baseline.jcts().into_iter().collect();
+    run.jcts()
+        .into_iter()
+        .filter_map(|(a, j)| base.get(&a).map(|&b| (a, j / b.max(1e-12))))
+        .collect()
+}
+
+/// Summary row for a fair-ratio distribution: fraction of agents with
+/// ratio ≤ 1 (not delayed) and the worst-case delay in percent.
+pub struct FairnessSummary {
+    pub frac_not_delayed: f64,
+    pub worst_delay_pct: f64,
+    pub avg_delay_pct_of_delayed: f64,
+}
+
+pub fn fairness_summary(ratios: &[(AgentId, f64)]) -> FairnessSummary {
+    if ratios.is_empty() {
+        return FairnessSummary { frac_not_delayed: 1.0, worst_delay_pct: 0.0, avg_delay_pct_of_delayed: 0.0 };
+    }
+    let eps = 1e-9;
+    let not_delayed = ratios.iter().filter(|(_, r)| *r <= 1.0 + eps).count();
+    let worst = ratios.iter().map(|(_, r)| *r).fold(0.0f64, f64::max);
+    let delayed: Vec<f64> = ratios.iter().map(|(_, r)| *r).filter(|r| *r > 1.0 + eps).collect();
+    FairnessSummary {
+        frac_not_delayed: not_delayed as f64 / ratios.len() as f64,
+        worst_delay_pct: ((worst - 1.0).max(0.0)) * 100.0,
+        avg_delay_pct_of_delayed: if delayed.is_empty() {
+            0.0
+        } else {
+            (stats::mean(&delayed) - 1.0) * 100.0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tid(a: u32, i: u32) -> TaskId {
+        TaskId { agent: a, index: i }
+    }
+
+    #[test]
+    fn jct_accounting() {
+        let mut m = RunMetrics::new();
+        m.on_agent_arrival(1, 0.0);
+        m.on_agent_arrival(2, 1.0);
+        m.on_agent_complete(1, 5.0);
+        m.on_agent_complete(2, 11.0);
+        assert_eq!(m.jct(1), Some(5.0));
+        assert_eq!(m.jct(2), Some(10.0));
+        assert_eq!(m.completed_agents(), 2);
+        assert!((m.avg_jct() - 7.5).abs() < 1e-12);
+        assert!((m.p90_jct() - 9.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incomplete_agents_excluded() {
+        let mut m = RunMetrics::new();
+        m.on_agent_arrival(1, 0.0);
+        m.on_agent_arrival(2, 0.0);
+        m.on_agent_complete(1, 4.0);
+        assert_eq!(m.jcts().len(), 1);
+        assert_eq!(m.jct(2), None);
+    }
+
+    #[test]
+    fn task_times() {
+        let mut m = RunMetrics::new();
+        m.on_task_admitted(tid(1, 0), 2.0);
+        m.on_task_complete(tid(1, 0), 7.0);
+        assert_eq!(m.task_admit_time(tid(1, 0)), Some(2.0));
+        assert_eq!(m.task_complete_time(tid(1, 0)), Some(7.0));
+    }
+
+    #[test]
+    fn fair_ratios_and_summary() {
+        let mut run = RunMetrics::new();
+        let mut base = RunMetrics::new();
+        for (a, rj, bj) in [(1u32, 5.0, 10.0), (2, 10.0, 10.0), (3, 12.6, 10.0)] {
+            run.on_agent_arrival(a, 0.0);
+            run.on_agent_complete(a, rj);
+            base.on_agent_arrival(a, 0.0);
+            base.on_agent_complete(a, bj);
+        }
+        let ratios = fair_ratios(&run, &base);
+        assert_eq!(ratios.len(), 3);
+        let s = fairness_summary(&ratios);
+        assert!((s.frac_not_delayed - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.worst_delay_pct - 26.0).abs() < 1e-9);
+        assert!((s.avg_delay_pct_of_delayed - 26.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sched_latency_stats() {
+        let mut m = RunMetrics::new();
+        m.record_sched_decision(Duration::from_micros(100));
+        m.record_sched_decision(Duration::from_micros(300));
+        assert!((m.sched_latency_ms() - 0.2).abs() < 1e-9);
+        assert!((m.sched_latency_max_ms() - 0.3).abs() < 1e-9);
+        assert_eq!(m.sched_decisions(), 2);
+    }
+}

@@ -1,0 +1,270 @@
+//! Multi-Layer Perceptron regressor (paper §4.2): "a simple structure…
+//! efficiently trained even with limited historical data; minimal
+//! computational resources to make predictions".
+//!
+//! Dense layers with ReLU activations (linear output), trained by mini-batch
+//! SGD with momentum on MSE + L2 regularization — exactly the setup the
+//! paper describes ("gradient descent with Mean Squared Error (with L2
+//! regularization)"). f32 throughout; no BLAS needed at these sizes.
+
+use crate::util::rng::Rng;
+
+/// One dense layer.
+#[derive(Debug, Clone)]
+struct Layer {
+    w: Vec<f32>, // out × in, row-major
+    b: Vec<f32>,
+    n_in: usize,
+    n_out: usize,
+    // SGD momentum buffers.
+    vw: Vec<f32>,
+    vb: Vec<f32>,
+}
+
+impl Layer {
+    fn new(n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        // He initialization for ReLU nets.
+        let scale = (2.0 / n_in as f64).sqrt();
+        let w = (0..n_in * n_out).map(|_| (rng.normal() * scale) as f32).collect();
+        Layer {
+            w,
+            b: vec![0.0; n_out],
+            n_in,
+            n_out,
+            vw: vec![0.0; n_in * n_out],
+            vb: vec![0.0; n_out],
+        }
+    }
+
+    fn forward(&self, x: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.n_out, 0.0);
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let mut acc = self.b[o];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out[o] = acc;
+        }
+    }
+}
+
+/// Training hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub l2: f64,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+/// The MLP: `sizes = [in, h1, h2, out]` gives the paper's 4-layer shape.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    layers: Vec<Layer>,
+}
+
+const MOMENTUM: f32 = 0.9;
+
+impl Mlp {
+    pub fn new(sizes: &[usize], seed: u64) -> Self {
+        assert!(sizes.len() >= 2);
+        let mut rng = Rng::with_stream(seed, 0x31337);
+        let layers = sizes.windows(2).map(|w| Layer::new(w[0], w[1], &mut rng)).collect();
+        Mlp { layers }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+
+    /// Forward pass (ReLU between layers, linear output).
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            layer.forward(&cur, &mut next);
+            if i + 1 < self.layers.len() {
+                for v in &mut next {
+                    *v = v.max(0.0);
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Train on (xs, ys) with scalar targets. Returns final epoch MSE.
+    pub fn train(&mut self, xs: &[Vec<f32>], ys: &[f32], cfg: &TrainConfig) -> f64 {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::with_stream(cfg.seed, 0x7ea1);
+        let mut last_mse = f64::INFINITY;
+
+        // Per-layer activation buffers (pre-ReLU saved for backprop).
+        let n_layers = self.layers.len();
+        for _epoch in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            let mut sq_sum = 0.0f64;
+            for chunk in order.chunks(cfg.batch.max(1)) {
+                // Zero-init gradient accumulators.
+                let mut gw: Vec<Vec<f32>> =
+                    self.layers.iter().map(|l| vec![0.0; l.w.len()]).collect();
+                let mut gb: Vec<Vec<f32>> =
+                    self.layers.iter().map(|l| vec![0.0; l.b.len()]).collect();
+
+                for &i in chunk {
+                    // Forward, saving activations.
+                    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
+                    acts.push(xs[i].clone());
+                    for (li, layer) in self.layers.iter().enumerate() {
+                        let mut out = Vec::new();
+                        layer.forward(acts.last().unwrap(), &mut out);
+                        if li + 1 < n_layers {
+                            for v in &mut out {
+                                *v = v.max(0.0);
+                            }
+                        }
+                        acts.push(out);
+                    }
+                    let pred = acts.last().unwrap()[0];
+                    let err = pred - ys[i];
+                    sq_sum += (err * err) as f64;
+
+                    // Backward.
+                    let mut delta = vec![2.0 * err]; // dMSE/dpred
+                    for li in (0..n_layers).rev() {
+                        let layer = &self.layers[li];
+                        let input = &acts[li];
+                        // Accumulate grads for this layer.
+                        for o in 0..layer.n_out {
+                            let d = delta[o];
+                            if d == 0.0 {
+                                continue;
+                            }
+                            gb[li][o] += d;
+                            let grow = &mut gw[li][o * layer.n_in..(o + 1) * layer.n_in];
+                            for (g, &x) in grow.iter_mut().zip(input) {
+                                *g += d * x;
+                            }
+                        }
+                        if li == 0 {
+                            break;
+                        }
+                        // Propagate delta to previous layer through W and the
+                        // ReLU mask of that layer's (post-activation) output.
+                        let mut prev = vec![0.0f32; layer.n_in];
+                        for o in 0..layer.n_out {
+                            let d = delta[o];
+                            if d == 0.0 {
+                                continue;
+                            }
+                            let row = &layer.w[o * layer.n_in..(o + 1) * layer.n_in];
+                            for (p, &w) in prev.iter_mut().zip(row) {
+                                *p += d * w;
+                            }
+                        }
+                        // ReLU derivative: act[li] is post-ReLU of layer li-1.
+                        for (p, &a) in prev.iter_mut().zip(&acts[li][..]) {
+                            if a <= 0.0 {
+                                *p = 0.0;
+                            }
+                        }
+                        delta = prev;
+                    }
+                }
+
+                // SGD + momentum + L2 step.
+                let scale = (cfg.lr / chunk.len() as f64) as f32;
+                let l2 = cfg.l2 as f32;
+                for (li, layer) in self.layers.iter_mut().enumerate() {
+                    for (j, w) in layer.w.iter_mut().enumerate() {
+                        let g = gw[li][j] + l2 * *w;
+                        layer.vw[j] = MOMENTUM * layer.vw[j] - scale * g;
+                        *w += layer.vw[j];
+                    }
+                    for (j, b) in layer.b.iter_mut().enumerate() {
+                        layer.vb[j] = MOMENTUM * layer.vb[j] - scale * gb[li][j];
+                        *b += layer.vb[j];
+                    }
+                }
+            }
+            last_mse = sq_sum / n as f64;
+        }
+        last_mse
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_params() {
+        let m = Mlp::new(&[8, 16, 8, 1], 1);
+        assert_eq!(m.forward(&vec![0.5; 8]).len(), 1);
+        assert_eq!(m.n_params(), 8 * 16 + 16 + 16 * 8 + 8 + 8 * 1 + 1);
+    }
+
+    #[test]
+    fn learns_linear_function() {
+        // y = 2*x0 - x1 + 0.5
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f32>> = (0..200)
+            .map(|_| vec![rng.f64() as f32, rng.f64() as f32])
+            .collect();
+        let ys: Vec<f32> = xs.iter().map(|x| 2.0 * x[0] - x[1] + 0.5).collect();
+        let mut m = Mlp::new(&[2, 16, 8, 1], 3);
+        let mse = m.train(&xs, &ys, &TrainConfig { epochs: 400, lr: 1e-2, l2: 1e-6, batch: 16, seed: 4 });
+        assert!(mse < 1e-3, "mse={mse}");
+        let p = m.forward(&[0.5, 0.5])[0];
+        assert!((p - 1.0).abs() < 0.1, "pred={p}");
+    }
+
+    #[test]
+    fn learns_nonlinear_function() {
+        // y = |x0 - 0.5| needs the hidden nonlinearity.
+        let mut rng = Rng::new(5);
+        let xs: Vec<Vec<f32>> = (0..300).map(|_| vec![rng.f64() as f32]).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| (x[0] - 0.5).abs()).collect();
+        let mut m = Mlp::new(&[1, 24, 12, 1], 6);
+        let mse = m.train(&xs, &ys, &TrainConfig { epochs: 600, lr: 1e-2, l2: 0.0, batch: 16, seed: 7 });
+        assert!(mse < 2e-3, "mse={mse}");
+    }
+
+    #[test]
+    fn l2_shrinks_weights() {
+        let xs: Vec<Vec<f32>> = (0..50).map(|i| vec![(i as f32) / 50.0]).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| x[0]).collect();
+        let strong = {
+            let mut m = Mlp::new(&[1, 8, 4, 1], 9);
+            m.train(&xs, &ys, &TrainConfig { epochs: 200, lr: 1e-2, l2: 0.5, batch: 8, seed: 9 });
+            m
+        };
+        let weak = {
+            let mut m = Mlp::new(&[1, 8, 4, 1], 9);
+            m.train(&xs, &ys, &TrainConfig { epochs: 200, lr: 1e-2, l2: 0.0, batch: 8, seed: 9 });
+            m
+        };
+        let norm = |m: &Mlp| -> f64 {
+            m.layers.iter().flat_map(|l| l.w.iter()).map(|w| (*w as f64).powi(2)).sum()
+        };
+        assert!(norm(&strong) < norm(&weak));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let xs: Vec<Vec<f32>> = (0..20).map(|i| vec![i as f32 / 20.0]).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| x[0] * 3.0).collect();
+        let cfg = TrainConfig { epochs: 50, lr: 1e-2, l2: 1e-5, batch: 4, seed: 11 };
+        let mut a = Mlp::new(&[1, 8, 4, 1], 12);
+        let mut b = Mlp::new(&[1, 8, 4, 1], 12);
+        a.train(&xs, &ys, &cfg);
+        b.train(&xs, &ys, &cfg);
+        assert_eq!(a.forward(&[0.3]), b.forward(&[0.3]));
+    }
+}

@@ -1,0 +1,73 @@
+//! Ground-truth and noise-controlled oracles (Fig. 10 robustness study).
+//!
+//! "λ× means that the original cost information is scaled by a random factor
+//! in [1/λ, λ] before being used by Justitia (when λ is 1 we directly use
+//! the ground-truth)." The factor is log-uniform so over- and
+//! under-prediction are symmetric in ratio space.
+
+use crate::cost::CostModel;
+use crate::util::rng::Rng;
+use crate::workload::AgentSpec;
+
+/// Noisy ground-truth oracle.
+pub struct NoisyOracle {
+    model: CostModel,
+    lambda: f64,
+    rng: Rng,
+}
+
+impl NoisyOracle {
+    pub fn new(model: CostModel, lambda: f64, seed: u64) -> Self {
+        assert!(lambda >= 1.0, "lambda must be >= 1");
+        NoisyOracle { model, lambda, rng: Rng::with_stream(seed, 0x04ac1e) }
+    }
+
+    /// The scheduled cost for an agent: truth × U_log[1/λ, λ].
+    pub fn cost(&mut self, agent: &AgentSpec) -> f64 {
+        let truth = self.model.agent_cost(agent);
+        if self.lambda <= 1.0 {
+            return truth;
+        }
+        let ln_l = self.lambda.ln();
+        let factor = (self.rng.range_f64(-ln_l, ln_l)).exp();
+        truth * factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::test_support::simple_agent;
+
+    #[test]
+    fn lambda_one_is_exact() {
+        let mut o = NoisyOracle::new(CostModel::MemoryCentric, 1.0, 1);
+        let a = simple_agent(0, 0.0, 2, 100, 50);
+        let truth = CostModel::MemoryCentric.agent_cost(&a);
+        assert_eq!(o.cost(&a), truth);
+    }
+
+    #[test]
+    fn factors_bounded_by_lambda() {
+        let mut o = NoisyOracle::new(CostModel::MemoryCentric, 3.0, 2);
+        let a = simple_agent(0, 0.0, 1, 100, 50);
+        let truth = CostModel::MemoryCentric.agent_cost(&a);
+        for _ in 0..1000 {
+            let c = o.cost(&a);
+            assert!(c >= truth / 3.0 - 1e-9 && c <= truth * 3.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn noise_is_ratio_symmetric() {
+        let mut o = NoisyOracle::new(CostModel::MemoryCentric, 2.0, 3);
+        let a = simple_agent(0, 0.0, 1, 100, 50);
+        let truth = CostModel::MemoryCentric.agent_cost(&a);
+        let mut log_sum = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            log_sum += (o.cost(&a) / truth).ln();
+        }
+        assert!((log_sum / n as f64).abs() < 0.01);
+    }
+}

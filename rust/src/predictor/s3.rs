@@ -1,0 +1,123 @@
+//! S³/Distillbert-style shared-model baseline (paper §4.2, Table 1;
+//! substitution T4 in DESIGN.md).
+//!
+//! The paper's critique of S³-like prediction is structural: (i) one model
+//! for all workloads — "different agents may exhibit heterogeneous cost
+//! distribution patterns, rendering single-model prediction inaccurate" —
+//! and (ii) the predictor is itself a transformer inference, adding ~55.7 ms
+//! per prediction. We reproduce (i) exactly: a single wide MLP over a shared
+//! hashed vocabulary trained on the mixed multi-class corpus, blind to the
+//! class tag. (ii) is reproduced by measuring this model's real (larger)
+//! inference cost and, for Table 1 parity, reporting the paper's measured
+//! Distillbert latency alongside.
+
+use crate::cost::CostModel;
+use crate::predictor::{evaluate, mlp, tfidf, Predictor, TrainReport};
+use crate::workload::AgentClass;
+
+/// One shared model for every agent class (no class feature — the S³ setup
+/// predicts from the prompt alone).
+///
+/// Like S³'s Distillbert fine-tune, the regression is MSE in *raw* cost
+/// space: memory-centric agent costs span >2 orders of magnitude across
+/// classes, so raw-MSE training is dominated by the large classes and
+/// collapses small-class predictions toward the global scale — the source
+/// of the paper's 452% relative error. (Justitia's per-class models don't
+/// face this: within a class the scale is homogeneous.)
+pub struct SharedModelPredictor {
+    pub tfidf: tfidf::TfIdf,
+    pub mlp: mlp::Mlp,
+    pub target_mean: f64,
+    pub target_std: f64,
+}
+
+impl Predictor for SharedModelPredictor {
+    fn predict(&self, _class: AgentClass, input_text: &str) -> f64 {
+        let x = self.tfidf.transform(input_text);
+        let y = self.mlp.forward(&x)[0] as f64;
+        (y * self.target_std + self.target_mean).max(1.0)
+    }
+}
+
+/// Train the shared baseline on the same per-class sample budget as the
+/// per-class predictor (identical total data — the comparison isolates the
+/// architecture choice).
+pub fn train_shared(
+    cost_model: CostModel,
+    samples_per_class: usize,
+    eval_per_class: usize,
+    seed: u64,
+) -> (SharedModelPredictor, TrainReport) {
+    let t0 = std::time::Instant::now();
+    let mut texts: Vec<String> = Vec::new();
+    let mut targets: Vec<f64> = Vec::new();
+    let mut eval_set: Vec<(AgentClass, String, f64)> = Vec::new();
+    for (ci, class) in AgentClass::ALL.into_iter().enumerate() {
+        let mut gen = crate::workload::generator::Generator::new(seed ^ (0x1000 + ci as u64));
+        for i in 0..samples_per_class + eval_per_class {
+            let a = gen.agent(class, i as u32, 0.0);
+            let cost = cost_model.agent_cost(&a);
+            if i < samples_per_class {
+                texts.push(a.input_text);
+                targets.push(cost);
+            } else {
+                eval_set.push((class, a.input_text, cost));
+            }
+        }
+    }
+
+    // A deliberately bigger shared net (Distillbert stand-in): wide first
+    // layer over a larger hashed vocab; one model must fit 9 heterogeneous
+    // cost distributions.
+    let dim = 512;
+    let mut tf = tfidf::TfIdf::new(dim);
+    tf.fit(&texts);
+    let xs: Vec<Vec<f32>> = texts.iter().map(|t| tf.transform(t)).collect();
+    // Raw-space MSE (the S³ fine-tuning objective): standardized for
+    // optimizer stability, but NOT log-transformed — the squared loss is
+    // dominated by the large classes.
+    let mean = crate::util::stats::mean(&targets);
+    let std = crate::util::stats::std_dev(&targets).max(1e-6);
+    let ys: Vec<f32> = targets.iter().map(|&y| ((y - mean) / std) as f32).collect();
+    let mut net = mlp::Mlp::new(&[tf.feature_dim(), 256, 64, 1], seed ^ 0x53);
+    net.train(
+        &xs,
+        &ys,
+        &mlp::TrainConfig { epochs: 120, lr: 3e-3, l2: 1e-4, batch: 32, seed: seed ^ 0x54 },
+    );
+    let train_secs = t0.elapsed().as_secs_f64();
+
+    let predictor = SharedModelPredictor { tfidf: tf, mlp: net, target_mean: mean, target_std: std };
+    let (rel_error, infer_ms) = evaluate(&predictor, &eval_set);
+    (predictor, TrainReport { train_secs, rel_error, infer_ms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::train_per_class;
+
+    #[test]
+    fn shared_model_trains_and_predicts() {
+        let (pred, report) = train_shared(CostModel::MemoryCentric, 25, 5, 21);
+        let p = pred.predict(AgentClass::CodeChecking, "check code function test assert");
+        assert!(p >= 1.0);
+        assert!(report.train_secs > 0.0);
+        assert!(report.rel_error.is_finite());
+    }
+
+    #[test]
+    fn per_class_beats_shared_on_error() {
+        // The Table-1 structural claim, at reduced training budget. The
+        // shared model sees the same data but cannot separate classes.
+        let seed = 31;
+        let (_, shared) = train_shared(CostModel::MemoryCentric, 40, 12, seed);
+        let (_, per_class) = train_per_class(CostModel::MemoryCentric, 40, 12, seed);
+        assert!(
+            per_class.rel_error < shared.rel_error,
+            "per-class {} should beat shared {}",
+            per_class.rel_error,
+            shared.rel_error
+        );
+    }
+}

@@ -1,0 +1,171 @@
+//! TF-IDF vectorization (paper §4.2; Sparck Jones 1972).
+//!
+//! "TF-IDF is a lightweight and efficient method for converting text into
+//! numerical vectors, focusing on word importance rather than deep semantic
+//! analysis." Words are hashed into a fixed-dimension feature space (the
+//! hashing trick) so the vectorizer needs no global vocabulary; IDF weights
+//! are fit per class on the training corpus.
+
+use crate::tokenizer::{fnv1a, Tokenizer};
+
+/// Hashed TF-IDF vectorizer.
+#[derive(Debug, Clone)]
+pub struct TfIdf {
+    dim: usize,
+    /// Smoothed inverse document frequency per hashed feature.
+    idf: Vec<f32>,
+    fitted: bool,
+}
+
+impl TfIdf {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0);
+        TfIdf { dim, idf: vec![1.0; dim], fitted: false }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn bucket(&self, word: &str) -> usize {
+        (fnv1a(word.as_bytes()) % self.dim as u64) as usize
+    }
+
+    /// Fit IDF weights on a corpus: idf = ln((1+N)/(1+df)) + 1 (smoothed,
+    /// scikit-learn convention).
+    pub fn fit(&mut self, corpus: &[String]) {
+        let n = corpus.len();
+        let mut df = vec![0u32; self.dim];
+        let mut seen = vec![usize::MAX; self.dim];
+        for (doc_id, doc) in corpus.iter().enumerate() {
+            for w in Tokenizer::words(doc) {
+                let b = self.bucket(w);
+                if seen[b] != doc_id {
+                    seen[b] = doc_id;
+                    df[b] += 1;
+                }
+            }
+        }
+        for (i, &d) in df.iter().enumerate() {
+            self.idf[i] = (((1 + n) as f32) / ((1 + d) as f32)).ln() + 1.0;
+        }
+        self.fitted = true;
+    }
+
+    /// Transform text into an L2-normalized TF-IDF vector with two appended
+    /// length features (log word count, log line count). L2 normalization
+    /// erases absolute input size from the TF part, but size is the
+    /// strongest cost signal an agent input carries — real prompts expose it
+    /// through document counts/file sizes — so it is restored explicitly.
+    /// The output dimension is `dim() + 2`.
+    pub fn transform(&self, text: &str) -> Vec<f32> {
+        let mut tf = vec![0f32; self.dim];
+        let mut count = 0usize;
+        for w in Tokenizer::words(text) {
+            tf[self.bucket(w)] += 1.0;
+            count += 1;
+        }
+        let mut v: Vec<f32> = if count == 0 {
+            tf
+        } else {
+            let mut v: Vec<f32> = tf
+                .iter()
+                .zip(&self.idf)
+                .map(|(&t, &i)| if t > 0.0 { (t / count as f32) * i } else { 0.0 })
+                .collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for x in &mut v {
+                    *x /= norm;
+                }
+            }
+            v
+        };
+        let lines = text.lines().count();
+        v.push(((1 + count) as f32).ln() / 10.0);
+        v.push(((1 + lines) as f32).ln() / 5.0);
+        v
+    }
+
+    /// Dimension of `transform` output.
+    pub fn feature_dim(&self) -> usize {
+        self.dim + 2
+    }
+
+    pub fn is_fitted(&self) -> bool {
+        self.fitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Vec<String> {
+        vec![
+            "merge document combine draft".to_string(),
+            "merge score rank candidate".to_string(),
+            "verify equation math solve".to_string(),
+        ]
+    }
+
+    #[test]
+    fn fit_transform_shapes() {
+        let mut t = TfIdf::new(64);
+        t.fit(&corpus());
+        assert!(t.is_fitted());
+        let v = t.transform("merge document");
+        assert_eq!(v.len(), t.feature_dim());
+        assert_eq!(t.feature_dim(), 66);
+        let norm: f32 = v[..64].iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        // Length features present and positive for non-empty text.
+        assert!(v[64] > 0.0 && v[65] > 0.0);
+    }
+
+    #[test]
+    fn rare_words_weigh_more() {
+        let mut t = TfIdf::new(256);
+        t.fit(&corpus());
+        // "merge" appears in 2 docs, "equation" in 1 → idf(equation) > idf(merge).
+        let v_merge = t.transform("merge");
+        let v_eq = t.transform("equation");
+        let nz = |v: &[f32]| v.iter().cloned().find(|x| *x > 0.0).unwrap();
+        // Single-word docs are L2-normalized to 1.0 either way; compare raw
+        // idf instead.
+        let b_merge = (fnv1a(b"merge") % 256) as usize;
+        let b_eq = (fnv1a(b"equation") % 256) as usize;
+        assert!(t.idf[b_eq] > t.idf[b_merge]);
+        let _ = (nz(&v_merge), nz(&v_eq));
+    }
+
+    #[test]
+    fn empty_text_is_zero_vector() {
+        let mut t = TfIdf::new(16);
+        t.fit(&corpus());
+        let v = t.transform("");
+        assert_eq!(v.len(), t.feature_dim());
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = TfIdf::new(32);
+        let mut b = TfIdf::new(32);
+        a.fit(&corpus());
+        b.fit(&corpus());
+        assert_eq!(a.transform("merge document draft"), b.transform("merge document draft"));
+    }
+
+    #[test]
+    fn similar_texts_closer_than_dissimilar() {
+        let mut t = TfIdf::new(128);
+        t.fit(&corpus());
+        let cos = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let v1 = t.transform("merge document combine");
+        let v2 = t.transform("merge draft combine");
+        let v3 = t.transform("verify equation solve");
+        assert!(cos(&v1, &v2) > cos(&v1, &v3));
+    }
+}

@@ -1,0 +1,167 @@
+//! [`PjrtBackend`]: the real-model [`ExecBackend`].
+//!
+//! The engine stays content-agnostic (schedulers only see token *counts*);
+//! this backend owns token *values*: it synthesizes deterministic prompt ids
+//! per task, feeds generated tokens back greedily (temperature 0, matching
+//! the paper's recurrence setup in Fig. 10), and implements swap-out/in by
+//! stashing/restoring page contents of the paged pools (the CPU plugin's
+//! device memory is host memory, so the stash is a plain map).
+
+use crate::engine::exec::{ExecBackend, IterationBatch, IterationResult};
+use crate::kv::PageId;
+use crate::runtime::PjrtModel;
+use crate::workload::TaskId;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Per-sequence generation state.
+#[derive(Debug, Clone)]
+struct SeqGen {
+    last_token: u32,
+    /// Position of the NEXT token to be written (== current context length).
+    position: u32,
+}
+
+/// Stashed KV of a swapped-out sequence: per (layer, page-index-in-table)
+/// slabs for both pools.
+struct SwapStash {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    tokens: u32,
+}
+
+pub struct PjrtBackend {
+    model: PjrtModel,
+    seqs: HashMap<TaskId, SeqGen>,
+    stash: HashMap<TaskId, SwapStash>,
+    iterations: u64,
+    total_model_secs: f64,
+}
+
+impl PjrtBackend {
+    pub fn new(model: PjrtModel) -> Self {
+        PjrtBackend {
+            model,
+            seqs: HashMap::new(),
+            stash: HashMap::new(),
+            iterations: 0,
+            total_model_secs: 0.0,
+        }
+    }
+
+    pub fn model(&self) -> &PjrtModel {
+        &self.model
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    /// Cumulative model-execution wall time (for calibration).
+    pub fn total_model_secs(&self) -> f64 {
+        self.total_model_secs
+    }
+
+    /// Deterministic synthetic prompt ids for a task (substitution: agent
+    /// prompt *content* is synthetic; lengths and KV traffic are real).
+    fn prompt_ids(&self, seq: TaskId, len: u32) -> Vec<u32> {
+        let vocab = self.model.manifest.vocab as u64;
+        (0..len)
+            .map(|i| {
+                let h = crate::tokenizer::fnv1a(
+                    format!("{}-{}-{}", seq.agent, seq.index, i).as_bytes(),
+                );
+                (3 + h % (vocab - 3)) as u32
+            })
+            .collect()
+    }
+
+    /// The last token generated for a running sequence (tests/inspection).
+    pub fn last_token(&self, seq: TaskId) -> Option<u32> {
+        self.seqs.get(&seq).map(|s| s.last_token)
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn run_iteration(&mut self, batch: &IterationBatch) -> IterationResult {
+        let t0 = Instant::now();
+
+        // Prefills: one at a time (B=1 artifact), clamped to max_prefill.
+        for &(id, prompt) in batch.prefill {
+            let max_p = self.model.manifest.max_prefill as u32;
+            let len = prompt.clamp(1, max_p);
+            let ids = self.prompt_ids(id, len);
+            let table: Vec<u32> =
+                batch.kv.block_table(id).expect("prefill seq on device").to_vec();
+            let next = self
+                .model
+                .prefill(&ids, &table)
+                .expect("prefill execution");
+            self.seqs.insert(id, SeqGen { last_token: next, position: len });
+        }
+
+        // Decodes: chunk into the largest compiled batch.
+        let max_b = self.model.max_decode_batch();
+        for chunk in batch.decode.chunks(max_b) {
+            let mut calls: Vec<(u32, u32, Vec<u32>)> = Vec::with_capacity(chunk.len());
+            for &id in chunk {
+                let gen = self.seqs.get(&id).expect("decode seq was prefilled");
+                let table: Vec<u32> =
+                    batch.kv.block_table(id).expect("decode seq on device").to_vec();
+                // Clamp position to what the artifact's page budget covers.
+                let max_pos =
+                    (self.model.manifest.max_pages_per_seq * self.model.manifest.page_size) as u32
+                        - 1;
+                calls.push((gen.last_token, gen.position.min(max_pos), table));
+            }
+            let next = self.model.decode(&calls).expect("decode execution");
+            for (&id, tok) in chunk.iter().zip(next) {
+                let gen = self.seqs.get_mut(&id).unwrap();
+                gen.last_token = tok;
+                gen.position += 1;
+            }
+        }
+
+        self.iterations += 1;
+        let elapsed = t0.elapsed().as_secs_f64();
+        self.total_model_secs += elapsed;
+        IterationResult { elapsed }
+    }
+
+    fn on_swap_out(&mut self, seq: TaskId, pages: &[PageId], tokens: u32) {
+        // Copy this sequence's page slabs (every layer) out of the pools.
+        let pe = self.model.page_elems();
+        let layers = self.model.manifest.n_layers;
+        let mut k = Vec::with_capacity(layers * pages.len() * pe);
+        let mut v = Vec::with_capacity(layers * pages.len() * pe);
+        for l in 0..layers {
+            for &p in pages {
+                let off = self.model.page_offset(l, p);
+                k.extend_from_slice(&self.model.k_pool[off..off + pe]);
+                v.extend_from_slice(&self.model.v_pool[off..off + pe]);
+            }
+        }
+        self.stash.insert(seq, SwapStash { k, v, tokens });
+    }
+
+    fn on_swap_in(&mut self, seq: TaskId, pages: &[PageId]) {
+        let stash = self.stash.remove(&seq).expect("swap-in without stash");
+        let pe = self.model.page_elems();
+        let layers = self.model.manifest.n_layers;
+        let mut idx = 0usize;
+        for l in 0..layers {
+            for &p in pages {
+                let off = self.model.page_offset(l, p);
+                self.model.k_pool[off..off + pe].copy_from_slice(&stash.k[idx..idx + pe]);
+                self.model.v_pool[off..off + pe].copy_from_slice(&stash.v[idx..idx + pe]);
+                idx += pe;
+            }
+        }
+        debug_assert!(stash.tokens <= (pages.len() * self.model.manifest.page_size) as u32);
+    }
+
+    fn on_seq_released(&mut self, seq: TaskId) {
+        self.seqs.remove(&seq);
+        self.stash.remove(&seq);
+    }
+}

@@ -1,0 +1,303 @@
+//! PJRT runtime: load the AOT HLO artifacts and run the transformer from
+//! the Layer-3 hot path.
+//!
+//! `python/compile/aot.py` lowers prefill + decode (with the Pallas
+//! paged-attention kernel inlined) to HLO **text**, writes seeded weights to
+//! `weights.jtt`, and records shapes in `model_config.json`. This module:
+//!
+//! * parses the manifest ([`ModelManifest`]),
+//! * loads weights as [`xla::Literal`]s in sorted-name order (the shared
+//!   parameter convention),
+//! * compiles each HLO text via `PjRtClient::cpu()` once,
+//! * exposes [`PjrtModel`] (prefill / decode calls) and [`PjrtBackend`]
+//!   (an [`crate::engine::exec::ExecBackend`] so the serving engine runs the
+//!   real model exactly the way it runs the simulator).
+//!
+//! Python never executes at serving time — the binary is self-contained
+//! once `make artifacts` has produced the files.
+
+pub mod backend;
+
+pub use backend::PjrtBackend;
+
+use crate::util::json::Json;
+use crate::util::tensor_file::{self, DType};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `model_config.json`.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub n_pages: usize,
+    pub page_size: usize,
+    pub max_pages_per_seq: usize,
+    pub max_prefill: usize,
+    pub weight_names: Vec<String>,
+    pub decode_batches: Vec<usize>,
+    pub dir: PathBuf,
+}
+
+impl ModelManifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("model_config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let m = v.get("model");
+        let get = |k: &str| -> Result<usize> {
+            m.get(k).as_u64().map(|x| x as usize).with_context(|| format!("model.{k}"))
+        };
+        Ok(ModelManifest {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            d_head: get("d_head")?,
+            n_layers: get("n_layers")?,
+            n_pages: get("n_pages")?,
+            page_size: get("page_size")?,
+            max_pages_per_seq: get("max_pages_per_seq")?,
+            max_prefill: get("max_prefill")?,
+            weight_names: v
+                .get("weight_names")
+                .as_arr()
+                .context("weight_names")?
+                .iter()
+                .map(|j| j.as_str().map(String::from).context("weight name"))
+                .collect::<Result<_>>()?,
+            decode_batches: v
+                .get("decode_batches")
+                .as_arr()
+                .context("decode_batches")?
+                .iter()
+                .map(|j| j.as_u64().map(|x| x as usize).context("batch"))
+                .collect::<Result<_>>()?,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Pool element count: [L, P+1, page, H, D].
+    pub fn pool_len(&self) -> usize {
+        self.n_layers * (self.n_pages + 1) * self.page_size * self.n_heads * self.d_head
+    }
+
+    pub fn pool_dims(&self) -> [usize; 5] {
+        [self.n_layers, self.n_pages + 1, self.page_size, self.n_heads, self.d_head]
+    }
+
+    /// The trash-page index (padding writes land there).
+    pub fn trash_page(&self) -> u32 {
+        self.n_pages as u32
+    }
+}
+
+/// A loaded-and-compiled model: weights + executables + host-side pools.
+pub struct PjrtModel {
+    pub manifest: ModelManifest,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    /// (batch, executable), ascending batch.
+    decode_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    /// Weights live on the PJRT device, uploaded ONCE at load time and
+    /// passed by reference to every execution (`execute_b`) — cloning the
+    /// ~3 MB of weight literals per call dominated the serving hot path
+    /// before this (EXPERIMENTS.md §Perf).
+    weights: Vec<xla::PjRtBuffer>,
+    /// Host-resident paged pools (the CPU PJRT "device" memory is host
+    /// memory; the pools round-trip through each execution).
+    pub k_pool: Vec<f32>,
+    pub v_pool: Vec<f32>,
+}
+
+impl PjrtModel {
+    /// Load everything from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = ModelManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        // Weights in sorted-name order (BTreeMap iteration == sorted),
+        // uploaded to the device once.
+        let tensors = tensor_file::read_jtt(&dir.join("weights.jtt"))?;
+        let mut weights = Vec::with_capacity(manifest.weight_names.len());
+        for name in &manifest.weight_names {
+            let t = tensors.get(name).with_context(|| format!("weight {name} missing"))?;
+            if t.dtype != DType::F32 {
+                bail!("weight {name}: expected f32");
+            }
+            let shape = if t.shape.is_empty() { vec![1usize; 0] } else { t.shape.clone() };
+            weights.push(client.buffer_from_host_buffer(&t.data_f32, &shape, None)?);
+        }
+
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill_exe = compile("prefill.hlo.txt")?;
+        let mut decode_exes = Vec::new();
+        for &b in &manifest.decode_batches {
+            decode_exes.push((b, compile(&format!("decode_b{b}.hlo.txt"))?));
+        }
+        decode_exes.sort_by_key(|(b, _)| *b);
+
+        let pool_len = manifest.pool_len();
+        Ok(PjrtModel {
+            manifest,
+            client,
+            prefill_exe,
+            decode_exes,
+            weights,
+            k_pool: vec![0.0; pool_len],
+            v_pool: vec![0.0; pool_len],
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest compiled decode batch >= n.
+    pub fn decode_batch_for(&self, n: usize) -> Result<usize> {
+        self.decode_exes
+            .iter()
+            .map(|(b, _)| *b)
+            .find(|&b| b >= n)
+            .with_context(|| format!("no decode variant fits batch {n}"))
+    }
+
+    pub fn max_decode_batch(&self) -> usize {
+        self.decode_exes.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    /// Run prefill for one sequence. `tokens` are the prompt ids (<=
+    /// max_prefill), `block_table` the engine page ids. Returns the argmax
+    /// next token; pools are updated in place.
+    pub fn prefill(&mut self, tokens: &[u32], block_table: &[u32]) -> Result<u32> {
+        let m = &self.manifest;
+        if tokens.is_empty() || tokens.len() > m.max_prefill {
+            bail!("prompt length {} not in 1..={}", tokens.len(), m.max_prefill);
+        }
+        let mut padded = vec![0i32; m.max_prefill];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = (t % m.vocab as u32) as i32;
+        }
+        let mut bt = vec![m.trash_page() as i32; m.max_pages_per_seq];
+        for (i, &p) in block_table.iter().take(m.max_pages_per_seq).enumerate() {
+            bt[i] = p as i32;
+        }
+        let (max_prefill, maxp) = (m.max_prefill, m.max_pages_per_seq);
+        let seq_len = [tokens.len() as i32];
+        let pool_dims: Vec<usize> = self.manifest.pool_dims().to_vec();
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weights.len() + 5);
+        args.extend(self.weights.iter());
+        let state = [
+            self.client.buffer_from_host_buffer(&padded, &[max_prefill], None)?,
+            self.client.buffer_from_host_buffer(&seq_len, &[], None)?,
+            self.client.buffer_from_host_buffer(&bt, &[maxp], None)?,
+            self.client.buffer_from_host_buffer(&self.k_pool, &pool_dims, None)?,
+            self.client.buffer_from_host_buffer(&self.v_pool, &pool_dims, None)?,
+        ];
+        args.extend(state.iter());
+
+        let result = self.prefill_exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (logits, kp, vp) = result.to_tuple3()?;
+        let logits: Vec<f32> = logits.to_vec()?;
+        kp.copy_raw_to(&mut self.k_pool)?;
+        vp.copy_raw_to(&mut self.v_pool)?;
+        Ok(argmax(&logits))
+    }
+
+    /// Run one decode step for `n` sequences (n <= max batch). Each entry is
+    /// (last_token, position, block_table). Returns argmax next tokens.
+    pub fn decode(&mut self, seqs: &[(u32, u32, Vec<u32>)]) -> Result<Vec<u32>> {
+        let n = seqs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let b = self.decode_batch_for(n)?;
+        let m = &self.manifest;
+        let maxp = m.max_pages_per_seq;
+        let trash = m.trash_page() as i32;
+
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut tables = vec![trash; b * maxp];
+        for (i, (tok, pos, bt)) in seqs.iter().enumerate() {
+            tokens[i] = (*tok % m.vocab as u32) as i32;
+            positions[i] = *pos as i32;
+            for (j, &p) in bt.iter().take(maxp).enumerate() {
+                tables[i * maxp + j] = p as i32;
+            }
+        }
+        // Padding lanes write token 0 at position 0 into the trash page.
+        let vocab = m.vocab;
+        let pool_dims: Vec<usize> = self.manifest.pool_dims().to_vec();
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.weights.len() + 5);
+        args.extend(self.weights.iter());
+        let state = [
+            self.client.buffer_from_host_buffer(&tokens, &[b], None)?,
+            self.client.buffer_from_host_buffer(&positions, &[b], None)?,
+            self.client.buffer_from_host_buffer(&tables, &[b, maxp], None)?,
+            self.client.buffer_from_host_buffer(&self.k_pool, &pool_dims, None)?,
+            self.client.buffer_from_host_buffer(&self.v_pool, &pool_dims, None)?,
+        ];
+        args.extend(state.iter());
+
+        let exe = &self.decode_exes.iter().find(|(bb, _)| *bb == b).unwrap().1;
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (logits, kp, vp) = result.to_tuple3()?;
+        let logits: Vec<f32> = logits.to_vec()?;
+        kp.copy_raw_to(&mut self.k_pool)?;
+        vp.copy_raw_to(&mut self.v_pool)?;
+
+        Ok((0..n).map(|i| argmax(&logits[i * vocab..(i + 1) * vocab])).collect())
+    }
+
+    /// Elements in one (layer, page) slab of a pool.
+    pub fn page_elems(&self) -> usize {
+        self.manifest.page_size * self.manifest.n_heads * self.manifest.d_head
+    }
+
+    /// Flat offset of (layer, page) in a pool.
+    pub fn page_offset(&self, layer: usize, page: u32) -> usize {
+        let m = &self.manifest;
+        (layer * (m.n_pages + 1) + page as usize) * self.page_elems()
+    }
+}
+
+fn argmax(xs: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0); // first wins ties
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(ModelManifest::load(Path::new("/nonexistent-artifacts")).is_err());
+    }
+}

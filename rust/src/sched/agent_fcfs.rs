@@ -1,0 +1,147 @@
+//! Agent-level FCFS — the Parrot baseline (paper baseline (c)): agents are
+//! served whole, in arrival order; tasks within an agent are FIFO. Avoids
+//! inference-level interleaving but still head-of-line blocks on big agents.
+
+use crate::config::Policy;
+use crate::sched::{AgentInfo, AgentQueues, OrdF64, Scheduler, TaskInfo};
+use crate::workload::AgentId;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+pub struct AgentFcfs {
+    arrivals: HashMap<AgentId, f64>,
+    waiting: AgentQueues,
+    heap: BinaryHeap<Reverse<(OrdF64, AgentId)>>,
+    in_heap: HashSet<AgentId>,
+}
+
+impl AgentFcfs {
+    pub fn new() -> Self {
+        AgentFcfs {
+            arrivals: HashMap::new(),
+            waiting: AgentQueues::new(),
+            heap: BinaryHeap::new(),
+            in_heap: HashSet::new(),
+        }
+    }
+
+    fn ensure_in_heap(&mut self, agent: AgentId) {
+        if self.waiting.has_agent(agent) && self.in_heap.insert(agent) {
+            let a = self.arrivals.get(&agent).copied().unwrap_or(f64::MAX);
+            self.heap.push(Reverse((OrdF64(a), agent)));
+        }
+    }
+
+    fn skim(&mut self) {
+        while let Some(&Reverse((_, agent))) = self.heap.peek() {
+            if self.waiting.has_agent(agent) {
+                return;
+            }
+            self.heap.pop();
+            self.in_heap.remove(&agent);
+        }
+    }
+}
+
+impl Default for AgentFcfs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for AgentFcfs {
+    fn policy(&self) -> Policy {
+        Policy::AgentFcfs
+    }
+
+    fn on_agent_arrival(&mut self, info: &AgentInfo, _now: f64) {
+        self.arrivals.insert(info.id, info.arrival);
+    }
+
+    fn push_task(&mut self, task: TaskInfo, _now: f64) {
+        self.waiting.push(task);
+        self.ensure_in_heap(task.id.agent);
+    }
+
+    fn pop_next(&mut self, _now: f64) -> Option<TaskInfo> {
+        self.skim();
+        let &Reverse((_, agent)) = self.heap.peek()?;
+        let t = self.waiting.pop_agent(agent);
+        if !self.waiting.has_agent(agent) {
+            self.heap.pop();
+            self.in_heap.remove(&agent);
+        }
+        t
+    }
+
+    fn peek_next(&mut self, _now: f64) -> Option<TaskInfo> {
+        self.skim();
+        let &Reverse((_, agent)) = self.heap.peek()?;
+        self.waiting.peek_agent(agent).copied()
+    }
+
+    fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    fn preemption_rank(&self, agent: AgentId, _now: f64) -> f64 {
+        self.arrivals.get(&agent).copied().unwrap_or(f64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskId;
+
+    fn info(id: u32, arrival: f64) -> AgentInfo {
+        AgentInfo { id, arrival, cost: 0.0 }
+    }
+
+    fn task(agent: u32, index: u32, seq: u64) -> TaskInfo {
+        TaskInfo { id: TaskId { agent, index }, prompt_tokens: 1, predicted_decode: 1.0, seq }
+    }
+
+    #[test]
+    fn whole_agent_before_next() {
+        let mut s = AgentFcfs::new();
+        s.on_agent_arrival(&info(1, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 1.0), 1.0);
+        // Interleaved pushes; pops must group by agent arrival order.
+        s.push_task(task(2, 0, 0), 1.0);
+        s.push_task(task(1, 0, 1), 1.0);
+        s.push_task(task(2, 1, 2), 1.0);
+        s.push_task(task(1, 1, 3), 1.0);
+        let order: Vec<u32> = (0..4).map(|_| s.pop_next(1.0).unwrap().id.agent).collect();
+        assert_eq!(order, vec![1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn big_agent_blocks_later_small_one() {
+        // The head-of-line-blocking behaviour the paper attributes to
+        // Parrot: later (small) agents wait for earlier (big) ones.
+        let mut s = AgentFcfs::new();
+        s.on_agent_arrival(&info(1, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 0.5), 0.5);
+        for i in 0..10 {
+            s.push_task(task(1, i, i as u64), 0.0);
+        }
+        s.push_task(task(2, 0, 100), 0.5);
+        for _ in 0..10 {
+            assert_eq!(s.pop_next(1.0).unwrap().id.agent, 1);
+        }
+        assert_eq!(s.pop_next(1.0).unwrap().id.agent, 2);
+    }
+
+    #[test]
+    fn later_stage_tasks_keep_position() {
+        let mut s = AgentFcfs::new();
+        s.on_agent_arrival(&info(1, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 1.0), 1.0);
+        s.push_task(task(2, 0, 0), 1.0);
+        // Agent 1's stage-1 task arrives later but agent 1 arrived first.
+        s.push_task(task(1, 5, 1), 2.0);
+        assert_eq!(s.pop_next(2.0).unwrap().id.agent, 1);
+        assert_eq!(s.pop_next(2.0).unwrap().id.agent, 2);
+    }
+}

@@ -1,0 +1,232 @@
+//! The Justitia scheduler (paper §4.3): virtual-time fair queuing with
+//! selective pampering.
+//!
+//! On agent arrival, compute the virtual finish tag F_j = V(a_j) + C_j once.
+//! Agents are then served *saturated* — all their tasks admitted
+//! consecutively — in ascending F_j order. Status refresh on arrival or
+//! completion is O(log N); picking the next agent is O(log N) via a binary
+//! heap with lazy deletion (paper §4.3 complexity claims).
+
+use crate::config::Policy;
+use crate::sched::vtime::VirtualClock;
+use crate::sched::{AgentInfo, AgentQueues, OrdF64, Scheduler, TaskInfo};
+use crate::workload::AgentId;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Virtual-time fair-queuing scheduler.
+pub struct Justitia {
+    vclock: VirtualClock,
+    /// F_j per agent (static once computed).
+    tags: HashMap<AgentId, f64>,
+    waiting: AgentQueues,
+    /// Min-heap over (F_j, agent) for O(log N) selection; entries are lazily
+    /// dropped when the agent has no waiting tasks (stale) and re-pushed when
+    /// new tasks of a known agent arrive.
+    heap: BinaryHeap<Reverse<(OrdF64, AgentId)>>,
+    /// Agents currently represented in the heap (to avoid duplicate pushes).
+    in_heap: std::collections::HashSet<AgentId>,
+    label: Policy,
+}
+
+impl Justitia {
+    pub fn new(capacity_tokens: u64, rate_scale: f64) -> Self {
+        Justitia {
+            vclock: VirtualClock::new(capacity_tokens, rate_scale),
+            tags: HashMap::new(),
+            waiting: AgentQueues::new(),
+            heap: BinaryHeap::new(),
+            in_heap: std::collections::HashSet::new(),
+            label: Policy::Justitia,
+        }
+    }
+
+    /// Re-label (used by the Justitia/C cost-model ablation, which shares
+    /// this queuing machinery but feeds compute-centric costs).
+    pub fn with_label(mut self, label: Policy) -> Self {
+        self.label = label;
+        self
+    }
+
+    /// The virtual finish tag of an agent (for tests / introspection).
+    pub fn tag(&self, agent: AgentId) -> Option<f64> {
+        self.tags.get(&agent).copied()
+    }
+
+    /// Access the underlying virtual clock (GPS reference for metrics).
+    pub fn vclock_mut(&mut self) -> &mut VirtualClock {
+        &mut self.vclock
+    }
+
+    fn ensure_in_heap(&mut self, agent: AgentId) {
+        if self.waiting.has_agent(agent) && self.in_heap.insert(agent) {
+            let f = self.tags.get(&agent).copied().unwrap_or(f64::MAX);
+            self.heap.push(Reverse((OrdF64(f), agent)));
+        }
+    }
+
+    /// Drop stale heap heads (agents with no waiting tasks).
+    fn skim(&mut self) {
+        while let Some(&Reverse((_, agent))) = self.heap.peek() {
+            if self.waiting.has_agent(agent) {
+                return;
+            }
+            self.heap.pop();
+            self.in_heap.remove(&agent);
+        }
+    }
+}
+
+impl Scheduler for Justitia {
+    fn policy(&self) -> Policy {
+        self.label
+    }
+
+    fn on_agent_arrival(&mut self, info: &AgentInfo, now: f64) {
+        // Paper Eq. 3 — computed once, never refreshed.
+        let f = self.vclock.on_arrival(info.id, info.cost, now);
+        self.tags.insert(info.id, f);
+    }
+
+    fn push_task(&mut self, task: TaskInfo, now: f64) {
+        let _ = now;
+        self.waiting.push(task);
+        self.ensure_in_heap(task.id.agent);
+    }
+
+    fn pop_next(&mut self, now: f64) -> Option<TaskInfo> {
+        let _ = now;
+        self.skim();
+        let &Reverse((_, agent)) = self.heap.peek()?;
+        let task = self.waiting.pop_agent(agent);
+        // Keep the agent's heap entry while it still has waiting tasks; skim
+        // removes it lazily once drained.
+        if !self.waiting.has_agent(agent) {
+            self.heap.pop();
+            self.in_heap.remove(&agent);
+        }
+        task
+    }
+
+    fn peek_next(&mut self, now: f64) -> Option<TaskInfo> {
+        let _ = now;
+        self.skim();
+        let &Reverse((_, agent)) = self.heap.peek()?;
+        self.waiting.peek_agent(agent).copied()
+    }
+
+    fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    fn on_agent_complete(&mut self, agent: AgentId, now: f64) {
+        // Advance virtual time opportunistically; the tag itself stays (GPS
+        // may lag or lead the real system).
+        self.vclock.advance(now);
+        let _ = agent;
+    }
+
+    fn preemption_rank(&self, agent: AgentId, _now: f64) -> f64 {
+        // Preempt the agent with the LARGEST virtual finish tag first — the
+        // one GPS would finish last.
+        self.tags.get(&agent).copied().unwrap_or(f64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskId;
+
+    fn info(id: u32, cost: f64, arrival: f64) -> AgentInfo {
+        AgentInfo { id, arrival, cost }
+    }
+
+    fn task(agent: u32, index: u32, seq: u64) -> TaskInfo {
+        TaskInfo { id: TaskId { agent, index }, prompt_tokens: 8, predicted_decode: 4.0, seq }
+    }
+
+    #[test]
+    fn serves_in_virtual_finish_order() {
+        let mut s = Justitia::new(100, 1.0);
+        // Arrive together: cheap agent 2 must be fully served before 1.
+        s.on_agent_arrival(&info(1, 1000.0, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 100.0, 0.0), 0.0);
+        s.push_task(task(1, 0, 0), 0.0);
+        s.push_task(task(1, 1, 1), 0.0);
+        s.push_task(task(2, 0, 2), 0.0);
+        s.push_task(task(2, 1, 3), 0.0);
+        let order: Vec<u32> = (0..4).map(|_| s.pop_next(0.0).unwrap().id.agent).collect();
+        assert_eq!(order, vec![2, 2, 1, 1]);
+        assert!(s.pop_next(0.0).is_none());
+    }
+
+    #[test]
+    fn tasks_of_agent_served_consecutively() {
+        let mut s = Justitia::new(100, 1.0);
+        s.on_agent_arrival(&info(1, 50.0, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 60.0, 0.0), 0.0);
+        for i in 0..3 {
+            s.push_task(task(1, i, i as u64), 0.0);
+            s.push_task(task(2, i, 10 + i as u64), 0.0);
+        }
+        let order: Vec<u32> = (0..6).map(|_| s.pop_next(0.0).unwrap().id.agent).collect();
+        assert_eq!(order, vec![1, 1, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn late_cheap_agent_preempts_queue_position_only() {
+        let mut s = Justitia::new(10, 1.0);
+        s.on_agent_arrival(&info(1, 1000.0, 0.0), 0.0);
+        s.push_task(task(1, 0, 0), 0.0);
+        // At t=1, V=10; tiny agent gets F=10+5=15 < 1000.
+        s.on_agent_arrival(&info(2, 5.0, 1.0), 1.0);
+        s.push_task(task(2, 0, 1), 1.0);
+        assert_eq!(s.pop_next(1.0).unwrap().id.agent, 2);
+        assert_eq!(s.pop_next(1.0).unwrap().id.agent, 1);
+    }
+
+    #[test]
+    fn late_stage_tasks_keep_agent_priority() {
+        let mut s = Justitia::new(100, 1.0);
+        s.on_agent_arrival(&info(1, 10.0, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 500.0, 0.0), 0.0);
+        s.push_task(task(2, 0, 0), 0.0);
+        // Agent 1's stage-1 task shows up later (stage 0 completed) but its
+        // F tag still beats agent 2's.
+        s.push_task(task(1, 0, 1), 5.0);
+        assert_eq!(s.peek_next(5.0).unwrap().id.agent, 1);
+        assert_eq!(s.pop_next(5.0).unwrap().id.agent, 1);
+        assert_eq!(s.pop_next(5.0).unwrap().id.agent, 2);
+    }
+
+    #[test]
+    fn tags_are_stable_under_later_arrivals() {
+        let mut s = Justitia::new(100, 1.0);
+        s.on_agent_arrival(&info(1, 300.0, 0.0), 0.0);
+        let f1 = s.tag(1).unwrap();
+        for k in 2..20 {
+            s.on_agent_arrival(&info(k, 100.0, 0.1 * k as f64), 0.1 * k as f64);
+        }
+        assert_eq!(s.tag(1), Some(f1));
+    }
+
+    #[test]
+    fn preemption_rank_prefers_largest_tag() {
+        let mut s = Justitia::new(100, 1.0);
+        s.on_agent_arrival(&info(1, 10.0, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 999.0, 0.0), 0.0);
+        assert!(s.preemption_rank(2, 0.0) > s.preemption_rank(1, 0.0));
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut s = Justitia::new(100, 1.0);
+        s.on_agent_arrival(&info(1, 5.0, 0.0), 0.0);
+        s.push_task(task(1, 0, 0), 0.0);
+        let peeked = s.peek_next(0.0).unwrap();
+        let popped = s.pop_next(0.0).unwrap();
+        assert_eq!(peeked.id, popped.id);
+        assert_eq!(s.waiting_len(), 0);
+    }
+}

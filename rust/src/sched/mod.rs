@@ -1,0 +1,264 @@
+//! Agent/task scheduling policies (paper §4.3 + the §5.1 baselines).
+//!
+//! The engine owns the queues' *mechanics* (admission, swap, batching); a
+//! `Scheduler` owns the *policy*: which waiting task to admit next, and which
+//! running agent to preempt first when KV is exhausted. Tasks are pushed when
+//! their stage is released; all schedulers here are work-conserving.
+
+pub mod agent_fcfs;
+pub mod fcfs;
+pub mod gps;
+pub mod justitia;
+pub mod sjf;
+pub mod srjf;
+pub mod vtc;
+pub mod vtime;
+
+use crate::config::Policy;
+use crate::cost::CostModel;
+use crate::workload::{AgentId, TaskId};
+
+/// What the scheduler learns about an agent on arrival. `cost` is the
+/// *predicted* total service cost Ĉ_j under the scheduler's cost model
+/// (ground truth in oracle mode, MLP output in predictor mode).
+#[derive(Debug, Clone, Copy)]
+pub struct AgentInfo {
+    pub id: AgentId,
+    pub arrival: f64,
+    pub cost: f64,
+}
+
+/// A waiting inference task, as seen by the scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskInfo {
+    pub id: TaskId,
+    pub prompt_tokens: u32,
+    /// Predicted decode length (for inference-level SJF).
+    pub predicted_decode: f64,
+    /// Monotonic submission sequence number (FCFS / tie-breaks).
+    pub seq: u64,
+}
+
+/// Scheduling policy interface. `now` is engine time in seconds.
+pub trait Scheduler: Send {
+    fn policy(&self) -> Policy;
+
+    /// A new agent arrived (called before its stage-0 tasks are pushed).
+    fn on_agent_arrival(&mut self, info: &AgentInfo, now: f64);
+
+    /// A task became ready (stage released) and entered the waiting queue.
+    fn push_task(&mut self, task: TaskInfo, now: f64);
+
+    /// Pick the next waiting task to admit; removes it from the queue.
+    fn pop_next(&mut self, now: f64) -> Option<TaskInfo>;
+
+    /// Look at what `pop_next` would return without removing it.
+    fn peek_next(&mut self, now: f64) -> Option<TaskInfo>;
+
+    /// Number of waiting tasks.
+    fn waiting_len(&self) -> usize;
+
+    /// Service-delivery accounting: `delta` units of the scheduler's cost
+    /// metric were served to `agent` (used by VTC counters and SRJF
+    /// remaining-work tracking; others ignore it).
+    fn on_service(&mut self, _agent: AgentId, _delta: f64) {}
+
+    /// All tasks of the agent finished.
+    fn on_agent_complete(&mut self, _agent: AgentId, _now: f64) {}
+
+    /// Preemption rank among *running* agents when KV must be reclaimed:
+    /// the engine swaps out sequences of the agent with the HIGHEST rank
+    /// first. Default mirrors admission priority (last-to-be-chosen is
+    /// first-to-be-preempted).
+    fn preemption_rank(&self, agent: AgentId, now: f64) -> f64;
+}
+
+/// Construct a scheduler for a policy.
+///
+/// `capacity_tokens` is M; `service_rate_scale` converts cost units
+/// (token·iterations) into per-second GPS service (tokens drained per second
+/// = M × scale); it affects only GPS real-time finish estimates, never the
+/// priority order.
+pub fn build(
+    policy: Policy,
+    capacity_tokens: u64,
+    service_rate_scale: f64,
+) -> Box<dyn Scheduler> {
+    match policy {
+        Policy::Fcfs => Box::new(fcfs::Fcfs::new()),
+        Policy::Sjf => Box::new(sjf::Sjf::new()),
+        Policy::AgentFcfs => Box::new(agent_fcfs::AgentFcfs::new()),
+        Policy::Vtc => Box::new(vtc::Vtc::new(CostModel::ComputeCentric)),
+        Policy::Srjf => Box::new(srjf::Srjf::new()),
+        Policy::Justitia => {
+            Box::new(justitia::Justitia::new(capacity_tokens, service_rate_scale))
+        }
+        Policy::JustitiaComputeCost => {
+            // Fig. 11 ablation: identical queuing, costs fed to it are
+            // computed with the compute-centric model by the caller.
+            Box::new(
+                justitia::Justitia::new(capacity_tokens, service_rate_scale)
+                    .with_label(Policy::JustitiaComputeCost),
+            )
+        }
+    }
+}
+
+/// The cost model a policy's agent-level costs should be computed with.
+pub fn cost_model_for(policy: Policy) -> CostModel {
+    match policy {
+        Policy::JustitiaComputeCost | Policy::Vtc | Policy::Sjf => CostModel::ComputeCentric,
+        _ => CostModel::MemoryCentric,
+    }
+}
+
+/// Shared helper: per-agent FIFO queues with a pluggable agent key. Agent-
+/// level policies (Justitia, Parrot, VTC, SRJF) admit all tasks of the
+/// chosen agent consecutively (paper §4.3: "all the inferences of a
+/// high-priority agent can be served consecutively without being
+/// interleaved").
+#[derive(Debug, Default)]
+pub struct AgentQueues {
+    queues: std::collections::HashMap<AgentId, std::collections::VecDeque<TaskInfo>>,
+    len: usize,
+}
+
+impl AgentQueues {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, task: TaskInfo) {
+        self.queues.entry(task.id.agent).or_default().push_back(task);
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn has_agent(&self, agent: AgentId) -> bool {
+        self.queues.get(&agent).map(|q| !q.is_empty()).unwrap_or(false)
+    }
+
+    /// Agents that currently have waiting tasks.
+    pub fn waiting_agents(&self) -> impl Iterator<Item = AgentId> + '_ {
+        self.queues.iter().filter(|(_, q)| !q.is_empty()).map(|(&a, _)| a)
+    }
+
+    /// Pop the head task of `agent`'s FIFO.
+    pub fn pop_agent(&mut self, agent: AgentId) -> Option<TaskInfo> {
+        let q = self.queues.get_mut(&agent)?;
+        let t = q.pop_front();
+        if t.is_some() {
+            self.len -= 1;
+        }
+        if q.is_empty() {
+            self.queues.remove(&agent);
+        }
+        t
+    }
+
+    /// Peek the head task of `agent`'s FIFO.
+    pub fn peek_agent(&self, agent: AgentId) -> Option<&TaskInfo> {
+        self.queues.get(&agent).and_then(|q| q.front())
+    }
+
+    /// Linear scan for the waiting agent minimizing `key` (ties by agent id).
+    /// O(A) with A = agents having waiting work; used by the dynamic-priority
+    /// policies (VTC, SRJF) where keys change continuously.
+    pub fn min_agent_by<F: FnMut(AgentId) -> f64>(&self, mut key: F) -> Option<AgentId> {
+        self.waiting_agents()
+            .map(|a| (a, key(a)))
+            .min_by(|(a1, k1), (a2, k2)| k1.partial_cmp(k2).unwrap().then(a1.cmp(a2)))
+            .map(|(a, _)| a)
+    }
+}
+
+/// An f64 key usable in ordered collections (total order, NaN-free inputs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN scheduling key")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(agent: u32, index: u32, seq: u64) -> TaskInfo {
+        TaskInfo {
+            id: TaskId { agent, index },
+            prompt_tokens: 10,
+            predicted_decode: 5.0,
+            seq,
+        }
+    }
+
+    #[test]
+    fn agent_queues_fifo_within_agent() {
+        let mut q = AgentQueues::new();
+        q.push(task(1, 0, 0));
+        q.push(task(1, 1, 1));
+        q.push(task(2, 0, 2));
+        assert_eq!(q.len(), 3);
+        assert!(q.has_agent(1));
+        assert_eq!(q.pop_agent(1).unwrap().id.index, 0);
+        assert_eq!(q.pop_agent(1).unwrap().id.index, 1);
+        assert!(q.pop_agent(1).is_none());
+        assert!(!q.has_agent(1));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn min_agent_by_key() {
+        let mut q = AgentQueues::new();
+        q.push(task(1, 0, 0));
+        q.push(task(2, 0, 1));
+        q.push(task(3, 0, 2));
+        let keys = std::collections::HashMap::from([(1u32, 5.0), (2u32, 1.0), (3u32, 9.0)]);
+        assert_eq!(q.min_agent_by(|a| keys[&a]), Some(2));
+        q.pop_agent(2);
+        assert_eq!(q.min_agent_by(|a| keys[&a]), Some(1));
+    }
+
+    #[test]
+    fn ordf64_total_order() {
+        let mut v = vec![OrdF64(3.0), OrdF64(1.0), OrdF64(2.0)];
+        v.sort();
+        assert_eq!(v, vec![OrdF64(1.0), OrdF64(2.0), OrdF64(3.0)]);
+    }
+
+    #[test]
+    fn build_all_policies() {
+        for p in Policy::all_paper_baselines() {
+            let s = build(p, 1000, 1.0);
+            assert_eq!(s.policy(), p);
+        }
+        let s = build(Policy::JustitiaComputeCost, 1000, 1.0);
+        assert_eq!(s.policy(), Policy::JustitiaComputeCost);
+    }
+
+    #[test]
+    fn cost_models_per_policy() {
+        assert_eq!(cost_model_for(Policy::Justitia), CostModel::MemoryCentric);
+        assert_eq!(cost_model_for(Policy::JustitiaComputeCost), CostModel::ComputeCentric);
+        assert_eq!(cost_model_for(Policy::Vtc), CostModel::ComputeCentric);
+        assert_eq!(cost_model_for(Policy::Srjf), CostModel::MemoryCentric);
+    }
+}

@@ -1,0 +1,117 @@
+//! Inference-level Shortest-Job-First with predicted durations — the
+//! vLLM-SJF baseline (paper baseline (b), after Shahout et al. 2025).
+//! Near-optimal mean latency at the inference level; starves long requests.
+
+use crate::config::Policy;
+use crate::sched::{AgentInfo, OrdF64, Scheduler, TaskInfo};
+use crate::workload::AgentId;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+pub struct Sjf {
+    /// Min-heap on (predicted duration, submission seq).
+    heap: BinaryHeap<Reverse<(OrdF64, u64, TaskKey)>>,
+    tasks: HashMap<TaskKey, TaskInfo>,
+    agent_pred: HashMap<AgentId, f64>,
+}
+
+type TaskKey = (u32, u32);
+
+fn key(t: &TaskInfo) -> TaskKey {
+    (t.id.agent, t.id.index)
+}
+
+impl Sjf {
+    pub fn new() -> Self {
+        Sjf { heap: BinaryHeap::new(), tasks: HashMap::new(), agent_pred: HashMap::new() }
+    }
+
+    /// Predicted inference duration: dominated by decode length (one token
+    /// per iteration), plus a prefill term.
+    fn duration(t: &TaskInfo) -> f64 {
+        t.predicted_decode + t.prompt_tokens as f64 / 256.0
+    }
+}
+
+impl Default for Sjf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Sjf {
+    fn policy(&self) -> Policy {
+        Policy::Sjf
+    }
+
+    fn on_agent_arrival(&mut self, info: &AgentInfo, _now: f64) {
+        self.agent_pred.insert(info.id, info.cost);
+    }
+
+    fn push_task(&mut self, task: TaskInfo, _now: f64) {
+        self.heap.push(Reverse((OrdF64(Self::duration(&task)), task.seq, key(&task))));
+        self.tasks.insert(key(&task), task);
+    }
+
+    fn pop_next(&mut self, _now: f64) -> Option<TaskInfo> {
+        let Reverse((_, _, k)) = self.heap.pop()?;
+        self.tasks.remove(&k)
+    }
+
+    fn peek_next(&mut self, _now: f64) -> Option<TaskInfo> {
+        let &Reverse((_, _, k)) = self.heap.peek()?;
+        self.tasks.get(&k).copied()
+    }
+
+    fn waiting_len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn preemption_rank(&self, agent: AgentId, _now: f64) -> f64 {
+        // Preempt the agent with the largest predicted total first.
+        self.agent_pred.get(&agent).copied().unwrap_or(f64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskId;
+
+    fn task(agent: u32, index: u32, seq: u64, decode: f64) -> TaskInfo {
+        TaskInfo { id: TaskId { agent, index }, prompt_tokens: 100, predicted_decode: decode, seq }
+    }
+
+    #[test]
+    fn shortest_first() {
+        let mut s = Sjf::new();
+        s.push_task(task(1, 0, 0, 300.0), 0.0);
+        s.push_task(task(2, 0, 1, 20.0), 0.0);
+        s.push_task(task(3, 0, 2, 80.0), 0.0);
+        let order: Vec<u32> = (0..3).map(|_| s.pop_next(0.0).unwrap().id.agent).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn ties_break_by_seq() {
+        let mut s = Sjf::new();
+        s.push_task(task(1, 0, 5, 50.0), 0.0);
+        s.push_task(task(2, 0, 3, 50.0), 0.0);
+        assert_eq!(s.pop_next(0.0).unwrap().id.agent, 2);
+    }
+
+    #[test]
+    fn starvation_shape() {
+        // A stream of short tasks starves the long one — the failure mode
+        // Fig. 9 demonstrates (for SRJF at the agent level).
+        let mut s = Sjf::new();
+        s.push_task(task(99, 0, 0, 1000.0), 0.0);
+        for i in 0..20 {
+            s.push_task(task(i, 0, (i + 1) as u64, 10.0), 0.0);
+        }
+        for _ in 0..20 {
+            assert_ne!(s.pop_next(0.0).unwrap().id.agent, 99);
+        }
+        assert_eq!(s.pop_next(0.0).unwrap().id.agent, 99);
+    }
+}

@@ -1,0 +1,136 @@
+//! Agent-level Shortest-Remaining-Job-First — the SRJF baseline (paper
+//! baseline (e)): uses the same predicted agent costs as Justitia but ranks
+//! by *remaining* predicted work. Near-optimal mean JCT; starves elephants
+//! (Fig. 9).
+
+use crate::config::Policy;
+use crate::sched::{AgentInfo, AgentQueues, Scheduler, TaskInfo};
+use crate::workload::AgentId;
+use std::collections::HashMap;
+
+pub struct Srjf {
+    remaining: HashMap<AgentId, f64>,
+    waiting: AgentQueues,
+}
+
+impl Srjf {
+    pub fn new() -> Self {
+        Srjf { remaining: HashMap::new(), waiting: AgentQueues::new() }
+    }
+
+    /// Remaining predicted work of an agent (for tests).
+    pub fn remaining(&self, agent: AgentId) -> f64 {
+        self.remaining.get(&agent).copied().unwrap_or(0.0)
+    }
+}
+
+impl Default for Srjf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Srjf {
+    fn policy(&self) -> Policy {
+        Policy::Srjf
+    }
+
+    fn on_agent_arrival(&mut self, info: &AgentInfo, _now: f64) {
+        self.remaining.insert(info.id, info.cost.max(0.0));
+    }
+
+    fn push_task(&mut self, task: TaskInfo, _now: f64) {
+        self.waiting.push(task);
+    }
+
+    fn pop_next(&mut self, _now: f64) -> Option<TaskInfo> {
+        // Dynamic priority: linear scan over waiting agents (A ≤ hundreds).
+        let agent = self.waiting.min_agent_by(|a| self.remaining.get(&a).copied().unwrap_or(0.0))?;
+        self.waiting.pop_agent(agent)
+    }
+
+    fn peek_next(&mut self, _now: f64) -> Option<TaskInfo> {
+        let agent = self.waiting.min_agent_by(|a| self.remaining.get(&a).copied().unwrap_or(0.0))?;
+        self.waiting.peek_agent(agent).copied()
+    }
+
+    fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    fn on_service(&mut self, agent: AgentId, delta: f64) {
+        if let Some(r) = self.remaining.get_mut(&agent) {
+            *r = (*r - delta).max(0.0);
+        }
+    }
+
+    fn on_agent_complete(&mut self, agent: AgentId, _now: f64) {
+        self.remaining.remove(&agent);
+    }
+
+    fn preemption_rank(&self, agent: AgentId, _now: f64) -> f64 {
+        // Preempt the agent with the most remaining work first.
+        self.remaining.get(&agent).copied().unwrap_or(f64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskId;
+
+    fn info(id: u32, cost: f64) -> AgentInfo {
+        AgentInfo { id, arrival: 0.0, cost }
+    }
+
+    fn task(agent: u32, index: u32, seq: u64) -> TaskInfo {
+        TaskInfo { id: TaskId { agent, index }, prompt_tokens: 10, predicted_decode: 5.0, seq }
+    }
+
+    #[test]
+    fn smallest_remaining_first() {
+        let mut s = Srjf::new();
+        s.on_agent_arrival(&info(1, 100.0), 0.0);
+        s.on_agent_arrival(&info(2, 50.0), 0.0);
+        s.push_task(task(1, 0, 0), 0.0);
+        s.push_task(task(2, 0, 1), 0.0);
+        assert_eq!(s.pop_next(0.0).unwrap().id.agent, 2);
+    }
+
+    #[test]
+    fn service_updates_change_order() {
+        let mut s = Srjf::new();
+        s.on_agent_arrival(&info(1, 100.0), 0.0);
+        s.on_agent_arrival(&info(2, 80.0), 0.0);
+        s.push_task(task(1, 0, 0), 0.0);
+        s.push_task(task(2, 0, 1), 0.0);
+        // Deliver 50 units to agent 1: remaining 50 < 80.
+        s.on_service(1, 50.0);
+        assert!((s.remaining(1) - 50.0).abs() < 1e-12);
+        assert_eq!(s.pop_next(0.0).unwrap().id.agent, 1);
+    }
+
+    #[test]
+    fn remaining_clamps_at_zero() {
+        let mut s = Srjf::new();
+        s.on_agent_arrival(&info(1, 10.0), 0.0);
+        s.on_service(1, 50.0);
+        assert_eq!(s.remaining(1), 0.0);
+    }
+
+    #[test]
+    fn elephant_starves_under_mice_stream() {
+        // The exact Fig. 9 failure mode at the queue level.
+        let mut s = Srjf::new();
+        s.on_agent_arrival(&info(0, 1_000_000.0), 0.0);
+        s.push_task(task(0, 0, 0), 0.0);
+        for i in 1..=50 {
+            s.on_agent_arrival(&info(i, 100.0), i as f64);
+            s.push_task(task(i, 0, i as u64), i as f64);
+        }
+        for _ in 0..50 {
+            assert_ne!(s.pop_next(100.0).unwrap().id.agent, 0);
+        }
+        assert_eq!(s.pop_next(100.0).unwrap().id.agent, 0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Virtual time V(t) for fair queuing (paper Eq. 2–3).
+//!
+//! ```text
+//! V(0) = 0,     dV/dt = M / N_t                              (Eq. 2)
+//! F_j  = V(a_j) + C_j                                        (Eq. 3)
+//! ```
+//!
+//! `M` is the total KV capacity and `N_t` the number of GPS-active agents —
+//! agents that have arrived but whose GPS (idealized fair-sharing) service is
+//! not yet complete. The classical fair-queuing identity makes this cheap to
+//! track: *agent j is GPS-active exactly while V(t) < F_j*, so the active set
+//! is a min-heap on F and V(t) is piecewise linear between heap events.
+//!
+//! This same structure doubles as the exact GPS fluid simulator: inverting
+//! the piecewise-linear V gives each agent's GPS completion time f̄_j in real
+//! time, which the fairness metrics and the Theorem-B.1 property tests use.
+//!
+//! Units: costs C_j are KV token-time (token·iterations). `rate_scale`
+//! converts to wall seconds: the work-conserving server drains
+//! `M × rate_scale` token-time units per second (`rate_scale` = iterations
+//! per second). The *order* of {F_j} — all Justitia needs — is invariant to
+//! `rate_scale`.
+
+use crate::sched::OrdF64;
+use crate::workload::AgentId;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+/// Virtual clock + GPS-active set.
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    m: f64,
+    rate_scale: f64,
+    v: f64,
+    last_t: f64,
+    /// GPS-active agents: min-heap on virtual finish time.
+    active: BinaryHeap<Reverse<(OrdF64, AgentId)>>,
+    /// Real-time GPS completion, recorded when V crosses F_j.
+    gps_finish: HashMap<AgentId, f64>,
+    /// Virtual finish tags (F_j), kept for inspection.
+    tags: HashMap<AgentId, f64>,
+}
+
+impl VirtualClock {
+    /// `capacity_tokens` = M; `rate_scale` = iterations per second the
+    /// server sustains (use 1.0 when simulating in iteration time).
+    pub fn new(capacity_tokens: u64, rate_scale: f64) -> Self {
+        assert!(capacity_tokens > 0 && rate_scale > 0.0);
+        VirtualClock {
+            m: capacity_tokens as f64,
+            rate_scale,
+            v: 0.0,
+            last_t: 0.0,
+            active: BinaryHeap::new(),
+            gps_finish: HashMap::new(),
+            tags: HashMap::new(),
+        }
+    }
+
+    /// Number of GPS-active agents right now (N_t after advancing to `now`).
+    pub fn active_agents(&mut self, now: f64) -> usize {
+        self.advance(now);
+        self.active.len()
+    }
+
+    /// Current virtual time after advancing to `now`.
+    pub fn vt(&mut self, now: f64) -> f64 {
+        self.advance(now);
+        self.v
+    }
+
+    /// Advance V(t) to real time `now`, popping agents whose GPS service
+    /// completes on the way (piecewise-linear integration of Eq. 2).
+    pub fn advance(&mut self, now: f64) {
+        debug_assert!(now + 1e-9 >= self.last_t, "time went backwards: {} < {}", now, self.last_t);
+        let now = now.max(self.last_t);
+        loop {
+            let n = self.active.len();
+            if n == 0 {
+                // Idle GPS server: V holds (no active agents to serve).
+                self.last_t = now;
+                return;
+            }
+            // dV/dt = (M / N) × rate_scale  [token-time units per second]
+            let rate = self.m / n as f64 * self.rate_scale;
+            let &Reverse((OrdF64(min_f), min_agent)) = self.active.peek().unwrap();
+            let t_finish = self.last_t + (min_f - self.v).max(0.0) / rate;
+            if t_finish <= now {
+                // Agent min_agent completes in GPS at t_finish.
+                self.v = min_f;
+                self.last_t = t_finish;
+                self.active.pop();
+                self.gps_finish.insert(min_agent, t_finish);
+            } else {
+                self.v += rate * (now - self.last_t);
+                self.last_t = now;
+                return;
+            }
+        }
+    }
+
+    /// Register an arrival (paper Eq. 3): returns the virtual finish tag
+    /// F_j = V(a_j) + C_j, computed once and never updated.
+    pub fn on_arrival(&mut self, agent: AgentId, cost: f64, now: f64) -> f64 {
+        self.advance(now);
+        let f = self.v + cost.max(0.0);
+        self.active.push(Reverse((OrdF64(f), agent)));
+        self.tags.insert(agent, f);
+        f
+    }
+
+    /// The virtual finish tag of an agent, if registered.
+    pub fn tag(&self, agent: AgentId) -> Option<f64> {
+        self.tags.get(&agent).copied()
+    }
+
+    /// GPS completion time in real seconds, available once V(t) has been
+    /// advanced past F_j. Call `advance(∞-ish)` or `finish_all` first when
+    /// draining.
+    pub fn gps_finish(&self, agent: AgentId) -> Option<f64> {
+        self.gps_finish.get(&agent).copied()
+    }
+
+    /// Drain the active set: advance until every registered agent has a GPS
+    /// finish time, and return the final real time.
+    pub fn finish_all(&mut self) -> f64 {
+        while let Some(&Reverse((OrdF64(min_f), _))) = self.active.peek() {
+            let n = self.active.len();
+            let rate = self.m / n as f64 * self.rate_scale;
+            let t = self.last_t + (min_f - self.v).max(0.0) / rate;
+            self.advance(t + 1e-12);
+        }
+        self.last_t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_agent_full_rate() {
+        // One agent, cost 100, M=10, scale=1 → GPS serves at 10/s → 10 s.
+        let mut vc = VirtualClock::new(10, 1.0);
+        vc.on_arrival(1, 100.0, 0.0);
+        vc.finish_all();
+        assert!((vc.gps_finish(1).unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_equal_agents_share() {
+        // Two agents arriving together, each cost 100, M=10: each gets 5/s,
+        // both complete at t=20.
+        let mut vc = VirtualClock::new(10, 1.0);
+        vc.on_arrival(1, 100.0, 0.0);
+        vc.on_arrival(2, 100.0, 0.0);
+        vc.finish_all();
+        assert!((vc.gps_finish(1).unwrap() - 20.0).abs() < 1e-9);
+        assert!((vc.gps_finish(2).unwrap() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unequal_agents_short_finishes_first() {
+        // Costs 50 and 150, arriving together, M=10. Shared until the short
+        // one has consumed 50 (t=10); then the long one runs alone.
+        let mut vc = VirtualClock::new(10, 1.0);
+        vc.on_arrival(1, 50.0, 0.0);
+        vc.on_arrival(2, 150.0, 0.0);
+        vc.finish_all();
+        assert!((vc.gps_finish(1).unwrap() - 10.0).abs() < 1e-9);
+        // Long agent: 50 served by t=10, remaining 100 at 10/s → t=20.
+        assert!((vc.gps_finish(2).unwrap() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn late_arrival_does_not_change_existing_order() {
+        // Paper §4.3: later arrivals change the fair rate but not the
+        // relative completion order among existing agents.
+        let mut vc = VirtualClock::new(100, 1.0);
+        let f1 = vc.on_arrival(1, 500.0, 0.0);
+        let f2 = vc.on_arrival(2, 900.0, 1.0);
+        let f3 = vc.on_arrival(3, 50.0, 2.0);
+        assert!(f1 < f2);
+        // Tags never change after computation.
+        assert_eq!(vc.tag(1), Some(f1));
+        assert_eq!(vc.tag(2), Some(f2));
+        assert_eq!(vc.tag(3), Some(f3));
+        vc.finish_all();
+        let (g1, g2) = (vc.gps_finish(1).unwrap(), vc.gps_finish(2).unwrap());
+        assert!(g1 < g2);
+    }
+
+    #[test]
+    fn virtual_rate_depends_on_active_count() {
+        let mut vc = VirtualClock::new(10, 1.0);
+        vc.on_arrival(1, 1000.0, 0.0);
+        vc.on_arrival(2, 1000.0, 0.0);
+        // After 1 s with 2 active: V advanced by 10/2 = 5.
+        assert!((vc.vt(1.0) - 5.0).abs() < 1e-9);
+        // Idle clock holds V.
+        let mut idle = VirtualClock::new(10, 1.0);
+        assert_eq!(idle.vt(100.0), 0.0);
+    }
+
+    #[test]
+    fn arrival_during_service_gets_current_v() {
+        let mut vc = VirtualClock::new(10, 1.0);
+        vc.on_arrival(1, 100.0, 0.0);
+        // At t=2, V = 20 (one active agent, rate 10/s).
+        let f2 = vc.on_arrival(2, 30.0, 2.0);
+        assert!((f2 - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_scale_scales_real_times_not_order() {
+        let mut a = VirtualClock::new(10, 1.0);
+        let mut b = VirtualClock::new(10, 4.0);
+        for (id, c, t) in [(1u32, 80.0, 0.0), (2, 40.0, 0.5), (3, 120.0, 1.0)] {
+            a.on_arrival(id, c, t);
+            b.on_arrival(id, c, t);
+        }
+        a.finish_all();
+        b.finish_all();
+        let order = |vc: &VirtualClock| {
+            let mut v: Vec<_> = (1..=3u32).map(|i| (OrdF64(vc.gps_finish(i).unwrap()), i)).collect();
+            v.sort();
+            v.into_iter().map(|(_, i)| i).collect::<Vec<_>>()
+        };
+        assert_eq!(order(&a), order(&b));
+        assert!(b.gps_finish(3).unwrap() < a.gps_finish(3).unwrap());
+    }
+
+    #[test]
+    fn gps_conservation() {
+        // Total work / M = makespan when the server is never idle.
+        let mut vc = VirtualClock::new(20, 1.0);
+        let costs = [300.0, 500.0, 200.0];
+        for (i, c) in costs.iter().enumerate() {
+            vc.on_arrival(i as u32, *c, 0.0);
+        }
+        let end = vc.finish_all();
+        assert!((end - costs.iter().sum::<f64>() / 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,386 @@
+//! Minimal HTTP/1.1 front-end over the PJRT serving engine.
+//!
+//! Endpoints:
+//!   `POST /agents`   — submit an agent: `{"class": "DM", "stages": [[{"p":..,"d":..}]]}`
+//!                      (stages optional: omitted → generated from the class
+//!                      template with a fresh seed). Returns the agent id.
+//!   `GET  /agents/N` — status + JCT when complete.
+//!   `GET  /metrics`  — aggregate serving metrics (JSON).
+//!   `GET  /healthz`  — liveness.
+//!
+//! Architecture: acceptor threads parse requests and push submissions over a
+//! channel; a single engine thread owns the `Engine<PjrtBackend>` and steps
+//! it whenever work exists (Python never on this path — the model is the
+//! AOT-compiled PJRT executable).
+
+use crate::config::{BackendProfile, Config, Policy};
+use crate::cost::CostModel;
+use crate::engine::Engine;
+use crate::runtime::{PjrtBackend, PjrtModel};
+use crate::util::json::{obj, Json};
+use crate::workload::{AgentClass, AgentSpec, InferenceSpec, TaskId};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Parse one HTTP/1.1 request from a stream.
+pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("method")?.to_string();
+    let path = parts.next().context("path")?.to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if !body.is_empty() {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Request { method, path, body })
+}
+
+/// Write an HTTP response.
+pub fn write_response(stream: &mut dyn Write, status: u16, body: &str) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Shared serving state.
+pub(crate) struct Shared {
+    /// agent id → (class, submit wall time, Option<jct>).
+    agents: Mutex<BTreeMap<u32, (String, std::time::Instant, Option<f64>)>>,
+    next_id: AtomicU32,
+}
+
+/// Parse an agent submission body into an AgentSpec.
+pub fn parse_agent_submission(
+    body: &str,
+    id: u32,
+    seed: u64,
+) -> Result<AgentSpec> {
+    let v = Json::parse(body).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let class_name = v.get("class").as_str().unwrap_or("EV");
+    let class = AgentClass::by_short_name(class_name)
+        .with_context(|| format!("unknown class '{class_name}'"))?;
+    if let Some(stages_json) = v.get("stages").as_arr() {
+        let mut stages = Vec::new();
+        let mut index = 0u32;
+        for (s, st) in stages_json.iter().enumerate() {
+            let mut tasks = Vec::new();
+            for t in st.as_arr().context("stage must be an array")? {
+                tasks.push(InferenceSpec {
+                    id: TaskId { agent: id, index },
+                    stage: s as u32,
+                    prompt_tokens: t.get("p").as_u64().context("p")? as u32,
+                    decode_tokens: t.get("d").as_u64().context("d")? as u32,
+                    kind: "http",
+                });
+                index += 1;
+            }
+            stages.push(tasks);
+        }
+        anyhow::ensure!(!stages.is_empty() && stages.iter().all(|s| !s.is_empty()), "empty stages");
+        Ok(AgentSpec {
+            id,
+            class,
+            arrival: 0.0,
+            stages,
+            input_text: v.get("input").as_str().unwrap_or("").to_string(),
+        })
+    } else {
+        // Generate from the class template.
+        let mut gen = crate::workload::generator::Generator::new(seed ^ id as u64);
+        let mut a = gen.agent(class, id, 0.0);
+        // HTTP-served model is the tiny artifact: clamp lengths to fit.
+        for st in &mut a.stages {
+            for t in st.iter_mut() {
+                t.prompt_tokens = t.prompt_tokens.clamp(1, 48) / 4 + 2;
+                t.decode_tokens = t.decode_tokens.clamp(1, 48) / 4 + 2;
+            }
+        }
+        Ok(a)
+    }
+}
+
+/// Run the HTTP server (blocks forever).
+pub fn serve(artifacts: &std::path::Path, port: u16, policy: Policy) -> Result<()> {
+    let shared = Arc::new(Shared { agents: Mutex::new(BTreeMap::new()), next_id: AtomicU32::new(0) });
+    let (tx, rx) = mpsc::channel::<(AgentSpec, f64)>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+
+    // Engine thread owns the PJRT model outright — the xla crate's handles
+    // are not Send, so the model is loaded *inside* the thread.
+    {
+        let shared = Arc::clone(&shared);
+        let artifacts = artifacts.to_path_buf();
+        std::thread::Builder::new().name("justitia-engine".into()).spawn(move || {
+            let model = match PjrtModel::load(&artifacts) {
+                Ok(m) => {
+                    let _ = ready_tx.send(Ok(format!(
+                        "loaded model from {} (platform {}, {} pages × {} tokens)",
+                        artifacts.display(),
+                        m.platform(),
+                        m.manifest.n_pages,
+                        m.manifest.page_size
+                    )));
+                    m
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let m = &model.manifest;
+            let mut cfg2 = Config::default();
+            cfg2.backend = BackendProfile {
+                name: "tiny-cpu".into(),
+                kv_tokens: (m.n_pages * m.page_size) as u64,
+                page_size: m.page_size as u32,
+                alpha: 0.0,
+                beta_prefill: 0.0,
+                beta_decode: 0.0,
+                swap_cost_per_token: 0.0,
+            };
+            cfg2.max_batch = model.max_decode_batch();
+            let sched = crate::sched::build(policy, cfg2.backend.kv_tokens, 1.0);
+            let mut engine = Engine::new(&cfg2, sched, PjrtBackend::new(model));
+            loop {
+                // Drain pending submissions.
+                while let Ok((spec, cost)) = rx.try_recv() {
+                    engine.submit(spec, cost);
+                }
+                if engine.has_work() {
+                    engine.step();
+                    // Record completions.
+                    let mut agents = shared.agents.lock().unwrap();
+                    for (id, entry) in agents.iter_mut() {
+                        if entry.2.is_none() {
+                            if let Some(_done) = engine.metrics.agent_complete_time(*id) {
+                                entry.2 = Some(entry.1.elapsed().as_secs_f64());
+                            }
+                        }
+                    }
+                } else {
+                    // Idle: block on the next submission.
+                    match rx.recv() {
+                        Ok((spec, cost)) => engine.submit(spec, cost),
+                        Err(_) => break,
+                    }
+                }
+            }
+        })?;
+    }
+    println!("{}", ready_rx.recv().context("engine thread died")??);
+
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    println!("serving on http://127.0.0.1:{port} (policy {})", policy.name());
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let shared = Arc::clone(&shared);
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, &shared, &tx);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    shared: &Shared,
+    tx: &mpsc::Sender<(AgentSpec, f64)>,
+) -> Result<()> {
+    let req = parse_request(&mut stream)?;
+    let (status, body) = route(&req, shared, tx);
+    write_response(&mut stream, status, &body)?;
+    Ok(())
+}
+
+/// Route a request (separated from I/O for testability).
+pub(crate) fn route(
+    req: &Request,
+    shared: &Shared,
+    tx: &mpsc::Sender<(AgentSpec, f64)>,
+) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, obj([("ok", true.into())]).dump()),
+        ("GET", "/metrics") => {
+            let agents = shared.agents.lock().unwrap();
+            let done: Vec<f64> = agents.values().filter_map(|(_, _, j)| *j).collect();
+            (
+                200,
+                obj([
+                    ("submitted", agents.len().into()),
+                    ("completed", done.len().into()),
+                    ("avg_jct_s", crate::util::stats::mean(&done).into()),
+                    ("p90_jct_s", crate::util::stats::percentile(&done, 90.0).into()),
+                ])
+                .dump(),
+            )
+        }
+        ("POST", "/agents") => {
+            let body = String::from_utf8_lossy(&req.body);
+            // The agents lock is the critical section for id assignment:
+            // failed submissions must not burn ids, and concurrent POSTs
+            // must not collide.
+            let mut agents = shared.agents.lock().unwrap();
+            let id = shared.next_id.load(Ordering::SeqCst);
+            match parse_agent_submission(&body, id, 0x5eed) {
+                Ok(spec) => {
+                    shared.next_id.store(id + 1, Ordering::SeqCst);
+                    let cost = CostModel::MemoryCentric.agent_cost(&spec);
+                    agents.insert(
+                        id,
+                        (spec.class.short_name().into(), std::time::Instant::now(), None),
+                    );
+                    drop(agents);
+                    let _ = tx.send((spec, cost));
+                    (202, obj([("id", id.into()), ("predicted_cost", cost.into())]).dump())
+                }
+                Err(e) => (400, obj([("error", format!("{e:#}").into())]).dump()),
+            }
+        }
+        ("GET", path) if path.starts_with("/agents/") => {
+            let id: Option<u32> = path["/agents/".len()..].parse().ok();
+            let agents = shared.agents.lock().unwrap();
+            match id.and_then(|i| agents.get(&i).map(|e| (i, e.clone()))) {
+                Some((i, (class, _, jct))) => (
+                    200,
+                    obj([
+                        ("id", i.into()),
+                        ("class", class.into()),
+                        ("done", jct.is_some().into()),
+                        ("jct_s", jct.map(Json::Num).unwrap_or(Json::Null)),
+                    ])
+                    .dump(),
+                ),
+                None => (404, obj([("error", "no such agent".into())]).dump()),
+            }
+        }
+        _ => (404, obj([("error", "no such route".into())]).dump()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /agents HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\r\n{\"class\": \"EV\"}";
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let req = parse_request(&mut cursor).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/agents");
+        assert_eq!(req.body, b"{\"class\": \"EV\"}");
+    }
+
+    #[test]
+    fn parses_request_without_body() {
+        let raw = b"GET /metrics HTTP/1.1\r\n\r\n";
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let req = parse_request(&mut cursor).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn response_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "{\"ok\":true}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 11"));
+        assert!(s.ends_with("{\"ok\":true}"));
+    }
+
+    #[test]
+    fn submission_explicit_stages() {
+        let body = r#"{"class": "DM", "stages": [[{"p": 10, "d": 4}, {"p": 8, "d": 3}], [{"p": 6, "d": 2}]]}"#;
+        let spec = parse_agent_submission(body, 7, 1).unwrap();
+        assert_eq!(spec.id, 7);
+        assert_eq!(spec.class, AgentClass::DocumentMerging);
+        assert_eq!(spec.n_tasks(), 3);
+        assert_eq!(spec.stages[0][1].prompt_tokens, 8);
+        assert!(spec.tasks().all(|t| t.id.agent == 7));
+    }
+
+    #[test]
+    fn submission_generated_from_class() {
+        let spec = parse_agent_submission(r#"{"class": "CC"}"#, 3, 1).unwrap();
+        assert_eq!(spec.class, AgentClass::CodeChecking);
+        assert!(spec.n_tasks() >= 2);
+        // Clamped for the tiny artifact model.
+        assert!(spec.tasks().all(|t| t.prompt_tokens <= 14 && t.decode_tokens <= 14));
+    }
+
+    #[test]
+    fn submission_rejects_garbage() {
+        assert!(parse_agent_submission("not json", 0, 1).is_err());
+        assert!(parse_agent_submission(r#"{"class": "NOPE"}"#, 0, 1).is_err());
+        assert!(parse_agent_submission(r#"{"class": "EV", "stages": []}"#, 0, 1).is_err());
+    }
+
+    #[test]
+    fn routing_without_engine() {
+        let shared = Shared { agents: Mutex::new(BTreeMap::new()), next_id: AtomicU32::new(0) };
+        let (tx, rx) = mpsc::channel();
+        let req = |m: &str, p: &str, b: &str| Request {
+            method: m.into(),
+            path: p.into(),
+            body: b.as_bytes().to_vec(),
+        };
+        let (s, _) = route(&req("GET", "/healthz", ""), &shared, &tx);
+        assert_eq!(s, 200);
+        let (s, body) = route(&req("POST", "/agents", r#"{"class": "EV"}"#), &shared, &tx);
+        assert_eq!(s, 202);
+        assert!(body.contains("\"id\":0"));
+        assert!(rx.try_recv().is_ok(), "spec forwarded to engine channel");
+        let (s, body) = route(&req("GET", "/agents/0", ""), &shared, &tx);
+        assert_eq!(s, 200);
+        assert!(body.contains("\"done\":false"));
+        let (s, _) = route(&req("GET", "/agents/99", ""), &shared, &tx);
+        assert_eq!(s, 404);
+        let (s, body) = route(&req("GET", "/metrics", ""), &shared, &tx);
+        assert_eq!(s, 200);
+        assert!(body.contains("\"submitted\":1"));
+        let (s, _) = route(&req("GET", "/nope", ""), &shared, &tx);
+        assert_eq!(s, 404);
+    }
+}

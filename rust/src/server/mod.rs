@@ -1,0 +1,4 @@
+//! Request front-end: a minimal HTTP/1.1 server exposing the serving engine
+//! (the image has no web-framework crates; the parser lives in [`http`]).
+
+pub mod http;

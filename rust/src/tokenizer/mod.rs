@@ -1,0 +1,137 @@
+//! Deterministic hash tokenizer (substitution T5 in DESIGN.md).
+//!
+//! The real system tokenizes with the served model's tokenizer; for
+//! scheduling what matters is the *token count* and a stable text->ids map
+//! for TF-IDF. This tokenizer splits on whitespace/punctuation, then maps
+//! each word to an id by FNV-1a hash into a fixed vocabulary, matching the
+//! vocab size of the tiny transformer artifact so the same ids drive the
+//! PJRT model.
+
+/// FNV-1a 64-bit hash.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash tokenizer with a fixed vocab size. Ids 0..RESERVED are reserved
+/// (0 = pad, 1 = bos, 2 = eos).
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab_size: u32,
+}
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+const RESERVED: u32 = 3;
+
+impl Tokenizer {
+    pub fn new(vocab_size: u32) -> Self {
+        assert!(vocab_size > RESERVED + 1);
+        Tokenizer { vocab_size }
+    }
+
+    /// Split text into word pieces: runs of alphanumerics, or single
+    /// punctuation characters. Whitespace separates.
+    pub fn words(text: &str) -> Vec<&str> {
+        let mut out = Vec::new();
+        let bytes = text.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            let c = bytes[i] as char;
+            if c.is_ascii_whitespace() {
+                i += 1;
+            } else if c.is_ascii_alphanumeric() || c == '_' {
+                let start = i;
+                while i < bytes.len() && ((bytes[i] as char).is_ascii_alphanumeric() || bytes[i] == b'_') {
+                    i += 1;
+                }
+                out.push(&text[start..i]);
+            } else {
+                // Single non-alnum char (punctuation or a UTF-8 lead byte:
+                // consume the full codepoint).
+                let ch_len = utf8_len(bytes[i]);
+                out.push(&text[i..i + ch_len]);
+                i += ch_len;
+            }
+        }
+        out
+    }
+
+    /// Map a word to a token id (stable across runs/processes).
+    #[inline]
+    pub fn word_id(&self, word: &str) -> u32 {
+        RESERVED + (fnv1a(word.as_bytes()) % (self.vocab_size - RESERVED) as u64) as u32
+    }
+
+    /// Encode text to ids, prefixed with BOS.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = vec![BOS];
+        ids.extend(Self::words(text).iter().map(|w| self.word_id(w)));
+        ids
+    }
+
+    /// Number of tokens `encode` would produce.
+    pub fn count(&self, text: &str) -> usize {
+        1 + Self::words(text).len()
+    }
+}
+
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_split() {
+        assert_eq!(Tokenizer::words("hello world"), vec!["hello", "world"]);
+        assert_eq!(Tokenizer::words("a,b.c"), vec!["a", ",", "b", ".", "c"]);
+        assert_eq!(Tokenizer::words("  x  "), vec!["x"]);
+        assert_eq!(Tokenizer::words(""), Vec::<&str>::new());
+        assert_eq!(Tokenizer::words("foo_bar2 baz"), vec!["foo_bar2", "baz"]);
+    }
+
+    #[test]
+    fn encode_deterministic_and_in_range() {
+        let t = Tokenizer::new(2048);
+        let a = t.encode("summarize this document chunk please");
+        let b = t.encode("summarize this document chunk please");
+        assert_eq!(a, b);
+        assert_eq!(a[0], BOS);
+        assert!(a.iter().all(|&id| id < 2048));
+        assert!(a[1..].iter().all(|&id| id >= 3));
+    }
+
+    #[test]
+    fn same_word_same_id() {
+        let t = Tokenizer::new(1024);
+        assert_eq!(t.word_id("merge"), t.word_id("merge"));
+    }
+
+    #[test]
+    fn count_matches_encode() {
+        let t = Tokenizer::new(512);
+        let s = "verify the claim: 2+2=4 .";
+        assert_eq!(t.count(s), t.encode(s).len());
+    }
+
+    #[test]
+    fn unicode_does_not_panic() {
+        let t = Tokenizer::new(512);
+        let ids = t.encode("héllo 😀 wörld");
+        assert!(ids.len() >= 4);
+    }
+}

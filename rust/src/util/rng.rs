@@ -1,0 +1,320 @@
+//! Deterministic pseudo-random number generation and distributions.
+//!
+//! The image has no `rand` crate, so this module provides the PRNG substrate
+//! used across the workload generator, the predictor trainer and the
+//! simulator. The generator is PCG-XSH-RR 64/32 ("pcg32") with a 64-bit
+//! state/stream, which is small, fast and statistically solid for simulation
+//! purposes. All experiment code takes explicit seeds so every figure in
+//! EXPERIMENTS.md is exactly reproducible.
+
+/// PCG-XSH-RR 64/32 pseudo-random number generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    /// Create a generator from a seed and a stream id. Different streams with
+    /// the same seed produce independent sequences.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Rng { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Create a generator from a seed on the default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Derive an independent child generator; used to give each agent /
+    /// experiment repetition its own stream.
+    pub fn fork(&mut self, salt: u64) -> Rng {
+        let seed = self.next_u64() ^ salt.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Rng::with_stream(seed, salt | 1)
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output (two pcg32 draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (Lemire's unbiased method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (polar rejection).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Skew-normal draw (Azzalini) with location `xi`, scale `omega`, shape
+    /// `alpha`. Appendix A of the paper fits per-stage token lengths with
+    /// skewed Gaussians; the workload generator samples from these.
+    pub fn skew_normal(&mut self, xi: f64, omega: f64, alpha: f64) -> f64 {
+        // Sample via the conditioning representation:
+        //   u0, v ~ N(0,1) iid; delta = alpha/sqrt(1+alpha^2)
+        //   u1 = delta*u0 + sqrt(1-delta^2)*v;  z = u1 if u0 >= 0 else -u1...
+        // Standard construction: z = delta*|u0| + sqrt(1-delta^2)*v.
+        let delta = alpha / (1.0 + alpha * alpha).sqrt();
+        let u0 = self.normal();
+        let v = self.normal();
+        let z = delta * u0.abs() + (1.0 - delta * delta).sqrt() * v;
+        xi + omega * z
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia-Tsang (k >= 1) with the
+    /// boost trick for k < 1. Used for the bursty (CV > 1 via hyper-/
+    /// hypo-exponential mixtures) arrival process that stands in for the
+    /// Mooncake trace (substitution T2 in DESIGN.md).
+    pub fn gamma(&mut self, k: f64, theta: f64) -> f64 {
+        debug_assert!(k > 0.0 && theta > 0.0);
+        if k < 1.0 {
+            let u = self.f64().max(1e-12);
+            return self.gamma(k + 1.0, theta) * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v3 + d * v3.ln() {
+                return d * v3 * theta;
+            }
+        }
+    }
+
+    /// Log-normal with underlying normal(mu, sigma).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Categorical draw: returns an index with probability proportional to
+    /// `weights[i]`.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below_usize(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(7);
+        let mut counts = [0u32; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as i64 - 10_000).abs() < 600, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn skew_normal_is_skewed() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.skew_normal(0.0, 1.0, 6.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        // alpha=6 -> delta ~ 0.986, E[Z] = delta*sqrt(2/pi) ~ 0.787
+        assert!((mean - 0.787).abs() < 0.02, "mean={mean}");
+        // Positive skew: median < mean.
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(sorted[n / 2] < mean);
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(13);
+        let (k, theta) = (2.5, 1.7);
+        let n = 100_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            s += r.gamma(k, theta);
+        }
+        let mean = s / n as f64;
+        assert!((mean - k * theta).abs() < 0.06, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(17);
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(19);
+        let w = [0.72, 0.26, 0.02];
+        let mut counts = [0u32; 3];
+        for _ in 0..100_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert!((counts[0] as f64 / 1e5 - 0.72).abs() < 0.01);
+        assert!((counts[1] as f64 / 1e5 - 0.26).abs() < 0.01);
+        assert!((counts[2] as f64 / 1e5 - 0.02).abs() < 0.005);
+    }
+
+    #[test]
+    fn forked_streams_diverge() {
+        let mut r = Rng::new(23);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(29);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,214 @@
+//! Reader/writer for the `.jtt` tensor container ("Justitia tensors"), the
+//! interchange format for model weights between `python/compile/aot.py`
+//! (writer) and `rust/src/runtime` (reader). A safetensors-like layout:
+//!
+//! ```text
+//! bytes 0..4   magic b"JTT1"
+//! bytes 4..8   u32 LE header length H
+//! bytes 8..8+H JSON header: {"tensors": [{"name", "dtype", "shape", "offset", "nbytes"}, ...]}
+//! bytes 8+H..  raw tensor data, little-endian, at the stated offsets
+//! ```
+//!
+//! Only f32 and i32 dtypes are needed by the model runner.
+
+use crate::util::json::{obj, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// One named tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data_f32: Vec<f32>, // i32 tensors are bit-preserved through f32 storage? no — kept separately
+    pub data_i32: Vec<i32>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn as_str(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+impl Tensor {
+    pub fn f32(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let t = Tensor { name: name.into(), dtype: DType::F32, shape, data_f32: data, data_i32: Vec::new() };
+        debug_assert_eq!(t.numel(), t.data_f32.len());
+        t
+    }
+
+    pub fn i32(name: impl Into<String>, shape: Vec<usize>, data: Vec<i32>) -> Self {
+        let t = Tensor { name: name.into(), dtype: DType::I32, shape, data_f32: Vec::new(), data_i32: data };
+        debug_assert_eq!(t.numel(), t.data_i32.len());
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn nbytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+/// Write tensors to a `.jtt` file.
+pub fn write_jtt(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let mut entries = Vec::new();
+    let mut offset = 0usize;
+    for t in tensors {
+        entries.push(obj([
+            ("name", t.name.as_str().into()),
+            ("dtype", t.dtype.as_str().into()),
+            ("shape", Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect())),
+            ("offset", offset.into()),
+            ("nbytes", t.nbytes().into()),
+        ]));
+        offset += t.nbytes();
+    }
+    let header = obj([("tensors", Json::Arr(entries))]).dump();
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    f.write_all(b"JTT1")?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for t in tensors {
+        match t.dtype {
+            DType::F32 => {
+                for x in &t.data_f32 {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            DType::I32 => {
+                for x in &t.data_i32 {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read all tensors from a `.jtt` file, keyed by name.
+pub fn read_jtt(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"JTT1" {
+        bail!("{}: bad magic {magic:?}", path.display());
+    }
+    let mut len_bytes = [0u8; 4];
+    f.read_exact(&mut len_bytes)?;
+    let hlen = u32::from_le_bytes(len_bytes) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf).context("header utf8")?)
+        .map_err(|e| anyhow::anyhow!("header json: {e}"))?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+
+    let mut out = BTreeMap::new();
+    for e in header.get("tensors").as_arr().context("tensors array")? {
+        let name = e.get("name").as_str().context("name")?.to_string();
+        let dtype = DType::from_str(e.get("dtype").as_str().context("dtype")?)?;
+        let shape: Vec<usize> = e
+            .get("shape")
+            .as_arr()
+            .context("shape")?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize).context("shape dim"))
+            .collect::<Result<_>>()?;
+        let offset = e.get("offset").as_u64().context("offset")? as usize;
+        let nbytes = e.get("nbytes").as_u64().context("nbytes")? as usize;
+        if offset + nbytes > data.len() {
+            bail!("tensor {name} out of bounds ({offset}+{nbytes} > {})", data.len());
+        }
+        let raw = &data[offset..offset + nbytes];
+        let t = match dtype {
+            DType::F32 => Tensor::f32(
+                name.clone(),
+                shape,
+                raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+            ),
+            DType::I32 => Tensor::i32(
+                name.clone(),
+                shape,
+                raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+            ),
+        };
+        if t.numel() * 4 != nbytes {
+            bail!("tensor {name}: shape/nbytes mismatch");
+        }
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("justitia-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmp("rt.jtt");
+        let tensors = vec![
+            Tensor::f32("w1", vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]),
+            Tensor::i32("ids", vec![4], vec![1, -2, 3, 4]),
+            Tensor::f32("scalar", vec![], vec![42.0]),
+        ];
+        write_jtt(&path, &tensors).unwrap();
+        let back = read_jtt(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back["w1"], tensors[0]);
+        assert_eq!(back["ids"], tensors[1]);
+        assert_eq!(back["scalar"], tensors[2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad.jtt");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_jtt(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let path = tmp("trunc.jtt");
+        let tensors = vec![Tensor::f32("w", vec![8], vec![0.0; 8])];
+        write_jtt(&path, &tensors).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        assert!(read_jtt(&path).is_err());
+    }
+
+    #[test]
+    fn empty_file_of_tensors() {
+        let path = tmp("empty.jtt");
+        write_jtt(&path, &[]).unwrap();
+        assert!(read_jtt(&path).unwrap().is_empty());
+    }
+}

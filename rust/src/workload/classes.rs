@@ -1,0 +1,388 @@
+//! The nine agent classes of §5.1 with their stage templates and per-stage
+//! token-length distributions (Appendix-A style skew-normal fits).
+//!
+//! Size buckets follow the paper: *small* (EV, FV, CC, ALFWI, KBQAV —
+//! < 1 min), *medium* (PE, SC — 1–10 min), *large* (DM, MRS — > 10 min),
+//! sampled with probability 72% / 26% / 2%.
+
+/// Agent class (paper Fig. 2 + §5.1 workload list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AgentClass {
+    /// (a) MapReduce Summarization — large.
+    MapReduceSummarization,
+    /// (b) Plan-and-Execution (HuggingGPT-style) — medium.
+    PlanAndExecution,
+    /// (c) Code Checking (FacTool) — small.
+    CodeChecking,
+    /// (d) Knowledge-Based-QA Verification (FacTool) — small.
+    KbqaVerification,
+    /// (e) Equation Verification (FacTool) — small.
+    EquationVerification,
+    /// (f) Fact Verification (ReAct-style) — small.
+    FactVerification,
+    /// (g) ALFWorld Interaction (ReAct) — small.
+    AlfworldInteraction,
+    /// (h) Document Merging (Graph-of-Thoughts) — large.
+    DocumentMerging,
+    /// (i) Self-Consistency (Wang et al.) — medium.
+    SelfConsistency,
+}
+
+/// Size bucket for the 72/26/2 sampling mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeBucket {
+    Small,
+    Medium,
+    Large,
+}
+
+/// Skew-normal parameters for a token-length distribution, truncated to
+/// `[min, max]` (Appendix A fits per-stage lengths with skewed Gaussians).
+#[derive(Debug, Clone, Copy)]
+pub struct LenDist {
+    pub xi: f64,
+    pub omega: f64,
+    pub alpha: f64,
+    pub min: u32,
+    pub max: u32,
+}
+
+impl LenDist {
+    pub const fn new(xi: f64, omega: f64, alpha: f64, min: u32, max: u32) -> Self {
+        LenDist { xi, omega, alpha, min, max }
+    }
+}
+
+/// How many parallel tasks a stage spawns: uniform integer in [lo, hi],
+/// optionally scaled by the agent's "input size factor" (larger inputs →
+/// more chunks for map-reduce-style agents).
+#[derive(Debug, Clone, Copy)]
+pub struct FanOut {
+    pub lo: u32,
+    pub hi: u32,
+    /// If true, fan-out scales with the agent input-size factor in [0.5, 2].
+    pub scales_with_input: bool,
+}
+
+/// One stage template.
+#[derive(Debug, Clone, Copy)]
+pub struct StageTemplate {
+    pub kind: &'static str,
+    pub fan_out: FanOut,
+    pub prompt: LenDist,
+    pub decode: LenDist,
+}
+
+/// Full class template.
+#[derive(Debug, Clone)]
+pub struct ClassTemplate {
+    pub class: AgentClass,
+    pub stages: &'static [StageTemplate],
+    /// Vocabulary theme used to synthesize prompt text (predictor features).
+    pub theme: &'static str,
+}
+
+const fn fan(lo: u32, hi: u32) -> FanOut {
+    FanOut { lo, hi, scales_with_input: false }
+}
+
+const fn fan_scaled(lo: u32, hi: u32) -> FanOut {
+    FanOut { lo, hi, scales_with_input: true }
+}
+
+const MRS_STAGES: [StageTemplate; 2] = [
+                    StageTemplate {
+                        kind: "generate-summary",
+                        fan_out: fan_scaled(8, 14),
+                        prompt: LenDist::new(1500.0, 180.0, 3.0, 900, 2200),
+                        decode: LenDist::new(260.0, 60.0, 4.0, 120, 520),
+                    },
+                    StageTemplate {
+                        kind: "merge-summaries",
+                        fan_out: fan(1, 1),
+                        prompt: LenDist::new(1800.0, 250.0, 2.0, 1000, 3000),
+                        decode: LenDist::new(380.0, 90.0, 3.0, 150, 700),
+                    },
+                ];
+
+const PE_STAGES: [StageTemplate; 3] = [
+                    StageTemplate {
+                        kind: "generate-plan",
+                        fan_out: fan(1, 1),
+                        prompt: LenDist::new(320.0, 50.0, 2.0, 180, 600),
+                        decode: LenDist::new(160.0, 40.0, 3.0, 60, 320),
+                    },
+                    StageTemplate {
+                        kind: "execute-step",
+                        fan_out: fan(3, 6),
+                        prompt: LenDist::new(420.0, 80.0, 2.5, 200, 800),
+                        decode: LenDist::new(240.0, 60.0, 3.0, 80, 480),
+                    },
+                    StageTemplate {
+                        kind: "merge-results",
+                        fan_out: fan(1, 1),
+                        prompt: LenDist::new(600.0, 100.0, 2.0, 300, 1100),
+                        decode: LenDist::new(180.0, 50.0, 3.0, 60, 380),
+                    },
+                ];
+
+const CC_STAGES: [StageTemplate; 1] = [StageTemplate {
+                    kind: "check-snippet",
+                    fan_out: fan(2, 4),
+                    prompt: LenDist::new(340.0, 60.0, 2.0, 160, 620),
+                    decode: LenDist::new(64.0, 18.0, 3.0, 24, 140),
+                }];
+
+const KBQAV_STAGES: [StageTemplate; 2] = [
+                    StageTemplate {
+                        kind: "extract-claims",
+                        fan_out: fan(1, 1),
+                        prompt: LenDist::new(260.0, 40.0, 2.0, 140, 460),
+                        decode: LenDist::new(48.0, 14.0, 3.0, 16, 110),
+                    },
+                    StageTemplate {
+                        kind: "verify-claim",
+                        fan_out: fan(2, 5),
+                        prompt: LenDist::new(210.0, 35.0, 2.0, 110, 400),
+                        decode: LenDist::new(52.0, 16.0, 3.0, 16, 120),
+                    },
+                ];
+
+const EV_STAGES: [StageTemplate; 1] = [StageTemplate {
+                    kind: "verify-equation",
+                    fan_out: fan(2, 4),
+                    prompt: LenDist::new(130.0, 25.0, 2.0, 60, 260),
+                    decode: LenDist::new(40.0, 12.0, 3.0, 12, 96),
+                }];
+
+const FV_STAGES: [StageTemplate; 2] = [
+                    StageTemplate {
+                        kind: "generate-queries",
+                        fan_out: fan(1, 1),
+                        prompt: LenDist::new(362.0, 7.0, 1.5, 340, 390),
+                        decode: LenDist::new(56.0, 14.0, 3.0, 20, 120),
+                    },
+                    StageTemplate {
+                        kind: "verify-fact",
+                        fan_out: fan(2, 5),
+                        prompt: LenDist::new(240.0, 45.0, 2.0, 120, 440),
+                        decode: LenDist::new(60.0, 16.0, 3.0, 20, 130),
+                    },
+                ];
+
+const ALFWI_STAGES: [StageTemplate; 2] = [
+                    StageTemplate {
+                        kind: "think-act",
+                        fan_out: fan(2, 3),
+                        prompt: LenDist::new(170.0, 30.0, 2.0, 90, 320),
+                        decode: LenDist::new(30.0, 10.0, 3.0, 10, 72),
+                    },
+                    StageTemplate {
+                        kind: "think-act-2",
+                        fan_out: fan(1, 2),
+                        prompt: LenDist::new(200.0, 35.0, 2.0, 100, 360),
+                        decode: LenDist::new(32.0, 10.0, 3.0, 10, 76),
+                    },
+                ];
+
+const DM_STAGES: [StageTemplate; 3] = [
+                    StageTemplate {
+                        kind: "merge-docs",
+                        fan_out: fan_scaled(5, 8),
+                        prompt: LenDist::new(1400.0, 200.0, 2.5, 800, 2200),
+                        decode: LenDist::new(420.0, 90.0, 3.0, 200, 760),
+                    },
+                    StageTemplate {
+                        kind: "score-merge",
+                        fan_out: fan_scaled(5, 8),
+                        prompt: LenDist::new(650.0, 90.0, 2.0, 350, 1100),
+                        decode: LenDist::new(70.0, 18.0, 3.0, 24, 150),
+                    },
+                    StageTemplate {
+                        kind: "final-merge",
+                        fan_out: fan(1, 1),
+                        prompt: LenDist::new(1200.0, 180.0, 2.0, 700, 2000),
+                        decode: LenDist::new(340.0, 80.0, 3.0, 150, 640),
+                    },
+                ];
+
+const SC_STAGES: [StageTemplate; 1] = [StageTemplate {
+                    kind: "reason-path",
+                    fan_out: fan(6, 10),
+                    prompt: LenDist::new(260.0, 45.0, 2.0, 140, 480),
+                    decode: LenDist::new(300.0, 70.0, 3.0, 120, 560),
+                }];
+
+impl AgentClass {
+    pub const ALL: [AgentClass; 9] = [
+        AgentClass::MapReduceSummarization,
+        AgentClass::PlanAndExecution,
+        AgentClass::CodeChecking,
+        AgentClass::KbqaVerification,
+        AgentClass::EquationVerification,
+        AgentClass::FactVerification,
+        AgentClass::AlfworldInteraction,
+        AgentClass::DocumentMerging,
+        AgentClass::SelfConsistency,
+    ];
+
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            AgentClass::MapReduceSummarization => "MRS",
+            AgentClass::PlanAndExecution => "PE",
+            AgentClass::CodeChecking => "CC",
+            AgentClass::KbqaVerification => "KBQAV",
+            AgentClass::EquationVerification => "EV",
+            AgentClass::FactVerification => "FV",
+            AgentClass::AlfworldInteraction => "ALFWI",
+            AgentClass::DocumentMerging => "DM",
+            AgentClass::SelfConsistency => "SC",
+        }
+    }
+
+    pub fn by_short_name(s: &str) -> Option<AgentClass> {
+        AgentClass::ALL.into_iter().find(|c| c.short_name().eq_ignore_ascii_case(s))
+    }
+
+    pub fn size_bucket(&self) -> SizeBucket {
+        match self {
+            AgentClass::EquationVerification
+            | AgentClass::FactVerification
+            | AgentClass::CodeChecking
+            | AgentClass::AlfworldInteraction
+            | AgentClass::KbqaVerification => SizeBucket::Small,
+            AgentClass::PlanAndExecution | AgentClass::SelfConsistency => SizeBucket::Medium,
+            AgentClass::DocumentMerging | AgentClass::MapReduceSummarization => SizeBucket::Large,
+        }
+    }
+
+    /// The stage/fan-out/length template for this class. Length scales are
+    /// chosen so small/medium/large agents land in the paper's <1 min /
+    /// 1–10 min / >10 min runtime buckets on the llama7b-a100 profile.
+    pub fn template(&self) -> ClassTemplate {
+        match self {
+            // Fig. 2a: split a large file into chunks, summarize each in
+            // parallel, then merge (Lin et al. 2024; Lan 2025).
+            AgentClass::MapReduceSummarization => ClassTemplate {
+                class: *self,
+                theme: "summarize document section chapter report article text content paragraph overview",
+                stages: &MRS_STAGES,
+            },
+            // HuggingGPT-style: plan once, execute subtasks in parallel,
+            // merge the tool outputs.
+            AgentClass::PlanAndExecution => ClassTemplate {
+                class: *self,
+                theme: "plan task step tool execute model action schedule decompose subtask",
+                stages: &PE_STAGES,
+            },
+            // FacTool code checking: extract claims then run parallel checks.
+            AgentClass::CodeChecking => ClassTemplate {
+                class: *self,
+                theme: "code function test assert bug python compile error snippet return",
+                stages: &CC_STAGES,
+            },
+            // FacTool KBQA verification: one query generation + parallel
+            // claim verifications.
+            AgentClass::KbqaVerification => ClassTemplate {
+                class: *self,
+                theme: "knowledge claim evidence verify answer query wiki entity fact source",
+                stages: &KBQAV_STAGES,
+            },
+            // FacTool equation verification: tiny parallel checks.
+            AgentClass::EquationVerification => ClassTemplate {
+                class: *self,
+                theme: "equation math solve verify compute number formula result proof value",
+                stages: &EV_STAGES,
+            },
+            // ReAct fact verification (Appendix A example: generate-queries
+            // prompts cluster at 360–380 tokens).
+            AgentClass::FactVerification => ClassTemplate {
+                class: *self,
+                theme: "fact verify search evidence question claim statement true false reference",
+                stages: &FV_STAGES,
+            },
+            // ReAct ALFWorld: a short chain of small think/act inferences;
+            // parallelism comes from exploring 2-3 candidate actions.
+            AgentClass::AlfworldInteraction => ClassTemplate {
+                class: *self,
+                theme: "room object goto take open put action observation think household navigate",
+                stages: &ALFWI_STAGES,
+            },
+            // Graph-of-Thoughts document merging (Fig. 2b): parallel merges,
+            // each followed by scoring, then a final merge. Large.
+            AgentClass::DocumentMerging => ClassTemplate {
+                class: *self,
+                theme: "merge document combine draft revise score rank candidate version aggregate",
+                stages: &DM_STAGES,
+            },
+            // Self-consistency: sample many reasoning trajectories in
+            // parallel; majority vote is local (no merge inference).
+            AgentClass::SelfConsistency => ClassTemplate {
+                class: *self,
+                theme: "reason chain thought answer step solve therefore because consider conclude",
+                stages: &SC_STAGES,
+            },
+        }
+    }
+
+    /// Classes in a size bucket.
+    pub fn in_bucket(bucket: SizeBucket) -> Vec<AgentClass> {
+        AgentClass::ALL.into_iter().filter(|c| c.size_bucket() == bucket).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_classes() {
+        assert_eq!(AgentClass::ALL.len(), 9);
+        let names: Vec<_> = AgentClass::ALL.iter().map(|c| c.short_name()).collect();
+        assert_eq!(names, vec!["MRS", "PE", "CC", "KBQAV", "EV", "FV", "ALFWI", "DM", "SC"]);
+    }
+
+    #[test]
+    fn bucket_membership_matches_paper() {
+        use SizeBucket::*;
+        assert_eq!(AgentClass::in_bucket(Small).len(), 5);
+        assert_eq!(AgentClass::in_bucket(Medium).len(), 2);
+        assert_eq!(AgentClass::in_bucket(Large).len(), 2);
+        assert_eq!(AgentClass::MapReduceSummarization.size_bucket(), Large);
+        assert_eq!(AgentClass::DocumentMerging.size_bucket(), Large);
+        assert_eq!(AgentClass::SelfConsistency.size_bucket(), Medium);
+        assert_eq!(AgentClass::KbqaVerification.size_bucket(), Small);
+    }
+
+    #[test]
+    fn by_short_name_roundtrip() {
+        for c in AgentClass::ALL {
+            assert_eq!(AgentClass::by_short_name(c.short_name()), Some(c));
+        }
+        assert_eq!(AgentClass::by_short_name("dm"), Some(AgentClass::DocumentMerging));
+        assert_eq!(AgentClass::by_short_name("nope"), None);
+    }
+
+    #[test]
+    fn templates_are_sane() {
+        for c in AgentClass::ALL {
+            let t = c.template();
+            assert!(!t.stages.is_empty(), "{c:?}");
+            for s in t.stages {
+                assert!(s.fan_out.lo >= 1 && s.fan_out.hi >= s.fan_out.lo, "{c:?} {}", s.kind);
+                assert!(s.prompt.min > 0 && s.prompt.max > s.prompt.min);
+                assert!(s.decode.min > 0 && s.decode.max > s.decode.min);
+            }
+            assert!(!t.theme.is_empty());
+        }
+    }
+
+    #[test]
+    fn every_class_has_parallel_tasks() {
+        // Task-parallel agents: at least one stage with potential fan-out > 1.
+        for c in AgentClass::ALL {
+            let t = c.template();
+            assert!(t.stages.iter().any(|s| s.fan_out.hi > 1), "{c:?} has no parallelism");
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Synthetic agent generation (substitution T3 in DESIGN.md).
+//!
+//! For each agent we draw an *input-size factor* u ∈ [0.5, 2.0] (how big the
+//! user's input is relative to the class average), then per stage draw the
+//! fan-out and per task the (p, d) token lengths from the class's skew-normal
+//! distributions, scaled by u where the template says so. Finally we
+//! synthesize a prompt *text* from the class theme whose word count tracks
+//! the total prompt tokens — so the TF-IDF+MLP predictor (paper §4.2) has
+//! real signal: cost correlates with input length and class keywords,
+//! exactly the structure Appendix A reports.
+
+use crate::util::rng::Rng;
+use crate::workload::classes::{AgentClass, LenDist, StageTemplate};
+use crate::workload::{AgentId, AgentSpec, InferenceSpec, TaskId};
+
+/// Draw a truncated skew-normal length.
+pub fn sample_len(rng: &mut Rng, d: &LenDist, scale: f64) -> u32 {
+    let x = rng.skew_normal(d.xi * scale, d.omega * scale.sqrt(), d.alpha);
+    (x.round() as i64).clamp(d.min as i64, ((d.max as f64 * scale).round() as i64).max(d.min as i64 + 1))
+        as u32
+}
+
+/// Generator for agents of the nine §5.1 classes.
+#[derive(Debug, Clone)]
+pub struct Generator {
+    rng: Rng,
+}
+
+impl Generator {
+    pub fn new(seed: u64) -> Self {
+        Generator { rng: Rng::with_stream(seed, 0x9a9e) }
+    }
+
+    /// Generate one agent of `class` with a fresh input. `id` and `arrival`
+    /// are assigned by the caller (trace builder).
+    pub fn agent(&mut self, class: AgentClass, id: AgentId, arrival: f64) -> AgentSpec {
+        let mut rng = self.rng.fork(id as u64 + 1);
+        let template = class.template();
+        // Input-size factor: lognormal around 1, clamped.
+        let u = rng.lognormal(0.0, 0.25).clamp(0.5, 2.0);
+
+        let mut stages: Vec<Vec<InferenceSpec>> = Vec::with_capacity(template.stages.len());
+        let mut index = 0u32;
+        for (s, st) in template.stages.iter().enumerate() {
+            let n = stage_fan_out(&mut rng, st, u);
+            let mut tasks = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                // Per-stage lengths follow the class's skew-normal fit
+                // (Appendix A); the input-size factor u expresses itself
+                // through fan-out (more chunks), not longer chunks — keeping
+                // per-stage ranges tight, as the paper measures.
+                let prompt = sample_len(&mut rng, &st.prompt, 1.0);
+                let decode = sample_len(&mut rng, &st.decode, 1.0);
+                tasks.push(InferenceSpec {
+                    id: TaskId { agent: id, index },
+                    stage: s as u32,
+                    prompt_tokens: prompt,
+                    decode_tokens: decode,
+                    kind: st.kind,
+                });
+                index += 1;
+            }
+            stages.push(tasks);
+        }
+
+        let input_text = synthesize_input(&mut rng, &template.theme, &stages, u);
+        AgentSpec { id, class, arrival, stages, input_text }
+    }
+}
+
+fn stage_fan_out(rng: &mut Rng, st: &StageTemplate, u: f64) -> u32 {
+    let base = rng.range_u64(st.fan_out.lo as u64, st.fan_out.hi as u64) as f64;
+    if st.fan_out.scales_with_input {
+        ((base * u).round() as u32).max(1)
+    } else {
+        base as u32
+    }
+}
+
+/// Synthesize the user-facing input text. Properties the predictor can
+/// exploit (and that the paper's Appendix A documents for real agents):
+///   - word count ≈ total stage-0 prompt tokens (the user input drives the
+///     first stage's prompts),
+///   - class-theme keywords appear throughout (class-identifying signal),
+///   - a "chunk marker" per stage-0 task (fan-out signal).
+fn synthesize_input(rng: &mut Rng, theme: &str, stages: &[Vec<InferenceSpec>], u: f64) -> String {
+    let theme_words: Vec<&str> = theme.split_whitespace().collect();
+    let filler = [
+        "the", "and", "with", "for", "from", "that", "this", "into", "over", "under", "about",
+        "data", "item", "value", "note", "case", "part", "line", "page", "field", "word",
+    ];
+    let stage0 = &stages[0];
+    let target_words: usize = stage0.iter().map(|t| t.prompt_tokens as usize).sum::<usize>()
+        .saturating_sub(stage0.len() * 8)
+        .max(8);
+    let mut out = String::with_capacity(target_words * 6);
+    let mut words = 0usize;
+    for (k, _task) in stage0.iter().enumerate() {
+        out.push_str(&format!("CHUNK {k} : "));
+        words += 3;
+        let per_chunk = target_words / stage0.len().max(1);
+        for _ in 0..per_chunk {
+            // Mix ~30% theme words with filler; approximates real prompts
+            // where the task vocabulary dominates TF-IDF.
+            // Theme words are sparse (~10%): real prompts do not announce
+            // their agent class, which is precisely why the paper's
+            // per-class prior beats a single shared model (§4.2/Table 1) —
+            // classes with similar-looking inputs (e.g. SC vs KBQAV) differ
+            // 10-30x in decode-driven cost that text alone cannot reveal.
+            let w = if rng.chance(0.1) {
+                *rng.choose(&theme_words)
+            } else {
+                *rng.choose(&filler)
+            };
+            out.push_str(w);
+            out.push(' ');
+            words += 1;
+        }
+        out.push('\n');
+    }
+    // Scale hint token, as real inputs carry explicit size cues (file sizes,
+    // document counts) that predictors learn from.
+    out.push_str(&format!("scale {:.2}\n", u));
+    let _ = words;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::tokenizer::Tokenizer;
+
+    #[test]
+    fn deterministic_per_seed_and_id() {
+        let mut g1 = Generator::new(5);
+        let mut g2 = Generator::new(5);
+        let a1 = g1.agent(AgentClass::DocumentMerging, 3, 1.0);
+        let a2 = g2.agent(AgentClass::DocumentMerging, 3, 1.0);
+        assert_eq!(a1, a2);
+        let b = g1.agent(AgentClass::DocumentMerging, 4, 1.0);
+        assert_ne!(a1.stages, b.stages);
+    }
+
+    #[test]
+    fn respects_template_structure() {
+        let mut g = Generator::new(7);
+        for class in AgentClass::ALL {
+            let a = g.agent(class, 0, 0.0);
+            let t = class.template();
+            assert_eq!(a.stages.len(), t.stages.len(), "{class:?}");
+            for (stage, st) in a.stages.iter().zip(t.stages.iter()) {
+                assert!(!stage.is_empty());
+                for task in stage {
+                    assert!(task.prompt_tokens >= st.prompt.min, "{class:?} {}", st.kind);
+                    assert!(task.decode_tokens >= st.decode.min);
+                    assert_eq!(task.kind, st.kind);
+                }
+            }
+            // Task ids are dense and ordered.
+            let ids: Vec<u32> = a.tasks().map(|t| t.id.index).collect();
+            assert_eq!(ids, (0..a.n_tasks() as u32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn size_buckets_order_by_cost() {
+        // Large-class agents must cost (in KV token-time) well beyond small
+        // ones, or the 72/26/2 mix loses its meaning.
+        let mut g = Generator::new(11);
+        let m = CostModel::MemoryCentric;
+        let avg = |class: AgentClass, g: &mut Generator| -> f64 {
+            (0..30).map(|i| m.agent_cost(&g.agent(class, 1000 + i, 0.0))).sum::<f64>() / 30.0
+        };
+        let ev = avg(AgentClass::EquationVerification, &mut g);
+        let sc = avg(AgentClass::SelfConsistency, &mut g);
+        let mrs = avg(AgentClass::MapReduceSummarization, &mut g);
+        let dm = avg(AgentClass::DocumentMerging, &mut g);
+        assert!(ev * 5.0 < sc, "EV {ev} vs SC {sc}");
+        assert!(sc * 2.0 < mrs, "SC {sc} vs MRS {mrs}");
+        assert!(sc * 2.0 < dm, "SC {sc} vs DM {dm}");
+    }
+
+    #[test]
+    fn input_text_tracks_prompt_volume() {
+        let mut g = Generator::new(13);
+        let tok = Tokenizer::new(4096);
+        // Correlation between input token count and stage-0 prompt volume
+        // across many agents should be strongly positive.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..60 {
+            let a = g.agent(AgentClass::MapReduceSummarization, i, 0.0);
+            xs.push(tok.count(&a.input_text) as f64);
+            ys.push(a.stages[0].iter().map(|t| t.prompt_tokens as f64).sum::<f64>());
+        }
+        let corr = correlation(&xs, &ys);
+        assert!(corr > 0.8, "corr={corr}");
+    }
+
+    #[test]
+    fn input_text_contains_theme_and_chunks() {
+        let mut g = Generator::new(17);
+        let a = g.agent(AgentClass::CodeChecking, 0, 0.0);
+        assert!(a.input_text.contains("CHUNK 0"));
+        let theme_hit = AgentClass::CodeChecking
+            .template()
+            .theme
+            .split_whitespace()
+            .any(|w| a.input_text.contains(w));
+        assert!(theme_hit);
+    }
+
+    fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+        let n = xs.len() as f64;
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let vx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+        let vy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+        cov / (vx.sqrt() * vy.sqrt())
+    }
+}

@@ -1,0 +1,196 @@
+//! Task-parallel LLM agent workloads (paper §2.1, §5.1, Appendix A).
+//!
+//! An *agent* is a DAG of LLM inferences structured as sequential *stages* of
+//! parallel *tasks*: stage k+1 is released only when every task of stage k
+//! has completed (map→reduce, merge→score→final, plan→execute, ...). The
+//! nine agent classes of §5.1 are synthesized by `generator` with
+//! per-class, per-stage skew-normal (p, d) token-length distributions
+//! (substitution T3 in DESIGN.md).
+
+pub mod classes;
+pub mod generator;
+pub mod trace;
+
+pub use classes::AgentClass;
+
+/// Identifies an agent within a workload suite.
+pub type AgentId = u32;
+
+/// Identifies one inference task: (agent, per-agent task index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId {
+    pub agent: AgentId,
+    pub index: u32,
+}
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a{}-t{}", self.agent, self.index)
+    }
+}
+
+/// One LLM inference task. `prompt_tokens`/`decode_tokens` are the ground
+/// truth the engine executes; the scheduler only sees predictions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceSpec {
+    pub id: TaskId,
+    /// Stage index within the agent (tasks of stage s+1 wait on stage s).
+    pub stage: u32,
+    /// Prompt (prefill) token length p.
+    pub prompt_tokens: u32,
+    /// Decode (output) token length d.
+    pub decode_tokens: u32,
+    /// Name of the inference kind (e.g. "generate-summary"), Appendix-A style.
+    pub kind: &'static str,
+}
+
+/// One task-parallel LLM agent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentSpec {
+    pub id: AgentId,
+    pub class: AgentClass,
+    /// Arrival (submission) time in seconds from suite start.
+    pub arrival: f64,
+    /// Stages of parallel inference tasks, executed stage-by-stage.
+    pub stages: Vec<Vec<InferenceSpec>>,
+    /// Synthesized user-input text; what the cost predictor sees on arrival.
+    pub input_text: String,
+}
+
+impl AgentSpec {
+    /// Total number of inference tasks.
+    pub fn n_tasks(&self) -> usize {
+        self.stages.iter().map(|s| s.len()).sum()
+    }
+
+    /// Iterate over all inference specs in stage order.
+    pub fn tasks(&self) -> impl Iterator<Item = &InferenceSpec> {
+        self.stages.iter().flatten()
+    }
+
+    /// Maximum single-inference decode length (bounds inference runtime).
+    pub fn max_decode(&self) -> u32 {
+        self.tasks().map(|t| t.decode_tokens).max().unwrap_or(0)
+    }
+
+    /// Total prompt + decode tokens (used by stats / Fig. 13).
+    pub fn total_tokens(&self) -> u64 {
+        self.tasks().map(|t| (t.prompt_tokens + t.decode_tokens) as u64).sum()
+    }
+}
+
+/// A full workload suite: agents sorted by arrival time.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub agents: Vec<AgentSpec>,
+}
+
+impl Suite {
+    pub fn new(mut agents: Vec<AgentSpec>) -> Self {
+        agents.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        // Re-index so ids follow arrival order (stable, deterministic).
+        for (i, a) in agents.iter_mut().enumerate() {
+            let new_id = i as AgentId;
+            a.id = new_id;
+            for stage in &mut a.stages {
+                for t in stage {
+                    t.id.agent = new_id;
+                }
+            }
+        }
+        Suite { agents }
+    }
+
+    pub fn len(&self) -> usize {
+        self.agents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.agents.is_empty()
+    }
+}
+
+/// Test helpers shared by unit/integration/property tests.
+pub mod test_support {
+    use super::*;
+
+    /// Build a bare inference spec.
+    pub fn inference(index: u32, stage: u32, prompt: u32, decode: u32) -> InferenceSpec {
+        InferenceSpec {
+            id: TaskId { agent: 0, index },
+            stage,
+            prompt_tokens: prompt,
+            decode_tokens: decode,
+            kind: "test",
+        }
+    }
+
+    /// Build an agent from explicit stages (ids re-labelled consistently).
+    pub fn agent_with_stages(stages: Vec<Vec<InferenceSpec>>) -> AgentSpec {
+        agent_at(0, 0.0, stages)
+    }
+
+    /// Build an agent with explicit id/arrival.
+    pub fn agent_at(id: AgentId, arrival: f64, mut stages: Vec<Vec<InferenceSpec>>) -> AgentSpec {
+        let mut idx = 0;
+        for (s, stage) in stages.iter_mut().enumerate() {
+            for t in stage {
+                t.id = TaskId { agent: id, index: idx };
+                t.stage = s as u32;
+                idx += 1;
+            }
+        }
+        AgentSpec {
+            id,
+            class: AgentClass::EquationVerification,
+            arrival,
+            stages,
+            input_text: String::new(),
+        }
+    }
+
+    /// A simple single-stage agent with `n` identical parallel tasks.
+    pub fn simple_agent(id: AgentId, arrival: f64, n: usize, prompt: u32, decode: u32) -> AgentSpec {
+        agent_at(id, arrival, vec![(0..n as u32).map(|i| inference(i, 0, prompt, decode)).collect()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::*;
+    use super::*;
+
+    #[test]
+    fn agent_accessors() {
+        let a = agent_with_stages(vec![
+            vec![inference(0, 0, 10, 5), inference(1, 0, 20, 9)],
+            vec![inference(2, 1, 30, 2)],
+        ]);
+        assert_eq!(a.n_tasks(), 3);
+        assert_eq!(a.max_decode(), 9);
+        assert_eq!(a.total_tokens(), 10 + 5 + 20 + 9 + 30 + 2);
+        assert_eq!(a.tasks().count(), 3);
+    }
+
+    #[test]
+    fn suite_sorts_and_reindexes() {
+        let a = simple_agent(7, 5.0, 1, 10, 10);
+        let b = simple_agent(3, 1.0, 2, 10, 10);
+        let suite = Suite::new(vec![a, b]);
+        assert_eq!(suite.len(), 2);
+        assert!(suite.agents[0].arrival < suite.agents[1].arrival);
+        assert_eq!(suite.agents[0].id, 0);
+        assert_eq!(suite.agents[1].id, 1);
+        for (i, agent) in suite.agents.iter().enumerate() {
+            for t in agent.tasks() {
+                assert_eq!(t.id.agent, i as AgentId);
+            }
+        }
+    }
+
+    #[test]
+    fn task_id_display() {
+        let t = TaskId { agent: 3, index: 11 };
+        assert_eq!(t.to_string(), "a3-t11");
+    }
+}

@@ -1,0 +1,243 @@
+//! Arrival traces and suite building (§5.1 Workloads; substitution T2).
+//!
+//! The paper replays the Mooncake production trace's request arrival times,
+//! stretched to 6/9/18-minute submission windows for 3×/2×/1× density. That
+//! trace is not available offline; we generate a bursty Gamma-renewal arrival
+//! process (shape k < 1 ⇒ CV > 1, matching the burstiness production LLM
+//! traces exhibit) normalized to the same windows, and sample classes with
+//! the 72/26/2 small/medium/large mix.
+
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::workload::classes::SizeBucket;
+use crate::workload::generator::Generator;
+use crate::workload::{AgentClass, AgentSpec, Suite};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Gamma-renewal arrival process: inter-arrival ~ Gamma(shape, scale). The
+/// shape < 1 gives coefficient of variation 1/sqrt(shape) > 1 ("bursty").
+pub const ARRIVAL_GAMMA_SHAPE: f64 = 0.5; // CV ≈ 1.41, production-like
+
+/// Generate `n` arrival offsets inside `[0, window_secs]`, sorted.
+pub fn arrivals(rng: &mut Rng, n: usize, window_secs: f64) -> Vec<f64> {
+    if n == 0 {
+        return Vec::new();
+    }
+    // Draw n bursty gaps, then renormalize the cumulative sum to the window
+    // (exactly what "replay a trace stretched to the window" does).
+    let gaps: Vec<f64> = (0..n).map(|_| rng.gamma(ARRIVAL_GAMMA_SHAPE, 1.0)).collect();
+    let mut cum: Vec<f64> = Vec::with_capacity(n);
+    let mut s = 0.0;
+    for g in &gaps {
+        s += g;
+        cum.push(s);
+    }
+    let total = s.max(1e-9);
+    cum.iter().map(|c| c / total * window_secs).collect()
+}
+
+/// Sample an agent class with the paper's 72/26/2 size mix, uniform within
+/// the bucket.
+pub fn sample_class(rng: &mut Rng, class_mix: &[f64; 3]) -> AgentClass {
+    let bucket = match rng.categorical(class_mix) {
+        0 => SizeBucket::Small,
+        1 => SizeBucket::Medium,
+        _ => SizeBucket::Large,
+    };
+    let classes = AgentClass::in_bucket(bucket);
+    *rng.choose(&classes)
+}
+
+/// Build the full §5.1 workload suite.
+pub fn build_suite(cfg: &crate::config::WorkloadConfig) -> Suite {
+    let mut rng = Rng::with_stream(cfg.seed, 0x7ace);
+    let mut gen = Generator::new(cfg.seed ^ 0xabcd_ef01);
+    let times = arrivals(&mut rng, cfg.n_agents, cfg.window_secs);
+    let agents = times
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let class = sample_class(&mut rng, &cfg.class_mix);
+            gen.agent(class, i as u32, t)
+        })
+        .collect();
+    Suite::new(agents)
+}
+
+/// Serialize a suite to JSON (tasks only — input text elided by default to
+/// keep trace files small; pass `with_text` to keep it for predictor work).
+pub fn suite_to_json(suite: &Suite, with_text: bool) -> Json {
+    let agents: Vec<Json> = suite
+        .agents
+        .iter()
+        .map(|a| {
+            let stages: Vec<Json> = a
+                .stages
+                .iter()
+                .map(|st| {
+                    Json::Arr(
+                        st.iter()
+                            .map(|t| {
+                                obj([
+                                    ("p", t.prompt_tokens.into()),
+                                    ("d", t.decode_tokens.into()),
+                                    ("kind", t.kind.into()),
+                                ])
+                            })
+                            .collect(),
+                    )
+                })
+                .collect();
+            let mut fields = vec![
+                ("class".to_string(), Json::Str(a.class.short_name().into())),
+                ("arrival".to_string(), Json::Num(a.arrival)),
+                ("stages".to_string(), Json::Arr(stages)),
+            ];
+            if with_text {
+                fields.push(("input".to_string(), Json::Str(a.input_text.clone())));
+            }
+            Json::Obj(fields.into_iter().collect())
+        })
+        .collect();
+    obj([("agents", Json::Arr(agents))])
+}
+
+/// Parse a suite back from JSON (kind strings are interned to the class
+/// template's stage kinds when they match, else "replay").
+pub fn suite_from_json(v: &Json) -> Result<Suite> {
+    let mut agents = Vec::new();
+    for (i, a) in v.get("agents").as_arr().context("agents")?.iter().enumerate() {
+        let class = AgentClass::by_short_name(a.get("class").as_str().context("class")?)
+            .context("unknown class")?;
+        let arrival = a.get("arrival").as_f64().context("arrival")?;
+        let template = class.template();
+        let mut stages = Vec::new();
+        let mut index = 0u32;
+        for (s, st) in a.get("stages").as_arr().context("stages")?.iter().enumerate() {
+            let kind = template.stages.get(s).map(|t| t.kind).unwrap_or("replay");
+            let mut tasks = Vec::new();
+            for t in st.as_arr().context("stage")? {
+                tasks.push(crate::workload::InferenceSpec {
+                    id: crate::workload::TaskId { agent: i as u32, index },
+                    stage: s as u32,
+                    prompt_tokens: t.get("p").as_u64().context("p")? as u32,
+                    decode_tokens: t.get("d").as_u64().context("d")? as u32,
+                    kind,
+                });
+                index += 1;
+            }
+            stages.push(tasks);
+        }
+        agents.push(AgentSpec {
+            id: i as u32,
+            class,
+            arrival,
+            stages,
+            input_text: a.get("input").as_str().unwrap_or("").to_string(),
+        });
+    }
+    Ok(Suite::new(agents))
+}
+
+/// Write a suite trace file.
+pub fn save_suite(suite: &Suite, path: &Path, with_text: bool) -> Result<()> {
+    std::fs::write(path, suite_to_json(suite, with_text).pretty())
+        .with_context(|| format!("write {}", path.display()))
+}
+
+/// Load a suite trace file.
+pub fn load_suite(path: &Path) -> Result<Suite> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    suite_from_json(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    #[test]
+    fn arrivals_sorted_within_window() {
+        let mut rng = Rng::new(3);
+        let ts = arrivals(&mut rng, 200, 360.0);
+        assert_eq!(ts.len(), 200);
+        for w in ts.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(*ts.last().unwrap() <= 360.0 + 1e-9);
+        assert!(ts[0] >= 0.0);
+    }
+
+    #[test]
+    fn arrivals_are_bursty() {
+        // CV of inter-arrival gaps should exceed 1 (Gamma shape 0.5 ⇒ ~1.4).
+        let mut rng = Rng::new(5);
+        let ts = arrivals(&mut rng, 2000, 1000.0);
+        let gaps: Vec<f64> = ts.windows(2).map(|w| w[1] - w[0]).collect();
+        let m = crate::util::stats::mean(&gaps);
+        let s = crate::util::stats::std_dev(&gaps);
+        assert!(s / m > 1.15, "cv={}", s / m);
+    }
+
+    #[test]
+    fn class_mix_matches_72_26_2() {
+        let mut rng = Rng::new(7);
+        let mix = [0.72, 0.26, 0.02];
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            let c = sample_class(&mut rng, &mix);
+            counts[match c.size_bucket() {
+                SizeBucket::Small => 0,
+                SizeBucket::Medium => 1,
+                SizeBucket::Large => 2,
+            }] += 1;
+        }
+        assert!((counts[0] as f64 / 2e4 - 0.72).abs() < 0.02);
+        assert!((counts[1] as f64 / 2e4 - 0.26).abs() < 0.02);
+        assert!((counts[2] as f64 / 2e4 - 0.02).abs() < 0.01);
+    }
+
+    #[test]
+    fn build_suite_deterministic() {
+        let cfg = WorkloadConfig { n_agents: 40, window_secs: 120.0, ..Default::default() };
+        let s1 = build_suite(&cfg);
+        let s2 = build_suite(&cfg);
+        assert_eq!(s1.agents, s2.agents);
+        assert_eq!(s1.len(), 40);
+        let cfg2 = WorkloadConfig { seed: 43, ..cfg };
+        let s3 = build_suite(&cfg2);
+        assert_ne!(s1.agents, s3.agents);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = WorkloadConfig { n_agents: 12, window_secs: 60.0, ..Default::default() };
+        let suite = build_suite(&cfg);
+        let j = suite_to_json(&suite, true);
+        let back = suite_from_json(&j).unwrap();
+        assert_eq!(back.len(), suite.len());
+        for (a, b) in suite.agents.iter().zip(back.agents.iter()) {
+            assert_eq!(a.class, b.class);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.n_tasks(), b.n_tasks());
+            assert_eq!(a.input_text, b.input_text);
+            for (x, y) in a.tasks().zip(b.tasks()) {
+                assert_eq!((x.prompt_tokens, x.decode_tokens), (y.prompt_tokens, y.decode_tokens));
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("justitia-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("suite.json");
+        let cfg = WorkloadConfig { n_agents: 5, window_secs: 30.0, ..Default::default() };
+        let suite = build_suite(&cfg);
+        save_suite(&suite, &path, false).unwrap();
+        let back = load_suite(&path).unwrap();
+        assert_eq!(back.len(), 5);
+    }
+}

@@ -1,0 +1,133 @@
+//! Property tests for the VTC baseline's own fairness invariant (Sheng et
+//! al.): among continuously-backlogged agents, the difference in received
+//! service (virtual token counters) stays bounded — VTC approximates
+//! instantaneous fair sharing. This pins down the *reference* scheduler the
+//! Fig. 8 fair ratios are normalized against.
+
+use justitia::config::Policy;
+use justitia::sched::{vtc::service_delta, AgentInfo, Scheduler, TaskInfo};
+use justitia::util::prop::{check, Config as PropConfig, Strategy};
+use justitia::util::rng::Rng;
+use justitia::workload::TaskId;
+
+/// A synthetic service trace: n agents, each with a stream of tasks of
+/// random size, drained one admission at a time.
+#[derive(Debug, Clone)]
+struct Trace {
+    n_agents: u32,
+    /// (agent, prompt, decode) in push order.
+    tasks: Vec<(u32, u32, u32)>,
+}
+
+struct TraceStrategy;
+
+impl Strategy for TraceStrategy {
+    type Value = Trace;
+
+    fn generate(&self, rng: &mut Rng) -> Trace {
+        let n_agents = rng.range_u64(2, 6) as u32;
+        let n_tasks = rng.range_u64(20, 120) as usize;
+        let tasks = (0..n_tasks)
+            .map(|_| {
+                (
+                    rng.below(n_agents as u64) as u32,
+                    rng.range_u64(10, 200) as u32,
+                    rng.range_u64(5, 100) as u32,
+                )
+            })
+            .collect();
+        Trace { n_agents, tasks }
+    }
+
+    fn shrink(&self, v: &Trace) -> Vec<Trace> {
+        let mut out = Vec::new();
+        if v.tasks.len() > 4 {
+            out.push(Trace { n_agents: v.n_agents, tasks: v.tasks[..v.tasks.len() / 2].to_vec() });
+        }
+        out
+    }
+}
+
+#[test]
+fn vtc_counters_stay_balanced_for_backlogged_agents() {
+    let cfg = PropConfig { cases: 60, seed: 0x57c, max_shrink_steps: 30 };
+    check(&cfg, &TraceStrategy, |trace| {
+        let mut s = justitia::sched::vtc::Vtc::new(justitia::cost::CostModel::ComputeCentric);
+        for a in 0..trace.n_agents {
+            s.on_agent_arrival(&AgentInfo { id: a, arrival: 0.0, cost: 0.0 }, 0.0);
+        }
+        // Push everything up front: all agents continuously backlogged while
+        // they still have tasks.
+        let mut remaining = vec![0u32; trace.n_agents as usize];
+        for (i, &(a, p, d)) in trace.tasks.iter().enumerate() {
+            s.push_task(
+                TaskInfo {
+                    id: TaskId { agent: a, index: i as u32 },
+                    prompt_tokens: p,
+                    predicted_decode: d as f64,
+                    seq: i as u64,
+                },
+                0.0,
+            );
+            remaining[a as usize] += 1;
+        }
+        let max_task: f64 = trace
+            .tasks
+            .iter()
+            .map(|&(_, p, d)| service_delta(p, d))
+            .fold(0.0, f64::max);
+
+        // Serve one task at a time; whenever every agent is still
+        // backlogged, counters must not diverge by more than one task's
+        // worth of service (the VTC bound).
+        while let Some(t) = s.pop_next(0.0) {
+            let (_, p, d) = trace.tasks[t.seq as usize];
+            s.on_service(t.id.agent, service_delta(p, d));
+            remaining[t.id.agent as usize] -= 1;
+            if remaining.iter().all(|&r| r > 0) {
+                let counters: Vec<f64> = (0..trace.n_agents).map(|a| s.counter(a)).collect();
+                let spread = counters.iter().cloned().fold(f64::MIN, f64::max)
+                    - counters.iter().cloned().fold(f64::MAX, f64::min);
+                if spread > 2.0 * max_task + 1e-9 {
+                    return Err(format!(
+                        "counter spread {spread:.0} > 2*max_task {max_task:.0}: {counters:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn vtc_drains_all_tasks_exactly_once() {
+    let cfg = PropConfig { cases: 40, seed: 0x57d, max_shrink_steps: 20 };
+    check(&cfg, &TraceStrategy, |trace| {
+        let mut s = justitia::sched::vtc::Vtc::new(justitia::cost::CostModel::ComputeCentric);
+        for a in 0..trace.n_agents {
+            s.on_agent_arrival(&AgentInfo { id: a, arrival: 0.0, cost: 0.0 }, 0.0);
+        }
+        for (i, &(a, p, d)) in trace.tasks.iter().enumerate() {
+            s.push_task(
+                TaskInfo {
+                    id: TaskId { agent: a, index: i as u32 },
+                    prompt_tokens: p,
+                    predicted_decode: d as f64,
+                    seq: i as u64,
+                },
+                0.0,
+            );
+        }
+        let mut seen = std::collections::HashSet::new();
+        while let Some(t) = s.pop_next(0.0) {
+            if !seen.insert(t.seq) {
+                return Err(format!("task {} popped twice", t.seq));
+            }
+            s.on_service(t.id.agent, 1.0);
+        }
+        if seen.len() != trace.tasks.len() {
+            return Err(format!("drained {} of {}", seen.len(), trace.tasks.len()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,121 @@
+//! End-to-end: generated workload → predictor → engine → metrics, plus
+//! trace save/load round-trips and CLI-level config handling — the full
+//! Layer-3 pipeline on the simulator backend.
+
+use justitia::cli::Args;
+use justitia::config::{Config, Policy, WorkloadConfig};
+use justitia::cost::CostModel;
+use justitia::experiments::{run_policy_oracle, CostSource};
+use justitia::workload::trace;
+
+#[test]
+fn trace_roundtrip_preserves_scheduling_outcome() {
+    // Saving a suite to JSON and reloading it must give identical runs.
+    let wl = WorkloadConfig { n_agents: 60, ..Default::default() }.with_density(3.0);
+    let suite = trace::build_suite(&wl);
+    let dir = std::env::temp_dir().join("justitia-e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    trace::save_suite(&suite, &path, true).unwrap();
+    let reloaded = trace::load_suite(&path).unwrap();
+
+    let cfg = Config::default();
+    let a = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+    let b = run_policy_oracle(&cfg, &reloaded, Policy::Justitia);
+    assert_eq!(a.completed_agents(), b.completed_agents());
+    assert!((a.avg_jct() - b.avg_jct()).abs() < 1e-9, "{} vs {}", a.avg_jct(), b.avg_jct());
+    assert!((a.p90_jct() - b.p90_jct()).abs() < 1e-9);
+}
+
+#[test]
+fn deterministic_runs_same_seed() {
+    let cfg = Config::default();
+    let wl = WorkloadConfig { n_agents: 80, seed: 5, ..Default::default() }.with_density(2.0);
+    let s1 = trace::build_suite(&wl);
+    let s2 = trace::build_suite(&wl);
+    let a = run_policy_oracle(&cfg, &s1, Policy::Justitia);
+    let b = run_policy_oracle(&cfg, &s2, Policy::Justitia);
+    assert_eq!(a.jcts(), b.jcts());
+}
+
+#[test]
+fn different_seeds_differ() {
+    let cfg = Config::default();
+    let s1 = trace::build_suite(&WorkloadConfig { n_agents: 50, seed: 1, ..Default::default() });
+    let s2 = trace::build_suite(&WorkloadConfig { n_agents: 50, seed: 2, ..Default::default() });
+    let a = run_policy_oracle(&cfg, &s1, Policy::Justitia);
+    let b = run_policy_oracle(&cfg, &s2, Policy::Justitia);
+    assert_ne!(a.jcts(), b.jcts());
+}
+
+#[test]
+fn cli_config_pipeline() {
+    // `--policy vtc --agents 30 --density 3 --seed 9` through the real CLI
+    // parsing + config plumbing.
+    let args = Args::parse(
+        ["run", "--policy", "vtc", "--agents", "30", "--density", "3", "--seed", "9"]
+            .iter()
+            .map(|s| s.to_string()),
+        &[],
+    );
+    let cfg = Config::default().apply_args(&args).unwrap();
+    assert_eq!(cfg.policy, Policy::Vtc);
+    assert_eq!(cfg.workload.n_agents, 30);
+    assert_eq!(cfg.workload.seed, 9);
+    assert!((cfg.workload.window_secs - 360.0).abs() < 1e-9);
+    let suite = trace::build_suite(&cfg.workload);
+    let m = run_policy_oracle(&cfg, &suite, cfg.policy);
+    assert_eq!(m.completed_agents(), 30);
+}
+
+#[test]
+fn engine_metrics_are_internally_consistent() {
+    let cfg = Config::default();
+    let suite = trace::build_suite(&WorkloadConfig { n_agents: 100, ..Default::default() }.with_density(3.0));
+    let m = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+    // Every completion after its arrival; engine time covers the last one.
+    for (agent, jct) in m.jcts() {
+        assert!(jct > 0.0, "agent {agent}");
+        let done = m.agent_complete_time(agent).unwrap();
+        assert!(done <= m.engine_time() + 1e-9);
+    }
+    // Every task of every agent admitted before it completed.
+    for a in &suite.agents {
+        for t in a.tasks() {
+            let adm = m.task_admit_time(t.id).expect("admitted");
+            let fin = m.task_complete_time(t.id).expect("completed");
+            assert!(adm <= fin, "{}", t.id);
+        }
+    }
+}
+
+#[test]
+fn cost_source_noisy_only_perturbs_schedule_not_correctness() {
+    let cfg = Config::default();
+    let suite = trace::build_suite(&WorkloadConfig { n_agents: 80, ..Default::default() }.with_density(3.0));
+    let m = justitia::experiments::run_policy(
+        &cfg,
+        &suite,
+        Policy::Justitia,
+        &CostSource::Noisy { lambda: 3.0, seed: 1 },
+    );
+    assert_eq!(m.completed_agents(), 80);
+}
+
+#[test]
+fn memory_centric_cost_dominates_for_decode_heavy_agents() {
+    // Sanity link between workload generation and the cost model: the
+    // quadratic d-term makes SC (decode-heavy) cost more per prompt token
+    // than CC (prompt-heavy) — invisible to the compute-centric model.
+    let mut gen = justitia::workload::generator::Generator::new(3);
+    let sc = gen.agent(justitia::workload::AgentClass::SelfConsistency, 0, 0.0);
+    let cc = gen.agent(justitia::workload::AgentClass::CodeChecking, 1, 0.0);
+    let mem = CostModel::MemoryCentric;
+    let cmp = CostModel::ComputeCentric;
+    let mem_ratio = mem.agent_cost(&sc) / mem.agent_cost(&cc);
+    let cmp_ratio = cmp.agent_cost(&sc) / cmp.agent_cost(&cc);
+    assert!(
+        mem_ratio > 2.0 * cmp_ratio,
+        "memory-centric should amplify decode-heavy agents: {mem_ratio:.1} vs {cmp_ratio:.1}"
+    );
+}

@@ -1,0 +1,133 @@
+//! Cross-scheduler integration tests on the calibrated simulator: the
+//! paper's qualitative claims as assertions.
+
+use justitia::config::{Config, Policy, WorkloadConfig};
+use justitia::experiments::{self, run_policy_oracle, CostSource};
+use justitia::metrics::{fair_ratios, fairness_summary};
+use justitia::workload::trace::build_suite;
+
+fn suite_cfg(n: usize, density: f64, seed: u64) -> (Config, justitia::workload::Suite) {
+    let mut cfg = Config::default();
+    cfg.workload = WorkloadConfig { n_agents: n, seed, ..Default::default() }.with_density(density);
+    let suite = build_suite(&cfg.workload);
+    (cfg, suite)
+}
+
+#[test]
+fn headline_efficiency_ordering_full_suite() {
+    // §5.2: Justitia ≈ SRJF ≪ VTC < Parrot < vLLM-FCFS at 3× density.
+    let (cfg, suite) = suite_cfg(300, 3.0, 42);
+    let avg = |p: Policy| run_policy_oracle(&cfg, &suite, p).avg_jct();
+    let (justitia, srjf, vtc, parrot, fcfs) = (
+        avg(Policy::Justitia),
+        avg(Policy::Srjf),
+        avg(Policy::Vtc),
+        avg(Policy::AgentFcfs),
+        avg(Policy::Fcfs),
+    );
+    assert!(justitia < 0.6 * vtc, "justitia {justitia} vs vtc {vtc}");
+    assert!(justitia < 0.6 * parrot, "justitia {justitia} vs parrot {parrot}");
+    assert!(vtc < parrot, "vtc {vtc} vs parrot {parrot}");
+    assert!(parrot < fcfs, "parrot {parrot} vs fcfs {fcfs}");
+    assert!((justitia - srjf).abs() / srjf < 0.25, "justitia {justitia} ~ srjf {srjf}");
+}
+
+#[test]
+fn fairness_92_percent_not_delayed() {
+    // §5.2 fairness: the overwhelming majority of agents complete under
+    // Justitia no later than under VTC (paper: 92%), with a bounded worst
+    // case (paper: 26%).
+    let (cfg, suite) = suite_cfg(300, 3.0, 42);
+    let vtc = run_policy_oracle(&cfg, &suite, Policy::Vtc);
+    let just = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+    let s = fairness_summary(&fair_ratios(&just, &vtc));
+    assert!(s.frac_not_delayed >= 0.90, "only {:.1}% not delayed", s.frac_not_delayed * 100.0);
+    // Worst case: paper reports 26%; our small-scale suite has agents with
+    // tiny VTC JCTs in the denominator, so the worst *ratio* runs higher —
+    // the absolute Thm-B.1 bound is checked in prop_delay_bound.rs.
+    assert!(s.worst_delay_pct <= 300.0, "worst delay {:.1}%", s.worst_delay_pct);
+}
+
+#[test]
+fn justitia_beats_vtc_on_p90_too() {
+    let (cfg, suite) = suite_cfg(300, 2.0, 7);
+    let vtc = run_policy_oracle(&cfg, &suite, Policy::Vtc);
+    let just = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+    assert!(just.p90_jct() < vtc.p90_jct(), "{} vs {}", just.p90_jct(), vtc.p90_jct());
+}
+
+#[test]
+fn density_monotonicity() {
+    // Higher density → higher (or equal) average JCT for every policy.
+    for policy in [Policy::Justitia, Policy::Vtc, Policy::Fcfs] {
+        let mut prev = 0.0;
+        for density in [1.0, 2.0, 3.0] {
+            let (cfg, suite) = suite_cfg(200, density, 11);
+            let avg = run_policy_oracle(&cfg, &suite, policy).avg_jct();
+            assert!(
+                avg >= prev * 0.9,
+                "{policy:?}: JCT dropped sharply from {prev} to {avg} at {density}x"
+            );
+            prev = avg;
+        }
+    }
+}
+
+#[test]
+fn justitia_c_ablation_is_worse() {
+    // Fig. 11: compute-centric costs degrade Justitia.
+    let rows = experiments::fig11(300, 2.0, 42);
+    assert_eq!(rows.len(), 2);
+    assert!(
+        rows[1].avg_jct > rows[0].avg_jct,
+        "Justitia/C {} should be worse than Justitia {}",
+        rows[1].avg_jct,
+        rows[0].avg_jct
+    );
+}
+
+#[test]
+fn noise_robustness_fig10_shape() {
+    // Fig. 10: λ=3 inflates avg JCT mildly (paper: +9.5%); average over
+    // seeds to dodge single-draw variance.
+    let mut base = 0.0;
+    let mut noisy = 0.0;
+    for seed in [42u64, 43, 44] {
+        let rows = experiments::fig10(&[1.0, 3.0], 300, 2.0, seed);
+        base += rows[0].avg_jct;
+        noisy += rows[1].avg_jct;
+    }
+    let inflation = noisy / base - 1.0;
+    assert!(inflation < 0.35, "λ=3 inflation {:.1}% too large", inflation * 100.0);
+}
+
+#[test]
+fn predictor_in_the_loop_close_to_oracle() {
+    // End-to-end with the trained MLP predictor driving Justitia: JCT should
+    // be within a modest factor of the oracle run (the Fig. 10 robustness
+    // claim, realized with the real predictor instead of synthetic noise).
+    let (cfg, suite) = suite_cfg(200, 2.0, 42);
+    let (pred, report) = justitia::predictor::train_per_class(
+        justitia::cost::CostModel::MemoryCentric,
+        60,
+        10,
+        42,
+    );
+    assert!(report.rel_error < 1.0, "predictor too weak: {}", report.rel_error);
+    let with_pred =
+        experiments::run_policy(&cfg, &suite, Policy::Justitia, &CostSource::Model(&pred));
+    let oracle = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+    let ratio = with_pred.avg_jct() / oracle.avg_jct();
+    assert!(ratio < 1.4, "predictor-driven JCT {ratio:.2}x of oracle");
+    assert_eq!(with_pred.completed_agents(), 200);
+}
+
+#[test]
+fn all_policies_complete_every_agent_under_stress() {
+    // No scheduler may drop/stall agents even at extreme density.
+    let (cfg, suite) = suite_cfg(150, 6.0, 99);
+    for policy in Policy::all_paper_baselines() {
+        let m = run_policy_oracle(&cfg, &suite, policy);
+        assert_eq!(m.completed_agents(), 150, "{policy:?}");
+    }
+}

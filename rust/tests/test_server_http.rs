@@ -1,0 +1,87 @@
+//! HTTP front-end over the real PJRT model: spin the server on a test port,
+//! drive it over TCP, and assert end-to-end completion. Skipped when
+//! artifacts are absent.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const PORT: u16 = 18933;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/model_config.json")
+        .exists()
+}
+
+fn http(method: &str, path: &str, body: &str) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(("127.0.0.1", PORT))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let status: u16 = resp.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let body_start = resp.find("\r\n\r\n").map(|i| i + 4).unwrap_or(0);
+    Ok((status, resp[body_start..].to_string()))
+}
+
+#[test]
+fn serve_submit_poll_complete() {
+    if !artifacts_present() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    std::thread::spawn(move || {
+        let _ = justitia::server::http::serve(&dir, PORT, justitia::config::Policy::Justitia);
+    });
+
+    // Readiness.
+    let mut up = false;
+    for _ in 0..150 {
+        std::thread::sleep(Duration::from_millis(200));
+        if matches!(http("GET", "/healthz", ""), Ok((200, _))) {
+            up = true;
+            break;
+        }
+    }
+    assert!(up, "server did not start");
+
+    // Bad submissions rejected.
+    let (s, _) = http("POST", "/agents", "garbage").unwrap();
+    assert_eq!(s, 400);
+    let (s, _) = http("GET", "/agents/12345", "").unwrap();
+    assert_eq!(s, 404);
+
+    // Two tiny agents with explicit stages (sized for the artifact model).
+    let a = r#"{"class": "EV", "stages": [[{"p": 8, "d": 4}, {"p": 10, "d": 3}]]}"#;
+    let b = r#"{"class": "SC", "stages": [[{"p": 6, "d": 5}], [{"p": 12, "d": 4}]]}"#;
+    let (s, body) = http("POST", "/agents", a).unwrap();
+    assert_eq!(s, 202, "{body}");
+    assert!(body.contains("\"predicted_cost\""));
+    let (s, _) = http("POST", "/agents", b).unwrap();
+    assert_eq!(s, 202);
+
+    // Poll for completion.
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(300));
+        let (s, m) = http("GET", "/metrics", "").unwrap();
+        assert_eq!(s, 200);
+        if m.contains("\"completed\":2") {
+            break;
+        }
+        // Skip (not fail) on very slow machines.
+        if t0.elapsed() > Duration::from_secs(90) {
+            panic!("agents did not complete in time: {m}");
+        }
+    }
+    let (s, body) = http("GET", "/agents/0", "").unwrap();
+    assert_eq!(s, 200);
+    assert!(body.contains("\"done\":true"), "{body}");
+    assert!(body.contains("\"jct_s\""));
+}
