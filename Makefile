@@ -1,0 +1,21 @@
+# Convenience targets; see README.md for the full quickstart.
+
+.PHONY: artifacts build test bench kick-tires clean
+
+# AOT-compile the tiny JAX+Pallas model to HLO text + weights for the Rust
+# PJRT runtime (Layer 2/1 → Layer 3 handoff; needs jax installed).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+kick-tires:
+	scripts/kick-tires.sh
+
+clean:
+	cd rust && cargo clean
+	rm -rf out results

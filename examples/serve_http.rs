@@ -29,9 +29,13 @@ fn http(method: &str, path: &str, body: &str) -> anyhow::Result<String> {
 fn main() -> anyhow::Result<()> {
     // Server thread (blocks forever; the process exits when main does).
     std::thread::spawn(|| {
-        if let Err(e) =
-            justitia::server::http::serve(std::path::Path::new("artifacts"), PORT, Policy::Justitia)
-        {
+        if let Err(e) = justitia::server::http::serve(
+            std::path::Path::new("artifacts"),
+            PORT,
+            Policy::Justitia,
+            1,
+            justitia::cluster::Placement::ClusterVtime,
+        ) {
             eprintln!("server error: {e:#}");
             std::process::exit(1);
         }

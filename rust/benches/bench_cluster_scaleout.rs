@@ -1,0 +1,64 @@
+//! Cluster scale-out — 300 mixed agents at 3× density replayed through
+//! 1/2/4/8 Justitia replicas under each placement policy.
+//!
+//! Beyond the paper: the single-GPU Justitia guarantee composed at cluster
+//! level. Expected shape: avg JCT falls superlinearly while contention
+//! dominates (each replica sheds swap pressure as well as queueing);
+//! `cluster-vtime` placement should match `least-loaded` on efficiency while
+//! keeping the max-min fair-share ratio lowest, and `round-robin` should
+//! trail on both once elephants land unevenly.
+
+use justitia::cluster::Placement;
+use justitia::config::{Config, Policy};
+use justitia::util::bench::{section, ResultsFile};
+
+fn main() {
+    section("Cluster scale-out: replicas x placement (300 agents, 3x density)");
+    let mut out = ResultsFile::new("bench_cluster_scaleout.txt");
+    let counts = [1usize, 2, 4, 8];
+    let rows = justitia::experiments::cluster_scaleout(
+        &Config::default(),
+        &counts,
+        &Placement::ALL,
+        Policy::Justitia,
+        300,
+        3.0,
+        42,
+    );
+    out.line(format!(
+        "{:<10} {:<14} {:>9} {:>9} {:>9} {:>10} {:>6}",
+        "replicas", "placement", "avgJCT", "p99JCT", "makespan", "maxmin", "done"
+    ));
+    for r in &rows {
+        out.line(format!(
+            "{:<10} {:<14} {:>8.1}s {:>8.1}s {:>8.1}s {:>9.2}x {:>6}",
+            r.replicas,
+            r.placement.name(),
+            r.avg_jct,
+            r.p99_jct,
+            r.makespan,
+            r.maxmin_ratio,
+            r.completed
+        ));
+    }
+
+    // Headline: 8-replica cluster-vtime vs single replica.
+    let get = |n: usize, p: Placement| {
+        rows.iter().find(|r| r.replicas == n && r.placement == p).unwrap()
+    };
+    let one = get(1, Placement::ClusterVtime);
+    let eight = get(8, Placement::ClusterVtime);
+    out.line(format!(
+        "cluster-vtime 1->8 replicas: avg JCT {:.1}s -> {:.1}s ({:.2}x), p99 {:.1}s -> {:.1}s",
+        one.avg_jct,
+        eight.avg_jct,
+        one.avg_jct / eight.avg_jct.max(1e-9),
+        one.p99_jct,
+        eight.p99_jct
+    ));
+    let rr8 = get(8, Placement::RoundRobin);
+    out.line(format!(
+        "placement at 8 replicas: cluster-vtime maxmin {:.2}x vs round-robin {:.2}x",
+        eight.maxmin_ratio, rr8.maxmin_ratio
+    ));
+}

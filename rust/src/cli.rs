@@ -8,9 +8,13 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First positional token, e.g. `serve` or `experiment`.
     pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs.
     pub flags: BTreeMap<String, String>,
+    /// Boolean `--switch` flags.
     pub switches: Vec<String>,
+    /// Positional arguments after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -50,26 +54,32 @@ impl Args {
         Self::parse(std::env::args().skip(1), known_switches)
     }
 
+    /// Value of flag `key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Value of flag `key`, or `default`.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parse flag `key` as `u64`, or `default`.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Parse flag `key` as `usize`, or `default`.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Parse flag `key` as `f64`, or `default`.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether boolean switch `switch` was passed.
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }

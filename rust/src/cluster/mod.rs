@@ -1,0 +1,335 @@
+//! Multi-replica cluster serving with cluster-level fair queuing.
+//!
+//! The paper serves task-parallel agents on *one* shared GPU. This module
+//! shards the engine across N independent replicas — each with its own
+//! [`BlockAllocator`](crate::kv::BlockAllocator) pool and its own Justitia
+//! scheduler — behind a [`ClusterDispatcher`] that routes each arriving
+//! agent to one replica under a pluggable [`Placement`] policy. Agents are
+//! never split across replicas: an agent's tasks share KV-locality and its
+//! fairness guarantee is per-agent, so the placement decision is the only
+//! cluster-level degree of freedom.
+//!
+//! Fairness composition: with [`Placement::ClusterVtime`], each replica's
+//! mirror virtual clock estimates where the agent's GPS-order finish tag
+//! would land, and the dispatcher picks the replica minimizing it. Each
+//! replica then pampers its agents in local GPS-finish order, so the
+//! cluster-wide service order approximates a single N×M-capacity GPS server
+//! — the same yardstick Theorem B.1 bounds Justitia against on one GPU.
+//!
+//! Determinism: placement ties break toward the lowest replica index and
+//! replicas are simulated independently, so a trace replay is exactly
+//! reproducible; with one replica, every placement policy degenerates to the
+//! single-engine path and reproduces its results bit for bit (asserted by
+//! `rust/tests/test_cluster_determinism.rs`).
+
+pub mod placement;
+
+pub use placement::Placement;
+
+use crate::engine::exec::ExecBackend;
+use crate::engine::Engine;
+use crate::metrics::RunMetrics;
+use crate::workload::{AgentId, AgentSpec, Suite};
+use placement::Placer;
+use std::collections::HashMap;
+
+/// Routes agents across N independent engine replicas.
+///
+/// Two drive modes:
+///
+/// * **Trace replay** — [`run_suite`](ClusterDispatcher::run_suite) places
+///   every agent in global arrival order, then runs each replica over its
+///   sub-trace to completion (replicas are independent discrete-event
+///   simulations; no cross-replica synchronization is needed).
+/// * **Online serving** — [`submit`](ClusterDispatcher::submit) places one
+///   agent against the replicas' *live* state and
+///   [`step`](ClusterDispatcher::step) advances the laggard replica, which
+///   keeps replica clocks loosely synchronized. The HTTP front-end drives
+///   this mode.
+pub struct ClusterDispatcher<B: ExecBackend> {
+    replicas: Vec<Engine<B>>,
+    placer: Placer,
+    /// agent id → replica index, in placement order.
+    assignments: HashMap<AgentId, usize>,
+}
+
+impl<B: ExecBackend> ClusterDispatcher<B> {
+    /// Build a dispatcher over pre-constructed replica engines.
+    ///
+    /// `capacity_tokens` is one replica's KV capacity M and `rate_scale` its
+    /// nominal iterations/second — the same pair the replicas' Justitia
+    /// schedulers were built with; the placement mirrors reuse them.
+    pub fn new(
+        replicas: Vec<Engine<B>>,
+        placement: Placement,
+        capacity_tokens: u64,
+        rate_scale: f64,
+    ) -> Self {
+        assert!(!replicas.is_empty(), "cluster needs at least one replica");
+        let n = replicas.len();
+        ClusterDispatcher {
+            replicas,
+            placer: Placer::new(placement, n, capacity_tokens, rate_scale),
+            assignments: HashMap::new(),
+        }
+    }
+
+    /// Number of replicas.
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The active placement policy.
+    pub fn placement(&self) -> Placement {
+        self.placer.policy()
+    }
+
+    /// The replica an agent was routed to, if it has been placed.
+    pub fn replica_of(&self, agent: AgentId) -> Option<usize> {
+        self.assignments.get(&agent).copied()
+    }
+
+    /// Number of agents placed on each replica so far.
+    pub fn assignment_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.replicas.len()];
+        for &r in self.assignments.values() {
+            counts[r] += 1;
+        }
+        counts
+    }
+
+    /// Direct access to one replica's engine (tests / introspection).
+    pub fn replica(&self, r: usize) -> &Engine<B> {
+        &self.replicas[r]
+    }
+
+    /// One replica's run metrics.
+    pub fn replica_metrics(&self, r: usize) -> &RunMetrics {
+        &self.replicas[r].metrics
+    }
+
+    /// Whether any replica still has admitted or waiting work.
+    pub fn has_work(&self) -> bool {
+        self.replicas.iter().any(|e| e.has_work())
+    }
+
+    /// Largest replica engine clock — the cluster makespan so far.
+    pub fn makespan(&self) -> f64 {
+        self.replicas.iter().map(|e| e.now()).fold(0.0, f64::max)
+    }
+
+    /// Online submission: place `spec` against the replicas' live state and
+    /// submit it to the chosen replica at that replica's current clock.
+    /// Returns the replica index.
+    ///
+    /// For [`Placement::ClusterVtime`] the live schedulers' own virtual
+    /// clocks are consulted first
+    /// ([`Scheduler::gps_finish_estimate`](crate::sched::Scheduler::gps_finish_estimate));
+    /// policies without a virtual clock fall back to the dispatcher mirrors.
+    pub fn submit(&mut self, spec: AgentSpec, predicted_cost: f64) -> usize {
+        let agent = spec.id;
+        let nows: Vec<f64> = self.replicas.iter().map(|e| e.now()).collect();
+        let live: Vec<Option<f64>> = if self.placer.policy() == Placement::ClusterVtime {
+            self.replicas
+                .iter_mut()
+                .zip(&nows)
+                .map(|(e, &now)| e.scheduler_mut().gps_finish_estimate(predicted_cost, now))
+                .collect()
+        } else {
+            vec![None; self.replicas.len()]
+        };
+        let r = self.placer.place(agent, predicted_cost, &nows, Some(&live));
+        self.assignments.insert(agent, r);
+        self.replicas[r].submit(spec, predicted_cost);
+        r
+    }
+
+    /// Online stepping: advance the replica with the smallest engine clock
+    /// among those with work (keeps clocks loosely synchronized so placement
+    /// compares like with like). Returns that iteration's elapsed engine
+    /// seconds, or 0.0 when no replica has work.
+    pub fn step(&mut self) -> f64 {
+        let mut pick: Option<usize> = None;
+        for (r, e) in self.replicas.iter().enumerate() {
+            if e.has_work() && pick.map(|p| e.now() < self.replicas[p].now()).unwrap_or(true) {
+                pick = Some(r);
+            }
+        }
+        match pick {
+            Some(r) => self.replicas[r].step(),
+            None => 0.0,
+        }
+    }
+
+    /// Completion time of an agent on whichever replica owns it.
+    pub fn agent_complete_time(&self, agent: AgentId) -> Option<f64> {
+        let r = self.replica_of(agent)?;
+        self.replicas[r].metrics.agent_complete_time(agent)
+    }
+
+    /// Replay a whole suite through the cluster: place every agent in global
+    /// arrival order (calling `predict` exactly once per agent, preserving
+    /// any stateful noise stream), then run each replica over its sub-trace
+    /// with [`Engine::run_suite`]. Returns the cluster makespan.
+    ///
+    /// With a single replica this is *exactly* the single-engine
+    /// [`Engine::run_suite`] call — same injection order, same clock
+    /// alignment — so JCTs are bit-identical to a non-clustered run.
+    pub fn run_suite<F: FnMut(&AgentSpec) -> f64>(
+        &mut self,
+        suite: &Suite,
+        mut predict: F,
+    ) -> f64 {
+        // Phase 1: placement, in global arrival order.
+        let n = self.replicas.len();
+        let mut subs: Vec<Vec<AgentSpec>> = vec![Vec::new(); n];
+        let mut costs: HashMap<AgentId, f64> = HashMap::with_capacity(suite.len());
+        for a in &suite.agents {
+            let cost = predict(a);
+            let nows = vec![a.arrival; n];
+            let r = self.placer.place(a.id, cost, &nows, None);
+            self.assignments.insert(a.id, r);
+            costs.insert(a.id, cost);
+            subs[r].push(a.clone());
+        }
+        // Phase 2: independent replica runs over the (already arrival-sorted,
+        // globally-id'd) sub-traces. Suite::new would re-index ids, so the
+        // sub-suites are constructed directly.
+        for (r, agents) in subs.into_iter().enumerate() {
+            if agents.is_empty() {
+                continue;
+            }
+            let sub = Suite { agents };
+            self.replicas[r].run_suite(&sub, |a| costs[&a.id]);
+        }
+        self.makespan()
+    }
+
+    /// Merge all replicas' metrics into one cluster-level [`RunMetrics`]
+    /// (agent ids are globally unique, so the union is disjoint).
+    pub fn merged_metrics(&self) -> RunMetrics {
+        let mut out = RunMetrics::new();
+        for e in &self.replicas {
+            out.merge(&e.metrics);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, Policy, WorkloadConfig};
+    use crate::cost::CostModel;
+    use crate::engine::exec::SimBackend;
+    use crate::workload::test_support::simple_agent;
+    use crate::workload::trace;
+
+    fn engines(cfg: &Config, n: usize) -> Vec<Engine<SimBackend>> {
+        (0..n)
+            .map(|_| {
+                let sched = crate::sched::build(Policy::Justitia, cfg.backend.kv_tokens, 1.0);
+                Engine::new(cfg, sched, SimBackend::new(&cfg.backend))
+            })
+            .collect()
+    }
+
+    fn dispatcher(cfg: &Config, n: usize, p: Placement) -> ClusterDispatcher<SimBackend> {
+        ClusterDispatcher::new(engines(cfg, n), p, cfg.backend.kv_tokens, 1.0)
+    }
+
+    fn small_suite(n_agents: usize, seed: u64) -> Suite {
+        let wl = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(3.0);
+        trace::build_suite(&wl)
+    }
+
+    #[test]
+    fn one_replica_matches_single_engine_exactly() {
+        let cfg = Config::default();
+        let suite = small_suite(40, 11);
+        let model = CostModel::MemoryCentric;
+
+        let mut single = engines(&cfg, 1).pop().unwrap();
+        single.run_suite(&suite, |a| model.agent_cost(a));
+        let want = single.metrics.jcts();
+
+        for p in Placement::ALL {
+            let mut c = dispatcher(&cfg, 1, p);
+            c.run_suite(&suite, |a| model.agent_cost(a));
+            assert_eq!(c.merged_metrics().jcts(), want, "{p:?} diverged with one replica");
+        }
+    }
+
+    #[test]
+    fn multi_replica_completes_everything_deterministically() {
+        let cfg = Config::default();
+        let suite = small_suite(60, 5);
+        let model = CostModel::MemoryCentric;
+        for p in Placement::ALL {
+            let run = || {
+                let mut c = dispatcher(&cfg, 4, p);
+                c.run_suite(&suite, |a| model.agent_cost(a));
+                (c.merged_metrics().jcts(), c.assignment_counts())
+            };
+            let (jcts1, counts1) = run();
+            let (jcts2, counts2) = run();
+            assert_eq!(jcts1.len(), 60, "{p:?} dropped agents");
+            assert_eq!(jcts1, jcts2, "{p:?} nondeterministic");
+            assert_eq!(counts1, counts2);
+            assert_eq!(counts1.iter().sum::<usize>(), 60);
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_counts_evenly() {
+        let cfg = Config::default();
+        let suite = small_suite(40, 3);
+        let mut c = dispatcher(&cfg, 4, Placement::RoundRobin);
+        c.run_suite(&suite, |a| CostModel::MemoryCentric.agent_cost(a));
+        assert_eq!(c.assignment_counts(), vec![10, 10, 10, 10]);
+    }
+
+    #[test]
+    fn scaling_out_reduces_jct_under_contention() {
+        let cfg = Config::default();
+        let suite = small_suite(80, 42);
+        let model = CostModel::MemoryCentric;
+        let avg = |n: usize| {
+            let mut c = dispatcher(&cfg, n, Placement::ClusterVtime);
+            c.run_suite(&suite, |a| model.agent_cost(a));
+            c.merged_metrics().avg_jct()
+        };
+        let (one, four) = (avg(1), avg(4));
+        assert!(four < one, "4 replicas ({four:.1}s) should beat 1 ({one:.1}s)");
+    }
+
+    #[test]
+    fn online_submit_and_step_drain() {
+        let cfg = Config::default();
+        let mut c = dispatcher(&cfg, 2, Placement::ClusterVtime);
+        let r0 = c.submit(simple_agent(0, 0.0, 2, 20, 10), 1000.0);
+        let r1 = c.submit(simple_agent(1, 0.0, 1, 10, 5), 100.0);
+        assert_eq!(c.replica_of(0), Some(r0));
+        assert_eq!(c.replica_of(1), Some(r1));
+        // Big agent saturates its replica's GPS; the small one goes elsewhere.
+        assert_ne!(r0, r1);
+        let mut guard = 0;
+        while c.has_work() {
+            c.step();
+            guard += 1;
+            assert!(guard < 10_000, "runaway");
+        }
+        let m = c.merged_metrics();
+        assert_eq!(m.completed_agents(), 2);
+        assert!(c.agent_complete_time(0).is_some() && c.agent_complete_time(1).is_some());
+        assert!(c.makespan() > 0.0);
+    }
+
+    #[test]
+    fn step_without_work_is_zero() {
+        let cfg = Config::default();
+        let mut c = dispatcher(&cfg, 2, Placement::RoundRobin);
+        assert_eq!(c.step(), 0.0);
+        assert!(!c.has_work());
+    }
+}

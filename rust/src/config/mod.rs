@@ -3,6 +3,7 @@
 //! are fully reproducible from a single file (`configs/*.json`).
 
 use crate::cli::Args;
+use crate::cluster::Placement;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -12,6 +13,7 @@ use std::path::Path;
 /// iteration-latency coefficients used by the simulator (substitution T1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BackendProfile {
+    /// Profile name (CLI/JSON key).
     pub name: String,
     /// Total KV cache capacity in token slots (paper's M, in per-token units;
     /// Fig. 3 uses 459 blocks x 16 tokens/block for LLaMA2-7B on A100-40G).
@@ -21,7 +23,9 @@ pub struct BackendProfile {
     /// Iteration latency model: t_iter = alpha + beta_prefill * prefill_tokens
     /// + beta_decode * decode_seqs (seconds).
     pub alpha: f64,
+    /// Latency per prefill token (s).
     pub beta_prefill: f64,
+    /// Latency per decoding sequence in the batch (s).
     pub beta_decode: f64,
     /// Swap-out/in penalty per token moved (seconds).
     pub swap_cost_per_token: f64,
@@ -87,6 +91,7 @@ impl BackendProfile {
         }
     }
 
+    /// Look up a built-in profile by name.
     pub fn by_name(name: &str) -> Result<Self> {
         match name {
             "llama7b-a100" => Ok(Self::llama7b_a100()),
@@ -124,6 +129,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Parse a policy name (paper aliases accepted).
     pub fn by_name(name: &str) -> Result<Self> {
         match name {
             "fcfs" | "vllm" => Ok(Policy::Fcfs),
@@ -137,6 +143,7 @@ impl Policy {
         }
     }
 
+    /// Paper display name.
     pub fn name(&self) -> &'static str {
         match self {
             Policy::Fcfs => "vLLM",
@@ -149,6 +156,7 @@ impl Policy {
         }
     }
 
+    /// The six policies of the §5 evaluation.
     pub fn all_paper_baselines() -> [Policy; 6] {
         [Policy::Fcfs, Policy::Sjf, Policy::AgentFcfs, Policy::Vtc, Policy::Srjf, Policy::Justitia]
     }
@@ -181,11 +189,31 @@ impl WorkloadConfig {
     }
 }
 
+/// Multi-replica cluster knobs (see [`crate::cluster`]). The default is a
+/// single replica, which reproduces the single-engine paper setup exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Number of independent engine replicas (each with its own KV pool and
+    /// scheduler).
+    pub replicas: usize,
+    /// How arriving agents are routed across replicas.
+    pub placement: Placement,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { replicas: 1, placement: Placement::ClusterVtime }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Backend testbed profile (KV capacity + latency coefficients).
     pub backend: BackendProfile,
+    /// Scheduling policy each replica runs.
     pub policy: Policy,
+    /// Workload-suite parameters.
     pub workload: WorkloadConfig,
     /// Max sequences admitted to one running batch (vLLM max_num_seqs).
     pub max_batch: usize,
@@ -193,6 +221,8 @@ pub struct Config {
     pub use_predictor: bool,
     /// Prediction-noise scale lambda for Fig. 10 (1.0 = exact).
     pub noise_lambda: f64,
+    /// Multi-replica scale-out knobs.
+    pub cluster: ClusterConfig,
 }
 
 impl Default for Config {
@@ -204,6 +234,7 @@ impl Default for Config {
             max_batch: 64,
             use_predictor: false,
             noise_lambda: 1.0,
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -216,6 +247,7 @@ impl Config {
         Self::from_json(&v)
     }
 
+    /// Build a config from parsed JSON (missing keys fall back to defaults).
     pub fn from_json(v: &Json) -> Result<Self> {
         let mut cfg = Config::default();
         if let Some(name) = v.get("backend").as_str() {
@@ -255,6 +287,16 @@ impl Config {
         }
         if let Some(x) = v.get("noise_lambda").as_f64() {
             cfg.noise_lambda = x;
+        }
+        let c = v.get("cluster");
+        if c.as_obj().is_some() {
+            if let Some(x) = c.get("replicas").as_u64() {
+                anyhow::ensure!(x >= 1, "cluster.replicas must be >= 1");
+                cfg.cluster.replicas = x as usize;
+            }
+            if let Some(x) = c.get("placement").as_str() {
+                cfg.cluster.placement = Placement::by_name(x)?;
+            }
         }
         let w = v.get("workload");
         if w.as_obj().is_some() {
@@ -296,6 +338,14 @@ impl Config {
         }
         if args.has("predict") {
             self.use_predictor = true;
+        }
+        if let Some(r) = args.get("replicas") {
+            let r: usize = r.parse().context("--replicas")?;
+            anyhow::ensure!(r >= 1, "--replicas must be >= 1");
+            self.cluster.replicas = r;
+        }
+        if let Some(p) = args.get("placement") {
+            self.cluster.placement = Placement::by_name(p)?;
         }
         Ok(self)
     }
@@ -343,6 +393,7 @@ mod tests {
         let j = Json::parse(
             r#"{"backend": "qwen32b-h800", "policy": "vtc",
                 "workload": {"n_agents": 50, "density": 3, "seed": 7},
+                "cluster": {"replicas": 4, "placement": "least-loaded"},
                 "max_batch": 32, "noise_lambda": 2.0}"#,
         )
         .unwrap();
@@ -354,6 +405,27 @@ mod tests {
         assert_eq!(cfg.workload.seed, 7);
         assert_eq!(cfg.max_batch, 32);
         assert!((cfg.noise_lambda - 2.0).abs() < 1e-12);
+        assert_eq!(cfg.cluster.replicas, 4);
+        assert_eq!(cfg.cluster.placement, Placement::LeastLoaded);
+    }
+
+    #[test]
+    fn cluster_defaults_and_validation() {
+        let cfg = Config::default();
+        assert_eq!(cfg.cluster, ClusterConfig::default());
+        assert_eq!(cfg.cluster.replicas, 1);
+        assert_eq!(cfg.cluster.placement, Placement::ClusterVtime);
+        // Zero replicas is rejected.
+        let j = Json::parse(r#"{"cluster": {"replicas": 0}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        // CLI overrides.
+        let args = crate::cli::Args::parse(
+            ["run", "--replicas", "8", "--placement", "rr"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let cfg = Config::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.cluster.replicas, 8);
+        assert_eq!(cfg.cluster.placement, Placement::RoundRobin);
     }
 
     #[test]

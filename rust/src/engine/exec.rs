@@ -26,10 +26,12 @@ pub struct IterationBatch<'a> {
 }
 
 impl IterationBatch<'_> {
+    /// Total prompt tokens prefilled this iteration.
     pub fn prefill_tokens(&self) -> u64 {
         self.prefill.iter().map(|(_, p)| *p as u64).sum()
     }
 
+    /// Sequences in the iteration (prefill + decode).
     pub fn batch_size(&self) -> usize {
         self.prefill.len() + self.decode.len()
     }
@@ -78,6 +80,7 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Simulator with a profile's calibrated coefficients.
     pub fn new(profile: &BackendProfile) -> Self {
         SimBackend {
             alpha: profile.alpha,
@@ -94,6 +97,7 @@ impl SimBackend {
         SimBackend { alpha: 1.0, beta_prefill: 0.0, beta_decode: 0.0, swap_cost_per_token: 0.0, iterations: 0 }
     }
 
+    /// Iterations executed so far.
     pub fn iterations(&self) -> u64 {
         self.iterations
     }

@@ -47,6 +47,7 @@ struct AgentState {
 
 /// The serving engine.
 pub struct Engine<B: ExecBackend> {
+    /// The paged KV-cache allocator (single source of truth for pages).
     pub kv: BlockAllocator,
     backend: B,
     scheduler: Box<dyn Scheduler>,
@@ -60,6 +61,7 @@ pub struct Engine<B: ExecBackend> {
     agents: HashMap<AgentId, AgentState>,
     clock: f64,
     seq_counter: u64,
+    /// Metrics collected over this run.
     pub metrics: RunMetrics,
     /// Record KV occupancy samples (Fig. 3) — off by default (hot path).
     pub record_occupancy: bool,
@@ -72,6 +74,7 @@ pub struct Engine<B: ExecBackend> {
 }
 
 impl<B: ExecBackend> Engine<B> {
+    /// Engine from a config, a policy scheduler, and an execution backend.
     pub fn new(cfg: &Config, scheduler: Box<dyn Scheduler>, backend: B) -> Self {
         let kv = BlockAllocator::new(cfg.backend.kv_pages() as u32, cfg.backend.page_size);
         Engine {
@@ -92,10 +95,12 @@ impl<B: ExecBackend> Engine<B> {
         }
     }
 
+    /// The active scheduling policy.
     pub fn policy(&self) -> Policy {
         self.policy
     }
 
+    /// Current engine clock (s).
     pub fn now(&self) -> f64 {
         self.clock
     }
@@ -375,10 +380,12 @@ impl<B: ExecBackend> Engine<B> {
         self.scheduler.waiting_len()
     }
 
+    /// Number of running sequences.
     pub fn running_len(&self) -> usize {
         self.running.len()
     }
 
+    /// Number of swapped-out sequences.
     pub fn swapped_len(&self) -> usize {
         self.swapped.len()
     }

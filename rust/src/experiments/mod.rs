@@ -6,6 +6,7 @@
 //! (`justitia experiment <id>`) print them. DESIGN.md §6 maps experiment ids
 //! to modules; EXPERIMENTS.md records paper-vs-measured.
 
+use crate::cluster::{ClusterDispatcher, Placement};
 use crate::config::{Config, Policy, WorkloadConfig};
 use crate::cost::CostModel;
 use crate::engine::exec::SimBackend;
@@ -60,6 +61,7 @@ pub fn run_policy_oracle(cfg: &Config, suite: &Suite, policy: Policy) -> RunMetr
 // Fig. 3 — selective pampering vs instantaneous fair sharing (2 DM agents)
 // ---------------------------------------------------------------------------
 
+/// Fig. 3 outcome: per-policy JCTs and KV-occupancy timelines.
 pub struct Fig3Result {
     /// (policy label, per-agent JCTs, avg JCT).
     pub rows: Vec<(String, Vec<f64>, f64)>,
@@ -100,12 +102,19 @@ pub fn fig3(seed: u64) -> Fig3Result {
 // Fig. 7 — avg/P90 JCT, backends × schedulers × densities
 // ---------------------------------------------------------------------------
 
+/// One (backend, density, policy) cell of the Fig. 7 sweep.
 pub struct Fig7Row {
+    /// Backend profile name.
     pub backend: String,
+    /// Workload density multiplier.
     pub density: f64,
+    /// Scheduling policy.
     pub policy: Policy,
+    /// Average JCT (s).
     pub avg_jct: f64,
+    /// P90 JCT (s).
     pub p90_jct: f64,
+    /// Completed agents.
     pub completed: usize,
 }
 
@@ -148,6 +157,7 @@ pub fn fig7(
 // Fig. 8 — CDF of finish-time fair ratios at 3× density
 // ---------------------------------------------------------------------------
 
+/// Fig. 8 outcome: fair-ratio distributions and summaries per policy.
 pub struct Fig8Result {
     /// (policy, sorted ratios) — ratio = JCT / JCT_under_VTC per agent.
     pub ratios: Vec<(Policy, Vec<f64>)>,
@@ -155,6 +165,7 @@ pub struct Fig8Result {
     pub summaries: Vec<(Policy, f64, f64, f64)>,
 }
 
+/// The fairness experiment: finish-time ratios vs the VTC baseline run.
 pub fn fig8(n_agents: usize, density: f64, seed: u64) -> Fig8Result {
     let mut cfg = Config::default();
     cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
@@ -184,9 +195,13 @@ pub fn fig8(n_agents: usize, density: f64, seed: u64) -> Fig8Result {
 // Fig. 9 — starvation: elephant (MRS) + stream of mice
 // ---------------------------------------------------------------------------
 
+/// One (mice count, policy) cell of the Fig. 9 starvation study.
 pub struct Fig9Row {
+    /// Mice agents in the stream.
     pub n_mice: usize,
+    /// Scheduling policy.
     pub policy: Policy,
+    /// The elephant's JCT (s).
     pub elephant_jct: f64,
 }
 
@@ -197,6 +212,7 @@ pub struct Fig9Row {
 /// starvation mechanism is identical.
 pub const FIG9_MICE_PER_SEC: f64 = 1.5;
 
+/// The starvation study: elephant JCT per mice count, SRJF vs Justitia.
 pub fn fig9(mice_counts: &[usize], seed: u64) -> Vec<Fig9Row> {
     let mut jobs = Vec::new();
     for &n in mice_counts {
@@ -230,12 +246,17 @@ pub fn fig9(mice_counts: &[usize], seed: u64) -> Vec<Fig9Row> {
 // Fig. 10 — robustness to prediction error
 // ---------------------------------------------------------------------------
 
+/// One λ row of the Fig. 10 robustness sweep.
 pub struct Fig10Row {
+    /// Noise scale λ.
     pub lambda: f64,
+    /// Average JCT (s).
     pub avg_jct: f64,
+    /// P90 JCT (s).
     pub p90_jct: f64,
 }
 
+/// Justitia under log-uniform cost noise (Fig. 10).
 pub fn fig10(lambdas: &[f64], n_agents: usize, density: f64, seed: u64) -> Vec<Fig10Row> {
     let pool = ThreadPool::with_cpus();
     pool.map(lambdas.to_vec(), move |lambda| {
@@ -257,12 +278,17 @@ pub fn fig10(lambdas: &[f64], n_agents: usize, density: f64, seed: u64) -> Vec<F
 // Fig. 11 — cost-model ablation: Justitia vs Justitia/C
 // ---------------------------------------------------------------------------
 
+/// One row of the Fig. 11 cost-model ablation.
 pub struct Fig11Row {
+    /// Justitia or Justitia/C.
     pub policy: Policy,
+    /// Average JCT (s).
     pub avg_jct: f64,
+    /// P90 JCT (s).
     pub p90_jct: f64,
 }
 
+/// Memory- vs compute-centric cost modeling (Fig. 11).
 pub fn fig11(n_agents: usize, density: f64, seed: u64) -> Vec<Fig11Row> {
     let pool = ThreadPool::with_cpus();
     pool.map(
@@ -282,10 +308,15 @@ pub fn fig11(n_agents: usize, density: f64, seed: u64) -> Vec<Fig11Row> {
 // Fig. 12 — scheduling overhead vs arrival rate
 // ---------------------------------------------------------------------------
 
+/// One arrival-rate row of the Fig. 12 overhead study.
 pub struct Fig12Row {
+    /// Agent arrivals per second.
     pub arrival_rate: f64,
+    /// Mean scheduling decision latency (ms).
     pub mean_delay_ms: f64,
+    /// Max scheduling decision latency (ms).
     pub max_delay_ms: f64,
+    /// Decision points measured.
     pub decisions: u64,
 }
 
@@ -317,16 +348,23 @@ pub fn fig12(rates_per_sec: &[f64], n_agents: usize, seed: u64) -> Vec<Fig12Row>
 // Fig. 13 — demand stability (Appendix A)
 // ---------------------------------------------------------------------------
 
+/// One (class, inference kind) distribution of the Fig. 13 stability study.
 pub struct Fig13Dist {
+    /// Agent class.
     pub class: AgentClass,
+    /// Inference kind within the class template.
     pub kind: &'static str,
     /// 10-bucket histogram of token lengths over 100 trial runs + range.
     pub prompt_hist: Vec<usize>,
+    /// Observed prompt-length range.
     pub prompt_range: (u32, u32),
+    /// 10-bucket decode-length histogram.
     pub decode_hist: Vec<usize>,
+    /// Observed decode-length range.
     pub decode_range: (u32, u32),
 }
 
+/// Per-stage demand stability over 100 trial runs (Appendix A).
 pub fn fig13(seed: u64) -> Vec<Fig13Dist> {
     let targets = [
         (AgentClass::MapReduceSummarization, "generate-summary"),
@@ -366,17 +404,131 @@ pub fn fig13(seed: u64) -> Vec<Fig13Dist> {
 }
 
 // ---------------------------------------------------------------------------
+// Cluster scale-out — replicas × placement policies (beyond the paper:
+// cluster-level Justitia fair queuing; see DESIGN.md §5 and ROADMAP.md)
+// ---------------------------------------------------------------------------
+
+/// Build `cfg.cluster.replicas` simulator replicas running `policy` and wrap
+/// them in a [`ClusterDispatcher`] under `cfg.cluster.placement`.
+pub fn build_sim_cluster(cfg: &Config, policy: Policy) -> ClusterDispatcher<SimBackend> {
+    let n = cfg.cluster.replicas.max(1);
+    let replicas = (0..n)
+        .map(|_| {
+            let sched = crate::sched::build(policy, cfg.backend.kv_tokens, rate_scale(cfg));
+            Engine::new(cfg, sched, SimBackend::new(&cfg.backend))
+        })
+        .collect();
+    ClusterDispatcher::new(replicas, cfg.cluster.placement, cfg.backend.kv_tokens, rate_scale(cfg))
+}
+
+/// One (replica count, placement) configuration's results.
+pub struct ClusterRow {
+    /// Number of engine replicas.
+    pub replicas: usize,
+    /// Placement policy routing agents to replicas.
+    pub placement: Placement,
+    /// Per-replica scheduling policy.
+    pub policy: Policy,
+    /// Average JCT across all agents (s).
+    pub avg_jct: f64,
+    /// P99 JCT (s) — the scale-out tail metric.
+    pub p99_jct: f64,
+    /// Max-min fair-share ratio: each agent's slowdown vs the idealized
+    /// cluster-wide GPS reference (capacity N×M), max divided by min. 1.0
+    /// means slowdown is spread perfectly evenly; large values mean some
+    /// agents absorb the whole contention penalty.
+    pub maxmin_ratio: f64,
+    /// Agents that completed (must equal the suite size).
+    pub completed: usize,
+    /// Cluster makespan (s): the slowest replica's engine time.
+    pub makespan: f64,
+}
+
+/// The cluster scale-out experiment: one §5.1 suite replayed through
+/// 1..=N-replica clusters under each placement policy. Reports JCT
+/// efficiency (avg/p99) and cluster-level fairness (max-min fair-share
+/// ratio against the N×M GPS fluid reference).
+///
+/// `base` supplies the backend profile / batch limits (its workload and
+/// cluster knobs are overridden per job).
+pub fn cluster_scaleout(
+    base: &Config,
+    replica_counts: &[usize],
+    placements: &[Placement],
+    policy: Policy,
+    n_agents: usize,
+    density: f64,
+    seed: u64,
+) -> Vec<ClusterRow> {
+    let mut jobs = Vec::new();
+    for &n_r in replica_counts {
+        for &placement in placements {
+            jobs.push((n_r, placement));
+        }
+    }
+    let base = base.clone();
+    let pool = ThreadPool::with_cpus();
+    pool.map(jobs, move |(n_r, placement)| {
+        let mut cfg = base.clone();
+        cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
+        cfg.cluster = crate::config::ClusterConfig { replicas: n_r, placement };
+        let suite = crate::workload::trace::build_suite(&cfg.workload);
+        let model = cost_model_for(policy);
+        let mut cluster = build_sim_cluster(&cfg, policy);
+        let makespan = cluster.run_suite(&suite, |a| model.agent_cost(a));
+        let m = cluster.merged_metrics();
+
+        // Fairness yardstick: the whole cluster as ONE GPS server of
+        // capacity N×M. slowdown_j = JCT_j / GPS-JCT_j; the ratio of the
+        // worst to the best slowdown measures how evenly contention is paid.
+        let gps = crate::sched::gps::run_suite(
+            &suite,
+            model,
+            cfg.backend.kv_tokens * n_r as u64,
+            rate_scale(&cfg),
+        );
+        let mut worst = f64::NEG_INFINITY;
+        let mut best = f64::INFINITY;
+        for a in &suite.agents {
+            if let Some(jct) = m.jct(a.id) {
+                let slowdown = jct / gps.jct(a.id, a.arrival).max(1e-9);
+                worst = worst.max(slowdown);
+                best = best.min(slowdown);
+            }
+        }
+        let maxmin_ratio = if best.is_finite() && best > 0.0 { worst / best } else { 1.0 };
+        ClusterRow {
+            replicas: n_r,
+            placement,
+            policy,
+            avg_jct: m.avg_jct(),
+            p99_jct: m.p99_jct(),
+            maxmin_ratio,
+            completed: m.completed_agents(),
+            makespan,
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
 // Table 1 — MLP vs shared-model (Distillbert-style) prediction
 // ---------------------------------------------------------------------------
 
+/// One predictor row of Table 1.
 pub struct Table1Row {
+    /// Predictor label.
     pub model: String,
+    /// Mean relative error (%).
     pub rel_error_pct: f64,
+    /// Mean per-prediction latency (ms).
     pub infer_ms: f64,
+    /// Average JCT with this predictor in the loop (s).
     pub avg_jct: f64,
+    /// Training wall time (s).
     pub train_secs: f64,
 }
 
+/// Table 1: per-class MLP vs shared (S³-style) cost prediction.
 pub fn table1(n_agents: usize, density: f64, samples_per_class: usize, seed: u64) -> Vec<Table1Row> {
     let mut cfg = Config::default();
     cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
@@ -462,6 +614,49 @@ mod tests {
             srjf_growth > 1.5 * just_growth,
             "srjf growth {srjf_growth} should far exceed justitia {just_growth}"
         );
+    }
+
+    #[test]
+    fn cluster_one_replica_matches_single_engine() {
+        // The scale-out experiment at N=1 must agree with run_policy_oracle
+        // to the last bit, for every placement policy.
+        let mut cfg = Config::default();
+        cfg.workload = WorkloadConfig { n_agents: 40, seed: 21, ..Default::default() }
+            .with_density(3.0);
+        let suite = crate::workload::trace::build_suite(&cfg.workload);
+        let single = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+        let rows = cluster_scaleout(&cfg, &[1], &Placement::ALL, Policy::Justitia, 40, 3.0, 21);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.completed, 40, "{:?}", r.placement);
+            assert_eq!(r.avg_jct, single.avg_jct(), "{:?} avg JCT diverged", r.placement);
+            assert_eq!(r.p99_jct, single.p99_jct(), "{:?} p99 JCT diverged", r.placement);
+        }
+    }
+
+    #[test]
+    fn cluster_scaleout_shrinks_jct_and_stays_fair() {
+        let rows = cluster_scaleout(
+            &Config::default(),
+            &[1, 4],
+            &[Placement::ClusterVtime],
+            Policy::Justitia,
+            120,
+            3.0,
+            42,
+        );
+        let get = |n: usize| rows.iter().find(|r| r.replicas == n).unwrap();
+        assert!(
+            get(4).avg_jct < get(1).avg_jct,
+            "4 replicas ({:.1}s) should beat 1 ({:.1}s)",
+            get(4).avg_jct,
+            get(1).avg_jct
+        );
+        for r in &rows {
+            assert_eq!(r.completed, 120);
+            assert!(r.maxmin_ratio >= 1.0, "ratio {} must be >= 1", r.maxmin_ratio);
+            assert!(r.makespan > 0.0);
+        }
     }
 
     #[test]

@@ -16,7 +16,9 @@ pub type PageId = u32;
 /// Where a sequence's KV currently lives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvResidence {
+    /// Resident in the device pool.
     Device,
+    /// Stashed in host memory.
     Swapped,
 }
 
@@ -30,12 +32,16 @@ struct SeqAlloc {
 /// Errors from the allocator.
 #[derive(Debug, thiserror::Error, PartialEq, Eq)]
 pub enum KvError {
+    /// The pool cannot supply the requested pages.
     #[error("out of KV pages (need {need}, free {free})")]
     OutOfPages { need: u32, free: u32 },
+    /// No allocation exists for this sequence.
     #[error("unknown sequence {0}")]
     UnknownSeq(TaskId),
+    /// The sequence already holds pages.
     #[error("sequence {0} already allocated")]
     AlreadyAllocated(TaskId),
+    /// The operation needs a device-resident sequence.
     #[error("sequence {0} is swapped out")]
     Swapped(TaskId),
 }
@@ -53,6 +59,7 @@ pub struct BlockAllocator {
 }
 
 impl BlockAllocator {
+    /// Allocator over `total_pages` pages of `page_size` tokens.
     pub fn new(total_pages: u32, page_size: u32) -> Self {
         assert!(page_size > 0 && total_pages > 0);
         BlockAllocator {
@@ -65,10 +72,12 @@ impl BlockAllocator {
         }
     }
 
+    /// Tokens per page.
     pub fn page_size(&self) -> u32 {
         self.page_size
     }
 
+    /// Total pool pages.
     pub fn total_pages(&self) -> u32 {
         self.total_pages
     }
@@ -78,6 +87,7 @@ impl BlockAllocator {
         self.total_pages as u64 * self.page_size as u64
     }
 
+    /// Pages currently free.
     pub fn free_pages(&self) -> u32 {
         self.free.len() as u32
     }

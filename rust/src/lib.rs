@@ -19,8 +19,16 @@
 //! as an [`engine::exec::ExecBackend`], so the same engine code drives both
 //! the calibrated simulator and the real model. Python never runs on the
 //! request path.
+//!
+//! The [`cluster`] module scales the whole stack out: a `ClusterDispatcher`
+//! routes agents across N independent engine replicas under pluggable
+//! placement policies, extending Justitia's fairness guarantee to the
+//! cluster level (DESIGN.md §5).
+
+#![warn(missing_docs)]
 
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod cost;
 pub mod engine;

@@ -2,8 +2,9 @@
 //! train predictors.
 //!
 //! ```text
-//! justitia serve        [--artifacts DIR] [--policy P] [--port N]
+//! justitia serve        [--artifacts DIR] [--policy P] [--port N] [--replicas R] [--placement PL]
 //! justitia run          [--policy P] [--backend B] [--agents N] [--density D] [--seed S]
+//! justitia cluster      [--replicas R] [--placement PL] [--agents N] [--density D] [--seed S]
 //! justitia experiment   <fig3|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table1|all> [--agents N] [--seed S]
 //! justitia gen-workload [--agents N] [--density D] [--seed S] --out FILE
 //! justitia train-predictor [--samples N] [--seed S]
@@ -12,6 +13,7 @@
 
 use anyhow::{bail, Result};
 use justitia::cli::Args;
+use justitia::cluster::Placement;
 use justitia::config::{BackendProfile, Config, Policy};
 use justitia::cost::CostModel;
 use justitia::experiments as exp;
@@ -30,6 +32,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(args),
         Some("run") => cmd_run(args),
+        Some("cluster") => cmd_cluster(args),
         Some("experiment") => cmd_experiment(args),
         Some("gen-workload") => cmd_gen_workload(args),
         Some("train-predictor") => cmd_train_predictor(args),
@@ -45,10 +48,11 @@ fn dispatch(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "justitia — fair and efficient scheduling of task-parallel LLM agents\n\n\
-         USAGE:\n  justitia <serve|run|experiment|gen-workload|train-predictor|gps> [flags]\n\n\
+         USAGE:\n  justitia <serve|run|cluster|experiment|gen-workload|train-predictor|gps> [flags]\n\n\
          SUBCOMMANDS:\n\
            serve            HTTP front-end over the PJRT model (POST /agents)\n\
            run              run one policy over a generated suite (simulator)\n\
+           cluster          multi-replica scale-out experiment (replicas x placement)\n\
            experiment       regenerate a paper figure/table (fig3..fig13, table1, all)\n\
            gen-workload     write a workload trace JSON\n\
            train-predictor  train + evaluate the per-class MLP predictor\n\
@@ -56,6 +60,7 @@ fn print_help() {
          COMMON FLAGS:\n\
            --policy fcfs|sjf|parrot|vtc|srjf|justitia|justitia-c\n\
            --backend llama7b-a100|llama13b-4v100|qwen32b-h800|tiny-cpu\n\
+           --replicas N   --placement round-robin|least-loaded|cluster-vtime\n\
            --agents N   --density 1|2|3   --seed S   --lambda L   --predict"
     );
 }
@@ -116,6 +121,68 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The cluster scale-out experiment (`justitia cluster`).
+///
+/// By default sweeps 1→8 replicas × every placement policy; `--replicas`
+/// and/or `--placement` restrict the sweep to one value each, so
+/// `justitia cluster --replicas 4 --placement cluster-vtime` runs exactly
+/// one configuration end to end.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let n = args.get_usize("agents", 300);
+    let density = args.get_f64("density", 3.0);
+    let seed = cfg.workload.seed;
+    let counts: Vec<usize> = match args.get("replicas") {
+        Some(_) => vec![cfg.cluster.replicas],
+        None => vec![1, 2, 4, 8],
+    };
+    let placements: Vec<Placement> = match args.get("placement") {
+        Some(_) => vec![cfg.cluster.placement],
+        None => Placement::ALL.to_vec(),
+    };
+
+    let mut out = ResultsFile::new("cluster.txt");
+    out.line(format!(
+        "=== Cluster scale-out: {} agents at {density}x density on {}, policy {} ===",
+        n,
+        cfg.backend.name,
+        cfg.policy.name()
+    ));
+    out.line(format!(
+        "{:<10} {:<14} {:>9} {:>9} {:>9} {:>10} {:>6}",
+        "replicas", "placement", "avgJCT", "p99JCT", "makespan", "maxmin", "done"
+    ));
+    let t0 = std::time::Instant::now();
+    let rows = exp::cluster_scaleout(&cfg, &counts, &placements, cfg.policy, n, density, seed);
+    for r in &rows {
+        out.line(format!(
+            "{:<10} {:<14} {:>8.1}s {:>8.1}s {:>8.1}s {:>9.2}x {:>6}",
+            r.replicas,
+            r.placement.name(),
+            r.avg_jct,
+            r.p99_jct,
+            r.makespan,
+            r.maxmin_ratio,
+            r.completed
+        ));
+    }
+    if counts.len() > 1 {
+        let base = rows.iter().find(|r| r.replicas == counts[0]);
+        let last = rows.iter().rev().find(|r| r.replicas == *counts.last().unwrap());
+        if let (Some(b), Some(l)) = (base, last) {
+            out.line(format!(
+                "scale-out {}x replicas: avg JCT {:.1}s -> {:.1}s ({:.2}x)",
+                l.replicas / b.replicas.max(1),
+                b.avg_jct,
+                l.avg_jct,
+                b.avg_jct / l.avg_jct.max(1e-9)
+            ));
+        }
+    }
+    out.line(format!("(host wall {:.2}s)", t0.elapsed().as_secs_f64()));
+    Ok(())
+}
+
 fn cmd_gen_workload(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let out = args.get("out").unwrap_or("workload.json");
@@ -171,7 +238,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let port: u16 = args.get_u64("port", 8080) as u16;
     let policy = Policy::by_name(args.get_or("policy", "justitia"))?;
-    justitia::server::http::serve(std::path::Path::new(artifacts), port, policy)
+    let replicas: usize = match args.get("replicas") {
+        Some(s) => {
+            let r = s.parse().map_err(|e| anyhow::anyhow!("--replicas: {e}"))?;
+            if r < 1 {
+                bail!("--replicas must be >= 1");
+            }
+            r
+        }
+        None => 1,
+    };
+    let placement = Placement::by_name(args.get_or("placement", "cluster-vtime"))?;
+    justitia::server::http::serve(std::path::Path::new(artifacts), port, policy, replicas, placement)
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {

@@ -25,36 +25,46 @@ pub struct RunMetrics {
     pub kv_samples: Vec<KvSample>,
 }
 
+/// One KV-occupancy sample (Fig. 3 timeline).
 #[derive(Debug, Clone)]
 pub struct KvSample {
+    /// Engine time (s).
     pub t: f64,
+    /// Tokens resident on device.
     pub device_tokens: u64,
+    /// Per-agent resident tokens (sorted by agent).
     pub per_agent: Vec<(AgentId, u64)>,
 }
 
 impl RunMetrics {
+    /// Empty metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
     // ---- recording hooks (called by the engine) -------------------------
 
+    /// Record an agent arrival.
     pub fn on_agent_arrival(&mut self, agent: AgentId, t: f64) {
         self.arrival.insert(agent, t);
     }
 
+    /// Record an agent completion.
     pub fn on_agent_complete(&mut self, agent: AgentId, t: f64) {
         self.complete.insert(agent, t);
     }
 
+    /// Record a task admission.
     pub fn on_task_admitted(&mut self, task: TaskId, t: f64) {
         self.task_admit.insert(task, t);
     }
 
+    /// Record a task completion.
     pub fn on_task_complete(&mut self, task: TaskId, t: f64) {
         self.task_complete.insert(task, t);
     }
 
+    /// Record one engine iteration.
     pub fn on_iteration(&mut self, now: f64, elapsed: f64, prefill: usize, decode: usize) {
         self.iterations += 1;
         self.total_prefill_seqs += prefill as u64;
@@ -63,48 +73,59 @@ impl RunMetrics {
         let _ = elapsed;
     }
 
+    /// Record a preemption swap-out.
     pub fn on_swap_out(&mut self, _task: TaskId, _t: f64) {
         self.swap_outs += 1;
     }
 
+    /// Record one scheduling decision's host latency.
     pub fn record_sched_decision(&mut self, d: Duration) {
         self.sched_latency.push(d.as_secs_f64());
     }
 
+    /// Record a KV-occupancy sample.
     pub fn sample_kv(&mut self, t: f64, device_tokens: u64, per_agent: Vec<(AgentId, u64)>) {
         self.kv_samples.push(KvSample { t, device_tokens, per_agent });
     }
 
     // ---- derived quantities ---------------------------------------------
 
+    /// Agents completed so far.
     pub fn completed_agents(&self) -> usize {
         self.complete.len()
     }
 
+    /// Engine iterations executed.
     pub fn iterations(&self) -> u64 {
         self.iterations
     }
 
+    /// Final engine clock (s).
     pub fn engine_time(&self) -> f64 {
         self.engine_time
     }
 
+    /// Swap-outs performed.
     pub fn swap_out_count(&self) -> u64 {
         self.swap_outs
     }
 
+    /// Arrival time of an agent.
     pub fn agent_arrival_time(&self, agent: AgentId) -> Option<f64> {
         self.arrival.get(&agent).copied()
     }
 
+    /// Completion time of an agent.
     pub fn agent_complete_time(&self, agent: AgentId) -> Option<f64> {
         self.complete.get(&agent).copied()
     }
 
+    /// Admission time of a task.
     pub fn task_admit_time(&self, task: TaskId) -> Option<f64> {
         self.task_admit.get(&task).copied()
     }
 
+    /// Completion time of a task.
     pub fn task_complete_time(&self, task: TaskId) -> Option<f64> {
         self.task_complete.get(&task).copied()
     }
@@ -133,8 +154,38 @@ impl RunMetrics {
 
     /// P90 JCT (s).
     pub fn p90_jct(&self) -> f64 {
+        self.percentile_jct(90.0)
+    }
+
+    /// P99 JCT (s) — the cluster scale-out experiment's tail metric.
+    pub fn p99_jct(&self) -> f64 {
+        self.percentile_jct(99.0)
+    }
+
+    /// Arbitrary JCT percentile, `q` in [0, 100].
+    pub fn percentile_jct(&self, q: f64) -> f64 {
         let v: Vec<f64> = self.jcts().into_iter().map(|(_, j)| j).collect();
-        stats::percentile(&v, 90.0)
+        stats::percentile(&v, q)
+    }
+
+    /// Fold another run's metrics into this one. Used by the cluster
+    /// dispatcher to merge per-replica metrics into cluster totals; agent
+    /// and task ids must be disjoint (each agent runs on exactly one
+    /// replica). Engine time becomes the max (cluster makespan); counters
+    /// add; scheduling-latency statistics combine exactly.
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.arrival.extend(&other.arrival);
+        self.complete.extend(&other.complete);
+        self.task_admit.extend(&other.task_admit);
+        self.task_complete.extend(&other.task_complete);
+        self.iterations += other.iterations;
+        self.total_prefill_seqs += other.total_prefill_seqs;
+        self.total_decode_seqs += other.total_decode_seqs;
+        self.engine_time = self.engine_time.max(other.engine_time);
+        self.swap_outs += other.swap_outs;
+        self.sched_latency.merge(&other.sched_latency);
+        self.kv_samples.extend(other.kv_samples.iter().cloned());
+        self.kv_samples.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
     }
 
     /// Mean scheduling-decision latency in milliseconds (Fig. 12).
@@ -142,10 +193,12 @@ impl RunMetrics {
         self.sched_latency.mean() * 1e3
     }
 
+    /// Worst-case scheduling decision latency (ms).
     pub fn sched_latency_max_ms(&self) -> f64 {
         self.sched_latency.max() * 1e3
     }
 
+    /// Number of scheduling decisions measured.
     pub fn sched_decisions(&self) -> u64 {
         self.sched_latency.count()
     }
@@ -166,11 +219,15 @@ pub fn fair_ratios(run: &RunMetrics, baseline: &RunMetrics) -> Vec<(AgentId, f64
 /// Summary row for a fair-ratio distribution: fraction of agents with
 /// ratio ≤ 1 (not delayed) and the worst-case delay in percent.
 pub struct FairnessSummary {
+    /// Fraction of agents with ratio ≤ 1.
     pub frac_not_delayed: f64,
+    /// Worst delay over the baseline (%).
     pub worst_delay_pct: f64,
+    /// Mean delay among delayed agents (%).
     pub avg_delay_pct_of_delayed: f64,
 }
 
+/// Summarize a fair-ratio distribution (Fig. 8 table).
 pub fn fairness_summary(ratios: &[(AgentId, f64)]) -> FairnessSummary {
     if ratios.is_empty() {
         return FairnessSummary { frac_not_delayed: 1.0, worst_delay_pct: 0.0, avg_delay_pct_of_delayed: 0.0 };
@@ -247,6 +304,36 @@ mod tests {
         assert!((s.frac_not_delayed - 2.0 / 3.0).abs() < 1e-12);
         assert!((s.worst_delay_pct - 26.0).abs() < 1e-9);
         assert!((s.avg_delay_pct_of_delayed - 26.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines_disjoint_runs() {
+        let mut a = RunMetrics::new();
+        a.on_agent_arrival(0, 0.0);
+        a.on_agent_complete(0, 4.0);
+        a.on_task_admitted(tid(0, 0), 1.0);
+        a.on_task_complete(tid(0, 0), 4.0);
+        a.on_iteration(4.0, 4.0, 1, 0);
+        a.record_sched_decision(Duration::from_micros(100));
+
+        let mut b = RunMetrics::new();
+        b.on_agent_arrival(1, 0.0);
+        b.on_agent_complete(1, 10.0);
+        b.on_iteration(10.0, 10.0, 0, 2);
+        b.on_swap_out(tid(1, 0), 5.0);
+        b.record_sched_decision(Duration::from_micros(300));
+
+        a.merge(&b);
+        assert_eq!(a.completed_agents(), 2);
+        assert_eq!(a.jct(0), Some(4.0));
+        assert_eq!(a.jct(1), Some(10.0));
+        assert_eq!(a.iterations(), 2);
+        assert_eq!(a.swap_out_count(), 1);
+        assert_eq!(a.engine_time(), 10.0); // max, not sum (cluster makespan)
+        assert_eq!(a.sched_decisions(), 2);
+        assert!((a.sched_latency_ms() - 0.2).abs() < 1e-9);
+        assert!((a.avg_jct() - 7.0).abs() < 1e-12);
+        assert!((a.p99_jct() - a.percentile_jct(99.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -53,10 +53,15 @@ impl Layer {
 /// Training hyperparameters.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// SGD epochs.
     pub epochs: usize,
+    /// Learning rate.
     pub lr: f64,
+    /// L2 regularization weight.
     pub l2: f64,
+    /// Mini-batch size.
     pub batch: usize,
+    /// Shuffle seed.
     pub seed: u64,
 }
 
@@ -69,6 +74,7 @@ pub struct Mlp {
 const MOMENTUM: f32 = 0.9;
 
 impl Mlp {
+    /// Randomly-initialized MLP; `sizes = [in, .., out]`.
     pub fn new(sizes: &[usize], seed: u64) -> Self {
         assert!(sizes.len() >= 2);
         let mut rng = Rng::with_stream(seed, 0x31337);
@@ -76,6 +82,7 @@ impl Mlp {
         Mlp { layers }
     }
 
+    /// Total trainable parameter count.
     pub fn n_params(&self) -> usize {
         self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
     }

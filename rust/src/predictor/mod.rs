@@ -24,21 +24,26 @@ pub trait Predictor: Send {
 }
 
 /// Per-class predictor bundle (the Justitia design: "we respectively
-/// maintain a prediction model for each agent [class]").
+/// maintain a prediction model for each agent \[class\]").
 pub struct PerClassPredictor {
+    /// One trained pipeline per agent class.
     pub models: HashMap<AgentClass, ClassModel>,
 }
 
 /// One class's pipeline: fitted TF-IDF + trained MLP (+ target scaling).
 pub struct ClassModel {
+    /// Fitted per-class TF-IDF vectorizer.
     pub tfidf: tfidf::TfIdf,
+    /// Trained regressor.
     pub mlp: mlp::Mlp,
     /// Targets are trained in log1p space and de-normalized on predict.
     pub target_mean: f64,
+    /// Std of the log1p targets (de-normalization).
     pub target_std: f64,
 }
 
 impl ClassModel {
+    /// Predict one agent's total cost from its input text.
     pub fn predict(&self, input_text: &str) -> f64 {
         let x = self.tfidf.transform(input_text);
         let y = self.mlp.forward(&x)[0] as f64;
@@ -59,6 +64,7 @@ impl Predictor for PerClassPredictor {
 /// Training report (Table 1 columns).
 #[derive(Debug, Clone)]
 pub struct TrainReport {
+    /// Wall-clock training time (s).
     pub train_secs: f64,
     /// Mean relative error |ŷ−y|/y on held-out samples.
     pub rel_error: f64,

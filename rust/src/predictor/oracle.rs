@@ -17,6 +17,7 @@ pub struct NoisyOracle {
 }
 
 impl NoisyOracle {
+    /// Oracle with noise scale `lambda` (1.0 = exact ground truth).
     pub fn new(model: CostModel, lambda: f64, seed: u64) -> Self {
         assert!(lambda >= 1.0, "lambda must be >= 1");
         NoisyOracle { model, lambda, rng: Rng::with_stream(seed, 0x04ac1e) }

@@ -25,9 +25,13 @@ use crate::workload::AgentClass;
 /// of the paper's 452% relative error. (Justitia's per-class models don't
 /// face this: within a class the scale is homogeneous.)
 pub struct SharedModelPredictor {
+    /// Shared TF-IDF vectorizer (all classes).
     pub tfidf: tfidf::TfIdf,
+    /// Shared regressor.
     pub mlp: mlp::Mlp,
+    /// Mean of the raw-cost targets.
     pub target_mean: f64,
+    /// Std of the raw-cost targets.
     pub target_std: f64,
 }
 

@@ -18,11 +18,13 @@ pub struct TfIdf {
 }
 
 impl TfIdf {
+    /// Vectorizer with `dim` hashed features.
     pub fn new(dim: usize) -> Self {
         assert!(dim > 0);
         TfIdf { dim, idf: vec![1.0; dim], fitted: false }
     }
 
+    /// Number of hashed features.
     pub fn dim(&self) -> usize {
         self.dim
     }
@@ -93,6 +95,7 @@ impl TfIdf {
         self.dim + 2
     }
 
+    /// Whether `fit` has been called.
     pub fn is_fitted(&self) -> bool {
         self.fitted
     }

@@ -30,6 +30,8 @@ struct SwapStash {
     tokens: u32,
 }
 
+/// The real-model execution backend: drives [`PjrtModel`] prefill/decode
+/// calls from the engine's iteration batches.
 pub struct PjrtBackend {
     model: PjrtModel,
     seqs: HashMap<TaskId, SeqGen>,
@@ -39,6 +41,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Wrap a loaded model.
     pub fn new(model: PjrtModel) -> Self {
         PjrtBackend {
             model,
@@ -49,10 +52,12 @@ impl PjrtBackend {
         }
     }
 
+    /// The underlying model.
     pub fn model(&self) -> &PjrtModel {
         &self.model
     }
 
+    /// Iterations executed so far.
     pub fn iterations(&self) -> u64 {
         self.iterations
     }

@@ -6,7 +6,7 @@
 //! `weights.jtt`, and records shapes in `model_config.json`. This module:
 //!
 //! * parses the manifest ([`ModelManifest`]),
-//! * loads weights as [`xla::Literal`]s in sorted-name order (the shared
+//! * loads weights as `xla::Literal`s in sorted-name order (the shared
 //!   parameter convention),
 //! * compiles each HLO text via `PjRtClient::cpu()` once,
 //! * exposes [`PjrtModel`] (prefill / decode calls) and [`PjrtBackend`]
@@ -15,12 +15,18 @@
 //!
 //! Python never executes at serving time — the binary is self-contained
 //! once `make artifacts` has produced the files.
+//!
+//! The xla-rs bindings need a local XLA toolchain, so the real model is
+//! gated behind the `pjrt` cargo feature. Without it, [`PjrtModel::load`]
+//! returns an explanatory error and the rest of the crate (simulator,
+//! schedulers, experiments, HTTP parsing) is unaffected.
 
 pub mod backend;
 
 pub use backend::PjrtBackend;
 
 use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
 use crate::util::tensor_file::{self, DType};
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -28,21 +34,34 @@ use std::path::{Path, PathBuf};
 /// Parsed `model_config.json`.
 #[derive(Debug, Clone)]
 pub struct ModelManifest {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// KV pages in the pool (excluding the trash page).
     pub n_pages: usize,
+    /// Tokens per KV page.
     pub page_size: usize,
+    /// Longest block table a sequence may hold.
     pub max_pages_per_seq: usize,
+    /// Longest prompt the prefill executable accepts.
     pub max_prefill: usize,
+    /// Weight tensor names in sorted (parameter) order.
     pub weight_names: Vec<String>,
+    /// Compiled decode batch sizes.
     pub decode_batches: Vec<usize>,
+    /// Artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
 impl ModelManifest {
+    /// Parse `model_config.json` from `dir`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("model_config.json");
         let text = std::fs::read_to_string(&path)
@@ -85,8 +104,19 @@ impl ModelManifest {
         self.n_layers * (self.n_pages + 1) * self.page_size * self.n_heads * self.d_head
     }
 
+    /// Pool dims `[L, P+1, page, H, D]`.
     pub fn pool_dims(&self) -> [usize; 5] {
         [self.n_layers, self.n_pages + 1, self.page_size, self.n_heads, self.d_head]
+    }
+
+    /// Elements in one (layer, page) slab of a pool.
+    pub fn page_elems(&self) -> usize {
+        self.page_size * self.n_heads * self.d_head
+    }
+
+    /// Flat offset of (layer, page) in a pool.
+    pub fn page_offset(&self, layer: usize, page: u32) -> usize {
+        (layer * (self.n_pages + 1) + page as usize) * self.page_elems()
     }
 
     /// The trash-page index (padding writes land there).
@@ -96,7 +126,9 @@ impl ModelManifest {
 }
 
 /// A loaded-and-compiled model: weights + executables + host-side pools.
+#[cfg(feature = "pjrt")]
 pub struct PjrtModel {
+    /// Parsed model shapes and artifact paths.
     pub manifest: ModelManifest,
     client: xla::PjRtClient,
     prefill_exe: xla::PjRtLoadedExecutable,
@@ -110,9 +142,12 @@ pub struct PjrtModel {
     /// Host-resident paged pools (the CPU PJRT "device" memory is host
     /// memory; the pools round-trip through each execution).
     pub k_pool: Vec<f32>,
+    /// Host-resident paged V pool (the CPU plugin's device memory is host
+    /// memory; pools round-trip through each execution).
     pub v_pool: Vec<f32>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtModel {
     /// Load everything from an artifacts directory.
     pub fn load(dir: &Path) -> Result<Self> {
@@ -159,6 +194,7 @@ impl PjrtModel {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -172,6 +208,7 @@ impl PjrtModel {
             .with_context(|| format!("no decode variant fits batch {n}"))
     }
 
+    /// Largest compiled decode batch.
     pub fn max_decode_batch(&self) -> usize {
         self.decode_exes.last().map(|(b, _)| *b).unwrap_or(1)
     }
@@ -264,16 +301,16 @@ impl PjrtModel {
 
     /// Elements in one (layer, page) slab of a pool.
     pub fn page_elems(&self) -> usize {
-        self.manifest.page_size * self.manifest.n_heads * self.manifest.d_head
+        self.manifest.page_elems()
     }
 
     /// Flat offset of (layer, page) in a pool.
     pub fn page_offset(&self, layer: usize, page: u32) -> usize {
-        let m = &self.manifest;
-        (layer * (m.n_pages + 1) + page as usize) * self.page_elems()
+        self.manifest.page_offset(layer, page)
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn argmax(xs: &[f32]) -> u32 {
     let mut best = 0usize;
     for (i, &x) in xs.iter().enumerate() {
@@ -284,11 +321,79 @@ fn argmax(xs: &[f32]) -> u32 {
     best as u32
 }
 
+/// Stub model used when the crate is built WITHOUT the `pjrt` feature: the
+/// API surface of the real [`PjrtModel`] with `load` (and every execution
+/// entry point) returning an explanatory error. Keeps the server, examples
+/// and integration tests compiling on images without an XLA toolchain; the
+/// artifact-gated tests skip themselves at runtime.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtModel {
+    /// Parsed `model_config.json` shapes.
+    pub manifest: ModelManifest,
+    /// Host-resident paged K pool (unused in the stub).
+    pub k_pool: Vec<f32>,
+    /// Host-resident paged V pool (unused in the stub).
+    pub v_pool: Vec<f32>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtModel {
+    /// Always fails: the binary was built without PJRT support.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!(
+            "this binary was built without the `pjrt` feature; \
+             rebuild with `cargo build --features pjrt` (requires the xla-rs \
+             toolchain) to serve the real model, or use the simulator paths \
+             (`justitia run` / `justitia cluster` / `justitia experiment`)"
+        )
+    }
+
+    /// Stub platform label.
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Smallest compiled decode batch >= n (from the manifest).
+    pub fn decode_batch_for(&self, n: usize) -> Result<usize> {
+        self.manifest
+            .decode_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .with_context(|| format!("no decode variant fits batch {n}"))
+    }
+
+    /// Largest decode batch the manifest declares.
+    pub fn max_decode_batch(&self) -> usize {
+        self.manifest.decode_batches.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Always fails in the stub.
+    pub fn prefill(&mut self, _tokens: &[u32], _block_table: &[u32]) -> Result<u32> {
+        bail!("pjrt feature disabled")
+    }
+
+    /// Always fails in the stub.
+    pub fn decode(&mut self, _seqs: &[(u32, u32, Vec<u32>)]) -> Result<Vec<u32>> {
+        bail!("pjrt feature disabled")
+    }
+
+    /// Elements in one (layer, page) slab of a pool.
+    pub fn page_elems(&self) -> usize {
+        self.manifest.page_elems()
+    }
+
+    /// Flat offset of (layer, page) in a pool.
+    pub fn page_offset(&self, layer: usize, page: u32) -> usize {
+        self.manifest.page_offset(layer, page)
+    }
+}
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
@@ -299,5 +404,12 @@ mod tests {
     #[test]
     fn manifest_missing_dir_errors() {
         assert!(ModelManifest::load(Path::new("/nonexistent-artifacts")).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_explains_missing_feature() {
+        let err = PjrtModel::load(Path::new("/nonexistent-artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

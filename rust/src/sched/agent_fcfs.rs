@@ -8,6 +8,7 @@ use crate::workload::AgentId;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 
+/// Parrot-style agent-level FCFS scheduler state.
 pub struct AgentFcfs {
     arrivals: HashMap<AgentId, f64>,
     waiting: AgentQueues,
@@ -16,6 +17,7 @@ pub struct AgentFcfs {
 }
 
 impl AgentFcfs {
+    /// Empty scheduler.
     pub fn new() -> Self {
         AgentFcfs {
             arrivals: HashMap::new(),

@@ -7,6 +7,7 @@ use crate::workload::AgentId;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
+/// Inference-level FCFS scheduler state.
 pub struct Fcfs {
     /// Min-heap on submission sequence number.
     heap: BinaryHeap<Reverse<(u64, TaskKey)>>,
@@ -21,6 +22,7 @@ fn key(t: &TaskInfo) -> TaskKey {
 }
 
 impl Fcfs {
+    /// Empty scheduler.
     pub fn new() -> Self {
         Fcfs { heap: BinaryHeap::new(), tasks: HashMap::new(), arrivals: HashMap::new() }
     }

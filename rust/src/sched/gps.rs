@@ -19,6 +19,7 @@ pub struct GpsResult {
 }
 
 impl GpsResult {
+    /// Real-time GPS completion of an agent.
     pub fn finish_of(&self, agent: AgentId) -> f64 {
         self.finish[&agent]
     }

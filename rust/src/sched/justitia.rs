@@ -30,6 +30,8 @@ pub struct Justitia {
 }
 
 impl Justitia {
+    /// Scheduler over capacity M = `capacity_tokens` with `rate_scale`
+    /// iterations per second.
     pub fn new(capacity_tokens: u64, rate_scale: f64) -> Self {
         Justitia {
             vclock: VirtualClock::new(capacity_tokens, rate_scale),
@@ -131,6 +133,13 @@ impl Scheduler for Justitia {
         // one GPS would finish last.
         self.tags.get(&agent).copied().unwrap_or(f64::MAX)
     }
+
+    fn gps_finish_estimate(&mut self, cost: f64, now: f64) -> Option<f64> {
+        // Probe the live virtual clock with a sentinel id (AgentId::MAX is
+        // never assigned by Suite re-indexing); the clone-based simulation
+        // leaves the clock untouched.
+        Some(self.vclock.hypothetical_gps_finish(AgentId::MAX, cost, now))
+    }
 }
 
 #[cfg(test)]
@@ -217,6 +226,18 @@ mod tests {
         s.on_agent_arrival(&info(1, 10.0, 0.0), 0.0);
         s.on_agent_arrival(&info(2, 999.0, 0.0), 0.0);
         assert!(s.preemption_rank(2, 0.0) > s.preemption_rank(1, 0.0));
+    }
+
+    #[test]
+    fn gps_estimate_reflects_load() {
+        let mut idle = Justitia::new(10, 1.0);
+        let mut busy = Justitia::new(10, 1.0);
+        busy.on_agent_arrival(&info(1, 500.0, 0.0), 0.0);
+        let e_idle = idle.gps_finish_estimate(100.0, 0.0).unwrap();
+        let e_busy = busy.gps_finish_estimate(100.0, 0.0).unwrap();
+        assert!(e_idle < e_busy, "{e_idle} vs {e_busy}");
+        // The probe must not perturb real tags.
+        assert_eq!(busy.tag(1), Some(500.0));
     }
 
     #[test]

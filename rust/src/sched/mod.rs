@@ -23,15 +23,20 @@ use crate::workload::{AgentId, TaskId};
 /// (ground truth in oracle mode, MLP output in predictor mode).
 #[derive(Debug, Clone, Copy)]
 pub struct AgentInfo {
+    /// Agent id.
     pub id: AgentId,
+    /// Arrival time (s).
     pub arrival: f64,
+    /// Predicted total service cost Ĉ_j.
     pub cost: f64,
 }
 
 /// A waiting inference task, as seen by the scheduler.
 #[derive(Debug, Clone, Copy)]
 pub struct TaskInfo {
+    /// Task identity.
     pub id: TaskId,
+    /// Prompt length p.
     pub prompt_tokens: u32,
     /// Predicted decode length (for inference-level SJF).
     pub predicted_decode: f64,
@@ -71,6 +76,16 @@ pub trait Scheduler: Send {
     /// first. Default mirrors admission priority (last-to-be-chosen is
     /// first-to-be-preempted).
     fn preemption_rank(&self, agent: AgentId, now: f64) -> f64;
+
+    /// Estimate the real-time GPS finish a hypothetical agent with predicted
+    /// cost `cost` arriving at `now` would achieve on this scheduler's
+    /// server — the virtual-time finish-tag estimation the cluster
+    /// dispatcher's `cluster-vtime` placement compares across replicas.
+    /// `None` for policies without a virtual clock (the dispatcher then
+    /// falls back to its own mirror clocks).
+    fn gps_finish_estimate(&mut self, _cost: f64, _now: f64) -> Option<f64> {
+        None
+    }
 }
 
 /// Construct a scheduler for a policy.
@@ -124,23 +139,28 @@ pub struct AgentQueues {
 }
 
 impl AgentQueues {
+    /// Empty queue set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append a task to its agent's FIFO.
     pub fn push(&mut self, task: TaskInfo) {
         self.queues.entry(task.id.agent).or_default().push_back(task);
         self.len += 1;
     }
 
+    /// Total waiting tasks.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether no tasks wait.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Whether `agent` has waiting tasks.
     pub fn has_agent(&self, agent: AgentId) -> bool {
         self.queues.get(&agent).map(|q| !q.is_empty()).unwrap_or(false)
     }

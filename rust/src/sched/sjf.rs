@@ -8,6 +8,7 @@ use crate::workload::AgentId;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
+/// Inference-level SJF scheduler state.
 pub struct Sjf {
     /// Min-heap on (predicted duration, submission seq).
     heap: BinaryHeap<Reverse<(OrdF64, u64, TaskKey)>>,
@@ -22,6 +23,7 @@ fn key(t: &TaskInfo) -> TaskKey {
 }
 
 impl Sjf {
+    /// Empty scheduler.
     pub fn new() -> Self {
         Sjf { heap: BinaryHeap::new(), tasks: HashMap::new(), agent_pred: HashMap::new() }
     }

@@ -8,12 +8,14 @@ use crate::sched::{AgentInfo, AgentQueues, Scheduler, TaskInfo};
 use crate::workload::AgentId;
 use std::collections::HashMap;
 
+/// Agent-level SRJF scheduler state.
 pub struct Srjf {
     remaining: HashMap<AgentId, f64>,
     waiting: AgentQueues,
 }
 
 impl Srjf {
+    /// Empty scheduler.
     pub fn new() -> Self {
         Srjf { remaining: HashMap::new(), waiting: AgentQueues::new() }
     }

@@ -13,8 +13,10 @@ use std::collections::{HashMap, HashSet};
 
 /// VTC weights (Sheng et al.): input tokens weight 1, output tokens weight 2.
 pub const W_INPUT: f64 = 1.0;
+/// VTC output-token weight w_d.
 pub const W_OUTPUT: f64 = 2.0;
 
+/// VTC scheduler state (per-agent service counters).
 pub struct Vtc {
     counters: HashMap<AgentId, f64>,
     active: HashSet<AgentId>,
@@ -24,6 +26,7 @@ pub struct Vtc {
 }
 
 impl Vtc {
+    /// Empty scheduler using `cost_model` for service accounting.
     pub fn new(cost_model: CostModel) -> Self {
         Vtc {
             counters: HashMap::new(),

@@ -122,6 +122,23 @@ impl VirtualClock {
         self.gps_finish.get(&agent).copied()
     }
 
+    /// Real-time GPS finish a *hypothetical* agent with service cost `cost`
+    /// arriving at `now` would achieve, leaving this clock untouched (the
+    /// arrival is simulated on a clone). This is the finish-tag estimate the
+    /// cluster dispatcher's placement policies compare across replicas
+    /// (`crate::cluster::placement`): the replica minimizing it is the one
+    /// an N×M-capacity GPS server would have the agent finish on first.
+    ///
+    /// `agent` is only a probe label; any id may be passed (a stale GPS
+    /// record for that id on the clone is discarded first).
+    pub fn hypothetical_gps_finish(&self, agent: AgentId, cost: f64, now: f64) -> f64 {
+        let mut sim = self.clone();
+        sim.gps_finish.remove(&agent);
+        sim.on_arrival(agent, cost, now.max(sim.last_t));
+        sim.finish_all();
+        sim.gps_finish(agent).expect("probe agent drained")
+    }
+
     /// Drain the active set: advance until every registered agent has a GPS
     /// finish time, and return the final real time.
     pub fn finish_all(&mut self) -> f64 {
@@ -229,6 +246,29 @@ mod tests {
         };
         assert_eq!(order(&a), order(&b));
         assert!(b.gps_finish(3).unwrap() < a.gps_finish(3).unwrap());
+    }
+
+    #[test]
+    fn hypothetical_finish_is_side_effect_free() {
+        let mut vc = VirtualClock::new(10, 1.0);
+        vc.on_arrival(1, 100.0, 0.0);
+        // Probe: a 50-cost agent arriving now would share 5/s → finish t=10.
+        let est = vc.hypothetical_gps_finish(99, 50.0, 0.0);
+        assert!((est - 10.0).abs() < 1e-9);
+        // The probe left no trace: agent 1 still finishes alone at t=10.
+        vc.finish_all();
+        assert!((vc.gps_finish(1).unwrap() - 10.0).abs() < 1e-9);
+        assert_eq!(vc.gps_finish(99), None);
+    }
+
+    #[test]
+    fn hypothetical_finish_sees_existing_load() {
+        let empty = VirtualClock::new(10, 1.0);
+        let mut busy = VirtualClock::new(10, 1.0);
+        busy.on_arrival(1, 500.0, 0.0);
+        let on_empty = empty.hypothetical_gps_finish(9, 100.0, 0.0);
+        let on_busy = busy.hypothetical_gps_finish(9, 100.0, 0.0);
+        assert!(on_empty < on_busy, "{on_empty} vs {on_busy}");
     }
 
     #[test]

@@ -9,10 +9,13 @@
 //!   `GET  /healthz`  — liveness.
 //!
 //! Architecture: acceptor threads parse requests and push submissions over a
-//! channel; a single engine thread owns the `Engine<PjrtBackend>` and steps
-//! it whenever work exists (Python never on this path — the model is the
-//! AOT-compiled PJRT executable).
+//! channel; a single engine thread owns a [`ClusterDispatcher`] over one or
+//! more `Engine<PjrtBackend>` replicas and steps it whenever work exists
+//! (Python never on this path — the model is the AOT-compiled PJRT
+//! executable). With `--replicas 1` (the default) the dispatcher degenerates
+//! to the single-engine path.
 
+use crate::cluster::{ClusterDispatcher, Placement};
 use crate::config::{BackendProfile, Config, Policy};
 use crate::cost::CostModel;
 use crate::engine::Engine;
@@ -30,8 +33,11 @@ use std::sync::{Arc, Mutex};
 /// A parsed HTTP request.
 #[derive(Debug)]
 pub struct Request {
+    /// HTTP method.
     pub method: String,
+    /// Request path.
     pub path: String,
+    /// Raw request body.
     pub body: Vec<u8>,
 }
 
@@ -138,68 +144,92 @@ pub fn parse_agent_submission(
     }
 }
 
-/// Run the HTTP server (blocks forever).
-pub fn serve(artifacts: &std::path::Path, port: u16, policy: Policy) -> Result<()> {
+/// Run the HTTP server (blocks forever). `replicas` PJRT engines are stood
+/// up behind a [`ClusterDispatcher`] using `placement`; with one replica the
+/// dispatcher is a transparent pass-through.
+pub fn serve(
+    artifacts: &std::path::Path,
+    port: u16,
+    policy: Policy,
+    replicas: usize,
+    placement: Placement,
+) -> Result<()> {
     let shared = Arc::new(Shared { agents: Mutex::new(BTreeMap::new()), next_id: AtomicU32::new(0) });
     let (tx, rx) = mpsc::channel::<(AgentSpec, f64)>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
 
-    // Engine thread owns the PJRT model outright — the xla crate's handles
-    // are not Send, so the model is loaded *inside* the thread.
+    // Engine thread owns the PJRT models outright — the xla crate's handles
+    // are not Send, so every replica's model is loaded *inside* the thread.
     {
         let shared = Arc::clone(&shared);
         let artifacts = artifacts.to_path_buf();
         std::thread::Builder::new().name("justitia-engine".into()).spawn(move || {
-            let model = match PjrtModel::load(&artifacts) {
-                Ok(m) => {
-                    let _ = ready_tx.send(Ok(format!(
-                        "loaded model from {} (platform {}, {} pages × {} tokens)",
+            let n = replicas.max(1);
+            let mut engines = Vec::with_capacity(n);
+            let mut kv_tokens = 0u64;
+            let mut ready_msg = String::new();
+            for i in 0..n {
+                // One model (and one paged pool) per replica.
+                let model = match PjrtModel::load(&artifacts) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        // Readiness is reported only after EVERY replica
+                        // loads, so a failure on any replica (e.g. OOM on a
+                        // later weight copy) reaches the caller.
+                        let _ = ready_tx
+                            .send(Err(e.context(format!("loading replica {i} of {n}"))));
+                        return;
+                    }
+                };
+                let m = &model.manifest;
+                if i == 0 {
+                    kv_tokens = (m.n_pages * m.page_size) as u64;
+                    ready_msg = format!(
+                        "loaded model from {} (platform {}, {} pages × {} tokens, {} replica{})",
                         artifacts.display(),
-                        m.platform(),
-                        m.manifest.n_pages,
-                        m.manifest.page_size
-                    )));
-                    m
+                        model.platform(),
+                        m.n_pages,
+                        m.page_size,
+                        n,
+                        if n == 1 { "" } else { "s" }
+                    );
                 }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let m = &model.manifest;
-            let mut cfg2 = Config::default();
-            cfg2.backend = BackendProfile {
-                name: "tiny-cpu".into(),
-                kv_tokens: (m.n_pages * m.page_size) as u64,
-                page_size: m.page_size as u32,
-                alpha: 0.0,
-                beta_prefill: 0.0,
-                beta_decode: 0.0,
-                swap_cost_per_token: 0.0,
-            };
-            cfg2.max_batch = model.max_decode_batch();
-            let sched = crate::sched::build(policy, cfg2.backend.kv_tokens, 1.0);
-            let mut engine = Engine::new(&cfg2, sched, PjrtBackend::new(model));
+                let mut cfg2 = Config::default();
+                cfg2.backend = BackendProfile {
+                    name: "tiny-cpu".into(),
+                    kv_tokens: (m.n_pages * m.page_size) as u64,
+                    page_size: m.page_size as u32,
+                    alpha: 0.0,
+                    beta_prefill: 0.0,
+                    beta_decode: 0.0,
+                    swap_cost_per_token: 0.0,
+                };
+                cfg2.max_batch = model.max_decode_batch();
+                let sched = crate::sched::build(policy, cfg2.backend.kv_tokens, 1.0);
+                engines.push(Engine::new(&cfg2, sched, PjrtBackend::new(model)));
+            }
+            let _ = ready_tx.send(Ok(ready_msg));
+            let mut cluster = ClusterDispatcher::new(engines, placement, kv_tokens, 1.0);
             loop {
                 // Drain pending submissions.
                 while let Ok((spec, cost)) = rx.try_recv() {
-                    engine.submit(spec, cost);
+                    cluster.submit(spec, cost);
                 }
-                if engine.has_work() {
-                    engine.step();
+                if cluster.has_work() {
+                    cluster.step();
                     // Record completions.
                     let mut agents = shared.agents.lock().unwrap();
                     for (id, entry) in agents.iter_mut() {
-                        if entry.2.is_none() {
-                            if let Some(_done) = engine.metrics.agent_complete_time(*id) {
-                                entry.2 = Some(entry.1.elapsed().as_secs_f64());
-                            }
+                        if entry.2.is_none() && cluster.agent_complete_time(*id).is_some() {
+                            entry.2 = Some(entry.1.elapsed().as_secs_f64());
                         }
                     }
                 } else {
                     // Idle: block on the next submission.
                     match rx.recv() {
-                        Ok((spec, cost)) => engine.submit(spec, cost),
+                        Ok((spec, cost)) => {
+                            cluster.submit(spec, cost);
+                        }
                         Err(_) => break,
                     }
                 }
@@ -209,7 +239,11 @@ pub fn serve(artifacts: &std::path::Path, port: u16, policy: Policy) -> Result<(
     println!("{}", ready_rx.recv().context("engine thread died")??);
 
     let listener = TcpListener::bind(("127.0.0.1", port))?;
-    println!("serving on http://127.0.0.1:{port} (policy {})", policy.name());
+    println!(
+        "serving on http://127.0.0.1:{port} (policy {}, placement {})",
+        policy.name(),
+        placement.name()
+    );
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         let shared = Arc::clone(&shared);

@@ -22,15 +22,20 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
 /// (0 = pad, 1 = bos, 2 = eos).
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
+    /// Total id space, including the reserved ids.
     pub vocab_size: u32,
 }
 
+/// Padding token id.
 pub const PAD: u32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS: u32 = 1;
+/// End-of-sequence token id.
 pub const EOS: u32 = 2;
 const RESERVED: u32 = 3;
 
 impl Tokenizer {
+    /// Tokenizer over `vocab_size` ids.
     pub fn new(vocab_size: u32) -> Self {
         assert!(vocab_size > RESERVED + 1);
         Tokenizer { vocab_size }

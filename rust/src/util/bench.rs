@@ -11,16 +11,24 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement summary (times in nanoseconds).
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations.
     pub iters: u64,
+    /// Mean (ns).
     pub mean_ns: f64,
+    /// Median (ns).
     pub p50_ns: f64,
+    /// P90 (ns).
     pub p90_ns: f64,
+    /// Fastest sample (ns).
     pub min_ns: f64,
+    /// Slowest sample (ns).
     pub max_ns: f64,
 }
 
 impl Summary {
+    /// Print the criterion-style one-line summary.
     pub fn report(&self) {
         println!(
             "{:<48} {:>10} iters  mean {:>12}  p50 {:>12}  p90 {:>12}",
@@ -61,6 +69,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Default harness: 200 ms warmup, 2 s timed budget.
     pub fn new() -> Self {
         Bencher {
             warmup: Duration::from_millis(200),
@@ -70,16 +79,19 @@ impl Bencher {
         }
     }
 
+    /// Set the timed budget.
     pub fn with_budget(mut self, budget: Duration) -> Self {
         self.budget = budget;
         self
     }
 
+    /// Set the warmup duration.
     pub fn with_warmup(mut self, warmup: Duration) -> Self {
         self.warmup = warmup;
         self
     }
 
+    /// Cap the iteration count.
     pub fn with_max_iters(mut self, n: u64) -> Self {
         self.max_iters = n;
         self
@@ -146,17 +158,20 @@ pub struct ResultsFile {
 }
 
 impl ResultsFile {
+    /// Create/overwrite `results/<name>`.
     pub fn new(name: &str) -> Self {
         let dir = std::path::Path::new("results");
         let _ = std::fs::create_dir_all(dir);
         ResultsFile { path: dir.join(name), lines: Vec::new() }
     }
 
+    /// Print a line and record it for the file.
     pub fn line(&mut self, s: impl AsRef<str>) {
         println!("{}", s.as_ref());
         self.lines.push(s.as_ref().to_string());
     }
 
+    /// Record a line without printing it.
     pub fn raw(&mut self, s: impl AsRef<str>) {
         self.lines.push(s.as_ref().to_string());
     }

@@ -11,22 +11,32 @@ use std::fmt;
 /// serialized output is deterministic — important for golden-file tests.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as `f64`).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (keys kept sorted).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with its byte position.
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// Human-readable cause.
     pub msg: String,
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -40,6 +50,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// Number value, if `self` is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -47,14 +58,17 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if exactly representable.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|x| if x >= 0.0 && x.fract() == 0.0 { Some(x as u64) } else { None })
     }
 
+    /// Integer value, if exactly representable.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().and_then(|x| if x.fract() == 0.0 { Some(x as i64) } else { None })
     }
 
+    /// String value, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -62,6 +76,7 @@ impl Json {
         }
     }
 
+    /// Bool value, if a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -69,6 +84,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -76,6 +92,7 @@ impl Json {
         }
     }
 
+    /// Key → value map, if an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),

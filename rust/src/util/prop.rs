@@ -9,8 +9,11 @@ use crate::util::rng::Rng;
 /// Configuration for a property run.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Inputs generated per property.
     pub cases: usize,
+    /// Base RNG seed.
     pub seed: u64,
+    /// Shrink-attempt budget on failure.
     pub max_shrink_steps: usize,
 }
 
@@ -74,7 +77,9 @@ where
 
 /// Strategy: u64 in [lo, hi].
 pub struct U64Range {
+    /// Inclusive lower bound.
     pub lo: u64,
+    /// Inclusive upper bound.
     pub hi: u64,
 }
 
@@ -98,7 +103,9 @@ impl Strategy for U64Range {
 
 /// Strategy: f64 in [lo, hi).
 pub struct F64Range {
+    /// Inclusive lower bound.
     pub lo: f64,
+    /// Exclusive upper bound.
     pub hi: f64,
 }
 
@@ -120,8 +127,11 @@ impl Strategy for F64Range {
 
 /// Strategy: vector of `inner` values with length in [min_len, max_len].
 pub struct VecOf<S: Strategy> {
+    /// Element strategy.
     pub inner: S,
+    /// Minimum length.
     pub min_len: usize,
+    /// Maximum length.
     pub max_len: usize,
 }
 
@@ -160,12 +170,16 @@ impl<S: Strategy> Strategy for VecOf<S> {
 /// Strategy combinator: map a base strategy through a function
 /// (no shrinking through the map; shrink candidates are re-mapped).
 pub struct Map<S: Strategy, T, F: Fn(S::Value) -> T> {
+    /// Base strategy.
     pub inner: S,
+    /// Mapping function.
     pub f: F,
+    /// Output-type marker.
     pub _marker: std::marker::PhantomData<T>,
 }
 
 impl<S: Strategy, T: Clone + std::fmt::Debug, F: Fn(S::Value) -> T> Map<S, T, F> {
+    /// Map `inner` through `f`.
     pub fn new(inner: S, f: F) -> Self {
         Map { inner, f, _marker: std::marker::PhantomData }
     }

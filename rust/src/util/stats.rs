@@ -94,7 +94,7 @@ pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
 
 /// Online mean/variance accumulator (Welford). Used on hot paths where we do
 /// not want to buffer every sample (e.g. scheduling-delay tracking, Fig. 12).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Welford {
     n: u64,
     mean: f64,
@@ -103,11 +103,19 @@ pub struct Welford {
     max: f64,
 }
 
+impl Default for Welford {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Add a sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -117,10 +125,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Samples seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Mean (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -129,6 +139,7 @@ impl Welford {
         }
     }
 
+    /// Population variance (0.0 below two samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -137,10 +148,12 @@ impl Welford {
         }
     }
 
+    /// Population standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample (0.0 when empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -149,12 +162,33 @@ impl Welford {
         }
     }
 
+    /// Largest sample (0.0 when empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0
         } else {
             self.max
         }
+    }
+
+    /// Combine another accumulator into this one (Chan et al. parallel
+    /// update) — used to merge per-replica metrics into cluster totals.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let delta = other.mean - self.mean;
+        let n = na + nb;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.mean += delta * nb / n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.n += other.n;
     }
 }
 
@@ -211,6 +245,29 @@ mod tests {
         assert!((cdf_at(&xs, 2.5) - 0.5).abs() < 1e-12);
         assert_eq!(cdf_at(&xs, 0.0), 0.0);
         assert_eq!(cdf_at(&xs, 10.0), 1.0);
+    }
+
+    #[test]
+    fn welford_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..40).map(|i| (i as f64) * 0.7 - 3.0).collect();
+        let mut all = Welford::new();
+        xs.iter().for_each(|&x| all.push(x));
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        xs[..15].iter().for_each(|&x| a.push(x));
+        xs[15..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        // Merging an empty accumulator is a no-op in both directions.
+        let mut e = Welford::new();
+        e.merge(&all);
+        assert!((e.mean() - all.mean()).abs() < 1e-12);
+        all.merge(&Welford::new());
+        assert_eq!(all.count(), 40);
     }
 
     #[test]

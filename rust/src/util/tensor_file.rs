@@ -20,16 +20,24 @@ use std::path::Path;
 /// One named tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Tensor name (manifest key).
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Dimensions.
     pub shape: Vec<usize>,
-    pub data_f32: Vec<f32>, // i32 tensors are bit-preserved through f32 storage? no — kept separately
+    /// f32 payload (empty for i32 tensors).
+    pub data_f32: Vec<f32>,
+    /// i32 payload (empty for f32 tensors).
     pub data_i32: Vec<i32>,
 }
 
+/// Element type of a stored tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -50,18 +58,21 @@ impl DType {
 }
 
 impl Tensor {
+    /// Build an f32 tensor.
     pub fn f32(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Self {
         let t = Tensor { name: name.into(), dtype: DType::F32, shape, data_f32: data, data_i32: Vec::new() };
         debug_assert_eq!(t.numel(), t.data_f32.len());
         t
     }
 
+    /// Build an i32 tensor.
     pub fn i32(name: impl Into<String>, shape: Vec<usize>, data: Vec<i32>) -> Self {
         let t = Tensor { name: name.into(), dtype: DType::I32, shape, data_f32: Vec::new(), data_i32: data };
         debug_assert_eq!(t.numel(), t.data_i32.len());
         t
     }
 
+    /// Element count (product of dims).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }

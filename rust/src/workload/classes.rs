@@ -31,8 +31,11 @@ pub enum AgentClass {
 /// Size bucket for the 72/26/2 sampling mix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SizeBucket {
+    /// JCT < 1 min served alone.
     Small,
+    /// JCT 1–10 min served alone.
     Medium,
+    /// JCT > 10 min served alone.
     Large,
 }
 
@@ -40,14 +43,20 @@ pub enum SizeBucket {
 /// `[min, max]` (Appendix A fits per-stage lengths with skewed Gaussians).
 #[derive(Debug, Clone, Copy)]
 pub struct LenDist {
+    /// Location ξ.
     pub xi: f64,
+    /// Scale ω.
     pub omega: f64,
+    /// Skew α.
     pub alpha: f64,
+    /// Truncation lower bound (tokens).
     pub min: u32,
+    /// Truncation upper bound (tokens).
     pub max: u32,
 }
 
 impl LenDist {
+    /// Const constructor.
     pub const fn new(xi: f64, omega: f64, alpha: f64, min: u32, max: u32) -> Self {
         LenDist { xi, omega, alpha, min, max }
     }
@@ -58,7 +67,9 @@ impl LenDist {
 /// more chunks for map-reduce-style agents).
 #[derive(Debug, Clone, Copy)]
 pub struct FanOut {
+    /// Minimum parallel tasks.
     pub lo: u32,
+    /// Maximum parallel tasks.
     pub hi: u32,
     /// If true, fan-out scales with the agent input-size factor in [0.5, 2].
     pub scales_with_input: bool,
@@ -67,16 +78,22 @@ pub struct FanOut {
 /// One stage template.
 #[derive(Debug, Clone, Copy)]
 pub struct StageTemplate {
+    /// Inference kind label (Appendix-A naming).
     pub kind: &'static str,
+    /// Parallel-task count distribution.
     pub fan_out: FanOut,
+    /// Prompt-length distribution.
     pub prompt: LenDist,
+    /// Decode-length distribution.
     pub decode: LenDist,
 }
 
 /// Full class template.
 #[derive(Debug, Clone)]
 pub struct ClassTemplate {
+    /// The class this template builds.
     pub class: AgentClass,
+    /// Stage templates in execution order.
     pub stages: &'static [StageTemplate],
     /// Vocabulary theme used to synthesize prompt text (predictor features).
     pub theme: &'static str,
@@ -214,6 +231,7 @@ const SC_STAGES: [StageTemplate; 1] = [StageTemplate {
                 }];
 
 impl AgentClass {
+    /// All nine classes, paper order.
     pub const ALL: [AgentClass; 9] = [
         AgentClass::MapReduceSummarization,
         AgentClass::PlanAndExecution,
@@ -226,6 +244,7 @@ impl AgentClass {
         AgentClass::SelfConsistency,
     ];
 
+    /// Short tag (e.g. "DM", "MRS").
     pub fn short_name(&self) -> &'static str {
         match self {
             AgentClass::MapReduceSummarization => "MRS",
@@ -240,10 +259,12 @@ impl AgentClass {
         }
     }
 
+    /// Parse a short tag.
     pub fn by_short_name(s: &str) -> Option<AgentClass> {
         AgentClass::ALL.into_iter().find(|c| c.short_name().eq_ignore_ascii_case(s))
     }
 
+    /// The class's size bucket.
     pub fn size_bucket(&self) -> SizeBucket {
         match self {
             AgentClass::EquationVerification

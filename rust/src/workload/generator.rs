@@ -27,6 +27,7 @@ pub struct Generator {
 }
 
 impl Generator {
+    /// Generator seeded for a reproducible agent stream.
     pub fn new(seed: u64) -> Self {
         Generator { rng: Rng::with_stream(seed, 0x9a9e) }
     }

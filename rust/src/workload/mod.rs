@@ -19,7 +19,9 @@ pub type AgentId = u32;
 /// Identifies one inference task: (agent, per-agent task index).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TaskId {
+    /// Owning agent.
     pub agent: AgentId,
+    /// Task index within the agent.
     pub index: u32,
 }
 
@@ -33,6 +35,7 @@ impl std::fmt::Display for TaskId {
 /// truth the engine executes; the scheduler only sees predictions.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferenceSpec {
+    /// Task identity.
     pub id: TaskId,
     /// Stage index within the agent (tasks of stage s+1 wait on stage s).
     pub stage: u32,
@@ -47,7 +50,9 @@ pub struct InferenceSpec {
 /// One task-parallel LLM agent.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AgentSpec {
+    /// Agent id (suite-unique).
     pub id: AgentId,
+    /// Agent class (template).
     pub class: AgentClass,
     /// Arrival (submission) time in seconds from suite start.
     pub arrival: f64,
@@ -82,10 +87,12 @@ impl AgentSpec {
 /// A full workload suite: agents sorted by arrival time.
 #[derive(Debug, Clone)]
 pub struct Suite {
+    /// Agents sorted by arrival; ids follow arrival order.
     pub agents: Vec<AgentSpec>,
 }
 
 impl Suite {
+    /// Sort by arrival and re-index ids to 0..n.
     pub fn new(mut agents: Vec<AgentSpec>) -> Self {
         agents.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         // Re-index so ids follow arrival order (stable, deterministic).
@@ -101,10 +108,12 @@ impl Suite {
         Suite { agents }
     }
 
+    /// Number of agents.
     pub fn len(&self) -> usize {
         self.agents.len()
     }
 
+    /// Whether the suite has no agents.
     pub fn is_empty(&self) -> bool {
         self.agents.is_empty()
     }

@@ -1,0 +1,135 @@
+//! End-to-end cluster determinism (ISSUE 1 acceptance):
+//!
+//! * with ONE replica, every placement policy reproduces the single-engine
+//!   Justitia run bit for bit (identical JCT vectors on the same seed);
+//! * multi-replica runs are exactly reproducible (same seed → same JCTs and
+//!   same assignments), complete every agent, and leave every replica's KV
+//!   pool clean.
+
+use justitia::cluster::{ClusterDispatcher, Placement};
+use justitia::config::{Config, Policy, WorkloadConfig};
+use justitia::cost::CostModel;
+use justitia::engine::exec::SimBackend;
+use justitia::experiments::{build_sim_cluster, rate_scale, run_policy_oracle};
+use justitia::workload::trace;
+use justitia::workload::Suite;
+
+fn cfg_with(n_agents: usize, density: f64, seed: u64, replicas: usize, p: Placement) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
+    cfg.cluster.replicas = replicas;
+    cfg.cluster.placement = p;
+    cfg
+}
+
+fn run_cluster(cfg: &Config, suite: &Suite) -> ClusterDispatcher<SimBackend> {
+    let model = CostModel::MemoryCentric;
+    let mut cluster = build_sim_cluster(cfg, Policy::Justitia);
+    cluster.run_suite(suite, |a| model.agent_cost(a));
+    cluster
+}
+
+#[test]
+fn one_replica_is_bit_identical_to_single_engine_for_every_placement() {
+    for seed in [42u64, 7, 1234] {
+        let cfg = cfg_with(100, 3.0, seed, 1, Placement::ClusterVtime);
+        let suite = trace::build_suite(&cfg.workload);
+        let single = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+        let want = single.jcts();
+        assert_eq!(want.len(), 100, "seed {seed}: single run incomplete");
+
+        for p in Placement::ALL {
+            let cfg = cfg_with(100, 3.0, seed, 1, p);
+            let cluster = run_cluster(&cfg, &suite);
+            let got = cluster.merged_metrics().jcts();
+            // Bit-identical: exact f64 equality, not approximate.
+            assert_eq!(got, want, "seed {seed}: placement {p:?} diverged with 1 replica");
+            assert_eq!(cluster.assignment_counts(), vec![100]);
+        }
+    }
+}
+
+#[test]
+fn multi_replica_runs_are_reproducible_and_complete() {
+    for p in Placement::ALL {
+        let cfg = cfg_with(150, 3.0, 42, 4, p);
+        let suite = trace::build_suite(&cfg.workload);
+        let a = run_cluster(&cfg, &suite);
+        let b = run_cluster(&cfg, &suite);
+        let (ma, mb) = (a.merged_metrics(), b.merged_metrics());
+        assert_eq!(ma.completed_agents(), 150, "{p:?} dropped agents");
+        assert_eq!(ma.jcts(), mb.jcts(), "{p:?} not reproducible");
+        assert_eq!(a.assignment_counts(), b.assignment_counts());
+        // Every replica drained its pool completely.
+        for r in 0..a.n_replicas() {
+            a.replica(r).kv.check_invariants().unwrap();
+            assert_eq!(a.replica(r).kv.device_tokens(), 0, "{p:?} replica {r} leaked KV");
+        }
+    }
+}
+
+#[test]
+fn scale_out_helps_and_cluster_vtime_beats_round_robin_on_fairness() {
+    let model = CostModel::MemoryCentric;
+    let avg = |replicas: usize, p: Placement| {
+        let cfg = cfg_with(150, 3.0, 42, replicas, p);
+        let suite = trace::build_suite(&cfg.workload);
+        run_cluster(&cfg, &suite).merged_metrics().avg_jct()
+    };
+    let one = avg(1, Placement::ClusterVtime);
+    let four = avg(4, Placement::ClusterVtime);
+    assert!(four < one, "scale-out regressed: 1 replica {one:.1}s vs 4 replicas {four:.1}s");
+
+    // Fairness: worst-over-best slowdown vs the cluster-wide GPS reference.
+    let maxmin = |p: Placement| {
+        let cfg = cfg_with(150, 3.0, 42, 4, p);
+        let suite = trace::build_suite(&cfg.workload);
+        let cluster = run_cluster(&cfg, &suite);
+        let m = cluster.merged_metrics();
+        let gps = justitia::sched::gps::run_suite(
+            &suite,
+            model,
+            cfg.backend.kv_tokens * 4,
+            rate_scale(&cfg),
+        );
+        let slows: Vec<f64> = suite
+            .agents
+            .iter()
+            .map(|a| m.jct(a.id).unwrap() / gps.jct(a.id, a.arrival).max(1e-9))
+            .collect();
+        let max = slows.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let min = slows.iter().cloned().fold(f64::INFINITY, f64::min);
+        max / min
+    };
+    let (vtime, rr) = (maxmin(Placement::ClusterVtime), maxmin(Placement::RoundRobin));
+    assert!(
+        vtime <= rr * 1.10,
+        "cluster-vtime maxmin {vtime:.2} should not be worse than round-robin {rr:.2}"
+    );
+}
+
+#[test]
+fn online_path_agrees_with_replay_on_completions() {
+    // Drive the same agents through the online submit/step path; every agent
+    // must complete and land on exactly one replica.
+    let cfg = cfg_with(30, 3.0, 9, 3, Placement::ClusterVtime);
+    let suite = trace::build_suite(&cfg.workload);
+    let model = CostModel::MemoryCentric;
+    let mut cluster = build_sim_cluster(&cfg, Policy::Justitia);
+    for a in &suite.agents {
+        cluster.submit(a.clone(), model.agent_cost(a));
+    }
+    let mut guard = 0u64;
+    while cluster.has_work() {
+        cluster.step();
+        guard += 1;
+        assert!(guard < 2_000_000, "runaway online drain");
+    }
+    let m = cluster.merged_metrics();
+    assert_eq!(m.completed_agents(), 30);
+    for a in &suite.agents {
+        assert!(cluster.replica_of(a.id).is_some());
+        assert!(cluster.agent_complete_time(a.id).is_some());
+    }
+    assert_eq!(cluster.assignment_counts().iter().sum::<usize>(), 30);
+}

@@ -37,7 +37,13 @@ fn serve_submit_poll_complete() {
     }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     std::thread::spawn(move || {
-        let _ = justitia::server::http::serve(&dir, PORT, justitia::config::Policy::Justitia);
+        let _ = justitia::server::http::serve(
+            &dir,
+            PORT,
+            justitia::config::Policy::Justitia,
+            1,
+            justitia::cluster::Placement::ClusterVtime,
+        );
     });
 
     // Readiness.

@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Kick-tires (artifact-evaluation style): build the release binary, run the
+# fast experiments + the cluster scale-out sweep, and collect everything
+# under out/. Target: a few minutes on a laptop; no network, no GPU, no
+# Python required (simulator paths only — see DESIGN.md §3, substitution T1).
+#
+# Usage: scripts/kick-tires.sh [--agents N] [--seed S]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+ROOT="$PWD"
+AGENTS=300
+SEED=42
+while [ $# -gt 0 ]; do
+  case "$1" in
+    --agents) AGENTS="$2"; shift 2 ;;
+    --seed) SEED="$2"; shift 2 ;;
+    *) echo "unknown flag $1" >&2; exit 2 ;;
+  esac
+done
+
+echo "== Kick Tires: Justitia reproduction =="
+echo "[1/4] cargo build --release"
+(cd rust && cargo build --release)
+BIN="$ROOT/rust/target/release/justitia"
+
+rm -rf out
+mkdir -p out
+# ResultsFile writes under ./results relative to the cwd.
+cd "$ROOT"
+rm -rf results
+mkdir -p results
+
+echo "[2/4] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
+"$BIN" experiment all --agents "$AGENTS" --seed "$SEED"
+
+echo "[3/4] cluster scale-out sweep (1/2/4/8 replicas x 3 placements)"
+"$BIN" cluster --agents "$AGENTS" --seed "$SEED"
+
+echo "[4/4] collecting outputs under out/"
+cp results/*.txt out/
+{
+  echo "kick-tires run: agents=$AGENTS seed=$SEED date=$(date -u +%Y-%m-%dT%H:%M:%SZ)"
+  echo "binary: $BIN"
+  "$BIN" help 2>/dev/null | head -3 || true
+} > out/MANIFEST.txt
+
+echo
+echo "Done. Outputs:"
+ls -1 out/
+echo
+echo "Transcribe the numbers into EXPERIMENTS.md (paper-vs-measured tables)."
