@@ -15,6 +15,10 @@
 //! replica then pampers its agents in local GPS-finish order, so the
 //! cluster-wide service order approximates a single N×M-capacity GPS server
 //! — the same yardstick Theorem B.1 bounds Justitia against on one GPU.
+//! [`Placement::PrefixAffinity`] adds cache locality on top: agents of one
+//! shared-prefix family ([`crate::workload::PrefixGroup`]) are routed to the
+//! replica whose radix tree ([`crate::prefix`]) already holds their prompt
+//! chain, with cluster-vtime seeding families and breaking ties.
 //!
 //! Determinism: placement ties break toward the lowest replica index and
 //! replicas are simulated independently, so a trace replay is exactly
@@ -128,8 +132,12 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
     /// policies without a virtual clock fall back to the dispatcher mirrors.
     pub fn submit(&mut self, spec: AgentSpec, predicted_cost: f64) -> usize {
         let agent = spec.id;
+        let group = spec.prefix_group_id();
         let nows: Vec<f64> = self.replicas.iter().map(|e| e.now()).collect();
-        let live: Vec<Option<f64>> = if self.placer.policy() == Placement::ClusterVtime {
+        // Probing every replica's scheduler is a per-replica scan; skip it
+        // when the placer's decision is already determined (e.g. a
+        // prefix-affinity family that has a home replica).
+        let live: Vec<Option<f64>> = if self.placer.wants_live_estimates(group) {
             self.replicas
                 .iter_mut()
                 .zip(&nows)
@@ -138,7 +146,7 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
         } else {
             vec![None; self.replicas.len()]
         };
-        let r = self.placer.place(agent, predicted_cost, &nows, Some(&live));
+        let r = self.placer.place(agent, predicted_cost, group, &nows, Some(&live));
         self.assignments.insert(agent, r);
         self.replicas[r].submit(spec, predicted_cost);
         r
@@ -187,7 +195,7 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
         for a in &suite.agents {
             let cost = predict(a);
             let nows = vec![a.arrival; n];
-            let r = self.placer.place(a.id, cost, &nows, None);
+            let r = self.placer.place(a.id, cost, a.prefix_group_id(), &nows, None);
             self.assignments.insert(a.id, r);
             costs.insert(a.id, cost);
             subs[r].push(a.clone());
@@ -278,6 +286,26 @@ mod tests {
             assert_eq!(counts1, counts2);
             assert_eq!(counts1.iter().sum::<usize>(), 60);
         }
+    }
+
+    #[test]
+    fn prefix_affinity_coalesces_families() {
+        let mut cfg = Config::default();
+        cfg.workload = WorkloadConfig { n_agents: 24, seed: 9, ..Default::default() }
+            .with_density(3.0)
+            .with_shared_prefix(4, 256);
+        let suite = trace::build_suite(&cfg.workload);
+        let mut c = dispatcher(&cfg, 4, Placement::PrefixAffinity);
+        c.run_suite(&suite, |a| CostModel::MemoryCentric.agent_cost(a));
+        // Every family lands on exactly one replica.
+        let mut homes: HashMap<u64, usize> = HashMap::new();
+        for a in &suite.agents {
+            let g = a.prefix_group_id().unwrap();
+            let r = c.replica_of(a.id).unwrap();
+            assert_eq!(*homes.entry(g).or_insert(r), r, "family {g} split across replicas");
+        }
+        assert!(homes.len() >= 2, "suite should contain several families");
+        assert_eq!(c.merged_metrics().completed_agents(), 24);
     }
 
     #[test]

@@ -20,13 +20,28 @@
 //!   agents in GPS-finish order, minimizing the GPS finish tag across
 //!   replicas keeps selective pampering globally fair — the cluster behaves
 //!   like one big GPS server partitioned on the fly.
+//! * [`Placement::PrefixAffinity`] — route to the replica holding the
+//!   longest cached prompt prefix for the agent's family: the replica that
+//!   previously received an agent of the same
+//!   [`PrefixGroup`](crate::workload::PrefixGroup) has the family's chain in
+//!   its radix tree, so landing there skips the shared prefill entirely.
+//!   Agents without a family — and the *first* agent of each family — fall
+//!   back to the cluster-vtime rule, so prefix locality is bought without
+//!   abandoning the fairness yardstick (cf. Locality-aware Fair Scheduling,
+//!   Cao et al. 2025). The family→home mirror is best-effort by design: it
+//!   is not invalidated when the home replica later evicts the chain (the
+//!   routed agent then simply misses and re-primes the cache there), and it
+//!   retains one entry per family for the placer's lifetime — fine for
+//!   trace replay and bounded serve runs; an eviction-feedback channel
+//!   would be needed before an unbounded multi-tenant deployment.
 //!
-//! All three are deterministic: ties break toward the lowest replica index,
+//! All four are deterministic: ties break toward the lowest replica index,
 //! so a cluster run is exactly reproducible from (suite, seed, placement).
 
 use crate::sched::vtime::VirtualClock;
 use crate::workload::AgentId;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 
 /// Replica-placement policy selector (see module docs for semantics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -39,12 +54,19 @@ pub enum Placement {
     /// the cluster-fair extension of Justitia's virtual-time queuing.
     #[default]
     ClusterVtime,
+    /// Replica holding the longest cached prefix for the agent's family,
+    /// tie-broken (and seeded) by the cluster-vtime rule.
+    PrefixAffinity,
 }
 
 impl Placement {
     /// Every placement policy, in report order.
-    pub const ALL: [Placement; 3] =
-        [Placement::RoundRobin, Placement::LeastLoaded, Placement::ClusterVtime];
+    pub const ALL: [Placement; 4] = [
+        Placement::RoundRobin,
+        Placement::LeastLoaded,
+        Placement::ClusterVtime,
+        Placement::PrefixAffinity,
+    ];
 
     /// Parse a CLI/JSON policy name.
     pub fn by_name(name: &str) -> Result<Self> {
@@ -52,7 +74,11 @@ impl Placement {
             "round-robin" | "rr" => Ok(Placement::RoundRobin),
             "least-loaded" | "ll" => Ok(Placement::LeastLoaded),
             "cluster-vtime" | "vtime" => Ok(Placement::ClusterVtime),
-            other => bail!("unknown placement '{other}' (round-robin|least-loaded|cluster-vtime)"),
+            "prefix-affinity" | "pa" => Ok(Placement::PrefixAffinity),
+            other => bail!(
+                "unknown placement '{other}' \
+                 (round-robin|least-loaded|cluster-vtime|prefix-affinity)"
+            ),
         }
     }
 
@@ -62,6 +88,7 @@ impl Placement {
             Placement::RoundRobin => "round-robin",
             Placement::LeastLoaded => "least-loaded",
             Placement::ClusterVtime => "cluster-vtime",
+            Placement::PrefixAffinity => "prefix-affinity",
         }
     }
 }
@@ -123,6 +150,9 @@ pub(crate) struct Placer {
     policy: Placement,
     rr_next: usize,
     pub(crate) loads: Vec<ReplicaLoad>,
+    /// Prefix-affinity mirror: family id → replica whose radix tree holds
+    /// the family's chain (the replica its first agent was routed to).
+    family_home: HashMap<u64, usize>,
 }
 
 impl Placer {
@@ -131,6 +161,7 @@ impl Placer {
             policy,
             rr_next: 0,
             loads: (0..n).map(|_| ReplicaLoad::new(capacity_tokens, rate_scale)).collect(),
+            family_home: HashMap::new(),
         }
     }
 
@@ -138,19 +169,46 @@ impl Placer {
         self.policy
     }
 
+    /// Whether the next [`place`](Self::place) call for `prefix_group`
+    /// would consult live GPS-finish estimates. False when the decision is
+    /// already determined (single replica, non-vtime policy, or a
+    /// prefix-affinity family that has a home) — lets the dispatcher skip
+    /// probing every replica's scheduler on the hot path.
+    pub(crate) fn wants_live_estimates(&self, prefix_group: Option<u64>) -> bool {
+        if self.loads.len() == 1 {
+            return false;
+        }
+        match self.policy {
+            Placement::ClusterVtime => true,
+            Placement::PrefixAffinity => {
+                prefix_group.and_then(|g| self.family_home.get(&g)).is_none()
+            }
+            _ => false,
+        }
+    }
+
     /// Choose a replica for (`agent`, predicted `cost`) and update the
     /// per-replica bookkeeping. `live_estimates[r]`, when provided, replaces
     /// the mirror's GPS-finish estimate for cluster-vtime (used online where
-    /// the live scheduler's virtual clock is exact).
+    /// the live scheduler's virtual clock is exact). `prefix_group` is the
+    /// agent's shared-prefix family, consulted by prefix-affinity.
     pub(crate) fn place(
         &mut self,
         agent: AgentId,
         cost: f64,
+        prefix_group: Option<u64>,
         nows: &[f64],
         live_estimates: Option<&[Option<f64>]>,
     ) -> usize {
         debug_assert_eq!(nows.len(), self.loads.len());
         let n = self.loads.len();
+        let vtime_choice = |loads: &[ReplicaLoad]| {
+            argmin_f64((0..n).map(|r| {
+                live_estimates
+                    .and_then(|es| es[r])
+                    .unwrap_or_else(|| loads[r].vclock.hypothetical_gps_finish(agent, cost, nows[r]))
+            }))
+        };
         let chosen = match self.policy {
             _ if n == 1 => 0,
             Placement::RoundRobin => {
@@ -159,12 +217,22 @@ impl Placer {
                 r
             }
             Placement::LeastLoaded => argmin_f64((0..n).map(|r| self.loads[r].backlog_at(nows[r]))),
-            Placement::ClusterVtime => argmin_f64((0..n).map(|r| {
-                live_estimates
-                    .and_then(|es| es[r])
-                    .unwrap_or_else(|| self.loads[r].vclock.hypothetical_gps_finish(agent, cost, nows[r]))
-            })),
+            Placement::ClusterVtime => vtime_choice(&self.loads),
+            Placement::PrefixAffinity => {
+                match prefix_group.and_then(|g| self.family_home.get(&g).copied()) {
+                    // The family's chain is cached there — follow it.
+                    Some(home) => home,
+                    // First of its family (or no family): fall back to the
+                    // fairness-preserving cluster-vtime rule.
+                    None => vtime_choice(&self.loads),
+                }
+            }
         };
+        if self.policy == Placement::PrefixAffinity {
+            if let Some(g) = prefix_group {
+                self.family_home.entry(g).or_insert(chosen);
+            }
+        }
         self.loads[chosen].assign(agent, cost, nows[chosen]);
         chosen
     }
@@ -194,6 +262,7 @@ mod tests {
         }
         assert_eq!(Placement::by_name("rr").unwrap(), Placement::RoundRobin);
         assert_eq!(Placement::by_name("vtime").unwrap(), Placement::ClusterVtime);
+        assert_eq!(Placement::by_name("pa").unwrap(), Placement::PrefixAffinity);
         assert!(Placement::by_name("random").is_err());
         assert_eq!(Placement::default(), Placement::ClusterVtime);
     }
@@ -202,7 +271,7 @@ mod tests {
     fn round_robin_cycles() {
         let mut p = Placer::new(Placement::RoundRobin, 3, 100, 1.0);
         let nows = [0.0, 0.0, 0.0];
-        let seq: Vec<usize> = (0..6).map(|i| p.place(i, 10.0, &nows, None)).collect();
+        let seq: Vec<usize> = (0..6).map(|i| p.place(i, 10.0, None, &nows, None)).collect();
         assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -210,11 +279,11 @@ mod tests {
     fn least_loaded_tracks_backlog() {
         let mut p = Placer::new(Placement::LeastLoaded, 2, 10, 1.0);
         // Heavy agent to replica 0 (tie → 0), light one must go to 1.
-        assert_eq!(p.place(0, 1000.0, &[0.0, 0.0], None), 0);
-        assert_eq!(p.place(1, 10.0, &[0.0, 0.0], None), 1);
+        assert_eq!(p.place(0, 1000.0, None, &[0.0, 0.0], None), 0);
+        assert_eq!(p.place(1, 10.0, None, &[0.0, 0.0], None), 1);
         // Replica 1 drains (rate 10/s): by t=2 its backlog is 0, replica 0
         // still has ~980 → next goes to 1 again.
-        assert_eq!(p.place(2, 10.0, &[2.0, 2.0], None), 1);
+        assert_eq!(p.place(2, 10.0, None, &[2.0, 2.0], None), 1);
     }
 
     #[test]
@@ -229,21 +298,37 @@ mod tests {
     fn cluster_vtime_prefers_idle_replica() {
         let mut p = Placer::new(Placement::ClusterVtime, 2, 10, 1.0);
         // Saturate replica 0 with a big agent…
-        assert_eq!(p.place(0, 500.0, &[0.0, 0.0], None), 0);
+        assert_eq!(p.place(0, 500.0, None, &[0.0, 0.0], None), 0);
         // …the next agent's GPS finish is earlier on the empty replica 1.
-        assert_eq!(p.place(1, 100.0, &[0.0, 0.0], None), 1);
+        assert_eq!(p.place(1, 100.0, None, &[0.0, 0.0], None), 1);
         // A third agent (cost 200) at t=0: on replica 0 it shares with 500
         // the whole way (5/s → t=40); on replica 1 it shares with 100 until
         // t=20, then runs alone (t=30) → replica 1 wins.
-        assert_eq!(p.place(2, 200.0, &[0.0, 0.0], None), 1);
+        assert_eq!(p.place(2, 200.0, None, &[0.0, 0.0], None), 1);
     }
 
     #[test]
     fn cluster_vtime_honors_live_estimates() {
         let mut p = Placer::new(Placement::ClusterVtime, 2, 10, 1.0);
         // Live estimates invert the mirror-based choice.
-        let r = p.place(0, 100.0, &[0.0, 0.0], Some(&[Some(9.0), Some(3.0)]));
+        let r = p.place(0, 100.0, None, &[0.0, 0.0], Some(&[Some(9.0), Some(3.0)]));
         assert_eq!(r, 1);
+    }
+
+    #[test]
+    fn prefix_affinity_keeps_families_together() {
+        let mut p = Placer::new(Placement::PrefixAffinity, 2, 10, 1.0);
+        // Family 7's opener saturates replica 0 (vtime tie → 0)…
+        assert_eq!(p.place(0, 500.0, Some(7), &[0.0, 0.0], None), 0);
+        // …a family-less agent avoids it (vtime fallback)…
+        assert_eq!(p.place(1, 100.0, None, &[0.0, 0.0], None), 1);
+        // …but family members follow the cached chain despite the load.
+        assert_eq!(p.place(2, 100.0, Some(7), &[0.0, 0.0], None), 0);
+        assert_eq!(p.place(3, 100.0, Some(7), &[1.0, 1.0], None), 0);
+        // A new family starts wherever vtime points (replica 1 now lighter
+        // than 0? 0 carries 700, 1 carries 100 → family 8 opens on 1).
+        assert_eq!(p.place(4, 100.0, Some(8), &[1.0, 1.0], None), 1);
+        assert_eq!(p.place(5, 100.0, Some(8), &[2.0, 2.0], None), 1);
     }
 
     #[test]
@@ -251,7 +336,7 @@ mod tests {
         for policy in Placement::ALL {
             let mut p = Placer::new(policy, 1, 100, 1.0);
             for i in 0..5 {
-                assert_eq!(p.place(i, 100.0, &[i as f64], None), 0);
+                assert_eq!(p.place(i, 100.0, Some(3), &[i as f64], None), 0);
             }
         }
     }

@@ -173,11 +173,23 @@ pub struct WorkloadConfig {
     pub class_mix: [f64; 3],
     /// RNG seed.
     pub seed: u64,
+    /// Shared-prefix family size: consecutive agents grouped this many at a
+    /// time share one prompt prefix. 0/1 disables families (the default).
+    pub prefix_fanout: usize,
+    /// Length of the shared prompt prefix in tokens (0 disables).
+    pub prefix_tokens: u32,
 }
 
 impl Default for WorkloadConfig {
     fn default() -> Self {
-        WorkloadConfig { n_agents: 300, window_secs: 9.0 * 60.0, class_mix: [0.72, 0.26, 0.02], seed: 42 }
+        WorkloadConfig {
+            n_agents: 300,
+            window_secs: 9.0 * 60.0,
+            class_mix: [0.72, 0.26, 0.02],
+            seed: 42,
+            prefix_fanout: 0,
+            prefix_tokens: 0,
+        }
     }
 }
 
@@ -185,6 +197,13 @@ impl WorkloadConfig {
     /// Paper's density presets: 1x -> 18 min, 2x -> 9 min, 3x -> 6 min.
     pub fn with_density(mut self, density: f64) -> Self {
         self.window_secs = 18.0 * 60.0 / density;
+        self
+    }
+
+    /// Enable shared-prefix agent families (see [`crate::workload::trace::build_suite`]).
+    pub fn with_shared_prefix(mut self, fanout: usize, prefix_tokens: u32) -> Self {
+        self.prefix_fanout = fanout;
+        self.prefix_tokens = prefix_tokens;
         self
     }
 }
@@ -223,6 +242,10 @@ pub struct Config {
     pub noise_lambda: f64,
     /// Multi-replica scale-out knobs.
     pub cluster: ClusterConfig,
+    /// Enable the radix-tree prefix cache (copy-on-write KV sharing across
+    /// inferences with equal prompt prefixes). Off by default: the disabled
+    /// engine path is bit-identical to a build without the cache.
+    pub prefix_cache: bool,
 }
 
 impl Default for Config {
@@ -235,6 +258,7 @@ impl Default for Config {
             use_predictor: false,
             noise_lambda: 1.0,
             cluster: ClusterConfig::default(),
+            prefix_cache: false,
         }
     }
 }
@@ -288,6 +312,9 @@ impl Config {
         if let Some(x) = v.get("noise_lambda").as_f64() {
             cfg.noise_lambda = x;
         }
+        if let Some(x) = v.get("prefix_cache").as_bool() {
+            cfg.prefix_cache = x;
+        }
         let c = v.get("cluster");
         if c.as_obj().is_some() {
             if let Some(x) = c.get("replicas").as_u64() {
@@ -311,6 +338,12 @@ impl Config {
             }
             if let Some(x) = w.get("seed").as_u64() {
                 cfg.workload.seed = x;
+            }
+            if let Some(x) = w.get("prefix_fanout").as_u64() {
+                cfg.workload.prefix_fanout = x as usize;
+            }
+            if let Some(x) = w.get("prefix_tokens").as_u64() {
+                cfg.workload.prefix_tokens = x as u32;
             }
         }
         Ok(cfg)
@@ -346,6 +379,15 @@ impl Config {
         }
         if let Some(p) = args.get("placement") {
             self.cluster.placement = Placement::by_name(p)?;
+        }
+        if args.has("prefix-cache") {
+            self.prefix_cache = true;
+        }
+        if let Some(f) = args.get("prefix-fanout") {
+            self.workload.prefix_fanout = f.parse().context("--prefix-fanout")?;
+        }
+        if let Some(t) = args.get("prefix-tokens") {
+            self.workload.prefix_tokens = t.parse().context("--prefix-tokens")?;
         }
         Ok(self)
     }
@@ -426,6 +468,39 @@ mod tests {
         let cfg = Config::default().apply_args(&args).unwrap();
         assert_eq!(cfg.cluster.replicas, 8);
         assert_eq!(cfg.cluster.placement, Placement::RoundRobin);
+    }
+
+    #[test]
+    fn prefix_cache_knobs() {
+        // Default: off, no families.
+        let cfg = Config::default();
+        assert!(!cfg.prefix_cache);
+        assert_eq!(cfg.workload.prefix_fanout, 0);
+        assert_eq!(cfg.workload.prefix_tokens, 0);
+        // JSON.
+        let j = Json::parse(
+            r#"{"prefix_cache": true,
+                "workload": {"prefix_fanout": 4, "prefix_tokens": 512}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert!(cfg.prefix_cache);
+        assert_eq!(cfg.workload.prefix_fanout, 4);
+        assert_eq!(cfg.workload.prefix_tokens, 512);
+        // CLI overrides (prefix-cache is a boolean switch).
+        let args = crate::cli::Args::parse(
+            ["run", "--prefix-cache", "--prefix-fanout", "8", "--prefix-tokens", "256"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["prefix-cache"],
+        );
+        let cfg = Config::default().apply_args(&args).unwrap();
+        assert!(cfg.prefix_cache);
+        assert_eq!(cfg.workload.prefix_fanout, 8);
+        assert_eq!(cfg.workload.prefix_tokens, 256);
+        // Builder helper.
+        let w = WorkloadConfig::default().with_shared_prefix(4, 128);
+        assert_eq!((w.prefix_fanout, w.prefix_tokens), (4, 128));
     }
 
     #[test]

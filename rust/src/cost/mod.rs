@@ -14,7 +14,8 @@
 //! inferences. The unit is token·iterations (paper footnote 1 normalizes KV
 //! blocks to per-token units).
 
-use crate::workload::{AgentSpec, InferenceSpec};
+use crate::workload::{AgentId, AgentSpec, InferenceSpec, Suite};
+use std::collections::HashMap;
 
 /// A service-cost model mapping an inference's (p, d) to a scalar cost.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,6 +24,15 @@ pub enum CostModel {
     MemoryCentric,
     /// VTC (Sheng et al. 2024): `p + 2d`.
     ComputeCentric,
+    /// Memory-centric with prefix dedup: when the engine's prefix cache is
+    /// on, a shared page's token-time is charged *fractionally* across its
+    /// sharers, so finish tags (and the GPS fluid reference) reflect the
+    /// physical — deduplicated — occupancy. Per-inference this equals
+    /// [`MemoryCentric`](CostModel::MemoryCentric); aggregation over tasks
+    /// splits each shared-prefix term `L·d` by the sharer count (fluid
+    /// approximation of the per-iteration page-refcount split the engine
+    /// performs; see [`crate::prefix::PrefixCache::shared_charge`]).
+    SharedMemoryCentric,
 }
 
 impl CostModel {
@@ -35,7 +45,9 @@ impl CostModel {
             // Exact discrete sum p*d + d(d+1)/2; the paper's p*d + d^2/2 is
             // its continuum approximation. Using the exact sum keeps
             // `remaining_inference_cost` consistent (depletes to exactly 0).
-            CostModel::MemoryCentric => p * d + d * (d + 1.0) / 2.0,
+            CostModel::MemoryCentric | CostModel::SharedMemoryCentric => {
+                p * d + d * (d + 1.0) / 2.0
+            }
             CostModel::ComputeCentric => p + 2.0 * d,
         }
     }
@@ -46,8 +58,23 @@ impl CostModel {
     }
 
     /// Total cost of an agent = sum over all its inferences (paper §4.1).
+    /// Under [`SharedMemoryCentric`](CostModel::SharedMemoryCentric) the
+    /// shared-prefix token-time is split across the agent's *own* tasks in
+    /// the same prefix group (intra-agent fan-out dedup); for suite-wide
+    /// family dedup use [`shared_agent_costs`].
     pub fn agent_cost(&self, agent: &AgentSpec) -> f64 {
-        agent.stages.iter().flatten().map(|s| self.spec_cost(s)).sum()
+        match self {
+            CostModel::SharedMemoryCentric => {
+                let mut sharers: HashMap<u64, u32> = HashMap::new();
+                for t in agent.tasks() {
+                    if let Some(g) = t.prefix_group {
+                        *sharers.entry(g.id).or_insert(0) += 1;
+                    }
+                }
+                agent.tasks().map(|t| deduped_spec_cost(t, &sharers)).sum()
+            }
+            _ => agent.stages.iter().flatten().map(|s| self.spec_cost(s)).sum(),
+        }
     }
 
     /// Remaining cost of a partially-served inference: served `g` of `d`
@@ -57,7 +84,7 @@ impl CostModel {
     pub fn remaining_inference_cost(&self, prompt: u32, decode: u32, generated: u32) -> f64 {
         let g = generated.min(decode);
         match self {
-            CostModel::MemoryCentric => {
+            CostModel::MemoryCentric | CostModel::SharedMemoryCentric => {
                 // sum_{i=g+1..d} (p+i) = p(d-g) + (d(d+1) - g(g+1))/2
                 let p = prompt as f64;
                 let d = decode as f64;
@@ -82,6 +109,62 @@ impl CostModel {
 #[inline]
 pub fn kv_occupancy_tokens(prompt: u32, generated: u32) -> u64 {
     prompt as u64 + generated as u64
+}
+
+/// One inference's memory-centric cost with its shared-prefix token-time
+/// divided by `sharers[group]` — the fluid dedup model. With one sharer it
+/// reduces to Eq. (1) exactly: `(p−L)d + Ld/1 + d(d+1)/2 = pd + d(d+1)/2`.
+fn deduped_spec_cost(spec: &InferenceSpec, sharers: &HashMap<u64, u32>) -> f64 {
+    let p = spec.prompt_tokens as f64;
+    let d = spec.decode_tokens as f64;
+    let base = p * d + d * (d + 1.0) / 2.0;
+    match spec.prefix_group {
+        Some(g) => {
+            let l = (g.tokens.min(spec.prompt_tokens)) as f64;
+            let k = sharers.get(&g.id).copied().unwrap_or(1).max(1) as f64;
+            base - l * d + l * d / k
+        }
+        None => base,
+    }
+}
+
+/// Oracle (ground-truth) cost map for a run: plain per-agent `model` costs,
+/// switching to the suite-wide deduplicated base ([`shared_agent_costs`])
+/// when the prefix cache is on and the model is memory-centric — the single
+/// gate every experiment path shares, so the scheduler's finish tags and
+/// the GPS fluid yardstick can never disagree about the cost basis.
+/// Without prefix annotations the deduplicated map equals the plain one
+/// term for term, so the default path is unchanged.
+pub fn oracle_costs(prefix_cache: bool, suite: &Suite, model: CostModel) -> HashMap<AgentId, f64> {
+    if prefix_cache
+        && matches!(model, CostModel::MemoryCentric | CostModel::SharedMemoryCentric)
+    {
+        shared_agent_costs(suite)
+    } else {
+        suite.agents.iter().map(|a| (a.id, model.agent_cost(a))).collect()
+    }
+}
+
+/// Suite-wide deduplicated agent costs under
+/// [`CostModel::SharedMemoryCentric`]: sharer counts are taken over *all*
+/// inferences in the suite carrying the same prefix group (agent families),
+/// not just within one agent. This is the cost the Justitia scheduler and
+/// the GPS fluid reference should both see when the prefix cache is on, so
+/// virtual-time finish tags stay truthful under dedup.
+pub fn shared_agent_costs(suite: &Suite) -> HashMap<AgentId, f64> {
+    let mut sharers: HashMap<u64, u32> = HashMap::new();
+    for a in &suite.agents {
+        for t in a.tasks() {
+            if let Some(g) = t.prefix_group {
+                *sharers.entry(g.id).or_insert(0) += 1;
+            }
+        }
+    }
+    suite
+        .agents
+        .iter()
+        .map(|a| (a.id, a.tasks().map(|t| deduped_spec_cost(t, &sharers)).sum()))
+        .collect()
 }
 
 #[cfg(test)]
@@ -155,5 +238,65 @@ mod tests {
     #[test]
     fn occupancy() {
         assert_eq!(kv_occupancy_tokens(100, 7), 107);
+    }
+
+    #[test]
+    fn shared_model_matches_memory_centric_without_groups() {
+        let m = CostModel::MemoryCentric;
+        let s = CostModel::SharedMemoryCentric;
+        let agent = crate::workload::test_support::agent_with_stages(vec![vec![
+            inference(0, 0, 64, 16),
+            inference(1, 0, 32, 8),
+        ]]);
+        assert_eq!(s.agent_cost(&agent), m.agent_cost(&agent));
+        assert_eq!(s.inference_cost(64, 16), m.inference_cost(64, 16));
+        assert_eq!(s.remaining_inference_cost(64, 16, 4), m.remaining_inference_cost(64, 16, 4));
+    }
+
+    #[test]
+    fn shared_model_splits_prefix_across_intra_agent_sharers() {
+        use crate::workload::PrefixGroup;
+        let mut agent = crate::workload::test_support::agent_with_stages(vec![vec![
+            inference(0, 0, 100, 10),
+            inference(1, 0, 100, 10),
+        ]]);
+        let g = PrefixGroup { id: 1, tokens: 60 };
+        for st in &mut agent.stages {
+            for t in st {
+                t.prefix_group = Some(g);
+            }
+        }
+        let full = CostModel::MemoryCentric.agent_cost(&agent);
+        let shared = CostModel::SharedMemoryCentric.agent_cost(&agent);
+        // Each task: 100·10 + 55 = 1055; dedup removes 60·10·(1 − 1/2) = 300
+        // per task.
+        assert!((full - 2.0 * 1055.0).abs() < 1e-9);
+        assert!((shared - (full - 600.0)).abs() < 1e-9, "{shared} vs {full}");
+    }
+
+    #[test]
+    fn suite_costs_dedup_across_agent_families() {
+        use crate::workload::{PrefixGroup, Suite};
+        let g = PrefixGroup { id: 4, tokens: 50 };
+        let mut agents = Vec::new();
+        for id in 0..2u32 {
+            let mut a = crate::workload::test_support::agent_at(
+                id,
+                id as f64,
+                vec![vec![inference(0, 0, 50, 10)]],
+            );
+            a.stages[0][0].prefix_group = Some(g);
+            agents.push(a);
+        }
+        let suite = Suite::new(agents);
+        let costs = shared_agent_costs(&suite);
+        // Suite-wide sharers = 2, so each agent's 50·10 prefix term halves;
+        // intra-agent dedup alone would see k = 1 (no discount).
+        let intra = CostModel::SharedMemoryCentric.agent_cost(&suite.agents[0]);
+        let full = CostModel::MemoryCentric.agent_cost(&suite.agents[0]);
+        assert_eq!(intra, full);
+        assert!((costs[&0] - (full - 250.0)).abs() < 1e-9, "{}", costs[&0]);
+        assert_eq!(costs.len(), 2);
+        assert!((costs[&0] - costs[&1]).abs() < 1e-9);
     }
 }

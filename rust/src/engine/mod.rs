@@ -19,8 +19,9 @@ use crate::config::{Config, Policy};
 use crate::cost::CostModel;
 use crate::kv::{BlockAllocator, KvError};
 use crate::metrics::RunMetrics;
+use crate::prefix::{PrefixCache, PrefixMatch};
 use crate::sched::{AgentInfo, Scheduler, TaskInfo};
-use crate::workload::{AgentId, AgentSpec, Suite, TaskId};
+use crate::workload::{AgentId, AgentSpec, PrefixGroup, Suite, TaskId};
 use exec::{ExecBackend, IterationBatch};
 use std::collections::{HashMap, VecDeque};
 
@@ -33,6 +34,12 @@ struct SeqState {
     generated: u32,
     /// Set while the sequence still needs its prefill iteration.
     needs_prefill: bool,
+    /// Prompt tokens served from the prefix cache (prefill skipped).
+    cached_tokens: u32,
+    /// Prefix-tree nodes this sequence is attached to (admission match,
+    /// extended to the full prompt chain after prefill). Empty when the
+    /// cache is disabled or the sequence was swapped out.
+    prefix_path: Vec<usize>,
 }
 
 /// Per-agent progress tracking (stage release, completion).
@@ -49,6 +56,9 @@ struct AgentState {
 pub struct Engine<B: ExecBackend> {
     /// The paged KV-cache allocator (single source of truth for pages).
     pub kv: BlockAllocator,
+    /// Radix-tree prefix cache (`Some` iff `cfg.prefix_cache`); with `None`
+    /// every code path below reduces to the cache-free engine bit for bit.
+    prefix: Option<PrefixCache>,
     backend: B,
     scheduler: Box<dyn Scheduler>,
     policy: Policy,
@@ -77,11 +87,21 @@ impl<B: ExecBackend> Engine<B> {
     /// Engine from a config, a policy scheduler, and an execution backend.
     pub fn new(cfg: &Config, scheduler: Box<dyn Scheduler>, backend: B) -> Self {
         let kv = BlockAllocator::new(cfg.backend.kv_pages() as u32, cfg.backend.page_size);
+        // With the prefix cache on, memory-centric service accounting
+        // switches to the dedup-aware variant (shared pages charged
+        // fractionally across sharers — see step 5 of `step()`).
+        let base_model = crate::sched::cost_model_for(scheduler.policy());
+        let cost_model = if cfg.prefix_cache && base_model == CostModel::MemoryCentric {
+            CostModel::SharedMemoryCentric
+        } else {
+            base_model
+        };
         Engine {
             kv,
+            prefix: cfg.prefix_cache.then(|| PrefixCache::new(cfg.backend.page_size)),
             backend,
             policy: scheduler.policy(),
-            cost_model: crate::sched::cost_model_for(scheduler.policy()),
+            cost_model,
             scheduler,
             max_batch: cfg.max_batch,
             running: Vec::new(),
@@ -167,8 +187,23 @@ impl<B: ExecBackend> Engine<B> {
 
         // 1. Swap-in has strict priority over fresh admissions (footnote 3).
         while let Some(seq) = self.swapped.front() {
-            if self.running.len() >= self.max_batch || !self.kv.can_swap_in(seq.id) {
+            if self.running.len() >= self.max_batch {
                 break;
+            }
+            let id = seq.id;
+            if !self.kv.can_swap_in(id) {
+                // Memory pressure: reclaim unpinned prefix-cache pages first
+                // (only when that can actually cover the shortfall — partial
+                // flushes buy nothing while admissions are swap-gated).
+                if let Some(cache) = self.prefix.as_mut() {
+                    let need = self.kv.pages_for(self.kv.seq_tokens(id).unwrap_or(0)) + 1;
+                    if self.kv.free_pages() + cache.reclaimable_pages(&self.kv) >= need {
+                        cache.evict_until(&mut self.kv, need);
+                    }
+                }
+                if !self.kv.can_swap_in(id) {
+                    break;
+                }
             }
             let seq = self.swapped.pop_front().unwrap();
             swap_in_tokens += self.kv.swap_in(seq.id).expect("can_swap_in checked");
@@ -183,12 +218,52 @@ impl<B: ExecBackend> Engine<B> {
                     self.admission_blocked = true;
                     break;
                 };
-                if !self.kv.can_admit(next.prompt_tokens) {
+                // Prefix-cache path: match the prompt against the radix
+                // tree, pin the matched chain, and — if the uncached
+                // remainder doesn't fit — evict unpinned LRU nodes before
+                // giving up and blocking.
+                let mut lookup: Option<PrefixMatch> = None;
+                if let Some(cache) = self.prefix.as_mut() {
+                    // Only the task's *shareable* prefix participates in
+                    // caching; unique suffixes could never match anyone.
+                    let group = prefix_group_in(&self.agents, next.id);
+                    let shareable = shareable_tokens(group, next.prompt_tokens);
+                    let ids = crate::prefix::prompt_token_ids(next.id, shareable, group);
+                    let m = cache.lookup(&ids);
+                    cache.attach(&m.path); // pin before any eviction
+                    let need = self.kv.fresh_pages_needed(next.prompt_tokens, m.pages.len() as u32);
+                    if need > self.kv.free_pages()
+                        && self.kv.free_pages() + cache.reclaimable_pages(&self.kv) >= need
+                    {
+                        // Only spend cached chains when eviction can
+                        // actually make this admission fit; an infeasible
+                        // request must not flush other families' prefixes.
+                        cache.evict_until(&mut self.kv, need);
+                    }
+                    if !self.kv.can_admit_with_prefix(next.prompt_tokens, m.pages.len() as u32) {
+                        cache.detach(&m.path);
+                        self.admission_blocked = true;
+                        break;
+                    }
+                    lookup = Some(m);
+                } else if !self.kv.can_admit(next.prompt_tokens) {
                     self.admission_blocked = true;
                     break;
                 }
                 let task = self.scheduler.pop_next(self.clock).unwrap();
-                self.kv.allocate(task.id, task.prompt_tokens).expect("can_admit checked");
+                let (cached_tokens, prefix_path) = match lookup {
+                    Some(m) => {
+                        self.kv
+                            .share_prefix(task.id, &m.pages, task.prompt_tokens)
+                            .expect("admit checked");
+                        self.metrics.on_prefix_lookup(m.tokens as u64);
+                        (m.tokens, m.path)
+                    }
+                    None => {
+                        self.kv.allocate(task.id, task.prompt_tokens).expect("can_admit checked");
+                        (0, Vec::new())
+                    }
+                };
                 let spec_decode = self.task_decode(task.id);
                 self.running.push(SeqState {
                     id: task.id,
@@ -196,6 +271,8 @@ impl<B: ExecBackend> Engine<B> {
                     target_decode: spec_decode,
                     generated: 0,
                     needs_prefill: true,
+                    cached_tokens,
+                    prefix_path,
                 });
                 self.metrics.on_task_admitted(task.id, self.clock);
             }
@@ -218,13 +295,32 @@ impl<B: ExecBackend> Engine<B> {
             let id = self.running[i].id;
             let needs_append = !self.running[i].needs_prefill;
             if needs_append && !self.kv.can_append(id) {
+                // Cheapest reclaim first: drop unpinned prefix-cache pages
+                // before preempting a running sequence (skip when nothing
+                // reclaimable would actually free a page).
+                if let Some(cache) = self.prefix.as_mut() {
+                    if cache.reclaimable_pages(&self.kv) >= 1 {
+                        cache.evict_until(&mut self.kv, 1);
+                    }
+                    if self.kv.can_append(id) {
+                        i += 1;
+                        continue;
+                    }
+                }
                 match self.pick_victim(i) {
                     Some(v) => {
-                        let victim = self.running.remove(v);
+                        let mut victim = self.running.remove(v);
                         let pages = self.kv.block_table(victim.id).unwrap().to_vec();
                         let tokens = self.kv.seq_tokens(victim.id).unwrap();
                         self.backend.on_swap_out(victim.id, &pages, tokens);
                         swap_out_tokens += self.kv.swap_out(victim.id).expect("victim on device");
+                        if let Some(cache) = self.prefix.as_mut() {
+                            // Shared prefix pages survive via the tree; the
+                            // victim re-enters on private pages at swap-in.
+                            cache.detach(&victim.prefix_path);
+                        }
+                        victim.prefix_path = Vec::new();
+                        victim.cached_tokens = 0;
                         self.metrics.on_swap_out(victim.id, self.clock);
                         self.swapped.push_back(victim);
                         if v < i {
@@ -243,12 +339,13 @@ impl<B: ExecBackend> Engine<B> {
             self.admission_blocked = false;
         }
 
-        // 4. Run the iteration on the backend.
+        // 4. Run the iteration on the backend. Cached-prefix tokens are
+        //    excluded from the prefill work (their KV already exists).
         let prefill: Vec<(TaskId, u32)> = self
             .running
             .iter()
             .filter(|s| s.needs_prefill)
-            .map(|s| (s.id, s.prompt))
+            .map(|s| (s.id, s.prompt - s.cached_tokens))
             .collect();
         let decode: Vec<TaskId> =
             self.running.iter().filter(|s| !s.needs_prefill).map(|s| s.id).collect();
@@ -260,24 +357,72 @@ impl<B: ExecBackend> Engine<B> {
             kv: &self.kv,
         });
         self.clock += result.elapsed;
-        self.metrics.on_iteration(self.clock, result.elapsed, prefill.len(), decode.len());
+        let prefill_tokens: u64 = prefill.iter().map(|(_, p)| *p as u64).sum();
+        self.metrics.on_iteration(
+            self.clock,
+            result.elapsed,
+            prefill.len(),
+            decode.len(),
+            prefill_tokens,
+        );
 
         // 5. Token bookkeeping: prefilled seqs become decoders; decoders gain
         //    one token (KV already reserved above); completions retire.
         let mut completed: Vec<TaskId> = Vec::new();
         let mut service: Vec<(AgentId, f64)> = Vec::new();
         let mut stalled = 0usize;
+        let page_size = self.kv.page_size();
         for s in &mut self.running {
             if s.needs_prefill {
                 s.needs_prefill = false;
-                // VTC-style service accounting for the prompt.
-                service.push((s.id.agent, serve_delta_prefill(self.cost_model, s.prompt)));
+                // VTC-style service accounting for the prompt — only the
+                // tokens actually prefilled; cached-prefix tokens consumed
+                // no service (cache off ⇒ cached_tokens = 0, unchanged).
+                service.push((
+                    s.id.agent,
+                    serve_delta_prefill(self.cost_model, s.prompt - s.cached_tokens),
+                ));
                 // Prefill iteration also emits the first token.
+                if let Some(cache) = self.prefix.as_mut() {
+                    // Register the freshly-built *shareable* chain (full
+                    // pages of the family prefix only — unique suffixes
+                    // would bloat the tree with unmatchable nodes) so later
+                    // arrivals can share it; same-iteration siblings adopt
+                    // each other's pages here.
+                    let group = prefix_group_in(&self.agents, s.id);
+                    let shareable = shareable_tokens(group, s.prompt);
+                    if shareable >= page_size {
+                        let ids = crate::prefix::prompt_token_ids(s.id, shareable, group);
+                        let free_before = self.kv.free_pages();
+                        s.prefix_path =
+                            cache.insert_and_attach(s.id, &ids, &mut self.kv, &s.prefix_path);
+                        if self.kv.free_pages() > free_before {
+                            // Adoption deduplicated sibling pages: free KV
+                            // grew, so the admission memo may be stale.
+                            self.admission_blocked = false;
+                        }
+                    }
+                }
             }
             match self.kv.append_token(s.id) {
                 Ok(()) => {
                     s.generated += 1;
-                    service.push((s.id.agent, serve_delta_decode(self.cost_model, s.prompt, s.generated)));
+                    // With the cache on, memory-centric service is the
+                    // sequence's *physical* occupancy: private tokens in
+                    // full, each shared page split across its sharers
+                    // (SharedMemoryCentric accounting identity).
+                    let delta = match (&self.prefix, self.cost_model) {
+                        (
+                            Some(cache),
+                            CostModel::MemoryCentric | CostModel::SharedMemoryCentric,
+                        ) => {
+                            (s.prompt + s.generated) as f64
+                                - (s.prefix_path.len() as u32 * page_size) as f64
+                                + cache.shared_charge(&s.prefix_path)
+                        }
+                        _ => serve_delta_decode(self.cost_model, s.prompt, s.generated),
+                    };
+                    service.push((s.id.agent, delta));
                     if s.generated >= s.target_decode {
                         completed.push(s.id);
                     }
@@ -308,6 +453,9 @@ impl<B: ExecBackend> Engine<B> {
         }
         if self.record_occupancy {
             self.metrics.sample_kv(self.clock, self.kv.device_tokens(), per_agent_tokens(&self.running, &self.kv));
+        }
+        if let Some(cache) = self.prefix.as_ref() {
+            self.metrics.on_cache_occupancy(cache.cached_pages() as u64);
         }
         result.elapsed
     }
@@ -342,6 +490,13 @@ impl<B: ExecBackend> Engine<B> {
     fn finish_seq(&mut self, id: TaskId) {
         self.admission_blocked = false;
         self.backend.on_seq_released(id);
+        if let Some(cache) = self.prefix.as_mut() {
+            if let Some(s) = self.running.iter().find(|s| s.id == id) {
+                // The tree keeps its own page references; only this
+                // sequence's pins are dropped.
+                cache.detach(&s.prefix_path);
+            }
+        }
         self.kv.release(id).expect("release finished seq");
         self.running.retain(|s| s.id != id);
         self.metrics.on_task_complete(id, self.clock);
@@ -393,6 +548,21 @@ impl<B: ExecBackend> Engine<B> {
     /// Direct access to the scheduler (GPS reference extraction, tests).
     pub fn scheduler_mut(&mut self) -> &mut dyn Scheduler {
         self.scheduler.as_mut()
+    }
+
+    /// The prefix cache, when enabled.
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix.as_ref()
+    }
+
+    /// KV-pool invariant check that accounts for pages pinned by the prefix
+    /// cache; with the cache disabled this is exactly
+    /// [`BlockAllocator::check_invariants`].
+    pub fn check_kv_invariants(&self) -> Result<(), String> {
+        match &self.prefix {
+            Some(cache) => self.kv.check_invariants_shared(&cache.page_holds()),
+            None => self.kv.check_invariants(),
+        }
     }
 
     /// Predicted cost recorded for an agent at submission.
@@ -456,12 +626,26 @@ fn state_is_empty(agents: &HashMap<AgentId, AgentState>, id: AgentId) -> bool {
     agents.get(&id).map(|a| a.tasks_remaining == 0).unwrap_or(false)
 }
 
+/// Shared-prefix annotation of a task, looked up in its agent's spec.
+fn prefix_group_in(agents: &HashMap<AgentId, AgentState>, id: TaskId) -> Option<PrefixGroup> {
+    agents
+        .get(&id.agent)
+        .and_then(|a| a.spec.tasks().find(|t| t.id == id))
+        .and_then(|t| t.prefix_group)
+}
+
+/// Length of the prompt portion that can possibly be shared: the family
+/// prefix clamped to the prompt (0 without a family — nothing to cache).
+fn shareable_tokens(group: Option<PrefixGroup>, prompt_tokens: u32) -> u32 {
+    group.map(|g| g.tokens.min(prompt_tokens)).unwrap_or(0)
+}
+
 /// Service-accounting deltas in the scheduler's cost units.
 fn serve_delta_prefill(model: CostModel, prompt: u32) -> f64 {
     match model {
         // Memory-centric accounting delivers occupancy per iteration; the
         // prompt itself contributes nothing until decode iterations occur.
-        CostModel::MemoryCentric => 0.0,
+        CostModel::MemoryCentric | CostModel::SharedMemoryCentric => 0.0,
         CostModel::ComputeCentric => crate::sched::vtc::W_INPUT * prompt as f64,
     }
 }
@@ -469,7 +653,7 @@ fn serve_delta_prefill(model: CostModel, prompt: u32) -> f64 {
 fn serve_delta_decode(model: CostModel, prompt: u32, generated: u32) -> f64 {
     match model {
         // One decode iteration with occupancy (p + g) tokens.
-        CostModel::MemoryCentric => (prompt + generated) as f64,
+        CostModel::MemoryCentric | CostModel::SharedMemoryCentric => (prompt + generated) as f64,
         CostModel::ComputeCentric => crate::sched::vtc::W_OUTPUT,
     }
 }
@@ -630,6 +814,72 @@ mod tests {
         let j0 = e.metrics.agent_complete_time(0).unwrap();
         let j1 = e.metrics.agent_complete_time(1).unwrap();
         assert!(j1 < j0, "cheap agent should finish first ({j1} vs {j0})");
+    }
+
+    #[test]
+    fn prefix_cache_skips_prefill_and_keeps_invariants() {
+        let mut cfg = tiny_config(64, 16);
+        cfg.prefix_cache = true;
+        let mut e = engine(&cfg, Policy::Fcfs);
+        // Two agents of one family: 2 parallel tasks each, 32-token prompts
+        // drawn entirely from the family stream (2 full pages).
+        let mk = |id: u32| {
+            let mut a = simple_agent(id, 0.0, 2, 32, 4);
+            for st in &mut a.stages {
+                for t in st {
+                    t.prefix_group = Some(crate::workload::PrefixGroup { id: 9, tokens: 32 });
+                }
+            }
+            a
+        };
+        e.submit(mk(0), 100.0);
+        e.step(); // admit + prefill agent 0; its chain enters the tree
+        e.submit(mk(1), 100.0);
+        let mut guard = 0;
+        while e.has_work() {
+            e.step();
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        let m = &e.metrics;
+        assert_eq!(m.completed_agents(), 2);
+        assert_eq!(m.prefix_lookups(), 4, "every admission consults the cache");
+        assert_eq!(m.prefix_hits(), 2, "agent 1's tasks hit agent 0's chain");
+        assert_eq!(m.prefill_tokens_saved(), 64);
+        // 4 × 32 = 128 total prompt tokens; 64 skipped.
+        assert_eq!(m.prefill_tokens_executed(), 64);
+        assert!(m.cache_pages_peak() >= 2);
+        e.check_kv_invariants().unwrap();
+        assert_eq!(e.kv.device_tokens(), 0);
+        // The chain is still cached (tree-owned) until evicted.
+        assert_eq!(e.prefix_cache().unwrap().cached_pages(), 2);
+    }
+
+    #[test]
+    fn prefix_cache_disabled_matches_plain_engine_on_annotated_workload() {
+        let cfg = tiny_config(64, 16);
+        let mk = |annotate: bool, id: u32| {
+            let mut a = simple_agent(id, 0.0, 3, 20, 6);
+            if annotate {
+                for st in &mut a.stages {
+                    for t in st {
+                        t.prefix_group = Some(crate::workload::PrefixGroup { id: 1, tokens: 20 });
+                    }
+                }
+            }
+            a
+        };
+        let run = |annotate: bool| {
+            let mut e = engine(&cfg, Policy::Justitia);
+            e.submit(mk(annotate, 0), 500.0);
+            e.submit(mk(annotate, 1), 200.0);
+            while e.has_work() {
+                e.step();
+            }
+            e.metrics.jcts()
+        };
+        // Annotations are inert while cfg.prefix_cache is false.
+        assert_eq!(run(true), run(false));
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::metrics::{fair_ratios, fairness_summary, RunMetrics};
 use crate::predictor::{oracle::NoisyOracle, Predictor};
 use crate::sched::cost_model_for;
 use crate::util::threadpool::ThreadPool;
-use crate::workload::{AgentClass, Suite};
+use crate::workload::{AgentClass, AgentId, Suite};
 
 /// How the scheduler learns agent costs.
 pub enum CostSource<'a> {
@@ -36,6 +36,13 @@ pub fn rate_scale(cfg: &Config) -> f64 {
 }
 
 /// Run one policy over a suite on the calibrated simulator backend.
+///
+/// With `cfg.prefix_cache` on and a memory-centric policy, oracle costs are
+/// the suite-wide *deduplicated* token-time ([`crate::cost::shared_agent_costs`]):
+/// the engine delivers deduplicated physical service, so feeding the
+/// scheduler undeduplicated costs would skew its finish tags. Without the
+/// cache (or without prefix annotations) the map is identical to plain
+/// Eq. 1 costs, so the default path is unchanged bit for bit.
 pub fn run_policy(cfg: &Config, suite: &Suite, policy: Policy, source: &CostSource) -> RunMetrics {
     let model = cost_model_for(policy);
     let sched = crate::sched::build(policy, cfg.backend.kv_tokens, rate_scale(cfg));
@@ -44,8 +51,9 @@ pub fn run_policy(cfg: &Config, suite: &Suite, policy: Policy, source: &CostSour
         CostSource::Noisy { lambda, seed } => Some(NoisyOracle::new(model, *lambda, *seed)),
         _ => None,
     };
+    let oracle = crate::cost::oracle_costs(cfg.prefix_cache, suite, model);
     engine.run_suite(suite, |a| match source {
-        CostSource::Oracle => model.agent_cost(a),
+        CostSource::Oracle => oracle[&a.id],
         CostSource::Noisy { .. } => noisy.as_mut().unwrap().cost(a),
         CostSource::Model(p) => p.predict(a.class, &a.input_text),
     });
@@ -470,20 +478,33 @@ pub fn cluster_scaleout(
     let pool = ThreadPool::with_cpus();
     pool.map(jobs, move |(n_r, placement)| {
         let mut cfg = base.clone();
-        cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(density);
+        // Keep the base workload's shape knobs (class mix, shared-prefix
+        // families) and override only size/seed/density.
+        cfg.workload.n_agents = n_agents;
+        cfg.workload.seed = seed;
+        cfg.workload = cfg.workload.clone().with_density(density);
         cfg.cluster = crate::config::ClusterConfig { replicas: n_r, placement };
         let suite = crate::workload::trace::build_suite(&cfg.workload);
         let model = cost_model_for(policy);
         let mut cluster = build_sim_cluster(&cfg, policy);
-        let makespan = cluster.run_suite(&suite, |a| model.agent_cost(a));
+        // Same dedup-aware oracle rule as `run_policy`: with the prefix
+        // cache on, scheduler tags and the GPS yardstick both use the
+        // deduplicated cost base. Note this is the workload's *intrinsic*
+        // deduplicated demand (ideal colocation): one common basis keeps
+        // maxmin_ratio comparable across placements, at the price of
+        // overstating slowdowns for placements that scatter families and
+        // therefore realize less physical sharing.
+        let oracle = crate::cost::oracle_costs(cfg.prefix_cache, &suite, model);
+        let makespan = cluster.run_suite(&suite, |a| oracle[&a.id]);
         let m = cluster.merged_metrics();
 
         // Fairness yardstick: the whole cluster as ONE GPS server of
         // capacity N×M. slowdown_j = JCT_j / GPS-JCT_j; the ratio of the
         // worst to the best slowdown measures how evenly contention is paid.
-        let gps = crate::sched::gps::run_suite(
-            &suite,
-            model,
+        let triples: Vec<(crate::workload::AgentId, f64, f64)> =
+            suite.agents.iter().map(|a| (a.id, a.arrival, oracle[&a.id])).collect();
+        let gps = crate::sched::gps::run(
+            &triples,
             cfg.backend.kv_tokens * n_r as u64,
             rate_scale(&cfg),
         );
@@ -508,6 +529,107 @@ pub fn cluster_scaleout(
             makespan,
         }
     })
+}
+
+// ---------------------------------------------------------------------------
+// Prefix sharing — radix-tree KV dedup on a shared-prefix workload (beyond
+// the paper: fairness when the fairly-shared resource is deduplicated; see
+// DESIGN.md §8 and the ROADMAP scenario axis)
+// ---------------------------------------------------------------------------
+
+/// One (cache on/off) row of the prefix-sharing experiment.
+pub struct PrefixSharingRow {
+    /// Whether the radix-tree prefix cache was enabled for this run.
+    pub cache_enabled: bool,
+    /// Fraction of admissions that hit at least one cached page.
+    pub hit_rate: f64,
+    /// Admissions that hit the cache.
+    pub prefix_hits: u64,
+    /// Prompt tokens actually prefilled.
+    pub prefill_tokens_executed: u64,
+    /// Prompt tokens skipped via cached prefixes.
+    pub prefill_tokens_saved: u64,
+    /// Peak pages held by the cache.
+    pub cache_pages_peak: u64,
+    /// Average JCT (s).
+    pub avg_jct: f64,
+    /// P99 JCT (s).
+    pub p99_jct: f64,
+    /// Max-min fair-share ratio vs the GPS fluid reference (costs deduped
+    /// when the cache is on, plain Eq. 1 when off — the yardstick matches
+    /// what the scheduler itself was told).
+    pub maxmin_ratio: f64,
+    /// Agents completed (must equal the suite size).
+    pub completed: usize,
+}
+
+/// The prefix-sharing sweep: one shared-prefix family workload
+/// (`prefix_fanout` agents per family, `prefix_tokens`-long common prompt
+/// prefix) replayed through a single Justitia replica with the radix-tree
+/// cache off, then on. Reports hit rate, prefill tokens saved, avg/p99 JCT,
+/// and the max-min fair-share ratio vs GPS under each regime.
+pub fn prefix_sharing(
+    base: &Config,
+    n_agents: usize,
+    density: f64,
+    prefix_fanout: usize,
+    prefix_tokens: u32,
+    seed: u64,
+) -> Vec<PrefixSharingRow> {
+    [false, true]
+        .into_iter()
+        .map(|cache| {
+            let mut cfg = base.clone();
+            // Preserve the base workload's shape knobs (class mix) like
+            // `cluster_scaleout`; override size/seed/density/families.
+            cfg.workload.n_agents = n_agents;
+            cfg.workload.seed = seed;
+            cfg.workload = cfg
+                .workload
+                .clone()
+                .with_density(density)
+                .with_shared_prefix(prefix_fanout, prefix_tokens);
+            cfg.prefix_cache = cache;
+            let suite = crate::workload::trace::build_suite(&cfg.workload);
+            // Predicted costs: suite-wide deduped token-time when sharing is
+            // on, plain Eq. 1 when off. The GPS yardstick below uses the
+            // same basis, so Justitia's virtual finish tags and the fluid
+            // reference stay mutually truthful.
+            let costs: std::collections::HashMap<AgentId, f64> =
+                crate::cost::oracle_costs(cache, &suite, CostModel::MemoryCentric);
+            let sched =
+                crate::sched::build(Policy::Justitia, cfg.backend.kv_tokens, rate_scale(&cfg));
+            let mut engine = Engine::new(&cfg, sched, SimBackend::new(&cfg.backend));
+            engine.run_suite(&suite, |a| costs[&a.id]);
+            let m = std::mem::take(&mut engine.metrics);
+
+            let triples: Vec<(AgentId, f64, f64)> =
+                suite.agents.iter().map(|a| (a.id, a.arrival, costs[&a.id])).collect();
+            let gps = crate::sched::gps::run(&triples, cfg.backend.kv_tokens, rate_scale(&cfg));
+            let mut worst = f64::NEG_INFINITY;
+            let mut best = f64::INFINITY;
+            for a in &suite.agents {
+                if let Some(jct) = m.jct(a.id) {
+                    let slowdown = jct / gps.jct(a.id, a.arrival).max(1e-9);
+                    worst = worst.max(slowdown);
+                    best = best.min(slowdown);
+                }
+            }
+            let maxmin_ratio = if best.is_finite() && best > 0.0 { worst / best } else { 1.0 };
+            PrefixSharingRow {
+                cache_enabled: cache,
+                hit_rate: m.prefix_hit_rate(),
+                prefix_hits: m.prefix_hits(),
+                prefill_tokens_executed: m.prefill_tokens_executed(),
+                prefill_tokens_saved: m.prefill_tokens_saved(),
+                cache_pages_peak: m.cache_pages_peak(),
+                avg_jct: m.avg_jct(),
+                p99_jct: m.p99_jct(),
+                maxmin_ratio,
+                completed: m.completed_agents(),
+            }
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -626,7 +748,7 @@ mod tests {
         let suite = crate::workload::trace::build_suite(&cfg.workload);
         let single = run_policy_oracle(&cfg, &suite, Policy::Justitia);
         let rows = cluster_scaleout(&cfg, &[1], &Placement::ALL, Policy::Justitia, 40, 3.0, 21);
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 4);
         for r in &rows {
             assert_eq!(r.completed, 40, "{:?}", r.placement);
             assert_eq!(r.avg_jct, single.avg_jct(), "{:?} avg JCT diverged", r.placement);
@@ -657,6 +779,37 @@ mod tests {
             assert!(r.maxmin_ratio >= 1.0, "ratio {} must be >= 1", r.maxmin_ratio);
             assert!(r.makespan > 0.0);
         }
+    }
+
+    #[test]
+    fn prefix_sharing_saves_prefill_and_stays_fair() {
+        let rows = prefix_sharing(&Config::default(), 60, 3.0, 4, 512, 42);
+        assert_eq!(rows.len(), 2);
+        let (off, on) = (&rows[0], &rows[1]);
+        assert!(!off.cache_enabled && on.cache_enabled);
+        assert_eq!(off.completed, 60);
+        assert_eq!(on.completed, 60);
+        // Cache off: no lookups, nothing saved.
+        assert_eq!(off.prefix_hits, 0);
+        assert_eq!(off.prefill_tokens_saved, 0);
+        // Cache on: hits, savings, and strictly less prefill executed.
+        assert!(on.hit_rate > 0.0, "hit rate must be positive");
+        assert!(on.prefill_tokens_saved > 0);
+        assert!(
+            on.prefill_tokens_executed < off.prefill_tokens_executed,
+            "sharing must execute strictly fewer prefill tokens ({} vs {})",
+            on.prefill_tokens_executed,
+            off.prefill_tokens_executed
+        );
+        assert!(on.cache_pages_peak > 0);
+        // Fairness: dedup must not widen the slowdown spread vs GPS (small
+        // tolerance for iteration-granularity noise on tiny agents).
+        assert!(
+            on.maxmin_ratio <= off.maxmin_ratio * 1.10,
+            "max-min ratio regressed: {} (on) vs {} (off)",
+            on.maxmin_ratio,
+            off.maxmin_ratio
+        );
     }
 
     #[test]

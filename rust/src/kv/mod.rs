@@ -6,9 +6,25 @@
 //! tracks free pages, per-sequence tables, and the swap area (CPU memory) for
 //! preempted sequences. This is the resource whose contention the whole paper
 //! is about: the scheduler's `M` is `total_pages * page_size` token slots.
+//!
+//! Pages are **ref-counted**: a page may be shared by several sequences (and
+//! by the radix-tree prefix cache, [`crate::prefix`]) when their prompts
+//! begin with the same token content. [`BlockAllocator::share_prefix`]
+//! admits a sequence on top of existing pages, [`BlockAllocator::cow_split`]
+//! gives a sequence a private copy of a shared page before it is written
+//! (copy-on-write), and [`BlockAllocator::retain_page`] /
+//! [`BlockAllocator::release_page`] let an external cache pin pages beyond
+//! any sequence's lifetime. A page returns to the free pool only when its
+//! refcount reaches zero. With no sharing in play every page has refcount 1
+//! and the allocator behaves exactly like the classical single-owner one.
+//!
+//! The free pool is a min-heap on page id, so allocation order is a pure
+//! function of the operation sequence — release interleaving cannot perturb
+//! which pages are handed out next (deterministic trace replay).
 
 use crate::workload::TaskId;
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Page id within the device pool.
 pub type PageId = u32;
@@ -51,9 +67,14 @@ pub enum KvError {
 pub struct BlockAllocator {
     page_size: u32,
     total_pages: u32,
-    free: Vec<PageId>,
+    /// Free pages, min-heap on id: allocation always hands out the lowest
+    /// free page id, independent of release interleaving.
+    free: BinaryHeap<Reverse<PageId>>,
+    /// Refcount per page; 0 ⇔ the page is in `free`.
+    refs: Vec<u32>,
     seqs: HashMap<TaskId, SeqAlloc>,
     /// Token slots occupied on device (for occupancy accounting / Fig. 3).
+    /// Logical tokens: shared pages count once per *sharing sequence*.
     device_tokens: u64,
     swapped_tokens: u64,
 }
@@ -65,7 +86,8 @@ impl BlockAllocator {
         BlockAllocator {
             page_size,
             total_pages,
-            free: (0..total_pages).rev().collect(),
+            free: (0..total_pages).map(Reverse).collect(),
+            refs: vec![0; total_pages as usize],
             seqs: HashMap::new(),
             device_tokens: 0,
             swapped_tokens: 0,
@@ -97,7 +119,8 @@ impl BlockAllocator {
         tokens.div_ceil(self.page_size)
     }
 
-    /// Tokens currently resident on device (running sequences).
+    /// Tokens currently resident on device (running sequences; logical,
+    /// i.e. shared pages count once per sharer).
     pub fn device_tokens(&self) -> u64 {
         self.device_tokens
     }
@@ -107,6 +130,38 @@ impl BlockAllocator {
         self.swapped_tokens
     }
 
+    /// Current refcount of a page (0 = free).
+    pub fn page_ref(&self, page: PageId) -> u32 {
+        self.refs[page as usize]
+    }
+
+    /// Pop the lowest free page id and mark it owned (refcount 1).
+    fn take_free(&mut self) -> Option<PageId> {
+        let Reverse(p) = self.free.pop()?;
+        debug_assert_eq!(self.refs[p as usize], 0);
+        self.refs[p as usize] = 1;
+        Some(p)
+    }
+
+    /// Add a reference to a live page (prefix-cache pinning / sharing).
+    /// Panics if the page is free: retaining an unowned page would corrupt
+    /// the pool.
+    pub fn retain_page(&mut self, page: PageId) {
+        assert!(self.refs[page as usize] >= 1, "retain of free page {page}");
+        self.refs[page as usize] += 1;
+    }
+
+    /// Drop a reference to a live page; the page returns to the free pool
+    /// when its refcount reaches zero.
+    pub fn release_page(&mut self, page: PageId) {
+        let r = &mut self.refs[page as usize];
+        assert!(*r >= 1, "release of free page {page}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(Reverse(page));
+        }
+    }
+
     /// Whether a new sequence with `prompt_tokens` can be admitted now.
     /// vLLM admits when the prompt fits plus one page of headroom for the
     /// first decode step.
@@ -114,36 +169,126 @@ impl BlockAllocator {
         self.pages_for(prompt_tokens) + 1 <= self.free_pages()
     }
 
+    /// Fresh pages (including the one-page decode headroom) a new sequence
+    /// needs beyond `cached_pages` supplied by the prefix cache — the single
+    /// source of the admission page arithmetic (used by both the engine's
+    /// eviction gate and [`can_admit_with_prefix`](Self::can_admit_with_prefix)).
+    pub fn fresh_pages_needed(&self, prompt_tokens: u32, cached_pages: u32) -> u32 {
+        self.pages_for(prompt_tokens).max(1).saturating_sub(cached_pages) + 1
+    }
+
+    /// Like [`can_admit`](Self::can_admit), but with the first
+    /// `cached_pages` pages supplied by the prefix cache (shared, no fresh
+    /// allocation needed).
+    pub fn can_admit_with_prefix(&self, prompt_tokens: u32, cached_pages: u32) -> bool {
+        self.fresh_pages_needed(prompt_tokens, cached_pages) <= self.free_pages()
+    }
+
     /// Allocate pages for a newly-admitted sequence's prompt.
     pub fn allocate(&mut self, seq: TaskId, prompt_tokens: u32) -> Result<(), KvError> {
+        self.share_prefix(seq, &[], prompt_tokens)
+    }
+
+    /// Admit a sequence whose prompt begins with `shared` — existing live
+    /// pages (typically full prefix-cache pages) that the new sequence
+    /// attaches to (refcount +1 each) instead of re-allocating; the rest of
+    /// the prompt gets fresh private pages. With `shared` empty this is
+    /// exactly [`allocate`](Self::allocate).
+    pub fn share_prefix(
+        &mut self,
+        seq: TaskId,
+        shared: &[PageId],
+        prompt_tokens: u32,
+    ) -> Result<(), KvError> {
         if self.seqs.contains_key(&seq) {
             return Err(KvError::AlreadyAllocated(seq));
         }
-        let need = self.pages_for(prompt_tokens).max(1);
-        if need > self.free_pages() {
-            return Err(KvError::OutOfPages { need, free: self.free_pages() });
+        let total = self.pages_for(prompt_tokens).max(1);
+        debug_assert!(
+            shared.len() as u32 <= total,
+            "shared pages ({}) exceed prompt pages ({total})",
+            shared.len()
+        );
+        let fresh = total - (shared.len() as u32).min(total);
+        if fresh > self.free_pages() {
+            return Err(KvError::OutOfPages { need: fresh, free: self.free_pages() });
         }
-        let pages: Vec<PageId> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let mut pages = Vec::with_capacity(total as usize);
+        for &p in shared {
+            self.retain_page(p);
+            pages.push(p);
+        }
+        for _ in 0..fresh {
+            pages.push(self.take_free().expect("free checked"));
+        }
         self.device_tokens += prompt_tokens as u64;
         self.seqs.insert(seq, SeqAlloc { pages, tokens: prompt_tokens, residence: KvResidence::Device });
         Ok(())
     }
 
-    /// Extend a running sequence by one generated token; may allocate a new
-    /// page. Returns Err(OutOfPages) when the pool is exhausted — the engine
-    /// then preempts (swaps out) some sequence.
-    pub fn append_token(&mut self, seq: TaskId) -> Result<(), KvError> {
-        let alloc = self.seqs.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+    /// Replace the page at `page_idx` of `seq`'s block table with an
+    /// existing live `page` holding identical content (the inverse of
+    /// [`cow_split`](Self::cow_split)): the sequence takes a reference on
+    /// `page` and drops its own copy, returning it to the pool if it was the
+    /// last holder. Used by the prefix cache when a just-prefilled sequence
+    /// discovers a sibling already cached the same chunk. No-op when the
+    /// table already holds `page`.
+    pub fn adopt_page(&mut self, seq: TaskId, page_idx: usize, page: PageId) -> Result<(), KvError> {
+        let alloc = self.seqs.get(&seq).ok_or(KvError::UnknownSeq(seq))?;
         if alloc.residence != KvResidence::Device {
             return Err(KvError::Swapped(seq));
         }
-        let cap = alloc.pages.len() as u32 * self.page_size;
-        if alloc.tokens + 1 > cap {
-            match self.free.pop() {
-                Some(p) => alloc.pages.push(p),
-                None => return Err(KvError::OutOfPages { need: 1, free: 0 }),
-            }
+        assert!(page_idx < alloc.pages.len(), "adopt_page index out of range");
+        let old = alloc.pages[page_idx];
+        if old == page {
+            return Ok(());
         }
+        self.retain_page(page);
+        self.seqs.get_mut(&seq).expect("checked").pages[page_idx] = page;
+        self.release_page(old);
+        Ok(())
+    }
+
+    /// Give `seq` a private copy of the page at `page_idx` in its block
+    /// table (copy-on-write). No-op returning the existing page when it is
+    /// already private. Fails with `OutOfPages` when no page is free for the
+    /// copy.
+    pub fn cow_split(&mut self, seq: TaskId, page_idx: usize) -> Result<PageId, KvError> {
+        let alloc = self.seqs.get(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        if alloc.residence != KvResidence::Device {
+            return Err(KvError::Swapped(seq));
+        }
+        assert!(page_idx < alloc.pages.len(), "cow_split index out of range");
+        let old = alloc.pages[page_idx];
+        if self.refs[old as usize] <= 1 {
+            return Ok(old); // already private
+        }
+        let new = self.take_free().ok_or(KvError::OutOfPages { need: 1, free: 0 })?;
+        self.refs[old as usize] -= 1; // was > 1, cannot reach 0
+        self.seqs.get_mut(&seq).expect("checked").pages[page_idx] = new;
+        Ok(new)
+    }
+
+    /// Extend a running sequence by one generated token; may allocate a new
+    /// page, and copy-on-writes the tail page first if it is shared. Returns
+    /// Err(OutOfPages) when the pool is exhausted — the engine then preempts
+    /// (swaps out) some sequence.
+    pub fn append_token(&mut self, seq: TaskId) -> Result<(), KvError> {
+        let (cap, tokens, tail_idx) = {
+            let alloc = self.seqs.get(&seq).ok_or(KvError::UnknownSeq(seq))?;
+            if alloc.residence != KvResidence::Device {
+                return Err(KvError::Swapped(seq));
+            }
+            (alloc.pages.len() as u32 * self.page_size, alloc.tokens, alloc.pages.len().wrapping_sub(1))
+        };
+        if tokens + 1 > cap {
+            let p = self.take_free().ok_or(KvError::OutOfPages { need: 1, free: 0 })?;
+            self.seqs.get_mut(&seq).expect("checked").pages.push(p);
+        } else {
+            // Writing into the current tail page: make it private first.
+            self.cow_split(seq, tail_idx)?;
+        }
+        let alloc = self.seqs.get_mut(&seq).expect("checked");
         alloc.tokens += 1;
         self.device_tokens += 1;
         Ok(())
@@ -153,19 +298,25 @@ impl BlockAllocator {
     pub fn can_append(&self, seq: TaskId) -> bool {
         match self.seqs.get(&seq) {
             Some(a) if a.residence == KvResidence::Device => {
-                a.tokens + 1 <= a.pages.len() as u32 * self.page_size || !self.free.is_empty()
+                let room_in_tail = a.tokens + 1 <= a.pages.len() as u32 * self.page_size;
+                let tail_private =
+                    a.pages.last().map(|&p| self.refs[p as usize] <= 1).unwrap_or(false);
+                (room_in_tail && tail_private) || !self.free.is_empty()
             }
             _ => false,
         }
     }
 
-    /// Free all pages of a finished sequence.
+    /// Free all pages of a finished sequence (shared pages survive while
+    /// other holders remain). Returns the number of table pages dropped.
     pub fn release(&mut self, seq: TaskId) -> Result<u32, KvError> {
         let alloc = self.seqs.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
         let n = alloc.pages.len() as u32;
         match alloc.residence {
             KvResidence::Device => {
-                self.free.extend(alloc.pages);
+                for p in alloc.pages {
+                    self.release_page(p);
+                }
                 self.device_tokens -= alloc.tokens as u64;
             }
             KvResidence::Swapped => {
@@ -175,19 +326,23 @@ impl BlockAllocator {
         Ok(n)
     }
 
-    /// Swap a running sequence out to host memory, freeing its device pages.
-    /// Returns the number of tokens moved (for swap-latency accounting).
+    /// Swap a running sequence out to host memory, dropping its device page
+    /// references. Returns the number of tokens moved (for swap-latency
+    /// accounting).
     pub fn swap_out(&mut self, seq: TaskId) -> Result<u32, KvError> {
         let alloc = self.seqs.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
         if alloc.residence == KvResidence::Swapped {
             return Err(KvError::Swapped(seq));
         }
         let pages = std::mem::take(&mut alloc.pages);
-        self.free.extend(pages);
         alloc.residence = KvResidence::Swapped;
-        self.device_tokens -= alloc.tokens as u64;
-        self.swapped_tokens += alloc.tokens as u64;
-        Ok(alloc.tokens)
+        let tokens = alloc.tokens;
+        for p in pages {
+            self.release_page(p);
+        }
+        self.device_tokens -= tokens as u64;
+        self.swapped_tokens += tokens as u64;
+        Ok(tokens)
     }
 
     /// Whether a swapped sequence fits back on device (plus one page of
@@ -201,7 +356,9 @@ impl BlockAllocator {
         }
     }
 
-    /// Swap a sequence back onto the device. Returns tokens moved.
+    /// Swap a sequence back onto the device (fresh private pages; any prefix
+    /// sharing it had is rebuilt only for *new* sequences, not restored).
+    /// Returns tokens moved.
     pub fn swap_in(&mut self, seq: TaskId) -> Result<u32, KvError> {
         if !self.can_swap_in(seq) {
             let free = self.free_pages();
@@ -213,11 +370,16 @@ impl BlockAllocator {
             return Err(KvError::OutOfPages { need, free });
         }
         let page_size = self.page_size;
-        let alloc = self.seqs.get_mut(&seq).unwrap();
-        let need = alloc.tokens.div_ceil(page_size).max(1);
+        let need = {
+            let alloc = self.seqs.get(&seq).expect("checked");
+            alloc.tokens.div_ceil(page_size).max(1)
+        };
+        let mut fresh = Vec::with_capacity(need as usize);
         for _ in 0..need {
-            alloc.pages.push(self.free.pop().unwrap());
+            fresh.push(self.take_free().expect("can_swap_in checked"));
         }
+        let alloc = self.seqs.get_mut(&seq).expect("checked");
+        alloc.pages = fresh;
         alloc.residence = KvResidence::Device;
         self.swapped_tokens -= alloc.tokens as u64;
         self.device_tokens += alloc.tokens as u64;
@@ -246,15 +408,28 @@ impl BlockAllocator {
         })
     }
 
-    /// Invariant check used by tests/debug builds: every page is either free
-    /// or owned by exactly one device-resident sequence.
+    /// Invariant check used by tests/debug builds, assuming no external
+    /// (prefix-cache) page holders: every page is either free or referenced
+    /// exactly as many times as sequences hold it.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut seen = vec![false; self.total_pages as usize];
-        for &p in &self.free {
-            if seen[p as usize] {
+        self.check_invariants_shared(&HashMap::new())
+    }
+
+    /// Full invariant check with external holders declared: `external[p]`
+    /// references to page `p` are held outside any sequence table (by the
+    /// prefix cache). Verifies conservation (free + in-use = total), exact
+    /// refcount accounting, and token bookkeeping.
+    pub fn check_invariants_shared(&self, external: &HashMap<PageId, u32>) -> Result<(), String> {
+        let mut holders = vec![0u32; self.total_pages as usize];
+        let mut in_free = vec![false; self.total_pages as usize];
+        for &Reverse(p) in self.free.iter() {
+            if in_free[p as usize] {
                 return Err(format!("page {p} double-listed in free"));
             }
-            seen[p as usize] = true;
+            in_free[p as usize] = true;
+            if self.refs[p as usize] != 0 {
+                return Err(format!("free page {p} has refcount {}", self.refs[p as usize]));
+            }
         }
         let mut dev_tokens = 0u64;
         let mut swap_tokens = 0u64;
@@ -266,10 +441,7 @@ impl BlockAllocator {
                         return Err(format!("{id}: pages don't cover tokens"));
                     }
                     for &p in &a.pages {
-                        if seen[p as usize] {
-                            return Err(format!("page {p} owned twice"));
-                        }
-                        seen[p as usize] = true;
+                        holders[p as usize] += 1;
                     }
                 }
                 KvResidence::Swapped => {
@@ -280,8 +452,25 @@ impl BlockAllocator {
                 }
             }
         }
-        if !seen.iter().all(|&s| s) {
-            return Err("leaked pages".into());
+        for p in 0..self.total_pages {
+            let want = holders[p as usize] + external.get(&p).copied().unwrap_or(0);
+            let got = self.refs[p as usize];
+            if got != want {
+                return Err(format!("page {p}: refcount {got} != holders {want}"));
+            }
+            if (got == 0) != in_free[p as usize] {
+                return Err(format!("page {p}: refcount {got} vs free-list {}", in_free[p as usize]));
+            }
+        }
+        // Conservation: free + in-use partitions the pool.
+        let in_use = self.refs.iter().filter(|&&r| r > 0).count() as u32;
+        if self.free_pages() + in_use != self.total_pages {
+            return Err(format!(
+                "conservation violated: {} free + {} in-use != {} total",
+                self.free_pages(),
+                in_use,
+                self.total_pages
+            ));
         }
         if dev_tokens != self.device_tokens {
             return Err(format!("device_tokens {} != {}", self.device_tokens, dev_tokens));
@@ -341,6 +530,9 @@ mod tests {
         let kv = BlockAllocator::new(4, 16);
         assert!(kv.can_admit(48)); // 3 pages + 1 headroom = 4
         assert!(!kv.can_admit(49)); // would need 4 + 1
+        // With 3 cached pages the 49-token prompt needs only 1 fresh + 1.
+        assert!(kv.can_admit_with_prefix(49, 3));
+        assert!(!kv.can_admit_with_prefix(64, 0));
     }
 
     #[test]
@@ -406,6 +598,134 @@ mod tests {
         let mut kv = BlockAllocator::new(2, 8);
         kv.allocate(tid(1), 0).unwrap();
         assert_eq!(kv.block_table(tid(1)).unwrap().len(), 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocation_order_is_release_order_independent() {
+        // Two allocators, identical allocations, mirrored release orders:
+        // the next allocation must receive the same pages in both.
+        let run = |release_order: [u32; 2]| {
+            let mut kv = BlockAllocator::new(8, 4);
+            kv.allocate(tid(1), 8).unwrap(); // pages 0,1
+            kv.allocate(tid(2), 8).unwrap(); // pages 2,3
+            kv.allocate(tid(3), 4).unwrap(); // page 4
+            for s in release_order {
+                kv.release(tid(s)).unwrap();
+            }
+            kv.allocate(tid(9), 12).unwrap();
+            kv.block_table(tid(9)).unwrap().to_vec()
+        };
+        assert_eq!(run([1, 2]), run([2, 1]));
+    }
+
+    #[test]
+    fn share_prefix_refcounts_pages() {
+        let mut kv = BlockAllocator::new(6, 4);
+        kv.allocate(tid(1), 8).unwrap(); // 2 private pages
+        let shared: Vec<PageId> = kv.block_table(tid(1)).unwrap().to_vec();
+        // Second sequence shares both pages + 1 fresh for its 10-token prompt.
+        kv.share_prefix(tid(2), &shared, 10).unwrap();
+        assert_eq!(kv.free_pages(), 3); // only 1 fresh page consumed
+        assert_eq!(kv.device_tokens(), 18); // logical: 8 + 10
+        for &p in &shared {
+            assert_eq!(kv.page_ref(p), 2);
+        }
+        kv.check_invariants().unwrap();
+        // Releasing the first sequence keeps the shared pages alive.
+        kv.release(tid(1)).unwrap();
+        assert_eq!(kv.free_pages(), 3);
+        for &p in &shared {
+            assert_eq!(kv.page_ref(p), 1);
+        }
+        kv.release(tid(2)).unwrap();
+        assert_eq!(kv.free_pages(), 6);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_into_shared_tail_copy_on_writes() {
+        let mut kv = BlockAllocator::new(6, 4);
+        kv.allocate(tid(1), 6).unwrap(); // 2 pages, tail half-full
+        let pages: Vec<PageId> = kv.block_table(tid(1)).unwrap().to_vec();
+        // tid(2) shares BOTH pages (incl. the half-full tail) for an equal
+        // 6-token prompt: the next decode token must not write into the
+        // shared tail.
+        kv.share_prefix(tid(2), &pages, 6).unwrap();
+        assert_eq!(kv.page_ref(pages[1]), 2);
+        kv.append_token(tid(2)).unwrap();
+        let t2 = kv.block_table(tid(2)).unwrap();
+        assert_ne!(t2[1], pages[1], "tail should have been copy-on-write split");
+        assert_eq!(kv.page_ref(pages[1]), 1);
+        assert_eq!(kv.seq_tokens(tid(2)), Some(7));
+        // tid(1)'s table is untouched.
+        assert_eq!(kv.block_table(tid(1)).unwrap(), pages.as_slice());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_split_is_noop_on_private_page() {
+        let mut kv = BlockAllocator::new(4, 4);
+        kv.allocate(tid(1), 4).unwrap();
+        let p = kv.block_table(tid(1)).unwrap()[0];
+        assert_eq!(kv.cow_split(tid(1), 0), Ok(p));
+        assert_eq!(kv.free_pages(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_split_needs_a_free_page() {
+        let mut kv = BlockAllocator::new(2, 4);
+        kv.allocate(tid(1), 4).unwrap();
+        let pages: Vec<PageId> = kv.block_table(tid(1)).unwrap().to_vec();
+        kv.share_prefix(tid(2), &pages, 4).unwrap(); // shares the only page
+        kv.allocate(tid(3), 4).unwrap(); // takes the last free page
+        assert_eq!(kv.cow_split(tid(2), 0), Err(KvError::OutOfPages { need: 1, free: 0 }));
+        assert!(!kv.can_append(tid(2)));
+        kv.release(tid(3)).unwrap();
+        assert!(kv.can_append(tid(2)));
+        kv.cow_split(tid(2), 0).unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_out_shared_pages_survive_for_other_holders() {
+        let mut kv = BlockAllocator::new(6, 4);
+        kv.allocate(tid(1), 8).unwrap();
+        let shared: Vec<PageId> = kv.block_table(tid(1)).unwrap().to_vec();
+        kv.share_prefix(tid(2), &shared, 8).unwrap();
+        kv.swap_out(tid(2)).unwrap();
+        // Shared pages still owned by tid(1); nothing returned to free that
+        // tid(1) uses.
+        for &p in &shared {
+            assert_eq!(kv.page_ref(p), 1);
+        }
+        assert_eq!(kv.free_pages(), 4);
+        kv.check_invariants().unwrap();
+        kv.swap_in(tid(2)).unwrap(); // comes back on private pages
+        assert_eq!(kv.free_pages(), 2);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn external_holders_accounted_via_shared_check() {
+        let mut kv = BlockAllocator::new(4, 4);
+        kv.allocate(tid(1), 8).unwrap();
+        let pages: Vec<PageId> = kv.block_table(tid(1)).unwrap().to_vec();
+        // An external cache pins both pages.
+        kv.retain_page(pages[0]);
+        kv.retain_page(pages[1]);
+        let external: HashMap<PageId, u32> = pages.iter().map(|&p| (p, 1)).collect();
+        kv.check_invariants_shared(&external).unwrap();
+        // Plain check must now flag the unexplained references.
+        assert!(kv.check_invariants().is_err());
+        // Sequence exits; cache still holds the pages (no leak to free).
+        kv.release(tid(1)).unwrap();
+        assert_eq!(kv.free_pages(), 2);
+        kv.check_invariants_shared(&external).unwrap();
+        kv.release_page(pages[0]);
+        kv.release_page(pages[1]);
+        assert_eq!(kv.free_pages(), 4);
         kv.check_invariants().unwrap();
     }
 }

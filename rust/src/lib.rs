@@ -24,6 +24,11 @@
 //! routes agents across N independent engine replicas under pluggable
 //! placement policies, extending Justitia's fairness guarantee to the
 //! cluster level (DESIGN.md §5).
+//!
+//! The [`prefix`] module deduplicates shared prompt prefixes: a radix-tree
+//! cache over token sequences with ref-counted, copy-on-write KV pages
+//! ([`kv`]), fractional cost accounting ([`cost`]), and a prefix-affinity
+//! cluster placement policy (DESIGN.md §8).
 
 #![warn(missing_docs)]
 
@@ -36,6 +41,7 @@ pub mod experiments;
 pub mod kv;
 pub mod metrics;
 pub mod predictor;
+pub mod prefix;
 pub mod runtime;
 pub mod sched;
 pub mod server;

@@ -5,7 +5,7 @@
 //! justitia serve        [--artifacts DIR] [--policy P] [--port N] [--replicas R] [--placement PL]
 //! justitia run          [--policy P] [--backend B] [--agents N] [--density D] [--seed S]
 //! justitia cluster      [--replicas R] [--placement PL] [--agents N] [--density D] [--seed S]
-//! justitia experiment   <fig3|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table1|all> [--agents N] [--seed S]
+//! justitia experiment   <fig3|fig7|...|fig13|table1|prefix_sharing|all> [--agents N] [--seed S]
 //! justitia gen-workload [--agents N] [--density D] [--seed S] --out FILE
 //! justitia train-predictor [--samples N] [--seed S]
 //! justitia gps          [--agents N] [--density D] [--seed S]   (GPS reference dump)
@@ -18,10 +18,11 @@ use justitia::config::{BackendProfile, Config, Policy};
 use justitia::cost::CostModel;
 use justitia::experiments as exp;
 use justitia::util::bench::{fmt_ns, ResultsFile};
+use justitia::util::json::Json;
 use justitia::workload::trace;
 
 fn main() {
-    let args = Args::from_env(&["predict", "verbose", "with-text", "occupancy"]);
+    let args = Args::from_env(&["predict", "verbose", "with-text", "occupancy", "prefix-cache"]);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -53,15 +54,17 @@ fn print_help() {
            serve            HTTP front-end over the PJRT model (POST /agents)\n\
            run              run one policy over a generated suite (simulator)\n\
            cluster          multi-replica scale-out experiment (replicas x placement)\n\
-           experiment       regenerate a paper figure/table (fig3..fig13, table1, all)\n\
+           experiment       regenerate a paper figure/table (fig3..fig13, table1,\n\
+                            prefix_sharing, all)\n\
            gen-workload     write a workload trace JSON\n\
            train-predictor  train + evaluate the per-class MLP predictor\n\
            gps              dump the GPS fluid reference for a suite\n\n\
          COMMON FLAGS:\n\
            --policy fcfs|sjf|parrot|vtc|srjf|justitia|justitia-c\n\
            --backend llama7b-a100|llama13b-4v100|qwen32b-h800|tiny-cpu\n\
-           --replicas N   --placement round-robin|least-loaded|cluster-vtime\n\
-           --agents N   --density 1|2|3   --seed S   --lambda L   --predict"
+           --replicas N   --placement round-robin|least-loaded|cluster-vtime|prefix-affinity\n\
+           --agents N   --density 1|2|3   --seed S   --lambda L   --predict\n\
+           --prefix-cache   --prefix-fanout F   --prefix-tokens T"
     );
 }
 
@@ -118,6 +121,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         fmt_ns(metrics.sched_latency_ms() * 1e6),
         t0.elapsed().as_secs_f64()
     );
+    if cfg.prefix_cache {
+        println!(
+            "prefix cache: hit rate {:.1}% ({}/{}), {} prefill tokens saved, peak {} pages",
+            metrics.prefix_hit_rate() * 100.0,
+            metrics.prefix_hits(),
+            metrics.prefix_lookups(),
+            metrics.prefill_tokens_saved(),
+            metrics.cache_pages_peak()
+        );
+    }
     Ok(())
 }
 
@@ -410,6 +423,64 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 d.decode_hist
             ));
         }
+    }
+    if run_all || which == "prefix_sharing" {
+        let mut out = ResultsFile::new("prefix_sharing.txt");
+        out.line("=== Prefix sharing: radix-tree KV dedup, cache off vs on ===");
+        let fanout = args.get_usize("prefix-fanout", 4);
+        let prefix_tokens = args.get_u64("prefix-tokens", 512) as u32;
+        let rows = exp::prefix_sharing(&Config::default(), n, 3.0, fanout, prefix_tokens, seed);
+        out.line(format!(
+            "workload: {n} agents, families of {fanout}, {prefix_tokens}-token shared prefix"
+        ));
+        out.line(format!(
+            "{:<8} {:>8} {:>12} {:>12} {:>9} {:>9} {:>9} {:>8} {:>6}",
+            "cache", "hit%", "prefill-run", "saved", "peak-pg", "avgJCT", "p99JCT", "maxmin", "done"
+        ));
+        for r in &rows {
+            out.line(format!(
+                "{:<8} {:>7.1}% {:>12} {:>12} {:>9} {:>8.1}s {:>8.1}s {:>7.2}x {:>6}",
+                if r.cache_enabled { "on" } else { "off" },
+                r.hit_rate * 100.0,
+                r.prefill_tokens_executed,
+                r.prefill_tokens_saved,
+                r.cache_pages_peak,
+                r.avg_jct,
+                r.p99_jct,
+                r.maxmin_ratio,
+                r.completed
+            ));
+        }
+        if rows.len() == 2 {
+            out.line(format!(
+                "sharing: {:.1}% of prefill tokens skipped, avg JCT {:+.1}%",
+                100.0 * rows[1].prefill_tokens_saved as f64
+                    / (rows[1].prefill_tokens_saved + rows[1].prefill_tokens_executed).max(1)
+                        as f64,
+                (rows[1].avg_jct / rows[0].avg_jct.max(1e-9) - 1.0) * 100.0
+            ));
+        }
+        // Machine-readable copy for kick-tires / EXPERIMENTS.md tooling.
+        let json = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    justitia::util::json::obj([
+                        ("cache", Json::Bool(r.cache_enabled)),
+                        ("hit_rate", Json::Num(r.hit_rate)),
+                        ("prefix_hits", Json::Num(r.prefix_hits as f64)),
+                        ("prefill_tokens_executed", Json::Num(r.prefill_tokens_executed as f64)),
+                        ("prefill_tokens_saved", Json::Num(r.prefill_tokens_saved as f64)),
+                        ("cache_pages_peak", Json::Num(r.cache_pages_peak as f64)),
+                        ("avg_jct", Json::Num(r.avg_jct)),
+                        ("p99_jct", Json::Num(r.p99_jct)),
+                        ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
+                        ("completed", Json::Num(r.completed as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write("results/prefix_sharing.json", json.pretty())?;
+        out.line("(wrote results/prefix_sharing.json)".to_string());
     }
     if run_all || which == "table1" {
         let mut out = ResultsFile::new("table1.txt");

@@ -18,6 +18,16 @@ pub struct RunMetrics {
     total_decode_seqs: u64,
     engine_time: f64,
     swap_outs: u64,
+    /// Prompt tokens actually prefilled (shared-prefix tokens excluded).
+    prefill_tokens_executed: u64,
+    /// Prefix-cache lookups at admission (0 when the cache is disabled).
+    prefix_lookups: u64,
+    /// Admissions that matched at least one cached page.
+    prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped via the prefix cache.
+    prefill_tokens_saved: u64,
+    /// Peak number of pages held by the prefix cache.
+    cache_pages_peak: u64,
     /// Host-side scheduling decision latency (Fig. 12): wall-clock time the
     /// scheduler spends per decision point.
     sched_latency: Welford,
@@ -64,13 +74,38 @@ impl RunMetrics {
         self.task_complete.insert(task, t);
     }
 
-    /// Record one engine iteration.
-    pub fn on_iteration(&mut self, now: f64, elapsed: f64, prefill: usize, decode: usize) {
+    /// Record one engine iteration. `prefill_tokens` is the number of prompt
+    /// tokens actually run through the model this iteration (cached-prefix
+    /// tokens excluded).
+    pub fn on_iteration(
+        &mut self,
+        now: f64,
+        elapsed: f64,
+        prefill: usize,
+        decode: usize,
+        prefill_tokens: u64,
+    ) {
         self.iterations += 1;
         self.total_prefill_seqs += prefill as u64;
         self.total_decode_seqs += decode as u64;
+        self.prefill_tokens_executed += prefill_tokens;
         self.engine_time = now;
         let _ = elapsed;
+    }
+
+    /// Record one prefix-cache admission lookup: `matched_tokens` prompt
+    /// tokens were served from cached pages (0 = miss).
+    pub fn on_prefix_lookup(&mut self, matched_tokens: u64) {
+        self.prefix_lookups += 1;
+        if matched_tokens > 0 {
+            self.prefix_hits += 1;
+            self.prefill_tokens_saved += matched_tokens;
+        }
+    }
+
+    /// Record the prefix cache's current page occupancy (peak gauge).
+    pub fn on_cache_occupancy(&mut self, pages: u64) {
+        self.cache_pages_peak = self.cache_pages_peak.max(pages);
     }
 
     /// Record a preemption swap-out.
@@ -108,6 +143,40 @@ impl RunMetrics {
     /// Swap-outs performed.
     pub fn swap_out_count(&self) -> u64 {
         self.swap_outs
+    }
+
+    /// Prompt tokens actually prefilled (cached-prefix tokens excluded).
+    pub fn prefill_tokens_executed(&self) -> u64 {
+        self.prefill_tokens_executed
+    }
+
+    /// Prefix-cache admission lookups.
+    pub fn prefix_lookups(&self) -> u64 {
+        self.prefix_lookups
+    }
+
+    /// Admissions that hit at least one cached page.
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits
+    }
+
+    /// Hit rate over admission lookups (0 when the cache never ran).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
+    /// Prompt tokens whose prefill was skipped via the prefix cache.
+    pub fn prefill_tokens_saved(&self) -> u64 {
+        self.prefill_tokens_saved
+    }
+
+    /// Peak pages held by the prefix cache over the run.
+    pub fn cache_pages_peak(&self) -> u64 {
+        self.cache_pages_peak
     }
 
     /// Arrival time of an agent.
@@ -183,6 +252,13 @@ impl RunMetrics {
         self.total_decode_seqs += other.total_decode_seqs;
         self.engine_time = self.engine_time.max(other.engine_time);
         self.swap_outs += other.swap_outs;
+        // Prefix-cache counters add across replicas; the occupancy gauge is
+        // a peak, so it maxes (each replica has its own cache).
+        self.prefill_tokens_executed += other.prefill_tokens_executed;
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefix_hits += other.prefix_hits;
+        self.prefill_tokens_saved += other.prefill_tokens_saved;
+        self.cache_pages_peak = self.cache_pages_peak.max(other.cache_pages_peak);
         self.sched_latency.merge(&other.sched_latency);
         self.kv_samples.extend(other.kv_samples.iter().cloned());
         self.kv_samples.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
@@ -313,13 +389,13 @@ mod tests {
         a.on_agent_complete(0, 4.0);
         a.on_task_admitted(tid(0, 0), 1.0);
         a.on_task_complete(tid(0, 0), 4.0);
-        a.on_iteration(4.0, 4.0, 1, 0);
+        a.on_iteration(4.0, 4.0, 1, 0, 120);
         a.record_sched_decision(Duration::from_micros(100));
 
         let mut b = RunMetrics::new();
         b.on_agent_arrival(1, 0.0);
         b.on_agent_complete(1, 10.0);
-        b.on_iteration(10.0, 10.0, 0, 2);
+        b.on_iteration(10.0, 10.0, 0, 2, 80);
         b.on_swap_out(tid(1, 0), 5.0);
         b.record_sched_decision(Duration::from_micros(300));
 
@@ -329,11 +405,49 @@ mod tests {
         assert_eq!(a.jct(1), Some(10.0));
         assert_eq!(a.iterations(), 2);
         assert_eq!(a.swap_out_count(), 1);
+        assert_eq!(a.prefill_tokens_executed(), 200);
         assert_eq!(a.engine_time(), 10.0); // max, not sum (cluster makespan)
         assert_eq!(a.sched_decisions(), 2);
         assert!((a.sched_latency_ms() - 0.2).abs() < 1e-9);
         assert!((a.avg_jct() - 7.0).abs() < 1e-12);
         assert!((a.p99_jct() - a.percentile_jct(99.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_counters_and_hit_rate() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.on_prefix_lookup(0); // miss
+        m.on_prefix_lookup(128); // hit
+        m.on_prefix_lookup(64); // hit
+        m.on_cache_occupancy(5);
+        m.on_cache_occupancy(3);
+        assert_eq!(m.prefix_lookups(), 3);
+        assert_eq!(m.prefix_hits(), 2);
+        assert!((m.prefix_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.prefill_tokens_saved(), 192);
+        assert_eq!(m.cache_pages_peak(), 5);
+    }
+
+    #[test]
+    fn prefix_counters_merge_sums_and_peaks() {
+        let mut a = RunMetrics::new();
+        a.on_prefix_lookup(100);
+        a.on_prefix_lookup(0);
+        a.on_cache_occupancy(7);
+        a.on_iteration(1.0, 1.0, 1, 0, 50);
+
+        let mut b = RunMetrics::new();
+        b.on_prefix_lookup(30);
+        b.on_cache_occupancy(4);
+        b.on_iteration(2.0, 1.0, 1, 0, 70);
+
+        a.merge(&b);
+        assert_eq!(a.prefix_lookups(), 3);
+        assert_eq!(a.prefix_hits(), 2);
+        assert_eq!(a.prefill_tokens_saved(), 130);
+        assert_eq!(a.prefill_tokens_executed(), 120);
+        assert_eq!(a.cache_pages_peak(), 7, "gauge must max, not add");
     }
 
     #[test]

@@ -1,0 +1,486 @@
+//! Radix-tree prefix cache over token sequences with ref-counted,
+//! copy-on-write KV page sharing (beyond the paper; cf. SGLang's RadixAttention
+//! and vLLM's block-level prefix caching, and Cao et al. 2025 on co-designing
+//! prefix locality with fair queuing).
+//!
+//! Task-parallel agents fan out inferences that open with the same system
+//! prompt + accumulated context, and agent *families* re-submit the same
+//! preamble across agents. Without sharing, every inference pays KV pages
+//! for its own copy of that prefix — inflating both prefill latency and the
+//! memory occupancy that Justitia's cost model (paper Eq. 1) charges. This
+//! module deduplicates it:
+//!
+//! * **Token identity.** The simulator has no real text, so prompt content
+//!   is derived deterministically: positions inside a task's
+//!   [`PrefixGroup`](crate::workload::PrefixGroup) draw from the family's
+//!   token stream, the remainder from a per-task stream
+//!   ([`prompt_token_ids`]). Equal group ⇒ byte-equal prefix; everything
+//!   else never collides at page granularity.
+//! * **The tree.** A radix tree at *page* granularity: each node is one full
+//!   page (`page_size` tokens) of prompt content plus the [`PageId`] holding
+//!   its KV. Children are keyed by their full token chunk, so lookup walks
+//!   whole pages; partial tail pages are never cached (they are the pages
+//!   decode writes into — the copy-on-write boundary).
+//! * **Ownership.** The tree holds one allocator reference per node
+//!   ([`BlockAllocator::retain_page`]); every *attached* sequence holds one
+//!   more per node on its path. Eviction (LRU over `refcount == 0` leaves)
+//!   only ever drops the tree's own reference, so a page vanishes exactly
+//!   when its last user lets go — conservation is checked by
+//!   [`BlockAllocator::check_invariants_shared`].
+
+use crate::kv::{BlockAllocator, PageId};
+use crate::workload::{PrefixGroup, TaskId};
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+const SHARED_SALT: u64 = 0x5a1e_d001_cafe_f00d;
+const UNIQUE_SALT: u64 = 0xd1b5_4a32_d192_ed03;
+
+/// SplitMix64 — the statelessly-seedable mixer behind the token streams.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Token at `pos` of the stream seeded by `seed`.
+fn token_at(seed: u64, pos: u32) -> u32 {
+    (splitmix(seed ^ ((pos as u64 + 1) << 1)) >> 16) as u32
+}
+
+/// Materialize the prompt token ids of one inference: the first
+/// `group.tokens` positions come from the family stream (identical for every
+/// task of the family), the rest from a task-unique stream.
+pub fn prompt_token_ids(task: TaskId, prompt_tokens: u32, group: Option<PrefixGroup>) -> Vec<u32> {
+    let unique = splitmix(UNIQUE_SALT ^ (((task.agent as u64) << 32) | task.index as u64));
+    let shared = group.map(|g| (splitmix(SHARED_SALT ^ g.id), g.tokens));
+    (0..prompt_tokens)
+        .map(|i| match shared {
+            Some((seed, len)) if i < len => token_at(seed, i),
+            _ => token_at(unique, i),
+        })
+        .collect()
+}
+
+/// Result of matching a prompt against the tree.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixMatch {
+    /// Matched tree nodes, root-childmost order (not yet attached).
+    pub path: Vec<usize>,
+    /// The matched nodes' KV pages, in block-table order.
+    pub pages: Vec<PageId>,
+    /// Tokens covered (= `pages.len() × page_size`).
+    pub tokens: u32,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// This node's page content (exactly `page_size` tokens).
+    tokens: Vec<u32>,
+    /// KV page holding that content (tree owns one allocator reference).
+    page: PageId,
+    /// Children keyed by their full token chunk (radix step = one page).
+    children: BTreeMap<Vec<u32>, usize>,
+    parent: usize,
+    /// Attached sequences at or below... strictly: sequences whose prefix
+    /// path includes this node. 0 ⇒ evictable once childless.
+    refs: u32,
+    /// LRU stamp (logical tick of the last lookup/insert touching it).
+    last_use: u64,
+}
+
+const ROOT: usize = 0;
+
+/// The radix-tree prefix cache. One per engine replica; owns nothing but
+/// tree structure — pages live in the engine's [`BlockAllocator`].
+#[derive(Debug, Clone)]
+pub struct PrefixCache {
+    page_size: u32,
+    /// Node arena; slot 0 is the (pageless) root, `None` = tombstone.
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    tick: u64,
+}
+
+impl PrefixCache {
+    /// Empty cache for pages of `page_size` tokens.
+    pub fn new(page_size: u32) -> Self {
+        assert!(page_size > 0);
+        let root = Node {
+            tokens: Vec::new(),
+            page: PageId::MAX,
+            children: BTreeMap::new(),
+            parent: ROOT,
+            refs: 0,
+            last_use: 0,
+        };
+        PrefixCache { page_size, nodes: vec![Some(root)], free_slots: Vec::new(), tick: 0 }
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("live node")
+    }
+
+    /// Number of pages currently held by the tree. O(1): every tombstoned
+    /// slot is recorded in `free_slots`, so live nodes = arena − root −
+    /// tombstones (this runs once per engine iteration for the occupancy
+    /// gauge).
+    pub fn cached_pages(&self) -> usize {
+        debug_assert_eq!(
+            self.nodes.len() - 1 - self.free_slots.len(),
+            self.nodes.iter().skip(1).filter(|n| n.is_some()).count()
+        );
+        self.nodes.len() - 1 - self.free_slots.len()
+    }
+
+    /// One tree-held reference per node page — the `external` argument for
+    /// [`BlockAllocator::check_invariants_shared`].
+    pub fn page_holds(&self) -> HashMap<PageId, u32> {
+        let mut holds: HashMap<PageId, u32> = HashMap::new();
+        for n in self.nodes.iter().skip(1).flatten() {
+            *holds.entry(n.page).or_insert(0) += 1;
+        }
+        holds
+    }
+
+    /// Walk the tree over `ids`, matching whole pages. Touches matched nodes
+    /// for LRU purposes; does not attach.
+    pub fn lookup(&mut self, ids: &[u32]) -> PrefixMatch {
+        self.tick += 1;
+        let tick = self.tick;
+        let ps = self.page_size as usize;
+        let mut m = PrefixMatch::default();
+        let mut cur = ROOT;
+        for chunk in ids.chunks_exact(ps) {
+            let Some(&child) = self.node(cur).children.get(chunk) else { break };
+            self.node_mut(child).last_use = tick;
+            m.pages.push(self.node(child).page);
+            m.path.push(child);
+            cur = child;
+        }
+        m.tokens = (m.pages.len() * ps) as u32;
+        m
+    }
+
+    /// Pin every node on `path` on behalf of one sequence (call after
+    /// [`lookup`](Self::lookup), before anything else can evict).
+    pub fn attach(&mut self, path: &[usize]) {
+        for &n in path {
+            self.node_mut(n).refs += 1;
+        }
+    }
+
+    /// Undo [`attach`](Self::attach) for one sequence.
+    pub fn detach(&mut self, path: &[usize]) {
+        for &n in path {
+            let r = &mut self.node_mut(n).refs;
+            debug_assert!(*r >= 1, "detach of unattached node");
+            *r = r.saturating_sub(1);
+        }
+    }
+
+    /// Register a freshly-prefilled sequence's full prompt pages and attach
+    /// the sequence to the whole chain. `ids` is the complete prompt token
+    /// stream, `table` the sequence's block table, and `prior` the path the
+    /// sequence already attached at admission (must be a prefix of the walk;
+    /// its nodes are not re-attached).
+    ///
+    /// Where a chunk already exists in the tree (a sibling prefilled it
+    /// first), the sequence *adopts* the cached page — its private copy is
+    /// released back to the pool ([`BlockAllocator::adopt_page`]) — so
+    /// same-iteration fan-out still deduplicates. Where it does not, the
+    /// sequence's own page is donated to the tree (tree takes a reference).
+    /// Returns the sequence's new full prefix path.
+    pub fn insert_and_attach(
+        &mut self,
+        seq: TaskId,
+        ids: &[u32],
+        kv: &mut BlockAllocator,
+        prior: &[usize],
+    ) -> Vec<usize> {
+        self.tick += 1;
+        let tick = self.tick;
+        let ps = self.page_size as usize;
+        let full = ids.len() / ps;
+        let mut path = Vec::with_capacity(full);
+        let mut cur = ROOT;
+        for i in 0..full {
+            let chunk = &ids[i * ps..(i + 1) * ps];
+            let next = match self.node(cur).children.get(chunk) {
+                Some(&c) => {
+                    // Chain already cached: adopt its page, drop ours.
+                    let page = self.node(c).page;
+                    kv.adopt_page(seq, i, page).expect("adopt cached page");
+                    c
+                }
+                None => {
+                    let page = kv.block_table(seq).expect("seq resident")[i];
+                    kv.retain_page(page); // the tree's own reference
+                    let node = Node {
+                        tokens: chunk.to_vec(),
+                        page,
+                        children: BTreeMap::new(),
+                        parent: cur,
+                        refs: 0,
+                        last_use: tick,
+                    };
+                    let slot = match self.free_slots.pop() {
+                        Some(s) => {
+                            self.nodes[s] = Some(node);
+                            s
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    self.node_mut(cur).children.insert(chunk.to_vec(), slot);
+                    slot
+                }
+            };
+            self.node_mut(next).last_use = tick;
+            path.push(next);
+            cur = next;
+        }
+        debug_assert!(
+            path.len() >= prior.len() && path[..prior.len()] == *prior,
+            "admission-time match must be a prefix of the prefill-time chain"
+        );
+        // `prior` nodes already carry this sequence's reference.
+        for &n in &path[prior.len()..] {
+            self.node_mut(n).refs += 1;
+        }
+        path
+    }
+
+    /// Upper bound on the pages eviction could return to the pool right
+    /// now: unpinned nodes whose page the tree is the sole holder of. Used
+    /// to decide whether an eviction pass can possibly satisfy a request —
+    /// without it, an infeasibly large admission would drain every
+    /// reclaimable chain and still block. (Over-approximates: an unpinned
+    /// inner node above a pinned descendant is counted but not evictable.)
+    pub fn reclaimable_pages(&self, kv: &BlockAllocator) -> u32 {
+        self.nodes
+            .iter()
+            .skip(1)
+            .flatten()
+            .filter(|n| n.refs == 0 && kv.page_ref(n.page) == 1)
+            .count() as u32
+    }
+
+    /// Evict LRU unpinned leaves until the allocator has at least
+    /// `target_free` free pages or nothing evictable remains. Returns the
+    /// number of nodes dropped. Deterministic: ties on the LRU stamp break
+    /// toward the lowest arena slot.
+    pub fn evict_until(&mut self, kv: &mut BlockAllocator, target_free: u32) -> usize {
+        let mut dropped = 0;
+        while kv.free_pages() < target_free {
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .skip(1)
+                .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+                .filter(|(_, n)| n.refs == 0 && n.children.is_empty())
+                .min_by_key(|(i, n)| (n.last_use, *i))
+                .map(|(i, _)| i);
+            let Some(i) = victim else { break };
+            let node = self.nodes[i].take().expect("victim live");
+            self.free_slots.push(i);
+            self.node_mut(node.parent).children.remove(&node.tokens);
+            kv.release_page(node.page);
+            dropped += 1;
+        }
+        dropped
+    }
+
+    /// Fractional occupancy charge for a sequence attached along `path`:
+    /// each shared page's `page_size` token slots are split evenly across
+    /// its current sharers (the attached sequences), so the sum of charges
+    /// over all sharers equals the physical occupancy — the
+    /// [`SharedMemoryCentric`](crate::cost::CostModel::SharedMemoryCentric)
+    /// accounting identity.
+    pub fn shared_charge(&self, path: &[usize]) -> f64 {
+        path.iter().map(|&n| self.page_size as f64 / self.node(n).refs.max(1) as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tid(i: u32) -> TaskId {
+        TaskId { agent: 0, index: i }
+    }
+
+    fn g(id: u64, tokens: u32) -> Option<PrefixGroup> {
+        Some(PrefixGroup { id, tokens })
+    }
+
+    #[test]
+    fn token_streams_share_exactly_the_prefix() {
+        let a = prompt_token_ids(tid(1), 40, g(7, 24));
+        let b = prompt_token_ids(TaskId { agent: 3, index: 0 }, 40, g(7, 24));
+        assert_eq!(a[..24], b[..24], "family positions must match");
+        assert_ne!(a[24..], b[24..], "task-unique positions must differ");
+        let c = prompt_token_ids(tid(1), 40, g(8, 24));
+        assert_ne!(a[..24], c[..24], "different families must differ");
+        let d = prompt_token_ids(tid(1), 40, None);
+        let e = prompt_token_ids(tid(2), 40, None);
+        assert_ne!(d, e);
+        // Deterministic.
+        assert_eq!(a, prompt_token_ids(tid(1), 40, g(7, 24)));
+    }
+
+    #[test]
+    fn insert_then_lookup_hits_full_pages_only() {
+        let mut kv = BlockAllocator::new(16, 4);
+        let mut cache = PrefixCache::new(4);
+        let ids = prompt_token_ids(tid(1), 10, g(1, 10)); // 2 full pages + 2
+        kv.allocate(tid(1), 10).unwrap(); // 3 pages
+        let path = cache.insert_and_attach(tid(1), &ids, &mut kv, &[]);
+        assert_eq!(path.len(), 2, "only full pages are cached");
+        assert_eq!(cache.cached_pages(), 2);
+
+        // A family sibling with a longer prompt matches both pages.
+        let ids2 = prompt_token_ids(tid(2), 12, g(1, 10));
+        let m = cache.lookup(&ids2);
+        assert_eq!(m.pages.len(), 2);
+        assert_eq!(m.tokens, 8);
+        assert_eq!(m.path, path);
+        // A stranger matches nothing.
+        let m = cache.lookup(&prompt_token_ids(tid(3), 12, None));
+        assert_eq!(m.pages.len(), 0);
+        kv.check_invariants_shared(&cache.page_holds()).unwrap();
+    }
+
+    #[test]
+    fn shared_admission_end_to_end() {
+        let mut kv = BlockAllocator::new(8, 4);
+        let mut cache = PrefixCache::new(4);
+        let ids1 = prompt_token_ids(tid(1), 8, g(5, 8));
+        kv.allocate(tid(1), 8).unwrap(); // 2 pages
+        let p1 = cache.insert_and_attach(tid(1), &ids1, &mut kv, &[]);
+
+        // Sibling arrives: matches, attaches, shares pages.
+        let ids2 = prompt_token_ids(tid(2), 8, g(5, 8));
+        let m = cache.lookup(&ids2);
+        assert_eq!(m.tokens, 8);
+        cache.attach(&m.path);
+        kv.share_prefix(tid(2), &m.pages, 8).unwrap();
+        assert_eq!(kv.free_pages(), 6, "no fresh pages for a full hit");
+        kv.check_invariants_shared(&cache.page_holds()).unwrap();
+
+        // Both leave; tree still pins the chain; then eviction reclaims it.
+        cache.detach(&p1);
+        kv.release(tid(1)).unwrap();
+        cache.detach(&m.path);
+        kv.release(tid(2)).unwrap();
+        assert_eq!(kv.free_pages(), 6, "tree still holds the chain");
+        let dropped = cache.evict_until(&mut kv, 8);
+        assert_eq!(dropped, 2);
+        assert_eq!(kv.free_pages(), 8);
+        assert_eq!(cache.cached_pages(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn attached_nodes_are_not_evictable() {
+        let mut kv = BlockAllocator::new(8, 4);
+        let mut cache = PrefixCache::new(4);
+        let ids = prompt_token_ids(tid(1), 8, g(2, 8));
+        kv.allocate(tid(1), 8).unwrap();
+        let path = cache.insert_and_attach(tid(1), &ids, &mut kv, &[]);
+        assert_eq!(cache.evict_until(&mut kv, 8), 0, "attached chain must be pinned");
+        cache.detach(&path);
+        // Inner node still has a child ⇒ only the leaf goes first; both go.
+        assert_eq!(cache.evict_until(&mut kv, 8), 2);
+        kv.release(tid(1)).unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru() {
+        let mut kv = BlockAllocator::new(16, 4);
+        let mut cache = PrefixCache::new(4);
+        // Two independent single-page chains.
+        for (i, fam) in [(1u32, 11u64), (2, 22)] {
+            let ids = prompt_token_ids(tid(i), 4, g(fam, 4));
+            kv.allocate(tid(i), 4).unwrap();
+            let p = cache.insert_and_attach(tid(i), &ids, &mut kv, &[]);
+            cache.detach(&p);
+            kv.release(tid(i)).unwrap();
+        }
+        // Touch family 11 so family 22 becomes LRU.
+        cache.lookup(&prompt_token_ids(tid(9), 4, g(11, 4)));
+        let holds_before = cache.page_holds();
+        assert_eq!(holds_before.len(), 2);
+        let free_before = kv.free_pages();
+        assert_eq!(cache.evict_until(&mut kv, free_before + 1), 1);
+        // The surviving node is family 11's (still matched).
+        assert_eq!(cache.lookup(&prompt_token_ids(tid(9), 4, g(11, 4))).pages.len(), 1);
+        assert_eq!(cache.lookup(&prompt_token_ids(tid(9), 4, g(22, 4))).pages.len(), 0);
+    }
+
+    #[test]
+    fn sibling_insert_adopts_cached_pages() {
+        let mut kv = BlockAllocator::new(8, 4);
+        let mut cache = PrefixCache::new(4);
+        let ids1 = prompt_token_ids(tid(1), 8, g(9, 8));
+        let ids2 = prompt_token_ids(tid(2), 8, g(9, 8));
+        // Both admitted before either prefilled (same engine iteration):
+        // both hold private pages.
+        kv.allocate(tid(1), 8).unwrap();
+        kv.allocate(tid(2), 8).unwrap();
+        assert_eq!(kv.free_pages(), 4);
+        let p1 = cache.insert_and_attach(tid(1), &ids1, &mut kv, &[]);
+        // Second insert finds the chain and adopts: its 2 private pages are
+        // returned to the pool.
+        let p2 = cache.insert_and_attach(tid(2), &ids2, &mut kv, &[]);
+        assert_eq!(p1, p2);
+        assert_eq!(kv.free_pages(), 6);
+        assert_eq!(kv.block_table(tid(1)).unwrap(), kv.block_table(tid(2)).unwrap());
+        kv.check_invariants_shared(&cache.page_holds()).unwrap();
+        assert!((cache.shared_charge(&p1) - 4.0).abs() < 1e-12, "2 sharers × (4/2 per page)");
+    }
+
+    #[test]
+    fn reclaimable_counts_only_sole_holder_unpinned_nodes() {
+        let mut kv = BlockAllocator::new(8, 4);
+        let mut cache = PrefixCache::new(4);
+        let ids = prompt_token_ids(tid(1), 8, g(6, 8));
+        kv.allocate(tid(1), 8).unwrap();
+        let path = cache.insert_and_attach(tid(1), &ids, &mut kv, &[]);
+        // Attached: nothing reclaimable.
+        assert_eq!(cache.reclaimable_pages(&kv), 0);
+        // Detached but the sequence still holds the pages: evicting would
+        // free no memory, so still nothing reclaimable.
+        cache.detach(&path);
+        assert_eq!(cache.reclaimable_pages(&kv), 0);
+        // Once the sequence exits, both chain pages are reclaimable.
+        kv.release(tid(1)).unwrap();
+        assert_eq!(cache.reclaimable_pages(&kv), 2);
+        cache.evict_until(&mut kv, 8);
+        assert_eq!(cache.reclaimable_pages(&kv), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_charge_splits_across_sharers() {
+        let mut kv = BlockAllocator::new(8, 4);
+        let mut cache = PrefixCache::new(4);
+        let ids = prompt_token_ids(tid(1), 4, g(3, 4));
+        kv.allocate(tid(1), 4).unwrap();
+        let path = cache.insert_and_attach(tid(1), &ids, &mut kv, &[]);
+        assert!((cache.shared_charge(&path) - 4.0).abs() < 1e-12);
+        cache.attach(&path); // a second sharer
+        assert!((cache.shared_charge(&path) - 2.0).abs() < 1e-12);
+        cache.detach(&path);
+        assert!((cache.shared_charge(&path) - 4.0).abs() < 1e-12);
+    }
+}

@@ -116,6 +116,7 @@ pub fn parse_agent_submission(
                     prompt_tokens: t.get("p").as_u64().context("p")? as u32,
                     decode_tokens: t.get("d").as_u64().context("d")? as u32,
                     kind: "http",
+                    prefix_group: None,
                 });
                 index += 1;
             }

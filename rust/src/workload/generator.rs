@@ -58,6 +58,7 @@ impl Generator {
                     prompt_tokens: prompt,
                     decode_tokens: decode,
                     kind: st.kind,
+                    prefix_group: None,
                 });
                 index += 1;
             }

@@ -31,6 +31,21 @@ impl std::fmt::Display for TaskId {
     }
 }
 
+/// Declares that the first `tokens` prompt tokens of an inference are the
+/// *same content* as every other inference carrying the same `id` — the
+/// shared system-prompt + accumulated-context prefix that task-parallel
+/// agents fan out over (and that agent *families* re-submit across agents).
+/// The prefix cache ([`crate::prefix`]) derives identical token streams from
+/// equal ids, so two inferences share KV pages exactly up to
+/// `min(tokens, prompt_tokens)` of both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrefixGroup {
+    /// Content identity of the shared prefix (suite-unique per family).
+    pub id: u64,
+    /// Length of the shared prefix in tokens.
+    pub tokens: u32,
+}
+
 /// One LLM inference task. `prompt_tokens`/`decode_tokens` are the ground
 /// truth the engine executes; the scheduler only sees predictions.
 #[derive(Debug, Clone, PartialEq)]
@@ -45,6 +60,9 @@ pub struct InferenceSpec {
     pub decode_tokens: u32,
     /// Name of the inference kind (e.g. "generate-summary"), Appendix-A style.
     pub kind: &'static str,
+    /// Shared-prefix annotation (`None` = fully unique prompt). Inert unless
+    /// the prefix cache is enabled.
+    pub prefix_group: Option<PrefixGroup>,
 }
 
 /// One task-parallel LLM agent.
@@ -81,6 +99,12 @@ impl AgentSpec {
     /// Total prompt + decode tokens (used by stats / Fig. 13).
     pub fn total_tokens(&self) -> u64 {
         self.tasks().map(|t| (t.prompt_tokens + t.decode_tokens) as u64).sum()
+    }
+
+    /// The agent's dominant shared-prefix family, if any task carries one
+    /// (the cluster dispatcher's prefix-affinity placement keys on this).
+    pub fn prefix_group_id(&self) -> Option<u64> {
+        self.tasks().find_map(|t| t.prefix_group.map(|g| g.id))
     }
 }
 
@@ -131,6 +155,7 @@ pub mod test_support {
             prompt_tokens: prompt,
             decode_tokens: decode,
             kind: "test",
+            prefix_group: None,
         }
     }
 
@@ -201,5 +226,13 @@ mod tests {
     fn task_id_display() {
         let t = TaskId { agent: 3, index: 11 };
         assert_eq!(t.to_string(), "a3-t11");
+    }
+
+    #[test]
+    fn prefix_group_id_finds_first_annotation() {
+        let mut a = agent_with_stages(vec![vec![inference(0, 0, 10, 5), inference(1, 0, 10, 5)]]);
+        assert_eq!(a.prefix_group_id(), None);
+        a.stages[0][1].prefix_group = Some(PrefixGroup { id: 7, tokens: 64 });
+        assert_eq!(a.prefix_group_id(), Some(7));
     }
 }

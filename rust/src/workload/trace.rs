@@ -49,7 +49,14 @@ pub fn sample_class(rng: &mut Rng, class_mix: &[f64; 3]) -> AgentClass {
     *rng.choose(&classes)
 }
 
-/// Build the full §5.1 workload suite.
+/// Build the full §5.1 workload suite. When the config's shared-prefix knobs
+/// are set (`prefix_fanout ≥ 2` and `prefix_tokens > 0`), the suite is
+/// additionally partitioned into *agent families*: consecutive agents (in
+/// arrival order) are grouped `prefix_fanout` at a time and every inference
+/// of a family is annotated with the same [`PrefixGroup`](crate::workload::PrefixGroup)
+/// — modeling fleets of agents re-submitting the same long system prompt +
+/// context. The annotation is inert unless the engine's prefix cache is on,
+/// so the default (0/0) suite is bit-identical to the unannotated one.
 pub fn build_suite(cfg: &crate::config::WorkloadConfig) -> Suite {
     let mut rng = Rng::with_stream(cfg.seed, 0x7ace);
     let mut gen = Generator::new(cfg.seed ^ 0xabcd_ef01);
@@ -62,7 +69,30 @@ pub fn build_suite(cfg: &crate::config::WorkloadConfig) -> Suite {
             gen.agent(class, i as u32, t)
         })
         .collect();
-    Suite::new(agents)
+    let mut suite = Suite::new(agents);
+    if cfg.prefix_fanout >= 2 && cfg.prefix_tokens > 0 {
+        annotate_families(&mut suite, cfg.prefix_fanout, cfg.prefix_tokens, cfg.seed);
+    }
+    suite
+}
+
+/// Stamp shared-prefix family annotations onto an existing suite: agents
+/// `[k·fanout, (k+1)·fanout)` in arrival order form family `k`, all sharing
+/// one `prefix_tokens`-long prompt prefix (clamped per task to its own
+/// prompt length by the cache).
+pub fn annotate_families(suite: &mut Suite, fanout: usize, prefix_tokens: u32, seed: u64) {
+    for (i, a) in suite.agents.iter_mut().enumerate() {
+        // Family ids are salted with the seed so two suites never alias.
+        let group = crate::workload::PrefixGroup {
+            id: seed.rotate_left(24) ^ ((i / fanout) as u64),
+            tokens: prefix_tokens,
+        };
+        for stage in &mut a.stages {
+            for t in stage {
+                t.prefix_group = Some(group);
+            }
+        }
+    }
 }
 
 /// Serialize a suite to JSON (tasks only — input text elided by default to
@@ -79,11 +109,20 @@ pub fn suite_to_json(suite: &Suite, with_text: bool) -> Json {
                     Json::Arr(
                         st.iter()
                             .map(|t| {
-                                obj([
+                                let mut o = obj([
                                     ("p", t.prompt_tokens.into()),
                                     ("d", t.decode_tokens.into()),
                                     ("kind", t.kind.into()),
-                                ])
+                                ]);
+                                if let Some(g) = t.prefix_group {
+                                    if let Json::Obj(map) = &mut o {
+                                        // Hex string: u64 ids survive the
+                                        // f64-backed number representation.
+                                        map.insert("pg".into(), Json::Str(format!("{:x}", g.id)));
+                                        map.insert("pt".into(), Json::Num(g.tokens as f64));
+                                    }
+                                }
+                                o
                             })
                             .collect(),
                     )
@@ -118,12 +157,24 @@ pub fn suite_from_json(v: &Json) -> Result<Suite> {
             let kind = template.stages.get(s).map(|t| t.kind).unwrap_or("replay");
             let mut tasks = Vec::new();
             for t in st.as_arr().context("stage")? {
+                let prefix_group = match (t.get("pg").as_str(), t.get("pt").as_u64()) {
+                    (Some(hex), Some(tokens)) => Some(crate::workload::PrefixGroup {
+                        id: u64::from_str_radix(hex, 16).context("pg")?,
+                        tokens: tokens as u32,
+                    }),
+                    (None, None) => None,
+                    _ => anyhow::bail!(
+                        "agent {i}: task has a partial prefix-group annotation \
+                         (both \"pg\" and \"pt\" are required)"
+                    ),
+                };
                 tasks.push(crate::workload::InferenceSpec {
                     id: crate::workload::TaskId { agent: i as u32, index },
                     stage: s as u32,
                     prompt_tokens: t.get("p").as_u64().context("p")? as u32,
                     decode_tokens: t.get("d").as_u64().context("d")? as u32,
                     kind,
+                    prefix_group,
                 });
                 index += 1;
             }
@@ -213,7 +264,13 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let cfg = WorkloadConfig { n_agents: 12, window_secs: 60.0, ..Default::default() };
+        let cfg = WorkloadConfig {
+            n_agents: 12,
+            window_secs: 60.0,
+            prefix_fanout: 3,
+            prefix_tokens: 256,
+            ..Default::default()
+        };
         let suite = build_suite(&cfg);
         let j = suite_to_json(&suite, true);
         let back = suite_from_json(&j).unwrap();
@@ -225,7 +282,43 @@ mod tests {
             assert_eq!(a.input_text, b.input_text);
             for (x, y) in a.tasks().zip(b.tasks()) {
                 assert_eq!((x.prompt_tokens, x.decode_tokens), (y.prompt_tokens, y.decode_tokens));
+                assert_eq!(x.prefix_group, y.prefix_group);
             }
+        }
+    }
+
+    #[test]
+    fn shared_prefix_families_group_consecutive_agents() {
+        let cfg = WorkloadConfig {
+            n_agents: 10,
+            window_secs: 60.0,
+            prefix_fanout: 4,
+            prefix_tokens: 512,
+            ..Default::default()
+        };
+        let suite = build_suite(&cfg);
+        let gid = |i: usize| suite.agents[i].prefix_group_id().unwrap();
+        // Agents 0..4 share one family, 4..8 another, 8..10 the tail family.
+        assert_eq!(gid(0), gid(3));
+        assert_ne!(gid(3), gid(4));
+        assert_eq!(gid(4), gid(7));
+        assert_eq!(gid(8), gid(9));
+        // Every task carries the annotation with the configured length.
+        for a in &suite.agents {
+            for t in a.tasks() {
+                assert_eq!(t.prefix_group.unwrap().tokens, 512);
+            }
+        }
+        // Default knobs leave the suite unannotated (and otherwise equal).
+        let plain = build_suite(&WorkloadConfig {
+            n_agents: 10,
+            window_secs: 60.0,
+            ..Default::default()
+        });
+        assert!(plain.agents.iter().all(|a| a.prefix_group_id().is_none()));
+        for (a, b) in suite.agents.iter().zip(plain.agents.iter()) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.n_tasks(), b.n_tasks());
         }
     }
 

@@ -1,0 +1,144 @@
+//! Property test (ISSUE 2 satellite): `BlockAllocator` conservation under
+//! randomized alloc / extend / share / cow / swap / free sequences.
+//!
+//! Invariants after every operation (via `check_invariants_shared`):
+//!   * conservation — free pages + in-use pages == total pages (swapped
+//!     sequences hold no device pages, so their slots sit in `free`);
+//!   * every non-free page's refcount ≥ 1 and exactly equal to the number
+//!     of block tables holding it;
+//!   * token accounting — `device_tokens` / `swapped_tokens` match the sum
+//!     over sequences.
+//! After releasing every live sequence the pool must be fully free again
+//! (no leaked pages, shared or otherwise).
+
+use justitia::kv::{BlockAllocator, KvResidence, PageId};
+use justitia::util::prop::{check, Config, U64Range, VecOf};
+use justitia::workload::TaskId;
+
+const PAGES: u32 = 12;
+const PAGE_SIZE: u32 = 4;
+
+fn tid(i: u32) -> TaskId {
+    TaskId { agent: 0, index: i }
+}
+
+fn pick(v: &[u32], sel: usize) -> Option<u32> {
+    if v.is_empty() {
+        None
+    } else {
+        Some(v[sel % v.len()])
+    }
+}
+
+/// Interpret one op-code sequence against a small allocator. Invalid ops
+/// (no live sequence, wrong residence) are skipped; fallible ops are allowed
+/// to fail with `OutOfPages` — what must never happen is an invariant break.
+fn run_ops(ops: &[u64]) -> Result<(), String> {
+    let mut kv = BlockAllocator::new(PAGES, PAGE_SIZE);
+    let mut next_id: u32 = 0;
+    let mut live: Vec<u32> = Vec::new();
+    for (step, &op) in ops.iter().enumerate() {
+        let kind = op % 7;
+        let sel = (op / 7) as usize;
+        match kind {
+            // Allocate a fresh sequence with a 0..19-token prompt.
+            0 => {
+                let prompt = (op / 49 % 20) as u32;
+                let id = next_id;
+                next_id += 1;
+                if kv.allocate(tid(id), prompt).is_ok() {
+                    live.push(id);
+                }
+            }
+            // Append one decode token (may allocate / copy-on-write).
+            1 => {
+                if let Some(s) = pick(&live, sel) {
+                    let _ = kv.append_token(tid(s));
+                }
+            }
+            // Release.
+            2 => {
+                if let Some(s) = pick(&live, sel) {
+                    kv.release(tid(s)).map_err(|e| format!("step {step}: release: {e}"))?;
+                    live.retain(|&x| x != s);
+                }
+            }
+            // Swap out.
+            3 => {
+                if let Some(s) = pick(&live, sel) {
+                    if kv.residence(tid(s)) == Some(KvResidence::Device) {
+                        kv.swap_out(tid(s)).map_err(|e| format!("step {step}: swap_out: {e}"))?;
+                    }
+                }
+            }
+            // Swap in.
+            4 => {
+                if let Some(s) = pick(&live, sel) {
+                    if kv.can_swap_in(tid(s)) {
+                        kv.swap_in(tid(s)).map_err(|e| format!("step {step}: swap_in: {e}"))?;
+                    }
+                }
+            }
+            // Share a donor's full prompt pages into a new sequence.
+            5 => {
+                if let Some(donor) = pick(&live, sel) {
+                    if kv.residence(tid(donor)) == Some(KvResidence::Device) {
+                        let tokens = kv.seq_tokens(tid(donor)).unwrap();
+                        let full = (tokens / PAGE_SIZE) as usize;
+                        let shared: Vec<PageId> =
+                            kv.block_table(tid(donor)).unwrap()[..full].to_vec();
+                        let id = next_id;
+                        next_id += 1;
+                        if kv.share_prefix(tid(id), &shared, tokens).is_ok() {
+                            live.push(id);
+                        }
+                    }
+                }
+            }
+            // Copy-on-write split of an arbitrary table page.
+            6 => {
+                if let Some(s) = pick(&live, sel) {
+                    if kv.residence(tid(s)) == Some(KvResidence::Device) {
+                        let n = kv.block_table(tid(s)).unwrap().len();
+                        let _ = kv.cow_split(tid(s), sel % n.max(1));
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        kv.check_invariants().map_err(|e| format!("step {step} (op {op}): {e}"))?;
+    }
+    // Drain: releasing everything must return the pool to fully free.
+    for s in live {
+        kv.release(tid(s)).map_err(|e| format!("drain: {e}"))?;
+    }
+    if kv.free_pages() != PAGES {
+        return Err(format!("leaked pages: {} free of {PAGES} after drain", kv.free_pages()));
+    }
+    kv.check_invariants().map_err(|e| format!("after drain: {e}"))
+}
+
+#[test]
+fn kv_conservation_under_random_op_sequences() {
+    let cfg = Config { cases: 250, seed: 0x5eed_b10c, max_shrink_steps: 400 };
+    let strat = VecOf { inner: U64Range { lo: 0, hi: 1 << 40 }, min_len: 0, max_len: 120 };
+    check(&cfg, &strat, |ops| run_ops(ops));
+}
+
+#[test]
+fn kv_allocation_trace_is_release_order_independent() {
+    // The same logical history with two different release interleavings must
+    // hand out identical pages afterwards (deterministic min-heap free list).
+    let trace = |first: u32, second: u32| {
+        let mut kv = BlockAllocator::new(10, 4);
+        for i in 0..4 {
+            kv.allocate(tid(i), 8).unwrap();
+        }
+        kv.release(tid(first)).unwrap();
+        kv.release(tid(second)).unwrap();
+        kv.allocate(tid(10), 16).unwrap();
+        kv.block_table(tid(10)).unwrap().to_vec()
+    };
+    assert_eq!(trace(1, 2), trace(2, 1));
+    assert_eq!(trace(0, 3), trace(3, 0));
+}

@@ -109,6 +109,47 @@ fn scale_out_helps_and_cluster_vtime_beats_round_robin_on_fairness() {
 }
 
 #[test]
+fn prefix_cache_disabled_replay_is_bit_identical_to_baseline() {
+    // ISSUE 2 acceptance: with the prefix cache disabled (the config
+    // default), single-replica trace replay must be bit-identical to the
+    // pre-cache engine. Two equivalences pin that down:
+    //   1. a shared-prefix-annotated suite replayed with the cache off
+    //      equals the same suite with every annotation stripped (the new
+    //      workload metadata is inert), and
+    //   2. the default suite replayed through the default config equals the
+    //      cluster path at one replica for every placement policy,
+    //      including the new prefix-affinity.
+    let mut cfg = cfg_with(100, 3.0, 42, 1, Placement::PrefixAffinity);
+    cfg.workload.prefix_fanout = 4;
+    cfg.workload.prefix_tokens = 512;
+    assert!(!cfg.prefix_cache, "prefix cache must default to off");
+    let annotated = trace::build_suite(&cfg.workload);
+    assert!(annotated.agents.iter().all(|a| a.prefix_group_id().is_some()));
+    let mut stripped = annotated.clone();
+    for a in &mut stripped.agents {
+        for st in &mut a.stages {
+            for t in st {
+                t.prefix_group = None;
+            }
+        }
+    }
+    let m_annotated = run_policy_oracle(&cfg, &annotated, Policy::Justitia);
+    let m_stripped = run_policy_oracle(&cfg, &stripped, Policy::Justitia);
+    assert_eq!(
+        m_annotated.jcts(),
+        m_stripped.jcts(),
+        "prefix annotations must be inert while the cache is off"
+    );
+    assert_eq!(m_annotated.prefix_lookups(), 0);
+    assert_eq!(m_annotated.prefill_tokens_saved(), 0);
+
+    // One replica + prefix-affinity placement degenerates to the single
+    // engine bit for bit, like every other placement.
+    let cluster = run_cluster(&cfg, &annotated);
+    assert_eq!(cluster.merged_metrics().jcts(), m_annotated.jcts());
+}
+
+#[test]
 fn online_path_agrees_with_replay_on_completions() {
     // Drive the same agents through the online submit/step path; every agent
     // must complete and land on exactly one replica.

@@ -1,0 +1,113 @@
+//! End-to-end prefix-sharing acceptance (ISSUE 2):
+//!
+//! * enabled on a shared-prefix workload, the cache produces hits, skips
+//!   prefill work, and leaves every KV invariant intact (refcounts exact,
+//!   pool conserved);
+//! * the `prefix_sharing` experiment reports hit rate > 0, strictly fewer
+//!   prefill tokens executed than the no-sharing run, and a max-min
+//!   fair-share ratio vs GPS no worse than without sharing;
+//! * cache-enabled runs are exactly reproducible (same seed → same JCTs);
+//! * prefix-affinity placement keeps families on their home replicas while
+//!   completing everything.
+
+use justitia::config::{Config, Policy, WorkloadConfig};
+use justitia::cost;
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::experiments::{prefix_sharing, rate_scale};
+use justitia::workload::trace;
+
+fn shared_cfg(n_agents: usize, seed: u64, cache: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }
+        .with_density(3.0)
+        .with_shared_prefix(4, 512);
+    cfg.prefix_cache = cache;
+    cfg
+}
+
+fn run_engine(cfg: &Config) -> Engine<SimBackend> {
+    let suite = trace::build_suite(&cfg.workload);
+    let costs = cost::shared_agent_costs(&suite);
+    let sched = justitia::sched::build(Policy::Justitia, cfg.backend.kv_tokens, rate_scale(cfg));
+    let mut engine = Engine::new(cfg, sched, SimBackend::new(&cfg.backend));
+    engine.run_suite(&suite, |a| costs[&a.id]);
+    engine
+}
+
+#[test]
+fn cache_hits_skip_prefill_and_preserve_invariants() {
+    let cfg = shared_cfg(80, 7, true);
+    let engine = run_engine(&cfg);
+    let m = &engine.metrics;
+    assert_eq!(m.completed_agents(), 80, "dropped agents");
+    assert!(m.prefix_lookups() > 0);
+    assert!(m.prefix_hits() > 0, "families of 4 with 512-token prefixes must hit");
+    assert!(m.prefix_hit_rate() > 0.0);
+    assert!(m.prefill_tokens_saved() > 0);
+    assert!(m.cache_pages_peak() > 0);
+    // Page accounting stays exact with the tree's pins declared.
+    engine.check_kv_invariants().unwrap();
+    assert_eq!(engine.kv.device_tokens(), 0, "device pool not drained");
+    // The cache never outgrows the pool.
+    let cache = engine.prefix_cache().unwrap();
+    assert!(cache.cached_pages() as u64 <= engine.kv.total_pages() as u64);
+}
+
+#[test]
+fn cache_enabled_runs_are_reproducible() {
+    let a = run_engine(&shared_cfg(60, 21, true));
+    let b = run_engine(&shared_cfg(60, 21, true));
+    assert_eq!(a.metrics.jcts(), b.metrics.jcts(), "cache-enabled replay diverged");
+    assert_eq!(a.metrics.prefix_hits(), b.metrics.prefix_hits());
+    assert_eq!(a.metrics.prefill_tokens_executed(), b.metrics.prefill_tokens_executed());
+}
+
+#[test]
+fn experiment_meets_acceptance_bars() {
+    let rows = prefix_sharing(&Config::default(), 80, 3.0, 4, 512, 42);
+    let (off, on) = (&rows[0], &rows[1]);
+    assert_eq!(off.completed, 80);
+    assert_eq!(on.completed, 80);
+    assert!(on.hit_rate > 0.0, "hit rate must be positive");
+    assert!(
+        on.prefill_tokens_executed < off.prefill_tokens_executed,
+        "prefill executed must drop: {} (on) vs {} (off)",
+        on.prefill_tokens_executed,
+        off.prefill_tokens_executed
+    );
+    assert!(
+        on.maxmin_ratio <= off.maxmin_ratio * 1.10,
+        "fair-share ratio regressed: {} (on) vs {} (off)",
+        on.maxmin_ratio,
+        off.maxmin_ratio
+    );
+}
+
+#[test]
+fn prefix_affinity_cluster_serves_family_workload() {
+    use justitia::cluster::Placement;
+    use justitia::experiments::build_sim_cluster;
+
+    let mut cfg = shared_cfg(48, 5, true);
+    cfg.cluster.replicas = 4;
+    cfg.cluster.placement = Placement::PrefixAffinity;
+    let suite = trace::build_suite(&cfg.workload);
+    let costs = cost::shared_agent_costs(&suite);
+    let mut cluster = build_sim_cluster(&cfg, Policy::Justitia);
+    cluster.run_suite(&suite, |a| costs[&a.id]);
+    let m = cluster.merged_metrics();
+    assert_eq!(m.completed_agents(), 48);
+    // Families stay together...
+    let mut homes = std::collections::HashMap::new();
+    for a in &suite.agents {
+        let g = a.prefix_group_id().unwrap();
+        let r = cluster.replica_of(a.id).unwrap();
+        assert_eq!(*homes.entry(g).or_insert(r), r, "family {g} split");
+    }
+    // ...which turns later family members into cache hits.
+    assert!(m.prefix_hits() > 0);
+    for r in 0..cluster.n_replicas() {
+        cluster.replica(r).check_kv_invariants().unwrap();
+    }
+}
