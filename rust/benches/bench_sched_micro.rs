@@ -21,7 +21,7 @@ fn main() {
         // Pre-populate a Justitia scheduler with n waiting agents.
         let mut s = justitia::sched::justitia::Justitia::new(7344, 20.0);
         for i in 0..n {
-            s.on_agent_arrival(&AgentInfo { id: i, arrival: i as f64 * 0.01, cost: (i % 97) as f64 * 100.0 }, i as f64 * 0.01);
+            s.on_agent_arrival(&AgentInfo::new(i, i as f64 * 0.01, (i % 97) as f64 * 100.0), i as f64 * 0.01);
             Scheduler::push_task(
                 &mut s,
                 TaskInfo { id: TaskId { agent: i, index: 0 }, prompt_tokens: 100, predicted_decode: 50.0, seq: i as u64 },
@@ -31,7 +31,7 @@ fn main() {
         b.bench(&format!("justitia.arrival+tag (N={n})"), |i| {
             let id = n + (i as u32 % 1000);
             s.on_agent_arrival(
-                &AgentInfo { id, arrival: 1e6, cost: 123.0 },
+                &AgentInfo::new(id, 1e6, 123.0),
                 1e6 + i as f64,
             );
             black_box(s.tag(id));

@@ -178,6 +178,16 @@ pub struct WorkloadConfig {
     pub prefix_fanout: usize,
     /// Length of the shared prompt prefix in tokens (0 disables).
     pub prefix_tokens: u32,
+    /// Generate DAG-structured agents (map-reduce / tree / pipeline shapes,
+    /// DESIGN.md §9) instead of the paper's staged agents. Off by default:
+    /// the staged suite is bit-identical to pre-DAG builds.
+    pub dag: bool,
+    /// Probability that a completing task of a DAG agent spawns child tasks
+    /// (0 disables dynamic spawning; only meaningful with `dag`).
+    pub spawn_prob: f64,
+    /// Children per spawn event, and the branching factor of tree-shaped
+    /// DAG agents.
+    pub branch: u32,
 }
 
 impl Default for WorkloadConfig {
@@ -189,6 +199,9 @@ impl Default for WorkloadConfig {
             seed: 42,
             prefix_fanout: 0,
             prefix_tokens: 0,
+            dag: false,
+            spawn_prob: 0.0,
+            branch: 2,
         }
     }
 }
@@ -204,6 +217,15 @@ impl WorkloadConfig {
     pub fn with_shared_prefix(mut self, fanout: usize, prefix_tokens: u32) -> Self {
         self.prefix_fanout = fanout;
         self.prefix_tokens = prefix_tokens;
+        self
+    }
+
+    /// Enable DAG-structured agents with the given spawn knobs
+    /// (see [`crate::workload::trace::build_suite`]).
+    pub fn with_dag(mut self, spawn_prob: f64, branch: u32) -> Self {
+        self.dag = true;
+        self.spawn_prob = spawn_prob;
+        self.branch = branch;
         self
     }
 }
@@ -246,6 +268,14 @@ pub struct Config {
     /// inferences with equal prompt prefixes). Off by default: the disabled
     /// engine path is bit-identical to a build without the cache.
     pub prefix_cache: bool,
+    /// Online misprediction correction (paper §4.2): as tasks complete, the
+    /// engine blends observed cost into each agent's remaining estimate and
+    /// re-derives scheduler tags from the corrected remaining work. Off by
+    /// default: the disabled path is bit-identical to a build without it.
+    /// Currently mutually exclusive with `prefix_cache` (the engine gates
+    /// correction off when both are set — observed-cost accounting is not
+    /// yet dedup-aware; see the note in [`crate::engine`]).
+    pub online_correction: bool,
 }
 
 impl Default for Config {
@@ -259,6 +289,7 @@ impl Default for Config {
             noise_lambda: 1.0,
             cluster: ClusterConfig::default(),
             prefix_cache: false,
+            online_correction: false,
         }
     }
 }
@@ -315,6 +346,9 @@ impl Config {
         if let Some(x) = v.get("prefix_cache").as_bool() {
             cfg.prefix_cache = x;
         }
+        if let Some(x) = v.get("online_correction").as_bool() {
+            cfg.online_correction = x;
+        }
         let c = v.get("cluster");
         if c.as_obj().is_some() {
             if let Some(x) = c.get("replicas").as_u64() {
@@ -344,6 +378,15 @@ impl Config {
             }
             if let Some(x) = w.get("prefix_tokens").as_u64() {
                 cfg.workload.prefix_tokens = x as u32;
+            }
+            if let Some(x) = w.get("dag").as_bool() {
+                cfg.workload.dag = x;
+            }
+            if let Some(x) = w.get("spawn_prob").as_f64() {
+                cfg.workload.spawn_prob = x;
+            }
+            if let Some(x) = w.get("branch").as_u64() {
+                cfg.workload.branch = x as u32;
             }
         }
         Ok(cfg)
@@ -388,6 +431,18 @@ impl Config {
         }
         if let Some(t) = args.get("prefix-tokens") {
             self.workload.prefix_tokens = t.parse().context("--prefix-tokens")?;
+        }
+        if args.has("dag") {
+            self.workload.dag = true;
+        }
+        if let Some(p) = args.get("spawn-prob") {
+            self.workload.spawn_prob = p.parse().context("--spawn-prob")?;
+        }
+        if let Some(b) = args.get("branch") {
+            self.workload.branch = b.parse().context("--branch")?;
+        }
+        if args.has("online-correction") {
+            self.online_correction = true;
         }
         Ok(self)
     }
@@ -501,6 +556,44 @@ mod tests {
         // Builder helper.
         let w = WorkloadConfig::default().with_shared_prefix(4, 128);
         assert_eq!((w.prefix_fanout, w.prefix_tokens), (4, 128));
+    }
+
+    #[test]
+    fn dag_and_correction_knobs() {
+        // Defaults: everything off, bit-identical path.
+        let cfg = Config::default();
+        assert!(!cfg.workload.dag);
+        assert_eq!(cfg.workload.spawn_prob, 0.0);
+        assert_eq!(cfg.workload.branch, 2);
+        assert!(!cfg.online_correction);
+        // JSON.
+        let j = Json::parse(
+            r#"{"online_correction": true,
+                "workload": {"dag": true, "spawn_prob": 0.25, "branch": 4}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert!(cfg.workload.dag);
+        assert!((cfg.workload.spawn_prob - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.workload.branch, 4);
+        assert!(cfg.online_correction);
+        // CLI overrides (dag / online-correction are boolean switches).
+        let args = crate::cli::Args::parse(
+            ["run", "--dag", "--spawn-prob", "0.5", "--branch", "3", "--online-correction"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["dag", "online-correction"],
+        );
+        let cfg = Config::default().apply_args(&args).unwrap();
+        assert!(cfg.workload.dag);
+        assert!((cfg.workload.spawn_prob - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.workload.branch, 3);
+        assert!(cfg.online_correction);
+        // Builder helper.
+        let w = WorkloadConfig::default().with_dag(0.3, 5);
+        assert!(w.dag);
+        assert!((w.spawn_prob - 0.3).abs() < 1e-12);
+        assert_eq!(w.branch, 5);
     }
 
     #[test]

@@ -73,7 +73,7 @@ impl CostModel {
                 }
                 agent.tasks().map(|t| deduped_spec_cost(t, &sharers)).sum()
             }
-            _ => agent.stages.iter().flatten().map(|s| self.spec_cost(s)).sum(),
+            _ => agent.tasks().map(|s| self.spec_cost(s)).sum(),
         }
     }
 
@@ -111,6 +111,33 @@ pub fn kv_occupancy_tokens(prompt: u32, generated: u32) -> u64 {
     prompt as u64 + generated as u64
 }
 
+/// Critical-path cost of an agent's static task DAG: the heaviest
+/// dependency chain, with each task weighted by its `model` cost. A lower
+/// bound on the agent's serial work even at infinite parallelism — the
+/// remaining-DAG signal [`crate::sched::AgentInfo::critical_path`] carries
+/// to the schedulers. Spawned work is excluded (it is unknown at arrival,
+/// which is exactly what the §4.2 correction loop compensates for).
+pub fn critical_path_cost(model: CostModel, agent: &AgentSpec) -> f64 {
+    let mut path = vec![0.0f64; agent.tasks.len()];
+    let mut best = 0.0f64;
+    for (i, t) in agent.tasks.iter().enumerate() {
+        let up = t.deps.iter().map(|d| path[d.index as usize]).fold(0.0, f64::max);
+        path[i] = up + model.spec_cost(t);
+        best = best.max(path[i]);
+    }
+    best
+}
+
+/// End-to-end ground-truth agent cost *including* the deterministically
+/// expanded spawned tasks ([`AgentSpec::expand_spawns`]). Identical to
+/// [`CostModel::agent_cost`] for agents without a spawn rule, so every
+/// pre-DAG path is unchanged. This is the honest oracle under dynamic
+/// spawning: the work the engine will actually execute.
+pub fn expanded_agent_cost(model: CostModel, agent: &AgentSpec) -> f64 {
+    model.agent_cost(agent)
+        + agent.expand_spawns().iter().map(|t| model.spec_cost(t)).sum::<f64>()
+}
+
 /// One inference's memory-centric cost with its shared-prefix token-time
 /// divided by `sharers[group]` — the fluid dedup model. With one sharer it
 /// reduces to Eq. (1) exactly: `(p−L)d + Ld/1 + d(d+1)/2 = pd + d(d+1)/2`.
@@ -139,9 +166,17 @@ pub fn oracle_costs(prefix_cache: bool, suite: &Suite, model: CostModel) -> Hash
     if prefix_cache
         && matches!(model, CostModel::MemoryCentric | CostModel::SharedMemoryCentric)
     {
-        shared_agent_costs(suite)
+        let mut costs = shared_agent_costs(suite);
+        // Spawned work carries no prefix annotations; it adds plainly.
+        for a in &suite.agents {
+            if a.spawn.is_some() {
+                let extra: f64 = a.expand_spawns().iter().map(|t| model.spec_cost(t)).sum();
+                *costs.get_mut(&a.id).expect("agent priced") += extra;
+            }
+        }
+        costs
     } else {
-        suite.agents.iter().map(|a| (a.id, model.agent_cost(a))).collect()
+        suite.agents.iter().map(|a| (a.id, expanded_agent_cost(model, a))).collect()
     }
 }
 
@@ -241,6 +276,55 @@ mod tests {
     }
 
     #[test]
+    fn critical_path_of_staged_agent_is_heaviest_chain() {
+        let m = CostModel::MemoryCentric;
+        let agent = crate::workload::test_support::agent_with_stages(vec![
+            vec![inference(0, 0, 10, 4), inference(1, 0, 20, 6)],
+            vec![inference(2, 1, 30, 8)],
+        ]);
+        // Heaviest stage-0 task (20,6) then the stage-1 task.
+        let want = m.inference_cost(20, 6) + m.inference_cost(30, 8);
+        assert!((critical_path_cost(m, &agent) - want).abs() < 1e-9);
+        // A parallel single stage: critical path = max task, not the sum.
+        let flat = crate::workload::test_support::simple_agent(0, 0.0, 5, 10, 4);
+        assert!((critical_path_cost(m, &flat) - m.inference_cost(10, 4)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn critical_path_of_pipeline_equals_total() {
+        let m = CostModel::MemoryCentric;
+        let chain = crate::workload::test_support::dag_agent(
+            0,
+            0.0,
+            vec![(10, 4, vec![]), (12, 5, vec![0]), (8, 3, vec![1])],
+        );
+        assert!((critical_path_cost(m, &chain) - m.agent_cost(&chain)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expanded_cost_adds_spawned_work() {
+        let m = CostModel::MemoryCentric;
+        let mut a = crate::workload::test_support::simple_agent(0, 0.0, 2, 30, 10);
+        assert_eq!(expanded_agent_cost(m, &a), m.agent_cost(&a));
+        a.spawn = Some(crate::workload::SpawnSpec {
+            prob: 1.0,
+            branch: 2,
+            max_depth: 1,
+            seed: 11,
+        });
+        let spawned: f64 = a.expand_spawns().iter().map(|t| m.spec_cost(t)).sum();
+        assert!(spawned > 0.0);
+        assert!((expanded_agent_cost(m, &a) - (m.agent_cost(&a) + spawned)).abs() < 1e-9);
+        // The oracle map prices the spawned work too.
+        let suite = crate::workload::Suite::new(vec![a]);
+        let costs = oracle_costs(false, &suite, m);
+        assert!(
+            (costs[&0] - expanded_agent_cost(m, &suite.agents[0])).abs() < 1e-9,
+            "oracle must price spawned work"
+        );
+    }
+
+    #[test]
     fn shared_model_matches_memory_centric_without_groups() {
         let m = CostModel::MemoryCentric;
         let s = CostModel::SharedMemoryCentric;
@@ -261,10 +345,8 @@ mod tests {
             inference(1, 0, 100, 10),
         ]]);
         let g = PrefixGroup { id: 1, tokens: 60 };
-        for st in &mut agent.stages {
-            for t in st {
-                t.prefix_group = Some(g);
-            }
+        for t in &mut agent.tasks {
+            t.prefix_group = Some(g);
         }
         let full = CostModel::MemoryCentric.agent_cost(&agent);
         let shared = CostModel::SharedMemoryCentric.agent_cost(&agent);
@@ -285,7 +367,7 @@ mod tests {
                 id as f64,
                 vec![vec![inference(0, 0, 50, 10)]],
             );
-            a.stages[0][0].prefix_group = Some(g);
+            a.tasks[0].prefix_group = Some(g);
             agents.push(a);
         }
         let suite = Suite::new(agents);

@@ -21,7 +21,7 @@ use crate::kv::{BlockAllocator, KvError};
 use crate::metrics::RunMetrics;
 use crate::prefix::{PrefixCache, PrefixMatch};
 use crate::sched::{AgentInfo, Scheduler, TaskInfo};
-use crate::workload::{AgentId, AgentSpec, PrefixGroup, Suite, TaskId};
+use crate::workload::{AgentId, AgentSpec, InferenceSpec, PrefixGroup, Suite, TaskId};
 use exec::{ExecBackend, IterationBatch};
 use std::collections::{HashMap, VecDeque};
 
@@ -42,14 +42,70 @@ struct SeqState {
     prefix_path: Vec<usize>,
 }
 
-/// Per-agent progress tracking (stage release, completion).
+/// Per-agent progress tracking: dependency-count release over the task DAG
+/// (stage barriers are the special case where every task of level k+1 waits
+/// on all of level k), dynamic spawning, and §4.2 online cost correction.
 #[derive(Debug)]
 struct AgentState {
     spec: AgentSpec,
-    stage: usize,
-    stage_remaining: usize,
+    /// Tasks discovered at runtime via the spawn rule, keyed by task index.
+    spawned: HashMap<u32, InferenceSpec>,
+    /// Unfinished-dependency count per *static* task (indexed by task
+    /// index; spawned tasks depend only on their just-completed parent and
+    /// are released immediately, so they never enter this table).
+    dep_remaining: Vec<u32>,
+    /// Static reverse adjacency: `dependents[i]` = indices waiting on `i`,
+    /// ascending.
+    dependents: Vec<Vec<u32>>,
+    /// Tasks released but not yet completed + tasks not yet released.
     tasks_remaining: usize,
+    /// Tasks known so far (static + spawned) — the correction denominator.
+    known_tasks: u32,
+    /// Tasks completed so far.
+    completed_tasks: u32,
+    /// Initial scheduler-facing prediction Ĉ_j.
     predicted_cost: f64,
+    /// True cost of completed tasks under the engine's cost model
+    /// (maintained only when online correction is on).
+    observed_cost: f64,
+    /// Ground-truth end-to-end cost including statically-expanded spawned
+    /// work (correction-error metric; 0 when correction is off).
+    true_total: f64,
+}
+
+impl AgentState {
+    fn new(spec: AgentSpec, predicted_cost: f64, true_total: f64) -> Self {
+        let n = spec.tasks.len();
+        let mut dep_remaining = vec![0u32; n];
+        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for t in &spec.tasks {
+            dep_remaining[t.id.index as usize] = t.deps.len() as u32;
+            for d in &t.deps {
+                dependents[d.index as usize].push(t.id.index);
+            }
+        }
+        AgentState {
+            tasks_remaining: n,
+            known_tasks: n as u32,
+            completed_tasks: 0,
+            predicted_cost,
+            observed_cost: 0.0,
+            true_total,
+            spawned: HashMap::new(),
+            dep_remaining,
+            dependents,
+            spec,
+        }
+    }
+
+    /// The spec of a task by index, whether static or spawned.
+    fn task_spec(&self, index: u32) -> &InferenceSpec {
+        if (index as usize) < self.spec.tasks.len() {
+            &self.spec.tasks[index as usize]
+        } else {
+            &self.spawned[&index]
+        }
+    }
 }
 
 /// The serving engine.
@@ -81,6 +137,11 @@ pub struct Engine<B: ExecBackend> {
     /// task), so re-scanning the scheduler every decode iteration is wasted
     /// work — the dominant cost for the O(A)-scan policies (VTC, SRJF).
     admission_blocked: bool,
+    /// §4.2 online misprediction correction (`cfg.online_correction`): on
+    /// every task completion, blend observed cost into the agent's remaining
+    /// estimate and re-derive the scheduler's tags. Off ⇒ bit-identical to
+    /// an engine without the loop.
+    online_correction: bool,
 }
 
 impl<B: ExecBackend> Engine<B> {
@@ -112,6 +173,14 @@ impl<B: ExecBackend> Engine<B> {
             metrics: RunMetrics::new(),
             record_occupancy: false,
             admission_blocked: false,
+            // The correction loop's observed-cost accounting is on the plain
+            // Eq. 1 basis; with the prefix cache on, predictions and ground
+            // truth switch to the dedup-aware (sharer-split) basis, so the
+            // loop would converge to the *undeduplicated* total and re-tag
+            // shared-prefix agents with inflated F_j. Until observed
+            // accounting is dedup-aware, correction disables itself rather
+            // than silently skewing fairness.
+            online_correction: cfg.online_correction && !cfg.prefix_cache,
         }
     }
 
@@ -130,23 +199,34 @@ impl<B: ExecBackend> Engine<B> {
     pub fn submit(&mut self, spec: AgentSpec, predicted_cost: f64) {
         let id = spec.id;
         let arrival = self.clock;
+        // Pure spec bookkeeping happens OUTSIDE the timed window below: the
+        // Fig. 12 metric measures scheduling-decision latency, not metric
+        // preparation. `true_total` (ground-truth end-to-end cost incl.
+        // deterministically-expanded spawned work) feeds only the
+        // correction-error metric.
+        let critical_path = crate::cost::critical_path_cost(self.cost_model, &spec);
+        let true_total = if self.online_correction {
+            crate::cost::expanded_agent_cost(self.cost_model, &spec)
+        } else {
+            0.0
+        };
         let t0 = std::time::Instant::now();
         self.scheduler.on_agent_arrival(
-            &AgentInfo { id, arrival, cost: predicted_cost },
+            &AgentInfo { id, arrival, cost: predicted_cost, critical_path },
             self.clock,
         );
-        let n_tasks = spec.n_tasks();
-        let stage0_len = spec.stages.first().map(|s| s.len()).unwrap_or(0);
-        let state = AgentState {
-            spec,
-            stage: 0,
-            stage_remaining: stage0_len,
-            tasks_remaining: n_tasks,
-            predicted_cost,
-        };
-        // Release stage 0.
-        for t in &state.spec.stages[0] {
-            self.push_task(t.id, t.prompt_tokens, t.decode_tokens);
+        let state = AgentState::new(spec, predicted_cost, true_total);
+        // Release every root task (dependency count zero) in index order.
+        // For staged agents these are exactly the stage-0 tasks.
+        let roots: Vec<(TaskId, u32, u32)> = state
+            .spec
+            .tasks
+            .iter()
+            .filter(|t| t.deps.is_empty())
+            .map(|t| (t.id, t.prompt_tokens, t.decode_tokens))
+            .collect();
+        for (tid, p, d) in roots {
+            self.push_task(tid, p, d);
         }
         self.metrics.on_agent_arrival(id, arrival);
         self.metrics.record_sched_decision(t0.elapsed());
@@ -461,12 +541,7 @@ impl<B: ExecBackend> Engine<B> {
     }
 
     fn task_decode(&self, id: TaskId) -> u32 {
-        self.agents[&id.agent]
-            .spec
-            .tasks()
-            .find(|t| t.id == id)
-            .map(|t| t.decode_tokens)
-            .expect("task in spec")
+        self.agents[&id.agent].task_spec(id.index).decode_tokens
     }
 
     /// Choose the swap-out victim among running seqs, excluding index
@@ -502,27 +577,77 @@ impl<B: ExecBackend> Engine<B> {
         self.metrics.on_task_complete(id, self.clock);
 
         let now = self.clock;
+        let correcting = self.online_correction;
+        let cost_model = self.cost_model;
         let agent_state = self.agents.get_mut(&id.agent).expect("agent exists");
         agent_state.tasks_remaining -= 1;
-        agent_state.stage_remaining -= 1;
-        if agent_state.stage_remaining == 0 {
-            agent_state.stage += 1;
-            if agent_state.stage < agent_state.spec.stages.len() {
-                // Release the next stage.
-                agent_state.stage_remaining = agent_state.spec.stages[agent_state.stage].len();
-                let tasks: Vec<(TaskId, u32, u32)> = agent_state.spec.stages[agent_state.stage]
-                    .iter()
-                    .map(|t| (t.id, t.prompt_tokens, t.decode_tokens))
-                    .collect();
-                for (tid, p, d) in tasks {
-                    self.push_task(tid, p, d);
+        agent_state.completed_tasks += 1;
+        if correcting {
+            let t = agent_state.task_spec(id.index);
+            agent_state.observed_cost +=
+                cost_model.inference_cost(t.prompt_tokens, t.decode_tokens);
+        }
+
+        // 1. Dependency-count release: every static task whose last
+        //    unfinished dependency was `id` becomes ready, in index order
+        //    (for staged agents this is exactly the next-stage barrier
+        //    release). Spawned tasks have no dependents.
+        let mut released: Vec<(TaskId, u32, u32)> = Vec::new();
+        if (id.index as usize) < agent_state.dependents.len() {
+            for di in std::mem::take(&mut agent_state.dependents[id.index as usize]) {
+                let dep = &mut agent_state.dep_remaining[di as usize];
+                *dep -= 1;
+                if *dep == 0 {
+                    let t = &agent_state.spec.tasks[di as usize];
+                    released.push((t.id, t.prompt_tokens, t.decode_tokens));
                 }
             }
         }
-        if self.agents[&id.agent].tasks_remaining == 0 {
+
+        // 2. Dynamic spawning: the completed task may emit children (a pure
+        //    function of the spec — see workload::SpawnSpec). Children
+        //    depend only on their parent, so they are released immediately,
+        //    after any dependency releases (deterministic order).
+        if let Some(spawn) = agent_state.spec.spawn.clone() {
+            let base = agent_state.spec.tasks.len() as u32;
+            let parent = agent_state.task_spec(id.index).clone();
+            for child in spawn.children_of(id.agent, &parent, base) {
+                agent_state.tasks_remaining += 1;
+                agent_state.known_tasks += 1;
+                released.push((child.id, child.prompt_tokens, child.decode_tokens));
+                agent_state.spawned.insert(child.id.index, child);
+                self.metrics.on_task_spawned();
+            }
+        }
+
+        // 3. §4.2 online correction: blend the observed cost of completed
+        //    tasks into the total estimate with confidence growing in the
+        //    completed fraction w:
+        //      Ĉ' = (1 − w)·Ĉ + w·(C_obs / w),   R̂ = max(Ĉ' − C_obs, 0).
+        //    Spawned tasks grow the denominator, so undiscovered work keeps
+        //    the prior's weight up.
+        let correction: Option<(f64, f64)> = if correcting && agent_state.tasks_remaining > 0 {
+            let w = agent_state.completed_tasks as f64 / agent_state.known_tasks.max(1) as f64;
+            let implied_total = agent_state.observed_cost / w.max(1e-12);
+            let corrected = (1.0 - w) * agent_state.predicted_cost + w * implied_total;
+            let rel_err = (corrected - agent_state.true_total).abs()
+                / agent_state.true_total.max(1.0);
+            self.metrics.on_cost_correction(now, rel_err);
+            Some(((corrected - agent_state.observed_cost).max(0.0), corrected))
+        } else {
+            None
+        };
+        let done = agent_state.tasks_remaining == 0;
+
+        for (tid, p, d) in released {
+            self.push_task(tid, p, d);
+        }
+        if let Some((remaining, total)) = correction {
+            self.scheduler.on_cost_update(id.agent, remaining, total, now);
+        }
+        if done {
             self.complete_agent(id.agent);
         }
-        let _ = now;
     }
 
     fn complete_agent(&mut self, agent: AgentId) {
@@ -626,12 +751,10 @@ fn state_is_empty(agents: &HashMap<AgentId, AgentState>, id: AgentId) -> bool {
     agents.get(&id).map(|a| a.tasks_remaining == 0).unwrap_or(false)
 }
 
-/// Shared-prefix annotation of a task, looked up in its agent's spec.
+/// Shared-prefix annotation of a task, looked up in its agent's runtime
+/// state (static tasks by index, spawned tasks in the discovery map).
 fn prefix_group_in(agents: &HashMap<AgentId, AgentState>, id: TaskId) -> Option<PrefixGroup> {
-    agents
-        .get(&id.agent)
-        .and_then(|a| a.spec.tasks().find(|t| t.id == id))
-        .and_then(|t| t.prefix_group)
+    agents.get(&id.agent).and_then(|a| a.task_spec(id.index).prefix_group)
 }
 
 /// Length of the prompt portion that can possibly be shared: the family
@@ -759,6 +882,123 @@ mod tests {
     }
 
     #[test]
+    fn dag_release_respects_partial_deps() {
+        // Diamond with a shortcut: t0, t1 roots; t2 waits on both; t3 waits
+        // on t1 only — it must be admittable before t0 finishes.
+        let cfg = tiny_config(64, 16);
+        let mut e = engine(&cfg, Policy::Fcfs);
+        let agent = crate::workload::test_support::dag_agent(
+            0,
+            0.0,
+            vec![
+                (8, 20, vec![]),  // t0: slow root
+                (8, 2, vec![]),   // t1: fast root
+                (8, 2, vec![0, 1]),
+                (8, 2, vec![1]),  // t3: depends on t1 alone
+            ],
+        );
+        e.submit(agent, 50.0);
+        while e.has_work() {
+            e.step();
+        }
+        let m = &e.metrics;
+        assert_eq!(m.completed_agents(), 1);
+        let t = |i: u32| TaskId { agent: 0, index: i };
+        // t3 admitted as soon as t1 completed — strictly before t0 finished.
+        assert!(m.task_admit_time(t(3)).unwrap() >= m.task_complete_time(t(1)).unwrap());
+        assert!(m.task_admit_time(t(3)).unwrap() < m.task_complete_time(t(0)).unwrap());
+        // t2 admitted only after both of its dependencies completed.
+        let t2_admit = m.task_admit_time(t(2)).unwrap();
+        assert!(t2_admit >= m.task_complete_time(t(0)).unwrap());
+        assert!(t2_admit >= m.task_complete_time(t(1)).unwrap());
+    }
+
+    #[test]
+    fn spawned_tasks_run_and_count() {
+        let cfg = tiny_config(64, 16);
+        let run = || {
+            let mut e = engine(&cfg, Policy::Fcfs);
+            let mut a = simple_agent(0, 0.0, 2, 16, 4);
+            a.spawn = Some(crate::workload::SpawnSpec {
+                prob: 1.0,
+                branch: 2,
+                max_depth: 1,
+                seed: 7,
+            });
+            let expected = a.expand_spawns().len() as u64;
+            e.submit(a, 100.0);
+            let mut guard = 0;
+            while e.has_work() {
+                e.step();
+                guard += 1;
+                assert!(guard < 10_000);
+            }
+            (e.metrics.spawned_tasks(), expected, e.metrics.completed_agents())
+        };
+        let (spawned, expected, completed) = run();
+        assert_eq!(completed, 1, "agent completes only after spawned work drains");
+        assert_eq!(spawned, 4, "2 roots × branch 2 at prob 1.0");
+        assert_eq!(spawned, expected, "runtime spawning must match static expansion");
+        // Replay determinism.
+        assert_eq!(run().0, spawned);
+    }
+
+    #[test]
+    fn online_correction_records_trace_and_is_gated() {
+        let mk_agent = || {
+            let mut a = simple_agent(0, 0.0, 4, 16, 4);
+            a.spawn =
+                Some(crate::workload::SpawnSpec { prob: 0.6, branch: 2, max_depth: 2, seed: 3 });
+            a
+        };
+        let run = |correct: bool, predicted: f64| {
+            let mut cfg = tiny_config(64, 16);
+            cfg.online_correction = correct;
+            let mut e = engine(&cfg, Policy::Justitia);
+            e.submit(mk_agent(), predicted);
+            while e.has_work() {
+                e.step();
+            }
+            e.metrics
+        };
+        // Correction off: no samples, zero counter.
+        let off = run(false, 5000.0);
+        assert_eq!(off.correction_samples(), 0);
+        // Correction on with a badly wrong prediction: samples recorded and
+        // the error estimate shrinks as completions accumulate.
+        let on = run(true, 5000.0);
+        assert!(on.correction_samples() > 0);
+        let trace = on.correction_trace();
+        let (first, last) = (trace.first().unwrap().1, trace.last().unwrap().1);
+        assert!(
+            last <= first + 1e-9,
+            "correction error should not grow: first {first:.3}, last {last:.3}"
+        );
+        // Both runs complete the same workload (correction changes tags,
+        // not the set of work).
+        assert_eq!(off.spawned_tasks(), on.spawned_tasks());
+        assert_eq!(off.completed_agents(), 1);
+        assert_eq!(on.completed_agents(), 1);
+    }
+
+    #[test]
+    fn correction_off_is_bit_identical() {
+        // The flag default (off) must leave a mispredicted multi-stage run
+        // exactly as it was: same JCTs bit for bit.
+        let cfg = tiny_config(128, 16);
+        let run = || {
+            let mut e = engine(&cfg, Policy::Justitia);
+            e.submit(simple_agent(0, 0.0, 3, 24, 12), 9999.0);
+            e.submit(simple_agent(1, 0.0, 2, 16, 6), 10.0);
+            while e.has_work() {
+                e.step();
+            }
+            e.metrics.jcts()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
     fn kv_pressure_triggers_swap() {
         // Tiny pool: 4 pages of 4 tokens = 16 tokens. Two long sequences
         // cannot both stay resident.
@@ -825,10 +1065,8 @@ mod tests {
         // drawn entirely from the family stream (2 full pages).
         let mk = |id: u32| {
             let mut a = simple_agent(id, 0.0, 2, 32, 4);
-            for st in &mut a.stages {
-                for t in st {
-                    t.prefix_group = Some(crate::workload::PrefixGroup { id: 9, tokens: 32 });
-                }
+            for t in &mut a.tasks {
+                t.prefix_group = Some(crate::workload::PrefixGroup { id: 9, tokens: 32 });
             }
             a
         };
@@ -861,10 +1099,8 @@ mod tests {
         let mk = |annotate: bool, id: u32| {
             let mut a = simple_agent(id, 0.0, 3, 20, 6);
             if annotate {
-                for st in &mut a.stages {
-                    for t in st {
-                        t.prefix_group = Some(crate::workload::PrefixGroup { id: 1, tokens: 20 });
-                    }
+                for t in &mut a.tasks {
+                    t.prefix_group = Some(crate::workload::PrefixGroup { id: 1, tokens: 20 });
                 }
             }
             a
@@ -893,11 +1129,9 @@ mod tests {
                 .agents
                 .into_iter()
                 .map(|mut a| {
-                    for st in &mut a.stages {
-                        for t in st {
-                            t.prompt_tokens = (t.prompt_tokens / 20).max(2);
-                            t.decode_tokens = (t.decode_tokens / 20).max(2);
-                        }
+                    for t in &mut a.tasks {
+                        t.prompt_tokens = (t.prompt_tokens / 20).max(2);
+                        t.decode_tokens = (t.decode_tokens / 20).max(2);
                     }
                     a
                 })

@@ -65,6 +65,28 @@ pub fn run_policy_oracle(cfg: &Config, suite: &Suite, policy: Policy) -> RunMetr
     run_policy(cfg, suite, policy, &CostSource::Oracle)
 }
 
+/// Max-min fair-share ratio vs a GPS fluid reference: each completed
+/// agent's slowdown is its JCT over its GPS JCT; the ratio of the worst to
+/// the best slowdown measures how evenly contention is paid (1.0 = perfectly
+/// even; the empty/degenerate case reports 1.0). Shared by the cluster
+/// scale-out, prefix-sharing and DAG-agents experiments.
+pub fn maxmin_vs_gps(suite: &Suite, m: &RunMetrics, gps: &crate::sched::gps::GpsResult) -> f64 {
+    let mut worst = f64::NEG_INFINITY;
+    let mut best = f64::INFINITY;
+    for a in &suite.agents {
+        if let Some(jct) = m.jct(a.id) {
+            let slowdown = jct / gps.jct(a.id, a.arrival).max(1e-9);
+            worst = worst.max(slowdown);
+            best = best.min(slowdown);
+        }
+    }
+    if best.is_finite() && best > 0.0 {
+        worst / best
+    } else {
+        1.0
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Fig. 3 — selective pampering vs instantaneous fair sharing (2 DM agents)
 // ---------------------------------------------------------------------------
@@ -508,16 +530,7 @@ pub fn cluster_scaleout(
             cfg.backend.kv_tokens * n_r as u64,
             rate_scale(&cfg),
         );
-        let mut worst = f64::NEG_INFINITY;
-        let mut best = f64::INFINITY;
-        for a in &suite.agents {
-            if let Some(jct) = m.jct(a.id) {
-                let slowdown = jct / gps.jct(a.id, a.arrival).max(1e-9);
-                worst = worst.max(slowdown);
-                best = best.min(slowdown);
-            }
-        }
-        let maxmin_ratio = if best.is_finite() && best > 0.0 { worst / best } else { 1.0 };
+        let maxmin_ratio = maxmin_vs_gps(&suite, &m, &gps);
         ClusterRow {
             replicas: n_r,
             placement,
@@ -606,16 +619,7 @@ pub fn prefix_sharing(
             let triples: Vec<(AgentId, f64, f64)> =
                 suite.agents.iter().map(|a| (a.id, a.arrival, costs[&a.id])).collect();
             let gps = crate::sched::gps::run(&triples, cfg.backend.kv_tokens, rate_scale(&cfg));
-            let mut worst = f64::NEG_INFINITY;
-            let mut best = f64::INFINITY;
-            for a in &suite.agents {
-                if let Some(jct) = m.jct(a.id) {
-                    let slowdown = jct / gps.jct(a.id, a.arrival).max(1e-9);
-                    worst = worst.max(slowdown);
-                    best = best.min(slowdown);
-                }
-            }
-            let maxmin_ratio = if best.is_finite() && best > 0.0 { worst / best } else { 1.0 };
+            let maxmin_ratio = maxmin_vs_gps(&suite, &m, &gps);
             PrefixSharingRow {
                 cache_enabled: cache,
                 hit_rate: m.prefix_hit_rate(),
@@ -630,6 +634,147 @@ pub fn prefix_sharing(
             }
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// DAG agents — workflow shapes, dynamic spawning, online cost correction
+// (beyond the paper's staged agents: DESIGN.md §9; fairness under DAG
+// workloads per "Fairness in Serving Large Language Models" and
+// "Locality-aware Fair Scheduling in LLM Serving")
+// ---------------------------------------------------------------------------
+
+/// One (shape, correction on/off) row of the DAG-agents experiment.
+pub struct DagAgentsRow {
+    /// DAG shape family every agent in the suite uses.
+    pub shape: crate::workload::DagShape,
+    /// Whether the §4.2 online misprediction-correction loop ran.
+    pub correction: bool,
+    /// Average JCT (s).
+    pub avg_jct: f64,
+    /// P99 JCT (s).
+    pub p99_jct: f64,
+    /// Max-min fair-share ratio vs the GPS fluid reference priced at the
+    /// expanded (spawn-inclusive) ground-truth costs.
+    pub maxmin_ratio: f64,
+    /// Tasks dynamically spawned over the run (identical across the
+    /// correction on/off pair — spawning is a pure function of the suite).
+    pub spawned_tasks: u64,
+    /// Mean relative error of the corrected cost estimate vs ground truth
+    /// (0 when correction is off: no estimates are revised).
+    pub correction_error: f64,
+    /// Correction events recorded.
+    pub correction_events: u64,
+    /// Mean critical-path fraction: per agent, the remaining-DAG signal
+    /// [`crate::sched::AgentInfo::critical_path`] over the agent's total
+    /// static cost — 1.0 for pipelines (fully serial), well below 1 for
+    /// map-reduce (parallel maps dominate). Characterizes how much of the
+    /// shape's work a scheduler can actually overlap.
+    pub serial_frac: f64,
+    /// Agents completed (must equal the suite size).
+    pub completed: usize,
+}
+
+impl DagAgentsRow {
+    /// Fixed-width report header (one source for the CLI and the bench
+    /// binary, so their outputs cannot drift).
+    pub fn table_header() -> String {
+        format!(
+            "{:<11} {:<11} {:>9} {:>9} {:>8} {:>8} {:>9} {:>11} {:>6}",
+            "shape", "correction", "avgJCT", "p99JCT", "maxmin", "serial", "spawned", "corr-err",
+            "done"
+        )
+    }
+
+    /// One fixed-width report row matching [`DagAgentsRow::table_header`].
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<11} {:<11} {:>8.1}s {:>8.1}s {:>7.2}x {:>8.2} {:>9} {:>10.1}% {:>6}",
+            self.shape.name(),
+            if self.correction { "on" } else { "off" },
+            self.avg_jct,
+            self.p99_jct,
+            self.maxmin_ratio,
+            self.serial_frac,
+            self.spawned_tasks,
+            self.correction_error * 100.0,
+            self.completed
+        )
+    }
+}
+
+/// The DAG-agents experiment: one suite per workflow shape (map-reduce,
+/// tree, pipeline — all agents forced to that shape), replayed through a
+/// single Justitia replica with §4.2 online correction off, then on.
+///
+/// Predictions are deliberately imperfect on two axes: the noisy oracle
+/// scales the arrival-visible cost by U_log[1/λ, λ] (Fig. 10 style), and
+/// dynamically spawned tasks are invisible at arrival altogether. The
+/// correction loop must claw both back; the GPS yardstick is priced at the
+/// expanded ground truth either way, so the max-min ratio measures how much
+/// of the misprediction each regime lets leak into unfairness.
+pub fn dag_agents(
+    base: &Config,
+    n_agents: usize,
+    density: f64,
+    spawn_prob: f64,
+    branch: u32,
+    lambda: f64,
+    seed: u64,
+) -> Vec<DagAgentsRow> {
+    let mut jobs = Vec::new();
+    for shape in crate::workload::DagShape::ALL {
+        for correction in [false, true] {
+            jobs.push((shape, correction));
+        }
+    }
+    let base = base.clone();
+    let pool = ThreadPool::with_cpus();
+    pool.map(jobs, move |(shape, correction)| {
+        let mut cfg = base.clone();
+        cfg.workload.n_agents = n_agents;
+        cfg.workload.seed = seed;
+        cfg.workload = cfg.workload.clone().with_density(density).with_dag(spawn_prob, branch);
+        cfg.online_correction = correction;
+        let suite = crate::workload::trace::build_dag_suite(&cfg.workload, shape);
+
+        let sched =
+            crate::sched::build(Policy::Justitia, cfg.backend.kv_tokens, rate_scale(&cfg));
+        let mut engine = Engine::new(&cfg, sched, SimBackend::new(&cfg.backend));
+        let mut noisy = NoisyOracle::new(CostModel::MemoryCentric, lambda, seed ^ 0xda6);
+        engine.run_suite(&suite, |a| noisy.cost(a));
+        let m = std::mem::take(&mut engine.metrics);
+
+        // GPS yardstick at the expanded ground truth (run_suite prices
+        // spawned work — the single pricing site for all experiments).
+        let gps = crate::sched::gps::run_suite(
+            &suite,
+            CostModel::MemoryCentric,
+            cfg.backend.kv_tokens,
+            rate_scale(&cfg),
+        );
+        let maxmin_ratio = maxmin_vs_gps(&suite, &m, &gps);
+        let serial_frac = suite
+            .agents
+            .iter()
+            .map(|a| {
+                crate::cost::critical_path_cost(CostModel::MemoryCentric, a)
+                    / CostModel::MemoryCentric.agent_cost(a).max(1e-9)
+            })
+            .sum::<f64>()
+            / suite.len().max(1) as f64;
+        DagAgentsRow {
+            shape,
+            correction,
+            avg_jct: m.avg_jct(),
+            p99_jct: m.p99_jct(),
+            maxmin_ratio,
+            spawned_tasks: m.spawned_tasks(),
+            correction_error: m.correction_error_mean(),
+            correction_events: m.correction_samples(),
+            serial_frac,
+            completed: m.completed_agents(),
+        }
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -810,6 +955,38 @@ mod tests {
             on.maxmin_ratio,
             off.maxmin_ratio
         );
+    }
+
+    #[test]
+    fn dag_agents_covers_shapes_and_correction_helps_estimates() {
+        let rows = dag_agents(&Config::default(), 40, 3.0, 0.3, 3, 2.0, 42);
+        assert_eq!(rows.len(), 6, "3 shapes x correction off/on");
+        for shape in crate::workload::DagShape::ALL {
+            let pair: Vec<&DagAgentsRow> =
+                rows.iter().filter(|r| r.shape == shape).collect();
+            assert_eq!(pair.len(), 2);
+            let off = pair.iter().find(|r| !r.correction).unwrap();
+            let on = pair.iter().find(|r| r.correction).unwrap();
+            assert_eq!(off.completed, 40, "{shape:?} dropped agents (off)");
+            assert_eq!(on.completed, 40, "{shape:?} dropped agents (on)");
+            // Spawning is a pure function of the suite: identical either way.
+            assert!(on.spawned_tasks > 0, "{shape:?} spawned nothing");
+            assert_eq!(on.spawned_tasks, off.spawned_tasks);
+            // Correction off records nothing; on records and stays sane.
+            assert_eq!(off.correction_events, 0);
+            assert!(on.correction_events > 0);
+            assert!(on.correction_error.is_finite() && on.correction_error >= 0.0);
+            assert!(on.maxmin_ratio >= 1.0 && off.maxmin_ratio >= 1.0);
+            assert!(on.avg_jct > 0.0 && on.p99_jct >= on.avg_jct * 0.5);
+        }
+        // The remaining-DAG signal separates the shapes: pipelines are
+        // fully serial, map-reduce is dominated by its parallel maps.
+        let frac = |s: crate::workload::DagShape| {
+            rows.iter().find(|r| r.shape == s).unwrap().serial_frac
+        };
+        assert!((frac(crate::workload::DagShape::Pipeline) - 1.0).abs() < 1e-9);
+        assert!(frac(crate::workload::DagShape::MapReduce) < 0.9);
+        assert!(frac(crate::workload::DagShape::Tree) < frac(crate::workload::DagShape::Pipeline));
     }
 
     #[test]

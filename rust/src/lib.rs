@@ -8,8 +8,12 @@
 //!   continuous-batching engine over a paged KV cache ([`engine`], [`kv`]),
 //!   the Justitia virtual-time fair-queuing scheduler and the five paper
 //!   baselines ([`sched`]), memory-centric cost modeling ([`cost`]),
-//!   TF-IDF + MLP demand prediction ([`predictor`]), the §5.1 workload suite
-//!   ([`workload`]), and the experiment harness ([`experiments`]).
+//!   TF-IDF + MLP demand prediction with §4.2 online misprediction
+//!   correction ([`predictor`], `Config::online_correction`), the §5.1
+//!   workload suite ([`workload`]) — agents as general task *DAGs*
+//!   (dependency-count release, map-reduce/tree/pipeline shapes,
+//!   deterministic dynamic spawning; staged barriers are the special case)
+//!   — and the experiment harness ([`experiments`]).
 //! * **Layer 2** — a JAX transformer (prefill/decode over a paged KV pool),
 //!   AOT-lowered to HLO text by `python/compile/aot.py`.
 //! * **Layer 1** — a Pallas paged-attention kernel (interpret mode), called

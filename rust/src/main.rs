@@ -22,7 +22,15 @@ use justitia::util::json::Json;
 use justitia::workload::trace;
 
 fn main() {
-    let args = Args::from_env(&["predict", "verbose", "with-text", "occupancy", "prefix-cache"]);
+    let args = Args::from_env(&[
+        "predict",
+        "verbose",
+        "with-text",
+        "occupancy",
+        "prefix-cache",
+        "dag",
+        "online-correction",
+    ]);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -55,7 +63,7 @@ fn print_help() {
            run              run one policy over a generated suite (simulator)\n\
            cluster          multi-replica scale-out experiment (replicas x placement)\n\
            experiment       regenerate a paper figure/table (fig3..fig13, table1,\n\
-                            prefix_sharing, all)\n\
+                            prefix_sharing, dag_agents, all)\n\
            gen-workload     write a workload trace JSON\n\
            train-predictor  train + evaluate the per-class MLP predictor\n\
            gps              dump the GPS fluid reference for a suite\n\n\
@@ -64,7 +72,8 @@ fn print_help() {
            --backend llama7b-a100|llama13b-4v100|qwen32b-h800|tiny-cpu\n\
            --replicas N   --placement round-robin|least-loaded|cluster-vtime|prefix-affinity\n\
            --agents N   --density 1|2|3   --seed S   --lambda L   --predict\n\
-           --prefix-cache   --prefix-fanout F   --prefix-tokens T"
+           --prefix-cache   --prefix-fanout F   --prefix-tokens T\n\
+           --dag   --spawn-prob P   --branch B   --online-correction"
     );
 }
 
@@ -129,6 +138,16 @@ fn cmd_run(args: &Args) -> Result<()> {
             metrics.prefix_lookups(),
             metrics.prefill_tokens_saved(),
             metrics.cache_pages_peak()
+        );
+    }
+    if cfg.workload.dag {
+        println!("dag workload: {} tasks spawned dynamically", metrics.spawned_tasks());
+    }
+    if cfg.online_correction {
+        println!(
+            "online correction: {} events, mean rel error {:.1}%",
+            metrics.correction_samples(),
+            metrics.correction_error_mean() * 100.0
         );
     }
     Ok(())
@@ -481,6 +500,44 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         );
         std::fs::write("results/prefix_sharing.json", json.pretty())?;
         out.line("(wrote results/prefix_sharing.json)".to_string());
+    }
+    if run_all || which == "dag_agents" {
+        let mut out = ResultsFile::new("dag_agents.txt");
+        out.line("=== DAG agents: workflow shapes, dynamic spawning, online correction ===");
+        let spawn_prob = args.get_f64("spawn-prob", 0.3);
+        let branch = args.get_u64("branch", 3) as u32;
+        let lambda = args.get_f64("lambda", 2.0);
+        let rows =
+            exp::dag_agents(&Config::default(), n, 3.0, spawn_prob, branch, lambda, seed);
+        out.line(format!(
+            "workload: {n} agents at 3x density, spawn-prob {spawn_prob}, branch {branch}, \
+             noise lambda {lambda}x"
+        ));
+        out.line(exp::DagAgentsRow::table_header());
+        for r in &rows {
+            out.line(r.table_row());
+        }
+        // Machine-readable copy for kick-tires / EXPERIMENTS.md tooling.
+        let json = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    justitia::util::json::obj([
+                        ("shape", Json::Str(r.shape.name().into())),
+                        ("correction", Json::Bool(r.correction)),
+                        ("avg_jct", Json::Num(r.avg_jct)),
+                        ("p99_jct", Json::Num(r.p99_jct)),
+                        ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
+                        ("spawned_tasks", Json::Num(r.spawned_tasks as f64)),
+                        ("correction_error", Json::Num(r.correction_error)),
+                        ("correction_events", Json::Num(r.correction_events as f64)),
+                        ("serial_frac", Json::Num(r.serial_frac)),
+                        ("completed", Json::Num(r.completed as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write("results/dag_agents.json", json.pretty())?;
+        out.line("(wrote results/dag_agents.json)".to_string());
     }
     if run_all || which == "table1" {
         let mut out = ResultsFile::new("table1.txt");

@@ -31,6 +31,13 @@ pub struct RunMetrics {
     /// Host-side scheduling decision latency (Fig. 12): wall-clock time the
     /// scheduler spends per decision point.
     sched_latency: Welford,
+    /// Tasks emitted at runtime by agents' spawn rules (DAG workloads).
+    spawned_tasks: u64,
+    /// §4.2 online-correction error statistics (|Ĉ' − C_true| / C_true).
+    correction_error: Welford,
+    /// Correction error trace: (engine time, relative error) per correction
+    /// event, in time order.
+    correction_trace: Vec<(f64, f64)>,
     /// (engine time, device tokens, per-agent tokens) — Fig. 3 timeline.
     pub kv_samples: Vec<KvSample>,
 }
@@ -113,6 +120,18 @@ impl RunMetrics {
         self.swap_outs += 1;
     }
 
+    /// Record one dynamically-spawned task.
+    pub fn on_task_spawned(&mut self) {
+        self.spawned_tasks += 1;
+    }
+
+    /// Record one §4.2 online-correction event with its relative error
+    /// against the ground-truth end-to-end cost.
+    pub fn on_cost_correction(&mut self, t: f64, rel_err: f64) {
+        self.correction_error.push(rel_err);
+        self.correction_trace.push((t, rel_err));
+    }
+
     /// Record one scheduling decision's host latency.
     pub fn record_sched_decision(&mut self, d: Duration) {
         self.sched_latency.push(d.as_secs_f64());
@@ -143,6 +162,31 @@ impl RunMetrics {
     /// Swap-outs performed.
     pub fn swap_out_count(&self) -> u64 {
         self.swap_outs
+    }
+
+    /// Tasks emitted at runtime by spawn rules.
+    pub fn spawned_tasks(&self) -> u64 {
+        self.spawned_tasks
+    }
+
+    /// Number of §4.2 correction events recorded.
+    pub fn correction_samples(&self) -> u64 {
+        self.correction_error.count()
+    }
+
+    /// Mean relative error of corrected cost estimates vs ground truth
+    /// (0 when correction never ran).
+    pub fn correction_error_mean(&self) -> f64 {
+        if self.correction_error.count() == 0 {
+            0.0
+        } else {
+            self.correction_error.mean()
+        }
+    }
+
+    /// The correction-error trace: (engine time, relative error) per event.
+    pub fn correction_trace(&self) -> &[(f64, f64)] {
+        &self.correction_trace
     }
 
     /// Prompt tokens actually prefilled (cached-prefix tokens excluded).
@@ -260,6 +304,10 @@ impl RunMetrics {
         self.prefill_tokens_saved += other.prefill_tokens_saved;
         self.cache_pages_peak = self.cache_pages_peak.max(other.cache_pages_peak);
         self.sched_latency.merge(&other.sched_latency);
+        self.spawned_tasks += other.spawned_tasks;
+        self.correction_error.merge(&other.correction_error);
+        self.correction_trace.extend(other.correction_trace.iter().copied());
+        self.correction_trace.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         self.kv_samples.extend(other.kv_samples.iter().cloned());
         self.kv_samples.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
     }
@@ -448,6 +496,32 @@ mod tests {
         assert_eq!(a.prefill_tokens_saved(), 130);
         assert_eq!(a.prefill_tokens_executed(), 120);
         assert_eq!(a.cache_pages_peak(), 7, "gauge must max, not add");
+    }
+
+    #[test]
+    fn spawn_and_correction_counters() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.spawned_tasks(), 0);
+        assert_eq!(m.correction_samples(), 0);
+        assert_eq!(m.correction_error_mean(), 0.0);
+        m.on_task_spawned();
+        m.on_task_spawned();
+        m.on_cost_correction(1.0, 0.5);
+        m.on_cost_correction(2.0, 0.1);
+        assert_eq!(m.spawned_tasks(), 2);
+        assert_eq!(m.correction_samples(), 2);
+        assert!((m.correction_error_mean() - 0.3).abs() < 1e-12);
+        assert_eq!(m.correction_trace(), &[(1.0, 0.5), (2.0, 0.1)]);
+
+        let mut other = RunMetrics::new();
+        other.on_task_spawned();
+        other.on_cost_correction(1.5, 0.3);
+        m.merge(&other);
+        assert_eq!(m.spawned_tasks(), 3);
+        assert_eq!(m.correction_samples(), 3);
+        assert!((m.correction_error_mean() - 0.3).abs() < 1e-12);
+        // Trace is merged in time order.
+        assert_eq!(m.correction_trace(), &[(1.0, 0.5), (1.5, 0.3), (2.0, 0.1)]);
     }
 
     #[test]

@@ -23,7 +23,11 @@ impl NoisyOracle {
         NoisyOracle { model, lambda, rng: Rng::with_stream(seed, 0x04ac1e) }
     }
 
-    /// The scheduled cost for an agent: truth × U_log[1/λ, λ].
+    /// The scheduled cost for an agent: truth × U_log[1/λ, λ]. "Truth" is
+    /// the *arrival-visible* static DAG cost — dynamically spawned work is
+    /// deliberately excluded, mirroring a real predictor that cannot see
+    /// tasks which do not exist yet (the §4.2 online-correction loop is what
+    /// closes that gap mid-flight).
     pub fn cost(&mut self, agent: &AgentSpec) -> f64 {
         let truth = self.model.agent_cost(agent);
         if self.lambda <= 1.0 {

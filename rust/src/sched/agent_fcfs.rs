@@ -97,7 +97,7 @@ mod tests {
     use crate::workload::TaskId;
 
     fn info(id: u32, arrival: f64) -> AgentInfo {
-        AgentInfo { id, arrival, cost: 0.0 }
+        AgentInfo::new(id, arrival, 0.0)
     }
 
     fn task(agent: u32, index: u32, seq: u64) -> TaskInfo {

@@ -107,8 +107,8 @@ mod tests {
     #[test]
     fn preemption_rank_latest_first() {
         let mut s = Fcfs::new();
-        s.on_agent_arrival(&AgentInfo { id: 1, arrival: 0.0, cost: 1.0 }, 0.0);
-        s.on_agent_arrival(&AgentInfo { id: 2, arrival: 9.0, cost: 1.0 }, 9.0);
+        s.on_agent_arrival(&AgentInfo::new(1, 0.0, 1.0), 0.0);
+        s.on_agent_arrival(&AgentInfo::new(2, 9.0, 1.0), 9.0);
         assert!(s.preemption_rank(2, 9.0) > s.preemption_rank(1, 9.0));
     }
 }

@@ -49,15 +49,21 @@ pub fn run(
     GpsResult { finish, tags }
 }
 
-/// Run the GPS fluid over a workload suite with a cost model.
+/// Run the GPS fluid over a workload suite with a cost model. Agent costs
+/// are the expanded end-to-end ground truth (static DAG + deterministically
+/// spawned work) — identical to plain Eq. 1 sums for agents without a spawn
+/// rule.
 pub fn run_suite(
     suite: &Suite,
     model: CostModel,
     capacity_tokens: u64,
     rate_scale: f64,
 ) -> GpsResult {
-    let triples: Vec<(AgentId, f64, f64)> =
-        suite.agents.iter().map(|a| (a.id, a.arrival, model.agent_cost(a))).collect();
+    let triples: Vec<(AgentId, f64, f64)> = suite
+        .agents
+        .iter()
+        .map(|a| (a.id, a.arrival, crate::cost::expanded_agent_cost(model, a)))
+        .collect();
     run(&triples, capacity_tokens, rate_scale)
 }
 

@@ -17,12 +17,19 @@ use std::collections::{BinaryHeap, HashMap};
 /// Virtual-time fair-queuing scheduler.
 pub struct Justitia {
     vclock: VirtualClock,
-    /// F_j per agent (static once computed).
+    /// F_j per agent (computed on arrival; re-derived only by §4.2 online
+    /// correction via [`Scheduler::on_cost_update`]).
     tags: HashMap<AgentId, f64>,
+    /// V(a_j) recorded at arrival, so a corrected total cost re-derives
+    /// F_j = V(a_j) + Ĉ_j' without disturbing the arrival anchoring.
+    v_arrival: HashMap<AgentId, f64>,
+    /// Predicted critical-path cost per agent (introspection; the priority
+    /// order itself keys on the total cost F_j).
+    cpaths: HashMap<AgentId, f64>,
     waiting: AgentQueues,
     /// Min-heap over (F_j, agent) for O(log N) selection; entries are lazily
-    /// dropped when the agent has no waiting tasks (stale) and re-pushed when
-    /// new tasks of a known agent arrive.
+    /// dropped when the agent has no waiting tasks or was re-tagged (stale)
+    /// and re-pushed when new tasks of a known agent arrive.
     heap: BinaryHeap<Reverse<(OrdF64, AgentId)>>,
     /// Agents currently represented in the heap (to avoid duplicate pushes).
     in_heap: std::collections::HashSet<AgentId>,
@@ -36,6 +43,8 @@ impl Justitia {
         Justitia {
             vclock: VirtualClock::new(capacity_tokens, rate_scale),
             tags: HashMap::new(),
+            v_arrival: HashMap::new(),
+            cpaths: HashMap::new(),
             waiting: AgentQueues::new(),
             heap: BinaryHeap::new(),
             in_heap: std::collections::HashSet::new(),
@@ -55,6 +64,12 @@ impl Justitia {
         self.tags.get(&agent).copied()
     }
 
+    /// The predicted critical-path cost recorded at arrival (remaining-DAG
+    /// diagnostics; see [`AgentInfo::critical_path`]).
+    pub fn critical_path(&self, agent: AgentId) -> Option<f64> {
+        self.cpaths.get(&agent).copied()
+    }
+
     /// Access the underlying virtual clock (GPS reference for metrics).
     pub fn vclock_mut(&mut self) -> &mut VirtualClock {
         &mut self.vclock
@@ -62,14 +77,26 @@ impl Justitia {
 
     fn ensure_in_heap(&mut self, agent: AgentId) {
         if self.waiting.has_agent(agent) && self.in_heap.insert(agent) {
-            let f = self.tags.get(&agent).copied().unwrap_or(f64::MAX);
+            let f = self.current_tag(agent);
             self.heap.push(Reverse((OrdF64(f), agent)));
         }
     }
 
-    /// Drop stale heap heads (agents with no waiting tasks).
+    fn current_tag(&self, agent: AgentId) -> f64 {
+        self.tags.get(&agent).copied().unwrap_or(f64::MAX)
+    }
+
+    /// Drop stale heap heads: entries whose agent has no waiting tasks, or
+    /// whose recorded tag no longer matches the live one (the agent was
+    /// re-tagged by online correction; its fresh entry is elsewhere in the
+    /// heap). Without corrections every in-heap entry matches its tag, and
+    /// this reduces to the original no-waiting-tasks skim.
     fn skim(&mut self) {
-        while let Some(&Reverse((_, agent))) = self.heap.peek() {
+        while let Some(&Reverse((OrdF64(f), agent))) = self.heap.peek() {
+            if f != self.current_tag(agent) {
+                self.heap.pop();
+                continue;
+            }
             if self.waiting.has_agent(agent) {
                 return;
             }
@@ -85,9 +112,12 @@ impl Scheduler for Justitia {
     }
 
     fn on_agent_arrival(&mut self, info: &AgentInfo, now: f64) {
-        // Paper Eq. 3 — computed once, never refreshed.
+        // Paper Eq. 3 — computed once; refreshed only by §4.2 correction.
         let f = self.vclock.on_arrival(info.id, info.cost, now);
         self.tags.insert(info.id, f);
+        // V(a_j) = F_j − Ĉ_j, kept so corrections re-anchor at arrival time.
+        self.v_arrival.insert(info.id, f - info.cost.max(0.0));
+        self.cpaths.insert(info.id, info.critical_path);
     }
 
     fn push_task(&mut self, task: TaskInfo, now: f64) {
@@ -123,9 +153,32 @@ impl Scheduler for Justitia {
 
     fn on_agent_complete(&mut self, agent: AgentId, now: f64) {
         // Advance virtual time opportunistically; the tag itself stays (GPS
-        // may lag or lead the real system).
+        // may lag or lead the real system). The correction-only maps are
+        // pruned — completed agents can no longer be re-tagged, and a
+        // long-lived server must not grow them unboundedly.
         self.vclock.advance(now);
-        let _ = agent;
+        self.v_arrival.remove(&agent);
+        self.cpaths.remove(&agent);
+    }
+
+    fn on_cost_update(&mut self, agent: AgentId, _remaining: f64, total: f64, now: f64) {
+        // §4.2 correction: re-derive F_j = V(a_j) + Ĉ_j' with the corrected
+        // end-to-end cost, keeping the arrival-time anchor (a later
+        // correction must not push the agent behind work that arrived after
+        // it merely because time passed). Both the selection heap and the
+        // GPS virtual clock are re-tagged; stale entries die lazily.
+        let Some(&v0) = self.v_arrival.get(&agent) else { return };
+        let new_f = v0 + total.max(0.0);
+        if self.tags.get(&agent).copied() == Some(new_f) {
+            return;
+        }
+        self.vclock.advance(now);
+        self.vclock.retag(agent, new_f);
+        self.tags.insert(agent, new_f);
+        // Refresh the waiting-queue entry (if any): drop the in-heap mark so
+        // ensure_in_heap pushes a fresh entry; the old one is now stale.
+        self.in_heap.remove(&agent);
+        self.ensure_in_heap(agent);
     }
 
     fn preemption_rank(&self, agent: AgentId, _now: f64) -> f64 {
@@ -148,7 +201,7 @@ mod tests {
     use crate::workload::TaskId;
 
     fn info(id: u32, cost: f64, arrival: f64) -> AgentInfo {
-        AgentInfo { id, arrival, cost }
+        AgentInfo::new(id, arrival, cost)
     }
 
     fn task(agent: u32, index: u32, seq: u64) -> TaskInfo {
@@ -238,6 +291,53 @@ mod tests {
         assert!(e_idle < e_busy, "{e_idle} vs {e_busy}");
         // The probe must not perturb real tags.
         assert_eq!(busy.tag(1), Some(500.0));
+    }
+
+    #[test]
+    fn cost_update_retags_and_reorders() {
+        let mut s = Justitia::new(100, 1.0);
+        // Agent 1 predicted huge, agent 2 medium: initial order 2 then 1.
+        s.on_agent_arrival(&info(1, 1000.0, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 300.0, 0.0), 0.0);
+        s.push_task(task(1, 0, 0), 0.0);
+        s.push_task(task(2, 0, 1), 0.0);
+        assert_eq!(s.peek_next(0.0).unwrap().id.agent, 2);
+        // Correction: agent 1's true total is tiny → it re-tags ahead of 2.
+        s.on_cost_update(1, 50.0, 50.0, 0.0);
+        assert_eq!(s.tag(1), Some(50.0), "F = V(a)=0 + corrected 50");
+        assert_eq!(s.peek_next(0.0).unwrap().id.agent, 1);
+        assert_eq!(s.pop_next(0.0).unwrap().id.agent, 1);
+        assert_eq!(s.pop_next(0.0).unwrap().id.agent, 2);
+        assert!(s.pop_next(0.0).is_none());
+    }
+
+    #[test]
+    fn cost_update_keeps_arrival_anchor() {
+        let mut s = Justitia::new(10, 1.0);
+        s.on_agent_arrival(&info(1, 100.0, 0.0), 0.0);
+        // At t=5 the clock has advanced (V=50); a correction to total 80
+        // must anchor at V(arrival)=0, not V(now).
+        s.on_cost_update(1, 30.0, 80.0, 5.0);
+        assert_eq!(s.tag(1), Some(80.0));
+    }
+
+    #[test]
+    fn cost_update_for_unknown_agent_is_noop() {
+        let mut s = Justitia::new(10, 1.0);
+        s.on_cost_update(9, 10.0, 10.0, 0.0);
+        assert_eq!(s.tag(9), None);
+        assert!(s.pop_next(0.0).is_none());
+    }
+
+    #[test]
+    fn critical_path_is_recorded() {
+        let mut s = Justitia::new(10, 1.0);
+        s.on_agent_arrival(
+            &AgentInfo { id: 4, arrival: 0.0, cost: 100.0, critical_path: 37.5 },
+            0.0,
+        );
+        assert_eq!(s.critical_path(4), Some(37.5));
+        assert_eq!(s.critical_path(5), None);
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //!
 //! The engine owns the queues' *mechanics* (admission, swap, batching); a
 //! `Scheduler` owns the *policy*: which waiting task to admit next, and which
-//! running agent to preempt first when KV is exhausted. Tasks are pushed when
-//! their stage is released; all schedulers here are work-conserving.
+//! running agent to preempt first when KV is exhausted. Tasks are pushed the
+//! moment their DAG dependencies complete (stage barriers are the special
+//! case, and dynamically spawned tasks arrive mid-flight); all schedulers
+//! here are work-conserving.
 
 pub mod agent_fcfs;
 pub mod fcfs;
@@ -29,6 +31,20 @@ pub struct AgentInfo {
     pub arrival: f64,
     /// Predicted total service cost Ĉ_j.
     pub cost: f64,
+    /// Critical-path cost: the heaviest dependency chain through the agent's
+    /// task DAG under the scheduler's cost model — a lower bound on the
+    /// agent's serial work even at infinite parallelism. Equals `cost` for
+    /// single-chain agents; the built-in policies order by `cost` alone and
+    /// expose this for pampering diagnostics and experiments.
+    pub critical_path: f64,
+}
+
+impl AgentInfo {
+    /// Info with `critical_path` defaulted to `cost` (single-chain
+    /// assumption) — the common case in tests and micro-benches.
+    pub fn new(id: AgentId, arrival: f64, cost: f64) -> Self {
+        AgentInfo { id, arrival, cost, critical_path: cost }
+    }
 }
 
 /// A waiting inference task, as seen by the scheduler.
@@ -48,10 +64,11 @@ pub struct TaskInfo {
 pub trait Scheduler: Send {
     fn policy(&self) -> Policy;
 
-    /// A new agent arrived (called before its stage-0 tasks are pushed).
+    /// A new agent arrived (called before its root tasks are pushed).
     fn on_agent_arrival(&mut self, info: &AgentInfo, now: f64);
 
-    /// A task became ready (stage released) and entered the waiting queue.
+    /// A task became ready (all DAG dependencies completed — or it was just
+    /// spawned) and entered the waiting queue.
     fn push_task(&mut self, task: TaskInfo, now: f64);
 
     /// Pick the next waiting task to admit; removes it from the queue.
@@ -70,6 +87,14 @@ pub trait Scheduler: Send {
 
     /// All tasks of the agent finished.
     fn on_agent_complete(&mut self, _agent: AgentId, _now: f64) {}
+
+    /// Online misprediction correction (paper §4.2): the engine revised the
+    /// agent's cost estimate mid-flight. `remaining` is the corrected
+    /// remaining work and `total` the corrected end-to-end cost, both in the
+    /// scheduler's cost units. Policies with static tags re-derive them from
+    /// the corrected estimate (Justitia re-tags F_j from the arrival-time
+    /// virtual clock plus the corrected total); the default ignores it.
+    fn on_cost_update(&mut self, _agent: AgentId, _remaining: f64, _total: f64, _now: f64) {}
 
     /// Preemption rank among *running* agents when KV must be reclaimed:
     /// the engine swaps out sequences of the agent with the HIGHEST rank

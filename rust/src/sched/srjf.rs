@@ -11,13 +11,18 @@ use std::collections::HashMap;
 /// Agent-level SRJF scheduler state.
 pub struct Srjf {
     remaining: HashMap<AgentId, f64>,
+    /// Last corrected end-to-end cost estimate per agent (§4.2): corrections
+    /// apply as *total-estimate deltas* on top of the service-decremented
+    /// `remaining` counter, so service already delivered to in-flight tasks
+    /// is never re-added.
+    last_total: HashMap<AgentId, f64>,
     waiting: AgentQueues,
 }
 
 impl Srjf {
     /// Empty scheduler.
     pub fn new() -> Self {
-        Srjf { remaining: HashMap::new(), waiting: AgentQueues::new() }
+        Srjf { remaining: HashMap::new(), last_total: HashMap::new(), waiting: AgentQueues::new() }
     }
 
     /// Remaining predicted work of an agent (for tests).
@@ -39,6 +44,7 @@ impl Scheduler for Srjf {
 
     fn on_agent_arrival(&mut self, info: &AgentInfo, _now: f64) {
         self.remaining.insert(info.id, info.cost.max(0.0));
+        self.last_total.insert(info.id, info.cost.max(0.0));
     }
 
     fn push_task(&mut self, task: TaskInfo, _now: f64) {
@@ -66,8 +72,24 @@ impl Scheduler for Srjf {
         }
     }
 
+    fn on_cost_update(&mut self, agent: AgentId, _remaining: f64, total: f64, _now: f64) {
+        // §4.2 correction, applied as a delta on the corrected *total*: the
+        // local counter has already been decremented by on_service for
+        // partially-served in-flight tasks, so replacing it wholesale with
+        // the engine's completed-tasks-only remaining would re-add that
+        // service and deprioritize nearly-done agents. Shifting by the
+        // total-estimate change preserves the in-flight credit exactly.
+        let (Some(r), Some(lt)) = (self.remaining.get_mut(&agent), self.last_total.get_mut(&agent))
+        else {
+            return;
+        };
+        *r = (*r + (total - *lt)).max(0.0);
+        *lt = total;
+    }
+
     fn on_agent_complete(&mut self, agent: AgentId, _now: f64) {
         self.remaining.remove(&agent);
+        self.last_total.remove(&agent);
     }
 
     fn preemption_rank(&self, agent: AgentId, _now: f64) -> f64 {
@@ -82,7 +104,7 @@ mod tests {
     use crate::workload::TaskId;
 
     fn info(id: u32, cost: f64) -> AgentInfo {
-        AgentInfo { id, arrival: 0.0, cost }
+        AgentInfo::new(id, 0.0, cost)
     }
 
     fn task(agent: u32, index: u32, seq: u64) -> TaskInfo {
@@ -110,6 +132,24 @@ mod tests {
         s.on_service(1, 50.0);
         assert!((s.remaining(1) - 50.0).abs() < 1e-12);
         assert_eq!(s.pop_next(0.0).unwrap().id.agent, 1);
+    }
+
+    #[test]
+    fn cost_update_shifts_remaining_by_total_delta() {
+        let mut s = Srjf::new();
+        s.on_agent_arrival(&info(1, 100.0), 0.0);
+        // No service yet: correcting the total to 40 lands remaining at 40.
+        s.on_cost_update(1, 12.0, 40.0, 0.0);
+        assert!((s.remaining(1) - 40.0).abs() < 1e-12);
+        // 30 units served, then total corrected 40 → 55: the in-flight
+        // service credit survives (remaining = 55 − 30, not 55).
+        s.on_service(1, 30.0);
+        s.on_cost_update(1, 0.0, 55.0, 0.0);
+        assert!((s.remaining(1) - 25.0).abs() < 1e-12);
+        // Unknown agents are ignored (no resurrection after completion).
+        s.on_agent_complete(1, 0.0);
+        s.on_cost_update(1, 99.0, 99.0, 0.0);
+        assert_eq!(s.remaining(1), 0.0);
     }
 
     #[test]

@@ -113,7 +113,7 @@ mod tests {
     use crate::workload::TaskId;
 
     fn info(id: u32) -> AgentInfo {
-        AgentInfo { id, arrival: 0.0, cost: 0.0 }
+        AgentInfo::new(id, 0.0, 0.0)
     }
 
     fn task(agent: u32, index: u32, seq: u64) -> TaskInfo {

@@ -28,14 +28,25 @@ use std::collections::BinaryHeap;
 use std::collections::HashMap;
 
 /// Virtual clock + GPS-active set.
+///
+/// Supports online *re-tagging* ([`VirtualClock::retag`], the §4.2
+/// misprediction-correction loop): heap entries are lazily invalidated —
+/// an entry is live only while it matches the agent's current tag — and the
+/// GPS-active population is tracked by an explicit counter so stale entries
+/// never distort the fair rate. Without retags the clock behaves exactly as
+/// the original (every entry stays live), bit for bit.
 #[derive(Debug, Clone)]
 pub struct VirtualClock {
     m: f64,
     rate_scale: f64,
     v: f64,
     last_t: f64,
-    /// GPS-active agents: min-heap on virtual finish time.
+    /// GPS-active agents: min-heap on virtual finish time. May hold stale
+    /// entries after a retag; liveness = entry matches `tags` and the agent
+    /// has no GPS finish yet.
     active: BinaryHeap<Reverse<(OrdF64, AgentId)>>,
+    /// Number of distinct GPS-active agents (arrived, not yet GPS-finished).
+    n_active: usize,
     /// Real-time GPS completion, recorded when V crosses F_j.
     gps_finish: HashMap<AgentId, f64>,
     /// Virtual finish tags (F_j), kept for inspection.
@@ -53,6 +64,7 @@ impl VirtualClock {
             v: 0.0,
             last_t: 0.0,
             active: BinaryHeap::new(),
+            n_active: 0,
             gps_finish: HashMap::new(),
             tags: HashMap::new(),
         }
@@ -61,7 +73,20 @@ impl VirtualClock {
     /// Number of GPS-active agents right now (N_t after advancing to `now`).
     pub fn active_agents(&mut self, now: f64) -> usize {
         self.advance(now);
-        self.active.len()
+        self.n_active
+    }
+
+    /// Drop heap entries that no longer reflect an agent's live tag (the
+    /// agent was retagged, or already GPS-finished).
+    fn skim_stale(&mut self) {
+        while let Some(&Reverse((OrdF64(f), a))) = self.active.peek() {
+            let live =
+                !self.gps_finish.contains_key(&a) && self.tags.get(&a).copied() == Some(f);
+            if live {
+                return;
+            }
+            self.active.pop();
+        }
     }
 
     /// Current virtual time after advancing to `now`.
@@ -76,7 +101,8 @@ impl VirtualClock {
         debug_assert!(now + 1e-9 >= self.last_t, "time went backwards: {} < {}", now, self.last_t);
         let now = now.max(self.last_t);
         loop {
-            let n = self.active.len();
+            self.skim_stale();
+            let n = self.n_active;
             if n == 0 {
                 // Idle GPS server: V holds (no active agents to serve).
                 self.last_t = now;
@@ -87,11 +113,15 @@ impl VirtualClock {
             let &Reverse((OrdF64(min_f), min_agent)) = self.active.peek().unwrap();
             let t_finish = self.last_t + (min_f - self.v).max(0.0) / rate;
             if t_finish <= now {
-                // Agent min_agent completes in GPS at t_finish.
-                self.v = min_f;
+                // Agent min_agent completes in GPS at t_finish. A downward
+                // retag can leave min_f below the current V; V itself must
+                // stay monotone (it anchors every later arrival's tag), so
+                // such agents finish immediately without regressing V.
+                self.v = self.v.max(min_f);
                 self.last_t = t_finish;
                 self.active.pop();
                 self.gps_finish.insert(min_agent, t_finish);
+                self.n_active -= 1;
             } else {
                 self.v += rate * (now - self.last_t);
                 self.last_t = now;
@@ -107,7 +137,24 @@ impl VirtualClock {
         let f = self.v + cost.max(0.0);
         self.active.push(Reverse((OrdF64(f), agent)));
         self.tags.insert(agent, f);
+        self.n_active += 1;
         f
+    }
+
+    /// Replace an active agent's virtual finish tag (§4.2 online
+    /// correction). The old heap entry becomes stale and is skimmed lazily;
+    /// the GPS-active population is unchanged. A no-op once the agent has
+    /// already GPS-finished (the correction arrived too late to matter) or
+    /// was never registered.
+    pub fn retag(&mut self, agent: AgentId, new_f: f64) {
+        if self.gps_finish.contains_key(&agent) || !self.tags.contains_key(&agent) {
+            return;
+        }
+        if self.tags.get(&agent).copied() == Some(new_f) {
+            return;
+        }
+        self.tags.insert(agent, new_f);
+        self.active.push(Reverse((OrdF64(new_f), agent)));
     }
 
     /// The virtual finish tag of an agent, if registered.
@@ -142,8 +189,10 @@ impl VirtualClock {
     /// Drain the active set: advance until every registered agent has a GPS
     /// finish time, and return the final real time.
     pub fn finish_all(&mut self) -> f64 {
-        while let Some(&Reverse((OrdF64(min_f), _))) = self.active.peek() {
-            let n = self.active.len();
+        loop {
+            self.skim_stale();
+            let Some(&Reverse((OrdF64(min_f), _))) = self.active.peek() else { break };
+            let n = self.n_active;
             let rate = self.m / n as f64 * self.rate_scale;
             let t = self.last_t + (min_f - self.v).max(0.0) / rate;
             self.advance(t + 1e-12);
@@ -269,6 +318,66 @@ mod tests {
         let on_empty = empty.hypothetical_gps_finish(9, 100.0, 0.0);
         let on_busy = busy.hypothetical_gps_finish(9, 100.0, 0.0);
         assert!(on_empty < on_busy, "{on_empty} vs {on_busy}");
+    }
+
+    #[test]
+    fn retag_moves_gps_finish() {
+        // Two agents, M=10. Agent 2's cost is corrected down from 150 to 50
+        // at t=2: it should then finish like a 50-cost agent would.
+        let mut a = VirtualClock::new(10, 1.0);
+        a.on_arrival(1, 50.0, 0.0);
+        a.on_arrival(2, 150.0, 0.0);
+        a.advance(2.0); // V = 10
+        a.retag(2, a.vt(2.0) - /* served share ≈ */ 10.0 + 50.0);
+        a.finish_all();
+        let mut b = VirtualClock::new(10, 1.0);
+        b.on_arrival(1, 50.0, 0.0);
+        b.on_arrival(2, 150.0, 0.0);
+        b.finish_all();
+        // Corrected agent 2 finishes strictly earlier than uncorrected.
+        assert!(a.gps_finish(2).unwrap() < b.gps_finish(2).unwrap());
+        // Population accounting stayed sane: both finished exactly once.
+        assert_eq!(a.active_agents(1e9), 0);
+    }
+
+    #[test]
+    fn retag_is_noop_after_finish_or_for_unknown() {
+        let mut vc = VirtualClock::new(10, 1.0);
+        vc.on_arrival(1, 10.0, 0.0);
+        vc.finish_all();
+        let done = vc.gps_finish(1).unwrap();
+        vc.retag(1, 9999.0);
+        vc.retag(77, 5.0); // never arrived
+        vc.finish_all();
+        assert_eq!(vc.gps_finish(1), Some(done));
+        assert_eq!(vc.gps_finish(77), None);
+        assert_eq!(vc.active_agents(1e9), 0);
+    }
+
+    #[test]
+    fn downward_retag_does_not_regress_virtual_time() {
+        // M=10, one active agent with F=1000; V reaches 200 at t=20. A
+        // correction down to 150 (< V) must finish the agent immediately
+        // WITHOUT pulling V backward — later arrivals anchor on V.
+        let mut vc = VirtualClock::new(10, 1.0);
+        vc.on_arrival(1, 1000.0, 0.0);
+        assert!((vc.vt(20.0) - 200.0).abs() < 1e-9);
+        vc.retag(1, 150.0);
+        vc.advance(20.0);
+        assert_eq!(vc.gps_finish(1), Some(20.0), "retagged-below-V agent finishes now");
+        assert!((vc.vt(20.0) - 200.0).abs() < 1e-9, "V must not regress");
+        // A later arrival is anchored at the un-regressed V.
+        let f2 = vc.on_arrival(2, 50.0, 20.0);
+        assert!((f2 - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn retag_same_value_changes_nothing() {
+        let mut a = VirtualClock::new(10, 1.0);
+        let f = a.on_arrival(1, 100.0, 0.0);
+        a.retag(1, f);
+        a.finish_all();
+        assert!((a.gps_finish(1).unwrap() - 10.0).abs() < 1e-9);
     }
 
     #[test]

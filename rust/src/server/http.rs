@@ -106,40 +106,38 @@ pub fn parse_agent_submission(
         .with_context(|| format!("unknown class '{class_name}'"))?;
     if let Some(stages_json) = v.get("stages").as_arr() {
         let mut stages = Vec::new();
-        let mut index = 0u32;
-        for (s, st) in stages_json.iter().enumerate() {
+        for st in stages_json {
             let mut tasks = Vec::new();
             for t in st.as_arr().context("stage must be an array")? {
+                // Ids/stages/deps are stamped by from_stages below.
                 tasks.push(InferenceSpec {
-                    id: TaskId { agent: id, index },
-                    stage: s as u32,
+                    id: TaskId { agent: id, index: 0 },
+                    stage: 0,
+                    deps: Vec::new(),
                     prompt_tokens: t.get("p").as_u64().context("p")? as u32,
                     decode_tokens: t.get("d").as_u64().context("d")? as u32,
                     kind: "http",
                     prefix_group: None,
                 });
-                index += 1;
             }
             stages.push(tasks);
         }
         anyhow::ensure!(!stages.is_empty() && stages.iter().all(|s| !s.is_empty()), "empty stages");
-        Ok(AgentSpec {
+        Ok(AgentSpec::from_stages(
             id,
             class,
-            arrival: 0.0,
+            0.0,
             stages,
-            input_text: v.get("input").as_str().unwrap_or("").to_string(),
-        })
+            v.get("input").as_str().unwrap_or("").to_string(),
+        ))
     } else {
         // Generate from the class template.
         let mut gen = crate::workload::generator::Generator::new(seed ^ id as u64);
         let mut a = gen.agent(class, id, 0.0);
         // HTTP-served model is the tiny artifact: clamp lengths to fit.
-        for st in &mut a.stages {
-            for t in st.iter_mut() {
-                t.prompt_tokens = t.prompt_tokens.clamp(1, 48) / 4 + 2;
-                t.decode_tokens = t.decode_tokens.clamp(1, 48) / 4 + 2;
-            }
+        for t in &mut a.tasks {
+            t.prompt_tokens = t.prompt_tokens.clamp(1, 48) / 4 + 2;
+            t.decode_tokens = t.decode_tokens.clamp(1, 48) / 4 + 2;
         }
         Ok(a)
     }
@@ -372,8 +370,12 @@ mod tests {
         assert_eq!(spec.id, 7);
         assert_eq!(spec.class, AgentClass::DocumentMerging);
         assert_eq!(spec.n_tasks(), 3);
-        assert_eq!(spec.stages[0][1].prompt_tokens, 8);
+        assert_eq!(spec.tasks[1].prompt_tokens, 8);
         assert!(spec.tasks().all(|t| t.id.agent == 7));
+        // The explicit-stages path builds a barrier DAG: the stage-1 task
+        // depends on both stage-0 tasks.
+        assert_eq!(spec.tasks[2].deps.len(), 2);
+        assert!(spec.as_stages().is_some());
     }
 
     #[test]

@@ -8,16 +8,62 @@
 //! the total prompt tokens — so the TF-IDF+MLP predictor (paper §4.2) has
 //! real signal: cost correlates with input length and class keywords,
 //! exactly the structure Appendix A reports.
+//!
+//! Beyond the staged form, [`Generator::dag_agent`] arranges the same
+//! class-calibrated task sizes into the three DAG workflow shapes of
+//! DESIGN.md §9 — map-reduce with partial combiners, tree-of-thought
+//! branching, and sequential pipelines — optionally with a dynamic
+//! [`SpawnSpec`](crate::workload::SpawnSpec) rule.
 
 use crate::util::rng::Rng;
 use crate::workload::classes::{AgentClass, LenDist, StageTemplate};
-use crate::workload::{AgentId, AgentSpec, InferenceSpec, TaskId};
+use crate::workload::{AgentId, AgentSpec, InferenceSpec, SpawnSpec, TaskId};
 
 /// Draw a truncated skew-normal length.
 pub fn sample_len(rng: &mut Rng, d: &LenDist, scale: f64) -> u32 {
     let x = rng.skew_normal(d.xi * scale, d.omega * scale.sqrt(), d.alpha);
     (x.round() as i64).clamp(d.min as i64, ((d.max as f64 * scale).round() as i64).max(d.min as i64 + 1))
         as u32
+}
+
+/// The three DAG workflow shape families (DESIGN.md §9): the scenario axes
+/// the staged form cannot express.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DagShape {
+    /// N map tasks → ⌈√N⌉-sized partial combiners → one final merge. The
+    /// combiners depend on *subsets* of the maps, so the DAG is strictly
+    /// more parallel than a stage barrier.
+    MapReduce,
+    /// Tree-of-thought: a root, `branch` children per node for two levels,
+    /// and a final selection task over all leaves.
+    Tree,
+    /// A sequential chain of single-task levels (each task depends only on
+    /// its predecessor) — the workflow with zero intra-agent parallelism.
+    Pipeline,
+}
+
+impl DagShape {
+    /// All shapes, in experiment/report order.
+    pub const ALL: [DagShape; 3] = [DagShape::MapReduce, DagShape::Tree, DagShape::Pipeline];
+
+    /// CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DagShape::MapReduce => "map-reduce",
+            DagShape::Tree => "tree",
+            DagShape::Pipeline => "pipeline",
+        }
+    }
+
+    /// Parse a shape name.
+    pub fn by_name(name: &str) -> Option<DagShape> {
+        match name {
+            "map-reduce" | "mapreduce" => Some(DagShape::MapReduce),
+            "tree" => Some(DagShape::Tree),
+            "pipeline" => Some(DagShape::Pipeline),
+            _ => None,
+        }
+    }
 }
 
 /// Generator for agents of the nine §5.1 classes.
@@ -55,6 +101,7 @@ impl Generator {
                 tasks.push(InferenceSpec {
                     id: TaskId { agent: id, index },
                     stage: s as u32,
+                    deps: Vec::new(),
                     prompt_tokens: prompt,
                     decode_tokens: decode,
                     kind: st.kind,
@@ -65,8 +112,108 @@ impl Generator {
             stages.push(tasks);
         }
 
-        let input_text = synthesize_input(&mut rng, &template.theme, &stages, u);
-        AgentSpec { id, class, arrival, stages, input_text }
+        let input_text = synthesize_input(&mut rng, &template.theme, &stages[0], u);
+        AgentSpec::from_stages(id, class, arrival, stages, input_text)
+    }
+
+    /// Generate one *DAG-shaped* agent: the class's calibrated (p, d)
+    /// distributions arranged into `shape`, with a deterministic spawn rule
+    /// when `spawn_prob > 0`. Fully reproducible per (generator seed, id),
+    /// like [`Generator::agent`].
+    pub fn dag_agent(
+        &mut self,
+        class: AgentClass,
+        shape: DagShape,
+        id: AgentId,
+        arrival: f64,
+        spawn_prob: f64,
+        branch: u32,
+    ) -> AgentSpec {
+        let mut rng = self.rng.fork(id as u64 + 1);
+        let template = class.template();
+        let u = rng.lognormal(0.0, 0.25).clamp(0.5, 2.0);
+        let stages = template.stages;
+        let first = &stages[0];
+        let last = stages.last().unwrap();
+
+        // Helper drawing one task from a stage template's distributions.
+        let task =
+            |rng: &mut Rng, index: u32, stage: u32, st: &StageTemplate, deps: Vec<u32>| {
+                InferenceSpec {
+                    id: TaskId { agent: id, index },
+                    stage,
+                    deps: deps.into_iter().map(|j| TaskId { agent: id, index: j }).collect(),
+                    prompt_tokens: sample_len(rng, &st.prompt, 1.0),
+                    decode_tokens: sample_len(rng, &st.decode, 1.0),
+                    kind: st.kind,
+                    prefix_group: None,
+                }
+            };
+
+        let mut tasks: Vec<InferenceSpec> = Vec::new();
+        match shape {
+            DagShape::MapReduce => {
+                let n = stage_fan_out(&mut rng, first, u).max(2);
+                for i in 0..n {
+                    tasks.push(task(&mut rng, i, 0, first, Vec::new()));
+                }
+                // Partial combiners over ⌈√n⌉-sized chunks of the maps,
+                // clamped so there are always ≥ 2 combiners (a single
+                // combiner would degenerate back into a stage barrier).
+                let group = ((n as f64).sqrt().ceil() as u32).min((n - 1).max(1));
+                let combiners: Vec<u32> = (0..n.div_ceil(group))
+                    .map(|c| {
+                        let deps: Vec<u32> = (c * group..((c + 1) * group).min(n)).collect();
+                        let idx = tasks.len() as u32;
+                        tasks.push(task(&mut rng, idx, 1, last, deps));
+                        idx
+                    })
+                    .collect();
+                let idx = tasks.len() as u32;
+                tasks.push(task(&mut rng, idx, 2, last, combiners));
+            }
+            DagShape::Tree => {
+                let b = branch.clamp(2, 6);
+                tasks.push(task(&mut rng, 0, 0, first, Vec::new()));
+                let mid = stages.get(1).unwrap_or(first);
+                let level1: Vec<u32> = (0..b)
+                    .map(|_| {
+                        let idx = tasks.len() as u32;
+                        tasks.push(task(&mut rng, idx, 1, mid, vec![0]));
+                        idx
+                    })
+                    .collect();
+                let mut leaves: Vec<u32> = Vec::new();
+                for &p in &level1 {
+                    for _ in 0..b {
+                        let idx = tasks.len() as u32;
+                        tasks.push(task(&mut rng, idx, 2, mid, vec![p]));
+                        leaves.push(idx);
+                    }
+                }
+                let idx = tasks.len() as u32;
+                tasks.push(task(&mut rng, idx, 3, last, leaves));
+            }
+            DagShape::Pipeline => {
+                let len = stages.len() as u32 + rng.range_u64(1, 3) as u32;
+                for i in 0..len {
+                    let st = &stages[(i as usize).min(stages.len() - 1)];
+                    let deps = if i == 0 { Vec::new() } else { vec![i - 1] };
+                    tasks.push(task(&mut rng, i, i, st, deps));
+                }
+            }
+        }
+
+        let spawn = (spawn_prob > 0.0).then(|| SpawnSpec {
+            prob: spawn_prob,
+            branch: branch.max(1),
+            max_depth: 2,
+            seed: rng.next_u64(),
+        });
+        let roots: Vec<InferenceSpec> =
+            tasks.iter().filter(|t| t.deps.is_empty()).cloned().collect();
+        let input_text = synthesize_input(&mut rng, &template.theme, &roots, u);
+        AgentSpec { id, class, arrival, tasks, spawn, input_text }
     }
 }
 
@@ -79,28 +226,28 @@ fn stage_fan_out(rng: &mut Rng, st: &StageTemplate, u: f64) -> u32 {
     }
 }
 
-/// Synthesize the user-facing input text. Properties the predictor can
-/// exploit (and that the paper's Appendix A documents for real agents):
-///   - word count ≈ total stage-0 prompt tokens (the user input drives the
-///     first stage's prompts),
+/// Synthesize the user-facing input text from the agent's *root* tasks (the
+/// ones the user input directly feeds). Properties the predictor can exploit
+/// (and that the paper's Appendix A documents for real agents):
+///   - word count ≈ total root prompt tokens (the user input drives the
+///     first level's prompts),
 ///   - class-theme keywords appear throughout (class-identifying signal),
-///   - a "chunk marker" per stage-0 task (fan-out signal).
-fn synthesize_input(rng: &mut Rng, theme: &str, stages: &[Vec<InferenceSpec>], u: f64) -> String {
+///   - a "chunk marker" per root task (fan-out signal).
+fn synthesize_input(rng: &mut Rng, theme: &str, roots: &[InferenceSpec], u: f64) -> String {
     let theme_words: Vec<&str> = theme.split_whitespace().collect();
     let filler = [
         "the", "and", "with", "for", "from", "that", "this", "into", "over", "under", "about",
         "data", "item", "value", "note", "case", "part", "line", "page", "field", "word",
     ];
-    let stage0 = &stages[0];
-    let target_words: usize = stage0.iter().map(|t| t.prompt_tokens as usize).sum::<usize>()
-        .saturating_sub(stage0.len() * 8)
+    let target_words: usize = roots.iter().map(|t| t.prompt_tokens as usize).sum::<usize>()
+        .saturating_sub(roots.len() * 8)
         .max(8);
     let mut out = String::with_capacity(target_words * 6);
     let mut words = 0usize;
-    for (k, _task) in stage0.iter().enumerate() {
+    for (k, _task) in roots.iter().enumerate() {
         out.push_str(&format!("CHUNK {k} : "));
         words += 3;
-        let per_chunk = target_words / stage0.len().max(1);
+        let per_chunk = target_words / roots.len().max(1);
         for _ in 0..per_chunk {
             // Mix ~30% theme words with filler; approximates real prompts
             // where the task vocabulary dominates TF-IDF.
@@ -141,7 +288,7 @@ mod tests {
         let a2 = g2.agent(AgentClass::DocumentMerging, 3, 1.0);
         assert_eq!(a1, a2);
         let b = g1.agent(AgentClass::DocumentMerging, 4, 1.0);
-        assert_ne!(a1.stages, b.stages);
+        assert_ne!(a1.tasks, b.tasks);
     }
 
     #[test]
@@ -150,8 +297,9 @@ mod tests {
         for class in AgentClass::ALL {
             let a = g.agent(class, 0, 0.0);
             let t = class.template();
-            assert_eq!(a.stages.len(), t.stages.len(), "{class:?}");
-            for (stage, st) in a.stages.iter().zip(t.stages.iter()) {
+            let stages = a.as_stages().expect("agent() builds staged agents");
+            assert_eq!(stages.len(), t.stages.len(), "{class:?}");
+            for (stage, st) in stages.iter().zip(t.stages.iter()) {
                 assert!(!stage.is_empty());
                 for task in stage {
                     assert!(task.prompt_tokens >= st.prompt.min, "{class:?} {}", st.kind);
@@ -187,14 +335,19 @@ mod tests {
     fn input_text_tracks_prompt_volume() {
         let mut g = Generator::new(13);
         let tok = Tokenizer::new(4096);
-        // Correlation between input token count and stage-0 prompt volume
+        // Correlation between input token count and root prompt volume
         // across many agents should be strongly positive.
         let mut xs = Vec::new();
         let mut ys = Vec::new();
         for i in 0..60 {
             let a = g.agent(AgentClass::MapReduceSummarization, i, 0.0);
             xs.push(tok.count(&a.input_text) as f64);
-            ys.push(a.stages[0].iter().map(|t| t.prompt_tokens as f64).sum::<f64>());
+            ys.push(
+                a.tasks()
+                    .filter(|t| t.deps.is_empty())
+                    .map(|t| t.prompt_tokens as f64)
+                    .sum::<f64>(),
+            );
         }
         let corr = correlation(&xs, &ys);
         assert!(corr > 0.8, "corr={corr}");
@@ -211,6 +364,60 @@ mod tests {
             .split_whitespace()
             .any(|w| a.input_text.contains(w));
         assert!(theme_hit);
+    }
+
+    #[test]
+    fn dag_agent_shapes_are_well_formed() {
+        let mut g = Generator::new(23);
+        for (i, shape) in DagShape::ALL.into_iter().enumerate() {
+            for class in [AgentClass::MapReduceSummarization, AgentClass::CodeChecking] {
+                let a = g.dag_agent(class, shape, 100 + i as u32, 0.0, 0.3, 3);
+                // Topological invariants: dense indices, deps point backward.
+                for (j, t) in a.tasks.iter().enumerate() {
+                    assert_eq!(t.id.index as usize, j);
+                    for d in &t.deps {
+                        assert!(d.index < t.id.index, "{shape:?} forward dep");
+                        assert_eq!(d.agent, a.id);
+                    }
+                }
+                assert!(a.spawn.is_some());
+                assert!(!a.input_text.is_empty());
+                match shape {
+                    DagShape::MapReduce => {
+                        assert!(a.as_stages().is_none(), "partial combiners break barriers");
+                        assert_eq!(a.depth(), 3);
+                    }
+                    DagShape::Tree => {
+                        assert_eq!(a.depth(), 4);
+                        // Root, two branch levels, one selector.
+                        assert_eq!(a.tasks.len(), 1 + 3 + 9 + 1);
+                    }
+                    DagShape::Pipeline => {
+                        assert_eq!(a.depth(), a.tasks.len());
+                        assert!(a.tasks.iter().skip(1).all(|t| t.deps.len() == 1));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dag_agent_is_deterministic() {
+        let mk = || {
+            let mut g = Generator::new(31);
+            g.dag_agent(AgentClass::SelfConsistency, DagShape::Tree, 5, 2.0, 0.4, 2)
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a, b);
+        assert_eq!(a.spawn, b.spawn, "spawn seed must be reproducible");
+        assert_eq!(a.expand_spawns(), b.expand_spawns());
+    }
+
+    #[test]
+    fn dag_agent_without_spawn_prob_has_no_spawn_rule() {
+        let mut g = Generator::new(37);
+        let a = g.dag_agent(AgentClass::CodeChecking, DagShape::Pipeline, 0, 0.0, 0.0, 2);
+        assert!(a.spawn.is_none());
     }
 
     fn correlation(xs: &[f64], ys: &[f64]) -> f64 {

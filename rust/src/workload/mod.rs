@@ -1,17 +1,26 @@
 //! Task-parallel LLM agent workloads (paper §2.1, §5.1, Appendix A).
 //!
-//! An *agent* is a DAG of LLM inferences structured as sequential *stages* of
-//! parallel *tasks*: stage k+1 is released only when every task of stage k
-//! has completed (map→reduce, merge→score→final, plan→execute, ...). The
-//! nine agent classes of §5.1 are synthesized by `generator` with
-//! per-class, per-stage skew-normal (p, d) token-length distributions
-//! (substitution T3 in DESIGN.md).
+//! An *agent* is a DAG of LLM inferences: each task lists the tasks it
+//! depends on ([`InferenceSpec::deps`]) and becomes ready the moment every
+//! dependency has completed. The classical *staged* form — sequential
+//! barriers of parallel tasks (map→reduce, merge→score→final, plan→execute)
+//! — is the special case where every task of level k+1 depends on all tasks
+//! of level k; [`AgentSpec::from_stages`] builds it and
+//! [`AgentSpec::as_stages`] recovers it. General DAGs additionally express
+//! map-reduce with partial combiners, tree-of-thought branching, and
+//! pipelines, and an optional [`SpawnSpec`] lets completing tasks emit new
+//! child tasks at runtime (deterministically — see below). The nine agent
+//! classes of §5.1 are synthesized by `generator` with per-class, per-stage
+//! skew-normal (p, d) token-length distributions (substitution T3 in
+//! DESIGN.md); `generator` also builds the three DAG shape families
+//! (DESIGN.md §9).
 
 pub mod classes;
 pub mod generator;
 pub mod trace;
 
 pub use classes::AgentClass;
+pub use generator::DagShape;
 
 /// Identifies an agent within a workload suite.
 pub type AgentId = u32;
@@ -48,12 +57,22 @@ pub struct PrefixGroup {
 
 /// One LLM inference task. `prompt_tokens`/`decode_tokens` are the ground
 /// truth the engine executes; the scheduler only sees predictions.
+///
+/// Invariant (enforced by every constructor in this crate): within an
+/// [`AgentSpec`], `tasks[i].id.index == i` and every dependency in `deps`
+/// names a task with a *lower* index (the task list is a topological order).
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferenceSpec {
     /// Task identity.
     pub id: TaskId,
-    /// Stage index within the agent (tasks of stage s+1 wait on stage s).
+    /// DAG level label: 1 + the maximum level among dependencies (0 for
+    /// roots). For staged agents this is exactly the stage index; it is kept
+    /// for trace provenance and display and carries no release semantics —
+    /// release is governed by `deps` alone.
     pub stage: u32,
+    /// Direct dependencies: this task becomes ready only when every listed
+    /// task has completed. Empty for root tasks.
+    pub deps: Vec<TaskId>,
     /// Prompt (prefill) token length p.
     pub prompt_tokens: u32,
     /// Decode (output) token length d.
@@ -65,7 +84,95 @@ pub struct InferenceSpec {
     pub prefix_group: Option<PrefixGroup>,
 }
 
-/// One task-parallel LLM agent.
+/// Dynamic task spawning (DESIGN.md §9): when a task of the owning agent
+/// completes, it may emit `branch` child tasks that depend only on it.
+///
+/// Spawning is a *pure function* of the spec: the decision and the children's
+/// (p, d) sizes are drawn from a [`crate::util::rng::Rng`] child stream keyed
+/// by `(seed, parent index)`, and a child's index is the closed form
+/// `base + parent_index * branch + k` (`base` = the agent's static task
+/// count). Replays, different schedulers, and the static
+/// [`AgentSpec::expand_spawns`] expansion therefore all observe the *same*
+/// spawned task set — which is what lets the GPS fluid reference and the
+/// oracle cost map price spawned work before the run begins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpawnSpec {
+    /// Probability that a completing task spawns children (per task).
+    pub prob: f64,
+    /// Number of children emitted per spawn event.
+    pub branch: u32,
+    /// Maximum spawn generation: tasks of generation `max_depth` (counting
+    /// static tasks as generation 0) spawn nothing, bounding the cascade.
+    pub max_depth: u32,
+    /// Seed of the deterministic spawn stream (stored in the spec so suite
+    /// re-indexing cannot change spawn outcomes).
+    pub seed: u64,
+}
+
+impl SpawnSpec {
+    /// Spawn generation of a task index: 0 for static tasks (`index < base`),
+    /// else 1 + the generation of its parent (recovered by inverting the
+    /// child-index closed form).
+    pub fn generation(&self, index: u32, base: u32) -> u32 {
+        if base == 0 {
+            return 0; // empty agent: nothing to invert (and avoid i >= 0 loops)
+        }
+        let b = self.branch.max(1);
+        let mut i = index;
+        let mut g = 0;
+        while i >= base {
+            i = (i - base) / b;
+            g += 1;
+        }
+        g
+    }
+
+    /// The children the given parent task emits on completion (possibly
+    /// none). Pure: depends only on `self`, the parent's index and sizes,
+    /// and `base` (the agent's static task count).
+    pub fn children_of(
+        &self,
+        agent: AgentId,
+        parent: &InferenceSpec,
+        base: u32,
+    ) -> Vec<InferenceSpec> {
+        if self.prob <= 0.0 || self.branch == 0 || base == 0 {
+            return Vec::new();
+        }
+        if self.generation(parent.id.index, base) >= self.max_depth {
+            return Vec::new();
+        }
+        let mut rng = crate::util::rng::Rng::with_stream(self.seed, parent.id.index as u64 + 1);
+        if !rng.chance(self.prob) {
+            return Vec::new();
+        }
+        let mut children = Vec::with_capacity(self.branch as usize);
+        for k in 0..self.branch {
+            let index =
+                base as u64 + parent.id.index as u64 * self.branch as u64 + k as u64;
+            if index > (u32::MAX / 2) as u64 {
+                break; // runaway-cascade guard; unreachable under max_depth
+            }
+            // Children are follow-up calls on the parent's output: smaller
+            // prompts/decodes drawn from the parent's sizes.
+            let fp = rng.range_f64(0.35, 0.85);
+            let fd = rng.range_f64(0.35, 0.85);
+            children.push(InferenceSpec {
+                id: TaskId { agent, index: index as u32 },
+                stage: parent.stage + 1,
+                deps: vec![parent.id],
+                prompt_tokens: ((parent.prompt_tokens as f64 * fp) as u32).max(4),
+                decode_tokens: ((parent.decode_tokens as f64 * fd) as u32).max(2),
+                kind: "spawned",
+                prefix_group: None,
+            });
+        }
+        children
+    }
+}
+
+/// One task-parallel LLM agent: a DAG of inference tasks, optionally with
+/// dynamic spawning.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AgentSpec {
     /// Agent id (suite-unique).
@@ -74,21 +181,80 @@ pub struct AgentSpec {
     pub class: AgentClass,
     /// Arrival (submission) time in seconds from suite start.
     pub arrival: f64,
-    /// Stages of parallel inference tasks, executed stage-by-stage.
-    pub stages: Vec<Vec<InferenceSpec>>,
+    /// Inference tasks in topological order (`tasks[i].id.index == i`;
+    /// dependencies always point to lower indices).
+    pub tasks: Vec<InferenceSpec>,
+    /// Dynamic-spawning rule, if any (`None` for the paper's static agents).
+    pub spawn: Option<SpawnSpec>,
     /// Synthesized user-input text; what the cost predictor sees on arrival.
     pub input_text: String,
 }
 
 impl AgentSpec {
-    /// Total number of inference tasks.
-    pub fn n_tasks(&self) -> usize {
-        self.stages.iter().map(|s| s.len()).sum()
+    /// Build a *staged* agent: stage k+1's tasks depend on every task of
+    /// stage k (the paper's sequential-barrier form). Ids, stage labels and
+    /// dependencies are assigned here; whatever the input specs carried is
+    /// overwritten.
+    pub fn from_stages(
+        id: AgentId,
+        class: AgentClass,
+        arrival: f64,
+        stages: Vec<Vec<InferenceSpec>>,
+        input_text: String,
+    ) -> Self {
+        let mut tasks: Vec<InferenceSpec> = Vec::with_capacity(stages.iter().map(Vec::len).sum());
+        let mut index = 0u32;
+        let mut prev_stage_ids: Vec<TaskId> = Vec::new();
+        for (s, stage) in stages.into_iter().enumerate() {
+            let mut this_stage_ids = Vec::with_capacity(stage.len());
+            for mut t in stage {
+                t.id = TaskId { agent: id, index };
+                t.stage = s as u32;
+                t.deps = prev_stage_ids.clone();
+                this_stage_ids.push(t.id);
+                tasks.push(t);
+                index += 1;
+            }
+            prev_stage_ids = this_stage_ids;
+        }
+        AgentSpec { id, class, arrival, tasks, spawn: None, input_text }
     }
 
-    /// Iterate over all inference specs in stage order.
+    /// Recover the staged form, if this DAG is exactly a barrier sequence:
+    /// contiguous stage labels in index order, with every task depending on
+    /// precisely the full previous stage (in index order). Returns `None`
+    /// for general DAGs — the trace writer then uses the explicit task
+    /// format.
+    pub fn as_stages(&self) -> Option<Vec<Vec<&InferenceSpec>>> {
+        let mut stages: Vec<Vec<&InferenceSpec>> = Vec::new();
+        let mut prev_ids: Vec<TaskId> = Vec::new();
+        let mut cur_ids: Vec<TaskId> = Vec::new();
+        for t in &self.tasks {
+            let s = t.stage as usize;
+            if s == stages.len() {
+                // New stage opens: the previous one is sealed.
+                prev_ids = std::mem::take(&mut cur_ids);
+                stages.push(Vec::new());
+            } else if s + 1 != stages.len() {
+                return None; // out-of-order or non-contiguous stage labels
+            }
+            if t.deps != prev_ids {
+                return None; // not a full barrier on the previous stage
+            }
+            cur_ids.push(t.id);
+            stages.last_mut().unwrap().push(t);
+        }
+        Some(stages)
+    }
+
+    /// Total number of (static) inference tasks.
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Iterate over all static inference specs in index (topological) order.
     pub fn tasks(&self) -> impl Iterator<Item = &InferenceSpec> {
-        self.stages.iter().flatten()
+        self.tasks.iter()
     }
 
     /// Maximum single-inference decode length (bounds inference runtime).
@@ -106,6 +272,48 @@ impl AgentSpec {
     pub fn prefix_group_id(&self) -> Option<u64> {
         self.tasks().find_map(|t| t.prefix_group.map(|g| g.id))
     }
+
+    /// DAG depth: the longest dependency chain, in tasks. Equals the stage
+    /// count for staged agents; 0 for empty agents.
+    pub fn depth(&self) -> usize {
+        let mut level = vec![0usize; self.tasks.len()];
+        let mut max = 0usize;
+        for (i, t) in self.tasks.iter().enumerate() {
+            let l = t
+                .deps
+                .iter()
+                .map(|d| level[d.index as usize] + 1)
+                .max()
+                .unwrap_or(1);
+            level[i] = l;
+            max = max.max(l);
+        }
+        max
+    }
+
+    /// Statically materialize every task the spawn rule will emit at
+    /// runtime, in breadth-first parent order. Empty without a [`SpawnSpec`].
+    /// Because spawning is a pure function of the spec, this is exactly the
+    /// set the engine discovers dynamically.
+    pub fn expand_spawns(&self) -> Vec<InferenceSpec> {
+        let Some(spawn) = &self.spawn else { return Vec::new() };
+        let base = self.tasks.len() as u32;
+        // Generation 1: children of the static tasks (borrowed, no cloning
+        // of the static list). Later generations: children of
+        // already-collected children, appended in parent order.
+        let mut out: Vec<InferenceSpec> = Vec::new();
+        for t in &self.tasks {
+            out.extend(spawn.children_of(self.id, t, base));
+        }
+        let mut qi = 0usize;
+        while qi < out.len() {
+            let parent = out[qi].clone();
+            let kids = spawn.children_of(self.id, &parent, base);
+            out.extend(kids);
+            qi += 1;
+        }
+        out
+    }
 }
 
 /// A full workload suite: agents sorted by arrival time.
@@ -120,12 +328,14 @@ impl Suite {
     pub fn new(mut agents: Vec<AgentSpec>) -> Self {
         agents.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         // Re-index so ids follow arrival order (stable, deterministic).
+        // Dependency TaskIds are intra-agent, so they are re-stamped too.
         for (i, a) in agents.iter_mut().enumerate() {
             let new_id = i as AgentId;
             a.id = new_id;
-            for stage in &mut a.stages {
-                for t in stage {
-                    t.id.agent = new_id;
+            for t in &mut a.tasks {
+                t.id.agent = new_id;
+                for d in &mut t.deps {
+                    d.agent = new_id;
                 }
             }
         }
@@ -147,11 +357,13 @@ impl Suite {
 pub mod test_support {
     use super::*;
 
-    /// Build a bare inference spec.
+    /// Build a bare inference spec (no dependencies; constructors that take
+    /// stages overwrite id/stage/deps anyway).
     pub fn inference(index: u32, stage: u32, prompt: u32, decode: u32) -> InferenceSpec {
         InferenceSpec {
             id: TaskId { agent: 0, index },
             stage,
+            deps: Vec::new(),
             prompt_tokens: prompt,
             decode_tokens: decode,
             kind: "test",
@@ -164,28 +376,49 @@ pub mod test_support {
         agent_at(0, 0.0, stages)
     }
 
-    /// Build an agent with explicit id/arrival.
-    pub fn agent_at(id: AgentId, arrival: f64, mut stages: Vec<Vec<InferenceSpec>>) -> AgentSpec {
-        let mut idx = 0;
-        for (s, stage) in stages.iter_mut().enumerate() {
-            for t in stage {
-                t.id = TaskId { agent: id, index: idx };
-                t.stage = s as u32;
-                idx += 1;
-            }
-        }
-        AgentSpec {
+    /// Build a staged agent with explicit id/arrival.
+    pub fn agent_at(id: AgentId, arrival: f64, stages: Vec<Vec<InferenceSpec>>) -> AgentSpec {
+        AgentSpec::from_stages(
             id,
-            class: AgentClass::EquationVerification,
+            AgentClass::EquationVerification,
             arrival,
             stages,
-            input_text: String::new(),
-        }
+            String::new(),
+        )
     }
 
     /// A simple single-stage agent with `n` identical parallel tasks.
     pub fn simple_agent(id: AgentId, arrival: f64, n: usize, prompt: u32, decode: u32) -> AgentSpec {
         agent_at(id, arrival, vec![(0..n as u32).map(|i| inference(i, 0, prompt, decode)).collect()])
+    }
+
+    /// A general-DAG agent from `(prompt, decode, deps-by-index)` triples,
+    /// in topological order. Stage labels are derived from dependency depth.
+    pub fn dag_agent(id: AgentId, arrival: f64, tasks: Vec<(u32, u32, Vec<u32>)>) -> AgentSpec {
+        let mut specs = Vec::with_capacity(tasks.len());
+        let mut level = vec![0u32; tasks.len()];
+        for (i, (p, d, deps)) in tasks.into_iter().enumerate() {
+            let stage =
+                deps.iter().map(|&j| level[j as usize] + 1).max().unwrap_or(0);
+            level[i] = stage;
+            specs.push(InferenceSpec {
+                id: TaskId { agent: id, index: i as u32 },
+                stage,
+                deps: deps.into_iter().map(|j| TaskId { agent: id, index: j }).collect(),
+                prompt_tokens: p,
+                decode_tokens: d,
+                kind: "test",
+                prefix_group: None,
+            });
+        }
+        AgentSpec {
+            id,
+            class: AgentClass::EquationVerification,
+            arrival,
+            tasks: specs,
+            spawn: None,
+            input_text: String::new(),
+        }
     }
 }
 
@@ -204,6 +437,49 @@ mod tests {
         assert_eq!(a.max_decode(), 9);
         assert_eq!(a.total_tokens(), 10 + 5 + 20 + 9 + 30 + 2);
         assert_eq!(a.tasks().count(), 3);
+        assert_eq!(a.depth(), 2);
+    }
+
+    #[test]
+    fn from_stages_builds_barrier_deps() {
+        let a = agent_with_stages(vec![
+            vec![inference(0, 0, 10, 5), inference(1, 0, 20, 9)],
+            vec![inference(2, 1, 30, 2), inference(3, 1, 8, 2)],
+        ]);
+        assert!(a.tasks[0].deps.is_empty() && a.tasks[1].deps.is_empty());
+        for t in &a.tasks[2..] {
+            assert_eq!(
+                t.deps,
+                vec![TaskId { agent: 0, index: 0 }, TaskId { agent: 0, index: 1 }]
+            );
+        }
+        // Indices are dense and match positions.
+        for (i, t) in a.tasks.iter().enumerate() {
+            assert_eq!(t.id.index as usize, i);
+        }
+        // The staged form round-trips structurally.
+        let stages = a.as_stages().expect("barrier DAG is stage-form");
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].len(), 2);
+        assert_eq!(stages[1].len(), 2);
+    }
+
+    #[test]
+    fn general_dag_is_not_stage_form() {
+        // Diamond with a partial dependency: task 3 depends on 1 only.
+        let a = dag_agent(
+            0,
+            0.0,
+            vec![
+                (10, 5, vec![]),
+                (10, 5, vec![]),
+                (10, 5, vec![0, 1]),
+                (10, 5, vec![1]),
+            ],
+        );
+        assert!(a.as_stages().is_none());
+        assert_eq!(a.depth(), 2);
+        assert_eq!(a.tasks[3].stage, 1);
     }
 
     #[test]
@@ -218,8 +494,20 @@ mod tests {
         for (i, agent) in suite.agents.iter().enumerate() {
             for t in agent.tasks() {
                 assert_eq!(t.id.agent, i as AgentId);
+                for d in &t.deps {
+                    assert_eq!(d.agent, i as AgentId);
+                }
             }
         }
+    }
+
+    #[test]
+    fn suite_reindex_restamps_deps() {
+        let a = agent_at(9, 4.0, vec![vec![inference(0, 0, 5, 5)], vec![inference(1, 1, 5, 5)]]);
+        let b = agent_at(2, 1.0, vec![vec![inference(0, 0, 5, 5)]]);
+        let suite = Suite::new(vec![a, b]);
+        // The 2-stage agent arrived later → id 1; its dep must follow.
+        assert_eq!(suite.agents[1].tasks[1].deps, vec![TaskId { agent: 1, index: 0 }]);
     }
 
     #[test]
@@ -232,7 +520,59 @@ mod tests {
     fn prefix_group_id_finds_first_annotation() {
         let mut a = agent_with_stages(vec![vec![inference(0, 0, 10, 5), inference(1, 0, 10, 5)]]);
         assert_eq!(a.prefix_group_id(), None);
-        a.stages[0][1].prefix_group = Some(PrefixGroup { id: 7, tokens: 64 });
+        a.tasks[1].prefix_group = Some(PrefixGroup { id: 7, tokens: 64 });
         assert_eq!(a.prefix_group_id(), Some(7));
+    }
+
+    #[test]
+    fn spawn_expansion_is_deterministic_and_bounded() {
+        let mut a = simple_agent(0, 0.0, 3, 40, 16);
+        a.spawn = Some(SpawnSpec { prob: 1.0, branch: 2, max_depth: 2, seed: 0xabc });
+        let s1 = a.expand_spawns();
+        let s2 = a.expand_spawns();
+        assert_eq!(s1, s2, "expansion must be pure");
+        // prob 1.0, branch 2, depth 2 over 3 roots: 6 children + 12 grandchildren.
+        assert_eq!(s1.len(), 18);
+        let base = a.tasks.len() as u32;
+        let spawn = a.spawn.as_ref().unwrap();
+        for c in &s1 {
+            assert_eq!(c.kind, "spawned");
+            assert_eq!(c.deps.len(), 1);
+            let g = spawn.generation(c.id.index, base);
+            assert!(g >= 1 && g <= 2, "generation {g}");
+            // Child index closed form inverts to the parent.
+            let parent = (c.id.index - base) / spawn.branch;
+            assert_eq!(c.deps[0].index, parent);
+            assert!(c.prompt_tokens >= 4 && c.decode_tokens >= 2);
+        }
+        // Indices are unique across the expansion.
+        let mut ids: Vec<u32> = s1.iter().map(|c| c.id.index).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 18);
+    }
+
+    #[test]
+    fn spawn_probability_zero_expands_nothing() {
+        let mut a = simple_agent(0, 0.0, 4, 40, 16);
+        a.spawn = Some(SpawnSpec { prob: 0.0, branch: 2, max_depth: 2, seed: 1 });
+        assert!(a.expand_spawns().is_empty());
+        a.spawn = None;
+        assert!(a.expand_spawns().is_empty());
+    }
+
+    #[test]
+    fn spawn_generation_inverts_index_form() {
+        let s = SpawnSpec { prob: 0.5, branch: 3, max_depth: 4, seed: 0 };
+        let base = 5u32;
+        assert_eq!(s.generation(0, base), 0);
+        assert_eq!(s.generation(4, base), 0);
+        let child = base + 2 * 3 + 1; // child 1 of static task 2
+        assert_eq!(s.generation(child, base), 1);
+        let grand = base + child * 3; // child 0 of that child
+        assert_eq!(s.generation(grand, base), 2);
+        // Degenerate empty agent (base 0): defined, and must not loop.
+        assert_eq!(s.generation(0, 0), 0);
+        assert_eq!(s.generation(7, 0), 0);
     }
 }

@@ -6,12 +6,22 @@
 //! process (shape k < 1 ⇒ CV > 1, matching the burstiness production LLM
 //! traces exhibit) normalized to the same windows, and sample classes with
 //! the 72/26/2 small/medium/large mix.
+//!
+//! Trace files carry two task encodings:
+//!
+//! * the **legacy staged form** — `"stages": [[{p, d, ...}], ...]` — written
+//!   whenever an agent's DAG is an exact barrier sequence (every pre-DAG
+//!   trace is, so old files round-trip bit-identically), and
+//! * the **DAG form** — `"tasks": [{p, d, stage, deps: [indices], ...}]`
+//!   plus an optional `"spawn"` rule — for everything else.
+//!
+//! The reader accepts both.
 
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::workload::classes::SizeBucket;
-use crate::workload::generator::Generator;
-use crate::workload::{AgentClass, AgentSpec, Suite};
+use crate::workload::generator::{DagShape, Generator};
+use crate::workload::{AgentClass, AgentSpec, InferenceSpec, SpawnSpec, Suite, TaskId};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -57,8 +67,34 @@ pub fn sample_class(rng: &mut Rng, class_mix: &[f64; 3]) -> AgentClass {
 /// — modeling fleets of agents re-submitting the same long system prompt +
 /// context. The annotation is inert unless the engine's prefix cache is on,
 /// so the default (0/0) suite is bit-identical to the unannotated one.
+///
+/// With `cfg.dag` set, agents are DAG-shaped instead (shapes sampled
+/// uniformly over [`DagShape::ALL`], spawn knobs from the config); the
+/// default `dag: false` path is untouched and bit-identical to pre-DAG
+/// builds.
 pub fn build_suite(cfg: &crate::config::WorkloadConfig) -> Suite {
+    build_suite_shaped(cfg, None)
+}
+
+/// Build a suite with every agent forced to one DAG shape (the `dag_agents`
+/// experiment sweeps shapes one at a time).
+pub fn build_dag_suite(cfg: &crate::config::WorkloadConfig, shape: DagShape) -> Suite {
+    build_suite_shaped(cfg, Some(shape))
+}
+
+/// [`build_suite`] with every agent forced to one DAG shape (the
+/// `dag_agents` experiment sweeps shapes one at a time). `None` with
+/// `cfg.dag` samples shapes uniformly; `None` without `cfg.dag` is the
+/// plain staged suite.
+pub fn build_suite_shaped(
+    cfg: &crate::config::WorkloadConfig,
+    shape: Option<DagShape>,
+) -> Suite {
     let mut rng = Rng::with_stream(cfg.seed, 0x7ace);
+    // Shapes draw from their own stream: enabling DAG mode must not shift
+    // the shared stream's class draws, so same-seed suites keep identical
+    // classes and arrivals across dag on/off (asserted in tests).
+    let mut shape_rng = Rng::with_stream(cfg.seed, 0xd5a9);
     let mut gen = Generator::new(cfg.seed ^ 0xabcd_ef01);
     let times = arrivals(&mut rng, cfg.n_agents, cfg.window_secs);
     let agents = times
@@ -66,7 +102,12 @@ pub fn build_suite(cfg: &crate::config::WorkloadConfig) -> Suite {
         .enumerate()
         .map(|(i, t)| {
             let class = sample_class(&mut rng, &cfg.class_mix);
-            gen.agent(class, i as u32, t)
+            if cfg.dag || shape.is_some() {
+                let s = shape.unwrap_or_else(|| *shape_rng.choose(&DagShape::ALL));
+                gen.dag_agent(class, s, i as u32, t, cfg.spawn_prob, cfg.branch)
+            } else {
+                gen.agent(class, i as u32, t)
+            }
         })
         .collect();
     let mut suite = Suite::new(agents);
@@ -87,52 +128,107 @@ pub fn annotate_families(suite: &mut Suite, fanout: usize, prefix_tokens: u32, s
             id: seed.rotate_left(24) ^ ((i / fanout) as u64),
             tokens: prefix_tokens,
         };
-        for stage in &mut a.stages {
-            for t in stage {
-                t.prefix_group = Some(group);
-            }
+        for t in &mut a.tasks {
+            t.prefix_group = Some(group);
         }
     }
 }
 
+/// Whether the legacy reader would reassign exactly the kinds this staged
+/// agent carries (it keys kinds off the class template by stage index, so a
+/// DAG-built pipeline longer than the template, or hand-built kinds, would
+/// be mangled by a stages round trip).
+fn legacy_kinds_match(a: &AgentSpec, stages: &[Vec<&InferenceSpec>]) -> bool {
+    let template = a.class.template();
+    stages.iter().enumerate().all(|(s, st)| {
+        let kind = template.stages.get(s).map(|t| t.kind).unwrap_or("replay");
+        st.iter().all(|t| t.kind == kind)
+    })
+}
+
+/// Serialize one task's scalar fields (shared by both encodings).
+fn task_fields(t: &InferenceSpec) -> Json {
+    let mut o = obj([
+        ("p", t.prompt_tokens.into()),
+        ("d", t.decode_tokens.into()),
+        ("kind", t.kind.into()),
+    ]);
+    if let Some(g) = t.prefix_group {
+        if let Json::Obj(map) = &mut o {
+            // Hex string: u64 ids survive the
+            // f64-backed number representation.
+            map.insert("pg".into(), Json::Str(format!("{:x}", g.id)));
+            map.insert("pt".into(), Json::Num(g.tokens as f64));
+        }
+    }
+    o
+}
+
 /// Serialize a suite to JSON (tasks only — input text elided by default to
 /// keep trace files small; pass `with_text` to keep it for predictor work).
+/// Staged agents use the legacy `"stages"` encoding (pre-DAG traces
+/// round-trip bit-identically); general DAGs use the `"tasks"` encoding.
 pub fn suite_to_json(suite: &Suite, with_text: bool) -> Json {
     let agents: Vec<Json> = suite
         .agents
         .iter()
         .map(|a| {
-            let stages: Vec<Json> = a
-                .stages
-                .iter()
-                .map(|st| {
-                    Json::Arr(
-                        st.iter()
-                            .map(|t| {
-                                let mut o = obj([
-                                    ("p", t.prompt_tokens.into()),
-                                    ("d", t.decode_tokens.into()),
-                                    ("kind", t.kind.into()),
-                                ]);
-                                if let Some(g) = t.prefix_group {
-                                    if let Json::Obj(map) = &mut o {
-                                        // Hex string: u64 ids survive the
-                                        // f64-backed number representation.
-                                        map.insert("pg".into(), Json::Str(format!("{:x}", g.id)));
-                                        map.insert("pt".into(), Json::Num(g.tokens as f64));
-                                    }
-                                }
-                                o
-                            })
-                            .collect(),
-                    )
-                })
-                .collect();
             let mut fields = vec![
                 ("class".to_string(), Json::Str(a.class.short_name().into())),
                 ("arrival".to_string(), Json::Num(a.arrival)),
-                ("stages".to_string(), Json::Arr(stages)),
             ];
+            // Legacy encoding only for agents the legacy reader rebuilds
+            // faithfully: barrier-form DAGs without a spawn rule whose kinds
+            // match the template by stage index (every pre-DAG trace
+            // qualifies). Everything else — spawning agents, DAG-built
+            // pipelines longer than the template, hand-built kinds — keeps
+            // the explicit task encoding so per-task kinds survive.
+            match a
+                .as_stages()
+                .filter(|st| a.spawn.is_none() && legacy_kinds_match(a, st))
+            {
+                Some(stages) => {
+                    let stages: Vec<Json> = stages
+                        .iter()
+                        .map(|st| Json::Arr(st.iter().map(|&t| task_fields(t)).collect()))
+                        .collect();
+                    fields.push(("stages".to_string(), Json::Arr(stages)));
+                }
+                None => {
+                    let tasks: Vec<Json> = a
+                        .tasks
+                        .iter()
+                        .map(|t| {
+                            let mut o = task_fields(t);
+                            if let Json::Obj(map) = &mut o {
+                                map.insert("stage".into(), Json::Num(t.stage as f64));
+                                map.insert(
+                                    "deps".into(),
+                                    Json::Arr(
+                                        t.deps
+                                            .iter()
+                                            .map(|d| Json::Num(d.index as f64))
+                                            .collect(),
+                                    ),
+                                );
+                            }
+                            o
+                        })
+                        .collect();
+                    fields.push(("tasks".to_string(), Json::Arr(tasks)));
+                }
+            }
+            if let Some(sp) = &a.spawn {
+                fields.push((
+                    "spawn".to_string(),
+                    obj([
+                        ("prob", Json::Num(sp.prob)),
+                        ("branch", Json::Num(sp.branch as f64)),
+                        ("max_depth", Json::Num(sp.max_depth as f64)),
+                        ("seed", Json::Str(format!("{:x}", sp.seed))),
+                    ]),
+                ));
+            }
             if with_text {
                 fields.push(("input".to_string(), Json::Str(a.input_text.clone())));
             }
@@ -142,8 +238,54 @@ pub fn suite_to_json(suite: &Suite, with_text: bool) -> Json {
     obj([("agents", Json::Arr(agents))])
 }
 
-/// Parse a suite back from JSON (kind strings are interned to the class
-/// template's stage kinds when they match, else "replay").
+/// Intern a task-kind string against the class template's stage kinds (plus
+/// the built-in dynamic-task labels), falling back to "replay".
+fn intern_kind(class: AgentClass, kind: Option<&str>) -> &'static str {
+    let Some(kind) = kind else { return "replay" };
+    for st in class.template().stages {
+        if st.kind == kind {
+            return st.kind;
+        }
+    }
+    match kind {
+        "spawned" => "spawned",
+        "test" => "test",
+        "http" => "http",
+        _ => "replay",
+    }
+}
+
+fn parse_prefix_group(i: usize, t: &Json) -> Result<Option<crate::workload::PrefixGroup>> {
+    match (t.get("pg").as_str(), t.get("pt").as_u64()) {
+        (Some(hex), Some(tokens)) => Ok(Some(crate::workload::PrefixGroup {
+            id: u64::from_str_radix(hex, 16).context("pg")?,
+            tokens: tokens as u32,
+        })),
+        (None, None) => Ok(None),
+        _ => anyhow::bail!(
+            "agent {i}: task has a partial prefix-group annotation \
+             (both \"pg\" and \"pt\" are required)"
+        ),
+    }
+}
+
+fn parse_spawn(a: &Json) -> Result<Option<SpawnSpec>> {
+    let s = a.get("spawn");
+    if s.as_obj().is_none() {
+        return Ok(None);
+    }
+    Ok(Some(SpawnSpec {
+        prob: s.get("prob").as_f64().context("spawn.prob")?,
+        branch: s.get("branch").as_u64().context("spawn.branch")? as u32,
+        max_depth: s.get("max_depth").as_u64().context("spawn.max_depth")? as u32,
+        seed: u64::from_str_radix(s.get("seed").as_str().context("spawn.seed")?, 16)
+            .context("spawn.seed")?,
+    }))
+}
+
+/// Parse a suite back from JSON. Accepts both the legacy `"stages"` encoding
+/// (kind strings are interned to the class template's stage kinds when they
+/// match, else "replay") and the DAG `"tasks"` encoding.
 pub fn suite_from_json(v: &Json) -> Result<Suite> {
     let mut agents = Vec::new();
     for (i, a) in v.get("agents").as_arr().context("agents")?.iter().enumerate() {
@@ -151,42 +293,62 @@ pub fn suite_from_json(v: &Json) -> Result<Suite> {
             .context("unknown class")?;
         let arrival = a.get("arrival").as_f64().context("arrival")?;
         let template = class.template();
-        let mut stages = Vec::new();
-        let mut index = 0u32;
-        for (s, st) in a.get("stages").as_arr().context("stages")?.iter().enumerate() {
-            let kind = template.stages.get(s).map(|t| t.kind).unwrap_or("replay");
+        let input_text = a.get("input").as_str().unwrap_or("").to_string();
+        let spawn = parse_spawn(a)?;
+
+        let mut spec = if let Some(stages_json) = a.get("stages").as_arr() {
+            // Legacy staged encoding: rebuild the barrier DAG.
+            let mut stages = Vec::new();
+            for (s, st) in stages_json.iter().enumerate() {
+                let kind = template.stages.get(s).map(|t| t.kind).unwrap_or("replay");
+                let mut tasks = Vec::new();
+                for t in st.as_arr().context("stage")? {
+                    tasks.push(InferenceSpec {
+                        id: TaskId { agent: i as u32, index: 0 }, // from_stages re-stamps
+                        stage: s as u32,
+                        deps: Vec::new(),
+                        prompt_tokens: t.get("p").as_u64().context("p")? as u32,
+                        decode_tokens: t.get("d").as_u64().context("d")? as u32,
+                        kind,
+                        prefix_group: parse_prefix_group(i, t)?,
+                    });
+                }
+                stages.push(tasks);
+            }
+            AgentSpec::from_stages(i as u32, class, arrival, stages, input_text)
+        } else {
+            // DAG encoding: explicit per-task stage labels and dependencies.
             let mut tasks = Vec::new();
-            for t in st.as_arr().context("stage")? {
-                let prefix_group = match (t.get("pg").as_str(), t.get("pt").as_u64()) {
-                    (Some(hex), Some(tokens)) => Some(crate::workload::PrefixGroup {
-                        id: u64::from_str_radix(hex, 16).context("pg")?,
-                        tokens: tokens as u32,
-                    }),
-                    (None, None) => None,
-                    _ => anyhow::bail!(
-                        "agent {i}: task has a partial prefix-group annotation \
-                         (both \"pg\" and \"pt\" are required)"
-                    ),
+            for (j, t) in a.get("tasks").as_arr().context("stages or tasks")?.iter().enumerate()
+            {
+                let deps: Vec<TaskId> = match t.get("deps").as_arr() {
+                    Some(ds) => ds
+                        .iter()
+                        .map(|d| -> Result<TaskId> {
+                            let di = d.as_u64().context("dep index")? as u32;
+                            anyhow::ensure!(
+                                (di as usize) < j,
+                                "agent {i}: task {j} depends on non-earlier task {di}"
+                            );
+                            Ok(TaskId { agent: i as u32, index: di })
+                        })
+                        .collect::<Result<_>>()?,
+                    None => Vec::new(),
                 };
-                tasks.push(crate::workload::InferenceSpec {
-                    id: crate::workload::TaskId { agent: i as u32, index },
-                    stage: s as u32,
+                tasks.push(InferenceSpec {
+                    id: TaskId { agent: i as u32, index: j as u32 },
+                    stage: t.get("stage").as_u64().unwrap_or(0) as u32,
+                    deps,
                     prompt_tokens: t.get("p").as_u64().context("p")? as u32,
                     decode_tokens: t.get("d").as_u64().context("d")? as u32,
-                    kind,
-                    prefix_group,
+                    kind: intern_kind(class, t.get("kind").as_str()),
+                    prefix_group: parse_prefix_group(i, t)?,
                 });
-                index += 1;
             }
-            stages.push(tasks);
-        }
-        agents.push(AgentSpec {
-            id: i as u32,
-            class,
-            arrival,
-            stages,
-            input_text: a.get("input").as_str().unwrap_or("").to_string(),
-        });
+            AgentSpec { id: i as u32, class, arrival, tasks, spawn: None, input_text }
+        };
+        spec.spawn = spawn;
+        agents.push(spec);
     }
     Ok(Suite::new(agents))
 }
@@ -263,6 +425,30 @@ mod tests {
     }
 
     #[test]
+    fn dag_suite_is_deterministic_and_gated() {
+        let plain = WorkloadConfig { n_agents: 20, window_secs: 60.0, ..Default::default() };
+        let dag = WorkloadConfig { dag: true, spawn_prob: 0.3, branch: 3, ..plain.clone() };
+        let d1 = build_suite(&dag);
+        let d2 = build_suite(&dag);
+        assert_eq!(d1.agents, d2.agents);
+        // Arrivals match the plain suite (same arrival stream)…
+        let p = build_suite(&plain);
+        for (a, b) in d1.agents.iter().zip(p.agents.iter()) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.class, b.class);
+        }
+        // …but the DAG suite carries spawn rules and non-staged shapes.
+        assert!(d1.agents.iter().all(|a| a.spawn.is_some()));
+        assert!(d1.agents.iter().any(|a| a.as_stages().is_none()));
+        assert!(p.agents.iter().all(|a| a.spawn.is_none()));
+        // Forcing a single shape is deterministic too and skips mixing.
+        let t1 = build_suite_shaped(&dag, Some(DagShape::Pipeline));
+        let t2 = build_suite_shaped(&dag, Some(DagShape::Pipeline));
+        assert_eq!(t1.agents, t2.agents);
+        assert!(t1.agents.iter().all(|a| a.depth() == a.n_tasks()));
+    }
+
+    #[test]
     fn json_roundtrip() {
         let cfg = WorkloadConfig {
             n_agents: 12,
@@ -285,6 +471,77 @@ mod tests {
                 assert_eq!(x.prefix_group, y.prefix_group);
             }
         }
+    }
+
+    #[test]
+    fn legacy_staged_json_roundtrips_bit_identically() {
+        // ISSUE 3 regression: a staged suite serialized, parsed, and
+        // re-serialized must produce byte-identical JSON — the legacy
+        // "stages" encoding survives the DAG representation unchanged.
+        let cfg = WorkloadConfig {
+            n_agents: 15,
+            window_secs: 90.0,
+            prefix_fanout: 3,
+            prefix_tokens: 128,
+            ..Default::default()
+        };
+        let suite = build_suite(&cfg);
+        assert!(suite.agents.iter().all(|a| a.as_stages().is_some()));
+        let first = suite_to_json(&suite, true).pretty();
+        let reparsed = suite_from_json(&Json::parse(&first).unwrap()).unwrap();
+        let second = suite_to_json(&reparsed, true).pretty();
+        assert_eq!(first, second, "legacy stages JSON must round-trip bit-identically");
+        assert_eq!(suite.agents, reparsed.agents, "parsed specs must match the originals");
+    }
+
+    #[test]
+    fn dag_json_roundtrips_tasks_and_spawn() {
+        let cfg = WorkloadConfig {
+            n_agents: 9,
+            window_secs: 60.0,
+            dag: true,
+            spawn_prob: 0.5,
+            branch: 2,
+            ..Default::default()
+        };
+        let suite = build_suite(&cfg);
+        let j = suite_to_json(&suite, false).pretty();
+        let back = suite_from_json(&Json::parse(&j).unwrap()).unwrap();
+        for (a, b) in suite.agents.iter().zip(back.agents.iter()) {
+            assert_eq!(a.spawn, b.spawn, "spawn rules must survive the trace");
+            assert_eq!(a.tasks.len(), b.tasks.len());
+            for (x, y) in a.tasks().zip(b.tasks()) {
+                assert_eq!(x.deps, y.deps, "dependencies must survive the trace");
+                assert_eq!(x.stage, y.stage);
+                assert_eq!((x.prompt_tokens, x.decode_tokens), (y.prompt_tokens, y.decode_tokens));
+            }
+            // Spawn expansion — the runtime-visible task set — agrees too.
+            assert_eq!(a.expand_spawns(), b.expand_spawns());
+        }
+        // Second round trip is textually stable.
+        assert_eq!(j, suite_to_json(&back, false).pretty());
+    }
+
+    #[test]
+    fn spawn_free_dag_pipelines_round_trip_kinds_faithfully() {
+        // A dag suite with spawn_prob 0: pipeline agents are barrier-form
+        // but longer than their class template, so the legacy encoding
+        // would mangle their kinds — the writer must pick the task
+        // encoding and the round trip must be exact.
+        let cfg = WorkloadConfig {
+            n_agents: 10,
+            window_secs: 40.0,
+            dag: true,
+            spawn_prob: 0.0,
+            ..Default::default()
+        };
+        let suite = build_suite_shaped(&cfg, Some(DagShape::Pipeline));
+        let j = suite_to_json(&suite, false).pretty();
+        let back = suite_from_json(&Json::parse(&j).unwrap()).unwrap();
+        for (a, b) in suite.agents.iter().zip(back.agents.iter()) {
+            assert_eq!(a.tasks, b.tasks, "pipeline tasks (incl. kinds) must survive");
+        }
+        assert_eq!(j, suite_to_json(&back, false).pretty());
     }
 
     #[test]

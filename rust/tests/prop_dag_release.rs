@@ -1,0 +1,235 @@
+//! Property tests for DAG-structured agents (ISSUE 3):
+//!
+//! * **Release safety** — no task is ever admitted before every one of its
+//!   dependencies (static or spawned-parent) has completed;
+//! * **Replay determinism** — the same suite replayed through the same
+//!   policy produces bit-identical JCTs and spawned-task counts;
+//! * **Spawn purity** — the spawned task set is a function of the suite
+//!   alone: different schedulers (and the static `expand_spawns` oracle)
+//!   observe exactly the same children.
+
+use justitia::config::{BackendProfile, Config, Policy};
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::util::prop::{check, Config as PropConfig, Strategy};
+use justitia::util::rng::Rng;
+use justitia::workload::test_support::dag_agent;
+use justitia::workload::{AgentSpec, SpawnSpec, Suite, TaskId};
+use std::collections::HashMap;
+
+/// A randomized DAG workload: agents with random topology (every task
+/// depends on a random subset of earlier tasks) and random spawn rules.
+#[derive(Clone, Debug)]
+struct DagSuite {
+    agents: Vec<AgentSpec>,
+    pages: u64,
+    page_size: u32,
+}
+
+struct DagStrategy;
+
+impl Strategy for DagStrategy {
+    type Value = DagSuite;
+
+    fn generate(&self, rng: &mut Rng) -> DagSuite {
+        let page_size = 8u32;
+        let pages = rng.range_u64(32, 64);
+        let m_tokens = pages * page_size as u64;
+        let n_agents = rng.range_u64(2, 8) as usize;
+        let mut agents = Vec::with_capacity(n_agents);
+        let mut t = 0.0;
+        for id in 0..n_agents {
+            t += rng.exponential(0.05);
+            let n_tasks = rng.range_u64(1, 8) as usize;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for i in 0..n_tasks {
+                let p = rng.range_u64(2, (m_tokens / 8).max(3)) as u32;
+                let d = rng.range_u64(2, 24) as u32;
+                // Random backward dependencies: up to 3 distinct earlier
+                // tasks, each picked with probability ~1/2.
+                let mut deps = Vec::new();
+                for _ in 0..rng.range_u64(0, 3.min(i as u64)) {
+                    let j = rng.below(i as u64) as u32;
+                    if !deps.contains(&j) {
+                        deps.push(j);
+                    }
+                }
+                deps.sort_unstable();
+                tasks.push((p, d, deps));
+            }
+            let mut a = dag_agent(id as u32, t, tasks);
+            if rng.chance(0.7) {
+                a.spawn = Some(SpawnSpec {
+                    prob: rng.range_f64(0.2, 1.0),
+                    branch: rng.range_u64(1, 3) as u32,
+                    max_depth: rng.range_u64(1, 2) as u32,
+                    seed: rng.next_u64(),
+                });
+            }
+            agents.push(a);
+        }
+        DagSuite { agents, pages, page_size }
+    }
+
+    fn shrink(&self, v: &DagSuite) -> Vec<DagSuite> {
+        let mut out = Vec::new();
+        if v.agents.len() > 1 {
+            let mut w = v.clone();
+            w.agents.pop();
+            out.push(w);
+        }
+        // Strip spawn rules (cheapest structural simplification).
+        if v.agents.iter().any(|a| a.spawn.is_some()) {
+            let mut w = v.clone();
+            for a in &mut w.agents {
+                a.spawn = None;
+            }
+            out.push(w);
+        }
+        out
+    }
+}
+
+fn run(ds: &DagSuite, policy: Policy) -> (Engine<SimBackend>, Suite) {
+    let mut cfg = Config::default();
+    cfg.backend = BackendProfile {
+        name: "prop-dag".into(),
+        kv_tokens: ds.pages * ds.page_size as u64,
+        page_size: ds.page_size,
+        alpha: 1.0,
+        beta_prefill: 0.0,
+        beta_decode: 0.0,
+        swap_cost_per_token: 0.0,
+    };
+    cfg.max_batch = 1024;
+    let suite = Suite::new(ds.agents.clone());
+    let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+    let mut engine = Engine::new(&cfg, sched, SimBackend::unit_time());
+    let model = justitia::cost::CostModel::MemoryCentric;
+    engine.run_suite(&suite, |a| model.agent_cost(a));
+    (engine, suite)
+}
+
+/// Dependency map over the *full* runtime task set: static deps from the
+/// spec, spawned tasks (from the deterministic expansion) depending on
+/// their parent.
+fn full_dep_map(suite: &Suite) -> HashMap<TaskId, Vec<TaskId>> {
+    let mut deps: HashMap<TaskId, Vec<TaskId>> = HashMap::new();
+    for a in &suite.agents {
+        for t in &a.tasks {
+            deps.insert(t.id, t.deps.clone());
+        }
+        for t in a.expand_spawns() {
+            deps.insert(t.id, t.deps.clone());
+        }
+    }
+    deps
+}
+
+#[test]
+fn no_task_admitted_before_its_deps_complete() {
+    let cfg = PropConfig { cases: prop_cases(30), seed: 0xda6, max_shrink_steps: 40 };
+    check(&cfg, &DagStrategy, |ds| {
+        for policy in [Policy::Fcfs, Policy::Justitia] {
+            let (engine, suite) = run(ds, policy);
+            if engine.metrics.completed_agents() != suite.len() {
+                return Err(format!(
+                    "{policy:?}: {}/{} agents completed",
+                    engine.metrics.completed_agents(),
+                    suite.len()
+                ));
+            }
+            let deps = full_dep_map(&suite);
+            for (task, dep_list) in &deps {
+                let Some(admit) = engine.metrics.task_admit_time(*task) else {
+                    return Err(format!("{policy:?}: task {task} never admitted"));
+                };
+                for d in dep_list {
+                    let done = engine
+                        .metrics
+                        .task_complete_time(*d)
+                        .ok_or_else(|| format!("{policy:?}: dep {d} never completed"))?;
+                    if admit + 1e-9 < done {
+                        return Err(format!(
+                            "{policy:?}: task {task} admitted at {admit} before \
+                             dep {d} completed at {done}"
+                        ));
+                    }
+                }
+            }
+            engine.kv.check_invariants()?;
+            if engine.kv.device_tokens() != 0 {
+                return Err("leaked device tokens".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn replays_are_deterministic_and_spawns_are_pure() {
+    let cfg = PropConfig { cases: prop_cases(25), seed: 0x5eed, max_shrink_steps: 40 };
+    check(&cfg, &DagStrategy, |ds| {
+        // Replay determinism under one policy.
+        let (e1, suite) = run(ds, Policy::Justitia);
+        let (e2, _) = run(ds, Policy::Justitia);
+        if e1.metrics.jcts() != e2.metrics.jcts() {
+            return Err("replay JCTs diverged".into());
+        }
+        if e1.metrics.spawned_tasks() != e2.metrics.spawned_tasks() {
+            return Err("replay spawned-task counts diverged".into());
+        }
+        // Spawn purity across schedulers: the set of spawned tasks equals
+        // the static expansion regardless of execution order.
+        let expected: u64 = suite.agents.iter().map(|a| a.expand_spawns().len() as u64).sum();
+        let (e3, _) = run(ds, Policy::Fcfs);
+        for (label, e) in [("justitia", &e1), ("fcfs", &e3)] {
+            if e.metrics.spawned_tasks() != expected {
+                return Err(format!(
+                    "{label}: spawned {} tasks, static expansion says {expected}",
+                    e.metrics.spawned_tasks()
+                ));
+            }
+        }
+        // Every statically-expanded child actually ran to completion.
+        for a in &suite.agents {
+            for t in a.expand_spawns() {
+                if e1.metrics.task_complete_time(t.id).is_none() {
+                    return Err(format!("spawned task {} never completed", t.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dag_suite_from_config_is_replay_deterministic() {
+    // The generator-level DAG suite (all three shapes mixed) through the
+    // full engine: two replays must agree bit for bit.
+    let wl = justitia::config::WorkloadConfig {
+        n_agents: 24,
+        window_secs: 30.0,
+        ..Default::default()
+    }
+    .with_dag(0.4, 2);
+    let suite = justitia::workload::trace::build_suite(&wl);
+    let run_once = || {
+        let cfg = Config::default();
+        let sched = justitia::sched::build(Policy::Justitia, cfg.backend.kv_tokens, 1.0);
+        let mut engine = Engine::new(&cfg, sched, SimBackend::new(&cfg.backend));
+        let model = justitia::cost::CostModel::MemoryCentric;
+        engine.run_suite(&suite, |a| model.agent_cost(a));
+        (engine.metrics.jcts(), engine.metrics.spawned_tasks())
+    };
+    let (j1, s1) = run_once();
+    let (j2, s2) = run_once();
+    assert_eq!(j1.len(), 24);
+    assert_eq!(j1, j2);
+    assert_eq!(s1, s2);
+}
+
+/// Honor the env knob while keeping CI fast by default.
+fn prop_cases(default: usize) -> usize {
+    std::env::var("JUSTITIA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}

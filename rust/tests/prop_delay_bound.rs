@@ -81,13 +81,16 @@ impl Strategy for SuiteStrategy {
             }
             out.push(w);
         }
-        // Drop trailing stages of the biggest agent.
+        // Drop the last stage (deepest DAG level) of the biggest agent.
+        // These agents are staged, so trimming the top level keeps indices
+        // dense and dependencies intact.
         if let Some(big) =
             v.agents.iter().enumerate().max_by_key(|(_, a)| a.n_tasks()).map(|(i, _)| i)
         {
-            if v.agents[big].stages.len() > 1 {
+            if v.agents[big].depth() > 1 {
                 let mut w = v.clone();
-                w.agents[big].stages.pop();
+                let last = w.agents[big].tasks.iter().map(|t| t.stage).max().unwrap();
+                w.agents[big].tasks.retain(|t| t.stage < last);
                 out.push(w);
             }
         }
@@ -141,7 +144,7 @@ fn theorem_b1_delay_bound_holds() {
         // the fluid proof idealizes away: per-inference runtime floors (an
         // inference takes d iterations even on an empty server) and one
         // iteration of slack per stage boundary.
-        let stages_max = suite.agents.iter().map(|a| a.stages.len()).max().unwrap_or(1) as f64;
+        let stages_max = suite.agents.iter().map(|a| a.depth()).max().unwrap_or(1) as f64;
         let bound =
             2.0 * c_max / m_tokens + cap_max / m_tokens + 2.0 * d_max + stages_max + 2.0;
 
@@ -197,7 +200,7 @@ fn work_conservation_vs_gps_makespan() {
             suite.agents.iter().map(|a| gps_res.finish_of(a.id)).fold(0.0, f64::max);
         let engine_makespan = engine.metrics.engine_time();
         let d_max: f64 = suite.agents.iter().map(|a| a.max_decode()).fold(0, u32::max) as f64;
-        let stages: f64 = suite.agents.iter().map(|a| a.stages.len()).sum::<usize>() as f64;
+        let stages: f64 = suite.agents.iter().map(|a| a.depth()).sum::<usize>() as f64;
         // Slack: per-inference runtime floors + stage barriers.
         let slack = 3.0 * d_max + 2.0 * stages + 10.0;
         if engine_makespan > gps_makespan + slack {

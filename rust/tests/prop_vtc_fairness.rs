@@ -54,7 +54,7 @@ fn vtc_counters_stay_balanced_for_backlogged_agents() {
     check(&cfg, &TraceStrategy, |trace| {
         let mut s = justitia::sched::vtc::Vtc::new(justitia::cost::CostModel::ComputeCentric);
         for a in 0..trace.n_agents {
-            s.on_agent_arrival(&AgentInfo { id: a, arrival: 0.0, cost: 0.0 }, 0.0);
+            s.on_agent_arrival(&AgentInfo::new(a, 0.0, 0.0), 0.0);
         }
         // Push everything up front: all agents continuously backlogged while
         // they still have tasks.
@@ -105,7 +105,7 @@ fn vtc_drains_all_tasks_exactly_once() {
     check(&cfg, &TraceStrategy, |trace| {
         let mut s = justitia::sched::vtc::Vtc::new(justitia::cost::CostModel::ComputeCentric);
         for a in 0..trace.n_agents {
-            s.on_agent_arrival(&AgentInfo { id: a, arrival: 0.0, cost: 0.0 }, 0.0);
+            s.on_agent_arrival(&AgentInfo::new(a, 0.0, 0.0), 0.0);
         }
         for (i, &(a, p, d)) in trace.tasks.iter().enumerate() {
             s.push_task(

@@ -23,9 +23,11 @@ fn cfg_with(n_agents: usize, density: f64, seed: u64, replicas: usize, p: Placem
 }
 
 fn run_cluster(cfg: &Config, suite: &Suite) -> ClusterDispatcher<SimBackend> {
-    let model = CostModel::MemoryCentric;
+    // Same oracle basis as run_policy_oracle: expanded (spawn-inclusive)
+    // ground truth — identical to plain agent_cost for spawn-free suites.
+    let costs = justitia::cost::oracle_costs(false, suite, CostModel::MemoryCentric);
     let mut cluster = build_sim_cluster(cfg, Policy::Justitia);
-    cluster.run_suite(suite, |a| model.agent_cost(a));
+    cluster.run_suite(suite, |a| costs[&a.id]);
     cluster
 }
 
@@ -127,10 +129,8 @@ fn prefix_cache_disabled_replay_is_bit_identical_to_baseline() {
     assert!(annotated.agents.iter().all(|a| a.prefix_group_id().is_some()));
     let mut stripped = annotated.clone();
     for a in &mut stripped.agents {
-        for st in &mut a.stages {
-            for t in st {
-                t.prefix_group = None;
-            }
+        for t in &mut a.tasks {
+            t.prefix_group = None;
         }
     }
     let m_annotated = run_policy_oracle(&cfg, &annotated, Policy::Justitia);
@@ -147,6 +147,51 @@ fn prefix_cache_disabled_replay_is_bit_identical_to_baseline() {
     // engine bit for bit, like every other placement.
     let cluster = run_cluster(&cfg, &annotated);
     assert_eq!(cluster.merged_metrics().jcts(), m_annotated.jcts());
+}
+
+#[test]
+fn dag_suite_cluster_runs_are_reproducible_and_one_replica_matches_single() {
+    // ISSUE 3 acceptance, DAG edition: a DAG workload (mixed shapes +
+    // dynamic spawning) through the cluster path must be exactly
+    // reproducible for every placement, and one replica must reproduce the
+    // single-engine run bit for bit — spawned-task counts included.
+    let mut cfg = cfg_with(60, 3.0, 42, 1, Placement::ClusterVtime);
+    cfg.workload = cfg.workload.clone().with_dag(0.3, 3);
+    let suite = trace::build_suite(&cfg.workload);
+    assert!(suite.agents.iter().all(|a| a.spawn.is_some()));
+
+    let single = run_policy_oracle(&cfg, &suite, Policy::Justitia);
+    let want = single.jcts();
+    assert_eq!(want.len(), 60, "single DAG run incomplete");
+    assert!(single.spawned_tasks() > 0, "spawn-prob 0.3 over 60 agents must spawn");
+
+    for p in Placement::ALL {
+        let mut cfg1 = cfg_with(60, 3.0, 42, 1, p);
+        cfg1.workload = cfg1.workload.clone().with_dag(0.3, 3);
+        let cluster = run_cluster(&cfg1, &suite);
+        let got = cluster.merged_metrics();
+        assert_eq!(got.jcts(), want, "{p:?} diverged on the DAG suite with 1 replica");
+        assert_eq!(got.spawned_tasks(), single.spawned_tasks(), "{p:?} spawn counts");
+    }
+
+    // Multi-replica: reproducible, complete, and spawn counts match the
+    // static expansion (placement cannot change what spawns).
+    let expected_spawns: u64 =
+        suite.agents.iter().map(|a| a.expand_spawns().len() as u64).sum();
+    for p in Placement::ALL {
+        let mut cfg4 = cfg_with(60, 3.0, 42, 4, p);
+        cfg4.workload = cfg4.workload.clone().with_dag(0.3, 3);
+        let a = run_cluster(&cfg4, &suite);
+        let b = run_cluster(&cfg4, &suite);
+        let (ma, mb) = (a.merged_metrics(), b.merged_metrics());
+        assert_eq!(ma.completed_agents(), 60, "{p:?} dropped DAG agents");
+        assert_eq!(ma.jcts(), mb.jcts(), "{p:?} DAG run not reproducible");
+        assert_eq!(ma.spawned_tasks(), expected_spawns, "{p:?} spawned set drifted");
+        for r in 0..a.n_replicas() {
+            a.replica(r).kv.check_invariants().unwrap();
+            assert_eq!(a.replica(r).kv.device_tokens(), 0, "{p:?} replica {r} leaked KV");
+        }
+    }
 }
 
 #[test]

@@ -31,22 +31,28 @@ cd "$ROOT"
 rm -rf results
 mkdir -p results
 
-echo "[2/5] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
+echo "[2/6] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
 "$BIN" experiment all --agents "$AGENTS" --seed "$SEED"
 
-echo "[3/5] cluster scale-out sweep (1/2/4/8 replicas x 4 placements)"
+echo "[3/6] cluster scale-out sweep (1/2/4/8 replicas x 4 placements)"
 "$BIN" cluster --agents "$AGENTS" --seed "$SEED"
 
-echo "[4/5] prefix-sharing sweep (radix-tree KV dedup off vs on)"
+echo "[4/6] prefix-sharing sweep (radix-tree KV dedup off vs on)"
 # `experiment all` above already ran the sweep with these arguments; only
 # re-run if its JSON artifact is somehow missing.
 if [ ! -f results/prefix_sharing.json ]; then
   "$BIN" experiment prefix_sharing --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[5/5] collecting outputs under out/"
+echo "[5/6] DAG-agents sweep (map-reduce/tree/pipeline, correction off vs on)"
+if [ ! -f results/dag_agents.json ]; then
+  "$BIN" experiment dag_agents --agents "$AGENTS" --seed "$SEED"
+fi
+
+echo "[6/6] collecting outputs under out/"
 cp results/*.txt out/
 cp results/prefix_sharing.json out/BENCH_prefix.json
+cp results/dag_agents.json out/BENCH_dag.json
 {
   echo "kick-tires run: agents=$AGENTS seed=$SEED date=$(date -u +%Y-%m-%dT%H:%M:%SZ)"
   echo "binary: $BIN"
