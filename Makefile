@@ -1,6 +1,6 @@
 # Convenience targets; see README.md for the full quickstart.
 
-.PHONY: artifacts build test bench kick-tires clean
+.PHONY: artifacts build test test-release bench kick-tires smoke clean
 
 # AOT-compile the tiny JAX+Pallas model to HLO text + weights for the Rust
 # PJRT runtime (Layer 2/1 → Layer 3 handoff; needs jax installed).
@@ -13,8 +13,17 @@ build:
 test:
 	cd rust && cargo test -q
 
+# Release-mode tests surface codegen-only issues; CI runs both.
+test-release:
+	cd rust && cargo test -q --release
+
 kick-tires:
 	scripts/kick-tires.sh
+
+# The CI smoke job's mode: small agent counts, ~2 minutes, BENCH_*.json
+# artifacts under out/.
+smoke:
+	scripts/kick-tires.sh --quick
 
 clean:
 	cd rust && cargo clean

@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         beta_prefill: 0.0,
         beta_decode: 0.0,
         swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
     };
     cfg.max_batch = model.max_decode_batch();
 

@@ -29,6 +29,14 @@ pub struct BackendProfile {
     pub beta_decode: f64,
     /// Swap-out/in penalty per token moved (seconds).
     pub swap_cost_per_token: f64,
+    /// Mixed-batch interference: extra latency per (prefill token × decoding
+    /// sequence) sharing one iteration (s). Models the kernel slowdown a
+    /// prefill inflicts on the decodes batched with it — the term that makes
+    /// decode tail latency under a concurrent long prefill a *modeled*
+    /// quantity instead of an unpriced stall (DESIGN.md §10). Zero in the
+    /// stock profiles, so every pre-chunking run is numerically unchanged;
+    /// the chunked-prefill experiment sets it explicitly.
+    pub beta_mixed: f64,
 }
 
 impl BackendProfile {
@@ -46,6 +54,7 @@ impl BackendProfile {
             beta_prefill: 40.0e-6,
             beta_decode: 600.0e-6,
             swap_cost_per_token: 2.0e-6,
+            beta_mixed: 0.0,
         }
     }
 
@@ -60,6 +69,7 @@ impl BackendProfile {
             beta_prefill: 80.0e-6,
             beta_decode: 1.1e-3,
             swap_cost_per_token: 3.5e-6,
+            beta_mixed: 0.0,
         }
     }
 
@@ -74,6 +84,7 @@ impl BackendProfile {
             beta_prefill: 55.0e-6,
             beta_decode: 800.0e-6,
             swap_cost_per_token: 1.5e-6,
+            beta_mixed: 0.0,
         }
     }
 
@@ -88,6 +99,7 @@ impl BackendProfile {
             beta_prefill: 0.0,
             beta_decode: 0.0,
             swap_cost_per_token: 0.0,
+            beta_mixed: 0.0,
         }
     }
 
@@ -276,6 +288,21 @@ pub struct Config {
     /// correction off when both are set — observed-cost accounting is not
     /// yet dedup-aware; see the note in [`crate::engine`]).
     pub online_correction: bool,
+    /// Chunked prefill (Sarathi-style, DESIGN.md §10): split prompt
+    /// processing into [`prefill_chunk`](Config::prefill_chunk)-token pieces
+    /// and compose each engine iteration from all running decodes plus as
+    /// many prefill chunks as [`max_batched_tokens`](Config::max_batched_tokens)
+    /// allows, acquiring KV pages chunk by chunk. Off by default: the
+    /// disabled path is bit-identical to a build without chunking (and so is
+    /// `prefill_chunk = u32::MAX` with an unbounded budget).
+    pub chunked_prefill: bool,
+    /// Per-iteration token budget shared by decodes (one token each) and
+    /// prefill chunks. Only meaningful with
+    /// [`chunked_prefill`](Config::chunked_prefill).
+    pub max_batched_tokens: u32,
+    /// Maximum prompt tokens one sequence may prefill per iteration. Only
+    /// meaningful with [`chunked_prefill`](Config::chunked_prefill).
+    pub prefill_chunk: u32,
 }
 
 impl Default for Config {
@@ -290,6 +317,9 @@ impl Default for Config {
             cluster: ClusterConfig::default(),
             prefix_cache: false,
             online_correction: false,
+            chunked_prefill: false,
+            max_batched_tokens: 2048,
+            prefill_chunk: 512,
         }
     }
 }
@@ -329,6 +359,9 @@ impl Config {
             if let Some(x) = obj.get("beta_decode").and_then(|j| j.as_f64()) {
                 b.beta_decode = x;
             }
+            if let Some(x) = obj.get("beta_mixed").and_then(|j| j.as_f64()) {
+                b.beta_mixed = x;
+            }
             cfg.backend = b;
         }
         if let Some(name) = v.get("policy").as_str() {
@@ -348,6 +381,17 @@ impl Config {
         }
         if let Some(x) = v.get("online_correction").as_bool() {
             cfg.online_correction = x;
+        }
+        if let Some(x) = v.get("chunked_prefill").as_bool() {
+            cfg.chunked_prefill = x;
+        }
+        if let Some(x) = v.get("max_batched_tokens").as_u64() {
+            anyhow::ensure!(x >= 1, "max_batched_tokens must be >= 1");
+            cfg.max_batched_tokens = x as u32;
+        }
+        if let Some(x) = v.get("prefill_chunk").as_u64() {
+            anyhow::ensure!(x >= 1, "prefill_chunk must be >= 1");
+            cfg.prefill_chunk = x as u32;
         }
         let c = v.get("cluster");
         if c.as_obj().is_some() {
@@ -443,6 +487,19 @@ impl Config {
         }
         if args.has("online-correction") {
             self.online_correction = true;
+        }
+        if args.has("chunked-prefill") {
+            self.chunked_prefill = true;
+        }
+        if let Some(t) = args.get("max-batched-tokens") {
+            let t: u32 = t.parse().context("--max-batched-tokens")?;
+            anyhow::ensure!(t >= 1, "--max-batched-tokens must be >= 1");
+            self.max_batched_tokens = t;
+        }
+        if let Some(c) = args.get("prefill-chunk") {
+            let c: u32 = c.parse().context("--prefill-chunk")?;
+            anyhow::ensure!(c >= 1, "--prefill-chunk must be >= 1");
+            self.prefill_chunk = c;
         }
         Ok(self)
     }
@@ -594,6 +651,47 @@ mod tests {
         assert!(w.dag);
         assert!((w.spawn_prob - 0.3).abs() < 1e-12);
         assert_eq!(w.branch, 5);
+    }
+
+    #[test]
+    fn chunked_prefill_knobs() {
+        // Defaults: off, with sane chunk/budget values ready to enable.
+        let cfg = Config::default();
+        assert!(!cfg.chunked_prefill);
+        assert_eq!(cfg.max_batched_tokens, 2048);
+        assert_eq!(cfg.prefill_chunk, 512);
+        // JSON.
+        let j = Json::parse(
+            r#"{"chunked_prefill": true, "max_batched_tokens": 1024,
+                "prefill_chunk": 128, "backend": {"beta_mixed": 1e-9}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert!(cfg.chunked_prefill);
+        assert_eq!(cfg.max_batched_tokens, 1024);
+        assert_eq!(cfg.prefill_chunk, 128);
+        assert!((cfg.backend.beta_mixed - 1e-9).abs() < 1e-24);
+        // Zero chunk/budget are rejected (a zero budget can never batch).
+        assert!(Config::from_json(&Json::parse(r#"{"prefill_chunk": 0}"#).unwrap()).is_err());
+        assert!(
+            Config::from_json(&Json::parse(r#"{"max_batched_tokens": 0}"#).unwrap()).is_err()
+        );
+        // CLI overrides (chunked-prefill is a boolean switch).
+        let args = crate::cli::Args::parse(
+            ["run", "--chunked-prefill", "--max-batched-tokens", "4096", "--prefill-chunk", "256"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["chunked-prefill"],
+        );
+        let cfg = Config::default().apply_args(&args).unwrap();
+        assert!(cfg.chunked_prefill);
+        assert_eq!(cfg.max_batched_tokens, 4096);
+        assert_eq!(cfg.prefill_chunk, 256);
+        // The stock profiles carry no mixed-batch term: the pre-chunking
+        // latency model is numerically unchanged.
+        for n in ["llama7b-a100", "llama13b-4v100", "qwen32b-h800", "tiny-cpu"] {
+            assert_eq!(BackendProfile::by_name(n).unwrap().beta_mixed, 0.0);
+        }
     }
 
     #[test]

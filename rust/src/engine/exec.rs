@@ -65,16 +65,20 @@ pub trait ExecBackend {
 
 /// Calibrated latency model:
 /// `t = alpha + beta_prefill·(prefill tokens) + beta_decode·(batch seqs)
-///    + swap_cost·(tokens moved)`.
+///    + beta_mixed·(prefill tokens)·(decode seqs) + swap_cost·(tokens moved)`.
 /// The coefficients per backend profile are chosen to land the §5.1 size
 /// buckets in the paper's <1 min / 1–10 min / >10 min ranges; for the
 /// tiny-cpu profile they are measured against the PJRT backend (see
-/// EXPERIMENTS.md §Calibration).
+/// EXPERIMENTS.md §Calibration). `beta_mixed` is the mixed-batch
+/// interference term (DESIGN.md §10): the extra latency every decode in the
+/// iteration pays per prefill token batched alongside it — zero in the
+/// stock profiles, set explicitly by the chunked-prefill experiment.
 #[derive(Debug, Clone)]
 pub struct SimBackend {
     alpha: f64,
     beta_prefill: f64,
     beta_decode: f64,
+    beta_mixed: f64,
     swap_cost_per_token: f64,
     iterations: u64,
 }
@@ -86,6 +90,7 @@ impl SimBackend {
             alpha: profile.alpha,
             beta_prefill: profile.beta_prefill,
             beta_decode: profile.beta_decode,
+            beta_mixed: profile.beta_mixed,
             swap_cost_per_token: profile.swap_cost_per_token,
             iterations: 0,
         }
@@ -94,7 +99,14 @@ impl SimBackend {
     /// Unit-time backend for property tests: every iteration takes exactly
     /// 1 "second" (i.e. time is measured in iterations).
     pub fn unit_time() -> Self {
-        SimBackend { alpha: 1.0, beta_prefill: 0.0, beta_decode: 0.0, swap_cost_per_token: 0.0, iterations: 0 }
+        SimBackend {
+            alpha: 1.0,
+            beta_prefill: 0.0,
+            beta_decode: 0.0,
+            beta_mixed: 0.0,
+            swap_cost_per_token: 0.0,
+            iterations: 0,
+        }
     }
 
     /// Iterations executed so far.
@@ -115,6 +127,7 @@ impl ExecBackend for SimBackend {
         let elapsed = self.alpha
             + self.beta_prefill * batch.prefill_tokens() as f64
             + self.beta_decode * batch.batch_size() as f64
+            + self.beta_mixed * batch.prefill_tokens() as f64 * batch.decode.len() as f64
             + self.swap_cost_per_token * (batch.swap_out_tokens + batch.swap_in_tokens) as f64;
         IterationResult { elapsed }
     }
@@ -142,6 +155,7 @@ mod tests {
             beta_prefill: 1e-4,
             beta_decode: 1e-3,
             swap_cost_per_token: 1e-5,
+            beta_mixed: 0.0,
         };
         let mut b = SimBackend::new(&profile);
         let prefill = [(tid(0), 100u32)];
@@ -156,6 +170,43 @@ mod tests {
         let want = 0.01 + 1e-4 * 100.0 + 1e-3 * 3.0 + 1e-5 * 50.0;
         assert!((r.elapsed - want).abs() < 1e-12);
         assert_eq!(b.iterations(), 1);
+    }
+
+    #[test]
+    fn mixed_batch_term_charges_prefill_decode_interference() {
+        let profile = BackendProfile {
+            name: "t".into(),
+            kv_tokens: 100,
+            page_size: 10,
+            alpha: 0.01,
+            beta_prefill: 1e-4,
+            beta_decode: 1e-3,
+            swap_cost_per_token: 0.0,
+            beta_mixed: 1e-6,
+        };
+        let mut b = SimBackend::new(&profile);
+        let prefill = [(tid(0), 200u32)];
+        let decode = [tid(1), tid(2), tid(3)];
+        let r = b.run_iteration(&IterationBatch {
+            prefill: &prefill,
+            decode: &decode,
+            swap_out_tokens: 0,
+            swap_in_tokens: 0,
+            kv: &kv(),
+        });
+        // 200 prefill tokens × 3 decoders pay the interference term.
+        let want = 0.01 + 1e-4 * 200.0 + 1e-3 * 4.0 + 1e-6 * 200.0 * 3.0;
+        assert!((r.elapsed - want).abs() < 1e-12);
+        // A pure-prefill iteration pays none (no decodes to interfere with).
+        let r = b.run_iteration(&IterationBatch {
+            prefill: &prefill,
+            decode: &[],
+            swap_out_tokens: 0,
+            swap_in_tokens: 0,
+            kv: &kv(),
+        });
+        let want = 0.01 + 1e-4 * 200.0 + 1e-3 * 1.0;
+        assert!((r.elapsed - want).abs() < 1e-12);
     }
 
     #[test]

@@ -32,8 +32,13 @@ struct SeqState {
     prompt: u32,
     target_decode: u32,
     generated: u32,
-    /// Set while the sequence still needs its prefill iteration.
+    /// Set while the sequence still needs prefill work; the iteration that
+    /// completes the prefill also emits the first output token.
     needs_prefill: bool,
+    /// Prompt tokens whose KV is computed so far: starts at `cached_tokens`
+    /// and advances one chunk per iteration under chunked prefill (jumps
+    /// straight to `prompt` after the single prefill iteration otherwise).
+    prefilled: u32,
     /// Prompt tokens served from the prefix cache (prefill skipped).
     cached_tokens: u32,
     /// Prefix-tree nodes this sequence is attached to (admission match,
@@ -142,6 +147,14 @@ pub struct Engine<B: ExecBackend> {
     /// estimate and re-derive the scheduler's tags. Off ⇒ bit-identical to
     /// an engine without the loop.
     online_correction: bool,
+    /// Max prompt tokens one sequence prefills per iteration (DESIGN.md
+    /// §10). `u32::MAX` when `cfg.chunked_prefill` is off — the whole
+    /// uncached prompt runs in one iteration, which is the classical
+    /// atomic-admission engine bit for bit.
+    prefill_chunk: u32,
+    /// Per-iteration token budget shared by decodes (one token each) and
+    /// prefill chunks; `u32::MAX` when chunking is off.
+    token_budget: u32,
 }
 
 impl<B: ExecBackend> Engine<B> {
@@ -181,6 +194,12 @@ impl<B: ExecBackend> Engine<B> {
             // accounting is dedup-aware, correction disables itself rather
             // than silently skewing fairness.
             online_correction: cfg.online_correction && !cfg.prefix_cache,
+            prefill_chunk: if cfg.chunked_prefill { cfg.prefill_chunk.max(1) } else { u32::MAX },
+            token_budget: if cfg.chunked_prefill {
+                cfg.max_batched_tokens.max(1)
+            } else {
+                u32::MAX
+            },
         }
     }
 
@@ -275,12 +294,8 @@ impl<B: ExecBackend> Engine<B> {
                 // Memory pressure: reclaim unpinned prefix-cache pages first
                 // (only when that can actually cover the shortfall — partial
                 // flushes buy nothing while admissions are swap-gated).
-                if let Some(cache) = self.prefix.as_mut() {
-                    let need = self.kv.pages_for(self.kv.seq_tokens(id).unwrap_or(0)) + 1;
-                    if self.kv.free_pages() + cache.reclaimable_pages(&self.kv) >= need {
-                        cache.evict_until(&mut self.kv, need);
-                    }
-                }
+                let need = self.kv.pages_for(self.kv.seq_tokens(id).unwrap_or(0)) + 1;
+                self.evict_cache_for(need);
                 if !self.kv.can_swap_in(id) {
                     break;
                 }
@@ -291,7 +306,12 @@ impl<B: ExecBackend> Engine<B> {
             self.running.push(seq);
         }
 
-        // 2. Fresh admissions only if nothing is swapped out.
+        // 2. Fresh admissions only if nothing is swapped out. Under chunked
+        //    prefill a sequence is admitted on its *first chunk's* pages
+        //    (cached prefix + one chunk + decode headroom) instead of the
+        //    whole prompt; later chunks acquire pages incrementally in step
+        //    4. With chunking off `admit_tokens == prompt_tokens` and this
+        //    is the classical atomic admission, call for call.
         if self.swapped.is_empty() && !self.admission_blocked {
             while self.running.len() < self.max_batch {
                 let Some(next) = self.scheduler.peek_next(self.clock) else {
@@ -311,36 +331,42 @@ impl<B: ExecBackend> Engine<B> {
                     let ids = crate::prefix::prompt_token_ids(next.id, shareable, group);
                     let m = cache.lookup(&ids);
                     cache.attach(&m.path); // pin before any eviction
-                    let need = self.kv.fresh_pages_needed(next.prompt_tokens, m.pages.len() as u32);
-                    if need > self.kv.free_pages()
-                        && self.kv.free_pages() + cache.reclaimable_pages(&self.kv) >= need
-                    {
-                        // Only spend cached chains when eviction can
-                        // actually make this admission fit; an infeasible
-                        // request must not flush other families' prefixes.
-                        cache.evict_until(&mut self.kv, need);
-                    }
-                    if !self.kv.can_admit_with_prefix(next.prompt_tokens, m.pages.len() as u32) {
-                        cache.detach(&m.path);
+                    lookup = Some(m);
+                }
+                let admit_tokens;
+                if let Some(m) = &lookup {
+                    admit_tokens =
+                        admission_tokens(next.prompt_tokens, m.tokens, self.prefill_chunk);
+                    // Only spend cached chains when eviction can actually
+                    // make this admission fit; an infeasible request must
+                    // not flush other families' prefixes.
+                    let need = self.kv.fresh_pages_needed(admit_tokens, m.pages.len() as u32);
+                    self.evict_cache_for(need);
+                    if !self.kv.can_admit_with_prefix(admit_tokens, m.pages.len() as u32) {
+                        if let Some(cache) = self.prefix.as_mut() {
+                            cache.detach(&m.path);
+                        }
                         self.admission_blocked = true;
                         break;
                     }
-                    lookup = Some(m);
-                } else if !self.kv.can_admit(next.prompt_tokens) {
-                    self.admission_blocked = true;
-                    break;
+                } else {
+                    admit_tokens = admission_tokens(next.prompt_tokens, 0, self.prefill_chunk);
+                    if !self.kv.can_admit(admit_tokens) {
+                        self.admission_blocked = true;
+                        break;
+                    }
                 }
                 let task = self.scheduler.pop_next(self.clock).unwrap();
                 let (cached_tokens, prefix_path) = match lookup {
                     Some(m) => {
                         self.kv
-                            .share_prefix(task.id, &m.pages, task.prompt_tokens)
+                            .share_prefix(task.id, &m.pages, admit_tokens)
                             .expect("admit checked");
                         self.metrics.on_prefix_lookup(m.tokens as u64);
                         (m.tokens, m.path)
                     }
                     None => {
-                        self.kv.allocate(task.id, task.prompt_tokens).expect("can_admit checked");
+                        self.kv.allocate(task.id, admit_tokens).expect("can_admit checked");
                         (0, Vec::new())
                     }
                 };
@@ -351,6 +377,7 @@ impl<B: ExecBackend> Engine<B> {
                     target_decode: spec_decode,
                     generated: 0,
                     needs_prefill: true,
+                    prefilled: cached_tokens,
                     cached_tokens,
                     prefix_path,
                 });
@@ -378,10 +405,8 @@ impl<B: ExecBackend> Engine<B> {
                 // Cheapest reclaim first: drop unpinned prefix-cache pages
                 // before preempting a running sequence (skip when nothing
                 // reclaimable would actually free a page).
-                if let Some(cache) = self.prefix.as_mut() {
-                    if cache.reclaimable_pages(&self.kv) >= 1 {
-                        cache.evict_until(&mut self.kv, 1);
-                    }
+                if self.prefix.is_some() {
+                    self.evict_cache_for(1);
                     if self.kv.can_append(id) {
                         i += 1;
                         continue;
@@ -389,20 +414,7 @@ impl<B: ExecBackend> Engine<B> {
                 }
                 match self.pick_victim(i) {
                     Some(v) => {
-                        let mut victim = self.running.remove(v);
-                        let pages = self.kv.block_table(victim.id).unwrap().to_vec();
-                        let tokens = self.kv.seq_tokens(victim.id).unwrap();
-                        self.backend.on_swap_out(victim.id, &pages, tokens);
-                        swap_out_tokens += self.kv.swap_out(victim.id).expect("victim on device");
-                        if let Some(cache) = self.prefix.as_mut() {
-                            // Shared prefix pages survive via the tree; the
-                            // victim re-enters on private pages at swap-in.
-                            cache.detach(&victim.prefix_path);
-                        }
-                        victim.prefix_path = Vec::new();
-                        victim.cached_tokens = 0;
-                        self.metrics.on_swap_out(victim.id, self.clock);
-                        self.swapped.push_back(victim);
+                        swap_out_tokens += self.swap_out_running(v);
                         if v < i {
                             i -= 1; // indices shifted
                         }
@@ -419,16 +431,96 @@ impl<B: ExecBackend> Engine<B> {
             self.admission_blocked = false;
         }
 
-        // 4. Run the iteration on the backend. Cached-prefix tokens are
-        //    excluded from the prefill work (their KV already exists).
-        let prefill: Vec<(TaskId, u32)> = self
-            .running
-            .iter()
-            .filter(|s| s.needs_prefill)
-            .map(|s| (s.id, s.prompt - s.cached_tokens))
-            .collect();
-        let decode: Vec<TaskId> =
-            self.running.iter().filter(|s| !s.needs_prefill).map(|s| s.id).collect();
+        // 4. Compose the iteration under the token budget (DESIGN.md §10):
+        //    every decoder contributes one token, then prefill-pending
+        //    sequences claim chunks from the remaining budget in admission
+        //    order, acquiring each chunk's KV pages on the spot. Cached-
+        //    prefix tokens are excluded from the prefill work (their KV
+        //    already exists). With chunking off the budget is unbounded and
+        //    every pending prefill runs its whole uncached remainder —
+        //    exactly the atomic-admission batch. `plan[i]` holds running
+        //    sequence i's prefill tokens this iteration (`None` = decoder,
+        //    or a pending prefill stalled by the budget / page shortage).
+        let mut plan: Vec<Option<u32>>;
+        let mut prefill: Vec<(TaskId, u32)>;
+        let mut decode: Vec<TaskId>;
+        let mut stalls: u64;
+        // Real chunking in effect (not the flag-off / degenerate path whose
+        // bit-identity to the atomic engine is guaranteed).
+        let chunk_mode = self.prefill_chunk != u32::MAX || self.token_budget != u32::MAX;
+        loop {
+            plan = vec![None; self.running.len()];
+            prefill = Vec::new();
+            decode = Vec::new();
+            stalls = 0;
+            let mut budget = self.token_budget;
+            for s in &self.running {
+                if !s.needs_prefill {
+                    decode.push(s.id);
+                    budget = budget.saturating_sub(1);
+                }
+            }
+            for i in 0..self.running.len() {
+                let (id, prefilled, remaining) = {
+                    let s = &self.running[i];
+                    if !s.needs_prefill {
+                        continue;
+                    }
+                    (s.id, s.prefilled, s.prompt - s.prefilled)
+                };
+                let mut take = remaining.min(self.prefill_chunk).min(budget);
+                if take == 0 && remaining > 0 {
+                    stalls += 1; // budget spent before this sequence's turn
+                    continue;
+                }
+                // Pages already acquired but not yet filled (the admission
+                // chunk, or a prior iteration's budget shortfall).
+                let covered = self.kv.seq_tokens(id).expect("running seq allocated") - prefilled;
+                if take > covered && self.try_extend(id, take - covered).is_err() {
+                    // No page even after cache eviction: prefill only what
+                    // is already covered, possibly nothing, this iteration.
+                    take = covered;
+                    if take == 0 {
+                        stalls += 1;
+                        continue;
+                    }
+                }
+                if chunk_mode && take == remaining && !self.kv.can_append(id) {
+                    // The iteration completing this prefill also appends the
+                    // first output token, but try_extend reclaimed only the
+                    // chunk's own pages. Give the append the same cheapest-
+                    // reclaim chance the decode path gets, or a lone runner
+                    // could hit the capacity panic in step 5 while
+                    // reclaimable cache pages still exist.
+                    self.evict_cache_for(1);
+                }
+                plan[i] = Some(take);
+                prefill.push((id, take));
+                budget = budget.saturating_sub(take);
+            }
+            if !prefill.is_empty() || !decode.is_empty() {
+                break;
+            }
+            // Chunked-prefill starvation valve: every runner is a
+            // mid-prefill sequence that could not acquire a single page.
+            // Swap the youngest out so the eldest can progress next round
+            // (no waiting task is touched, so the non-preemptive rule
+            // holds). Unreachable with chunking off: whole prompts are
+            // page-backed at admission.
+            if self.running.len() == 1 {
+                panic!(
+                    "sequence {} needs more KV than the whole pool ({} tokens): \
+                     workload exceeds capacity",
+                    self.running[0].id,
+                    self.kv.capacity_tokens()
+                );
+            }
+            swap_out_tokens += self.swap_out_running(self.running.len() - 1);
+            self.admission_blocked = false;
+        }
+        if stalls > 0 {
+            self.metrics.on_prefill_stalls(stalls);
+        }
         let result = self.backend.run_iteration(&IterationBatch {
             prefill: &prefill,
             decode: &decode,
@@ -446,23 +538,31 @@ impl<B: ExecBackend> Engine<B> {
             prefill_tokens,
         );
 
-        // 5. Token bookkeeping: prefilled seqs become decoders; decoders gain
+        // 5. Token bookkeeping: sequences whose prefill completed become
+        //    decoders (that iteration also emits their first token);
+        //    mid-prefill sequences only advance their cursor; decoders gain
         //    one token (KV already reserved above); completions retire.
         let mut completed: Vec<TaskId> = Vec::new();
         let mut service: Vec<(AgentId, f64)> = Vec::new();
         let mut stalled = 0usize;
         let page_size = self.kv.page_size();
-        for s in &mut self.running {
+        for (i, s) in self.running.iter_mut().enumerate() {
             if s.needs_prefill {
+                // Stalled sequences ran no chunk: no progress, no service.
+                let Some(take) = plan[i] else { continue };
+                // VTC-style service accounting for the prompt tokens
+                // actually prefilled this iteration; cached-prefix tokens
+                // consumed no service (cache off ⇒ cached_tokens = 0), and
+                // chunked prefill charges chunk by chunk — the per-sequence
+                // total is exactly the unchunked charge.
+                service.push((s.id.agent, serve_delta_prefill(self.cost_model, take)));
+                s.prefilled += take;
+                if s.prefilled < s.prompt {
+                    continue; // mid-prefill: no output token yet
+                }
                 s.needs_prefill = false;
-                // VTC-style service accounting for the prompt — only the
-                // tokens actually prefilled; cached-prefix tokens consumed
-                // no service (cache off ⇒ cached_tokens = 0, unchanged).
-                service.push((
-                    s.id.agent,
-                    serve_delta_prefill(self.cost_model, s.prompt - s.cached_tokens),
-                ));
-                // Prefill iteration also emits the first token.
+                // The iteration finishing the prefill also emits the first
+                // token.
                 if let Some(cache) = self.prefix.as_mut() {
                     // Register the freshly-built *shareable* chain (full
                     // pages of the family prefix only — unique suffixes
@@ -560,6 +660,58 @@ impl<B: ExecBackend> Engine<B> {
             }
         }
         best.map(|(_, _, i)| i)
+    }
+
+    /// Swap the running sequence at `idx` out to host: release its device
+    /// pages, drop its prefix-tree pins (shared prefix pages survive via
+    /// the tree; the victim re-enters on private pages at swap-in), and
+    /// queue it for FIFO swap-in. Returns the tokens moved, for
+    /// swap-latency accounting. Shared by the decode-pressure victim path
+    /// and the chunked-prefill starvation valve.
+    fn swap_out_running(&mut self, idx: usize) -> u32 {
+        let mut victim = self.running.remove(idx);
+        let pages = self.kv.block_table(victim.id).unwrap().to_vec();
+        let tokens = self.kv.seq_tokens(victim.id).unwrap();
+        self.backend.on_swap_out(victim.id, &pages, tokens);
+        let moved = self.kv.swap_out(victim.id).expect("victim on device");
+        if let Some(cache) = self.prefix.as_mut() {
+            cache.detach(&victim.prefix_path);
+        }
+        victim.prefix_path = Vec::new();
+        victim.cached_tokens = 0;
+        self.metrics.on_swap_out(victim.id, self.clock);
+        self.swapped.push_back(victim);
+        moved
+    }
+
+    /// Reclaim unpinned prefix-cache pages until `need` pages are free,
+    /// when (and only when) eviction can actually cover the shortfall.
+    ///
+    /// Any eviction that grows the free pool is an admission-unblocking
+    /// event (§Perf memo audit): capacity grew without a completion, swap,
+    /// or queue change, so the blocked memo must drop here — every eviction
+    /// site funnels through this helper so none can miss it.
+    fn evict_cache_for(&mut self, need: u32) {
+        let Some(cache) = self.prefix.as_mut() else { return };
+        let before = self.kv.free_pages();
+        if before >= need || before + cache.reclaimable_pages(&self.kv) < need {
+            return;
+        }
+        cache.evict_until(&mut self.kv, need);
+        if self.kv.free_pages() > before {
+            self.admission_blocked = false;
+        }
+    }
+
+    /// Acquire KV for `tokens` more prompt tokens of a mid-prefill
+    /// sequence (chunked prefill), reclaiming unpinned prefix-cache pages
+    /// first when that covers the shortfall.
+    fn try_extend(&mut self, seq: TaskId, tokens: u32) -> Result<(), KvError> {
+        let need = self.kv.extend_need(seq, tokens);
+        if need > self.kv.free_pages() {
+            self.evict_cache_for(need);
+        }
+        self.kv.extend_tokens(seq, tokens)
     }
 
     fn finish_seq(&mut self, id: TaskId) {
@@ -680,6 +832,52 @@ impl<B: ExecBackend> Engine<B> {
         self.prefix.as_ref()
     }
 
+    /// Per-sequence chunked-prefill accounting invariants (DESIGN.md §10),
+    /// checked between steps: for every running sequence the filled-token
+    /// cursor never passes the prompt, nothing decodes before its prefill
+    /// completes, and the KV tokens it holds cover exactly its filled plus
+    /// generated tokens up to at most one admission chunk of slack
+    /// (`prefilled + generated ≤ kv ≤ prompt + generated`, tight once
+    /// decoding). Composes with
+    /// [`check_kv_invariants`](Self::check_kv_invariants) in the
+    /// `prop_chunked_conservation` property test.
+    pub fn check_chunked_accounting(&self) -> Result<(), String> {
+        for s in &self.running {
+            let kv_tokens = self
+                .kv
+                .seq_tokens(s.id)
+                .ok_or_else(|| format!("{}: running but unallocated", s.id))?;
+            if s.prefilled > s.prompt {
+                return Err(format!("{}: prefilled {} > prompt {}", s.id, s.prefilled, s.prompt));
+            }
+            if s.cached_tokens > s.prefilled {
+                return Err(format!(
+                    "{}: cached {} tokens but only {} prefilled (cursor ran backwards)",
+                    s.id, s.cached_tokens, s.prefilled
+                ));
+            }
+            if s.needs_prefill && s.generated != 0 {
+                return Err(format!("{}: decoded before prefill completed", s.id));
+            }
+            let low = s.prefilled + s.generated;
+            let high = s.prompt + s.generated;
+            if kv_tokens < low || kv_tokens > high {
+                return Err(format!(
+                    "{}: kv tokens {kv_tokens} outside [{low}, {high}] \
+                     (prefilled {}, generated {})",
+                    s.id, s.prefilled, s.generated
+                ));
+            }
+            if !s.needs_prefill && kv_tokens != high {
+                return Err(format!(
+                    "{}: decoder holds {kv_tokens} kv tokens, expected {high}",
+                    s.id
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// KV-pool invariant check that accounts for pages pinned by the prefix
     /// cache; with the cache disabled this is exactly
     /// [`BlockAllocator::check_invariants`].
@@ -763,6 +961,13 @@ fn shareable_tokens(group: Option<PrefixGroup>, prompt_tokens: u32) -> u32 {
     group.map(|g| g.tokens.min(prompt_tokens)).unwrap_or(0)
 }
 
+/// Tokens a new sequence's admission allocates KV for: the cached prefix
+/// plus the first prefill chunk, clamped to the prompt. With chunking off
+/// (`chunk = u32::MAX`) this is the whole prompt — atomic admission.
+fn admission_tokens(prompt_tokens: u32, cached_tokens: u32, chunk: u32) -> u32 {
+    cached_tokens.saturating_add(chunk).min(prompt_tokens)
+}
+
 /// Service-accounting deltas in the scheduler's cost units.
 fn serve_delta_prefill(model: CostModel, prompt: u32) -> f64 {
     match model {
@@ -810,6 +1015,7 @@ mod tests {
             beta_prefill: 1e-5,
             beta_decode: 1e-4,
             swap_cost_per_token: 1e-6,
+            beta_mixed: 0.0,
         };
         cfg.max_batch = 16;
         cfg
@@ -1116,6 +1322,174 @@ mod tests {
         };
         // Annotations are inert while cfg.prefix_cache is false.
         assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn chunked_with_unbounded_knobs_is_bit_identical() {
+        // chunk = u32::MAX with an unbounded budget must replay the
+        // unchunked engine exactly, policy by policy (same JCTs bit for
+        // bit) — the flag-off path and the degenerate chunked path are the
+        // same engine.
+        for policy in Policy::all_paper_baselines() {
+            let run = |chunked: bool| {
+                let mut cfg = tiny_config(64, 16);
+                cfg.chunked_prefill = chunked;
+                cfg.prefill_chunk = u32::MAX;
+                cfg.max_batched_tokens = u32::MAX;
+                let mut e = engine(&cfg, policy);
+                e.submit(simple_agent(0, 0.0, 3, 40, 12), 900.0);
+                e.submit(simple_agent(1, 0.0, 2, 24, 6), 100.0);
+                while e.has_work() {
+                    e.step();
+                }
+                e.metrics.jcts()
+            };
+            assert_eq!(run(false), run(true), "{policy:?} diverged");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_splits_prompts_and_completes() {
+        let mut cfg = tiny_config(64, 16);
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 8;
+        cfg.max_batched_tokens = 16;
+        let mut e = engine(&cfg, Policy::Fcfs);
+        // One 64-token prompt: 8 chunks of 8 tokens, pages acquired chunk
+        // by chunk; the final chunk's iteration emits the first token.
+        e.submit(simple_agent(0, 0.0, 1, 64, 4), 10.0);
+        let mut iters = 0;
+        while e.has_work() {
+            e.step();
+            e.check_chunked_accounting().unwrap();
+            e.check_kv_invariants().unwrap();
+            iters += 1;
+            assert!(iters < 1000);
+        }
+        // 8 prefill iterations (the last emits token 1) + 3 pure decodes.
+        assert_eq!(iters, 11);
+        assert_eq!(e.metrics.completed_agents(), 1);
+        assert_eq!(e.kv.free_pages(), 64);
+    }
+
+    #[test]
+    fn token_budget_stalls_excess_prefills_and_counts_them() {
+        let mut cfg = tiny_config(64, 16);
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 16;
+        cfg.max_batched_tokens = 16;
+        let mut e = engine(&cfg, Policy::Fcfs);
+        // Two 32-token prompts admitted together, but only one 16-token
+        // chunk fits per iteration: the second sequence must stall (and be
+        // counted) while the first prefills.
+        e.submit(simple_agent(0, 0.0, 2, 32, 2), 10.0);
+        let mut guard = 0;
+        while e.has_work() {
+            e.step();
+            e.check_chunked_accounting().unwrap();
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        assert_eq!(e.metrics.completed_agents(), 1);
+        assert!(e.metrics.prefill_stalls() > 0, "second prefill never waited");
+        e.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn chunking_caps_decode_inter_token_latency() {
+        // A long-lived decoder sharing the engine with an elephant prompt:
+        // unchunked, one iteration carries the whole prompt and every
+        // decode in it eats that latency; chunked, the worst decode gap is
+        // bounded by the chunk. Tail ITL must improve as the chunk shrinks
+        // at a fixed budget (the chunked_prefill experiment's headline).
+        let run = |chunk: Option<u32>| {
+            let mut cfg = tiny_config(256, 16);
+            cfg.backend.alpha = 0.01;
+            cfg.backend.beta_prefill = 1e-4;
+            if let Some(c) = chunk {
+                cfg.chunked_prefill = true;
+                cfg.prefill_chunk = c;
+                cfg.max_batched_tokens = 2048;
+            }
+            let mut e = engine(&cfg, Policy::Fcfs);
+            e.submit(simple_agent(0, 0.0, 1, 8, 50), 10.0); // the decoder
+            e.step(); // decoder prefilled; it is now mid-decode
+            e.submit(simple_agent(1, 0.0, 1, 1600, 4), 10.0); // the elephant
+            while e.has_work() {
+                e.step();
+            }
+            assert_eq!(e.metrics.completed_agents(), 2);
+            e.metrics.decode_itl_percentile(99.0)
+        };
+        let off = run(None);
+        let c512 = run(Some(512));
+        let c128 = run(Some(128));
+        assert!(c512 < off, "chunk 512 must beat atomic admission ({c512} vs {off})");
+        assert!(c128 < c512, "chunk 128 must beat chunk 512 ({c128} vs {c512})");
+    }
+
+    #[test]
+    fn chunked_valve_swaps_youngest_when_all_prefills_starve() {
+        // Pool of 8 pages; two 96-token prompts admitted on 2-page first
+        // chunks. Their incremental growth collides mid-prefill with no
+        // decoder to retire: the valve must swap the youngest out instead
+        // of spinning, and both agents must still finish.
+        let mut cfg = tiny_config(8, 16); // 128-token pool
+        cfg.max_batch = 4;
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 32;
+        cfg.max_batched_tokens = 64;
+        let mut e = engine(&cfg, Policy::Fcfs);
+        e.submit(simple_agent(0, 0.0, 2, 96, 2), 10.0);
+        let mut guard = 0;
+        while e.has_work() {
+            e.step();
+            e.check_chunked_accounting().unwrap();
+            e.check_kv_invariants().unwrap();
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert_eq!(e.metrics.completed_agents(), 1);
+        assert!(e.metrics.swap_out_count() > 0, "valve never fired");
+        assert_eq!(e.kv.free_pages(), 8);
+    }
+
+    #[test]
+    fn unblocking_events_clear_admission_memo() {
+        // §Perf memo audit: every event that can make the head task
+        // admissible again must drop the blocked-admission memo. Spawn
+        // discovery and stage release funnel through `push_task`; prefix-
+        // cache eviction funnels through `evict_cache_for`; this pins both.
+        let cfg = tiny_config(4, 4);
+        let mut e = engine(&cfg, Policy::Fcfs);
+        e.submit(simple_agent(0, 0.0, 1, 4, 40), 100.0);
+        e.step(); // admit + prefill the runner
+        // A waiting task too big for the remaining pool blocks the memo.
+        e.submit(simple_agent(1, 0.0, 1, 12, 2), 100.0);
+        e.step();
+        assert!(e.admission_blocked, "oversized head task must set the memo");
+        // Queue-change event (the runtime-spawn / dependency-release path).
+        e.push_task(TaskId { agent: 1, index: 9 }, 2, 2);
+        assert!(!e.admission_blocked, "a pushed task must clear the memo");
+
+        // Eviction that grows the free pool clears it too: without this a
+        // newly-fitting head stalls until an unrelated completion.
+        let mut cfg = tiny_config(8, 4);
+        cfg.prefix_cache = true;
+        let mut e = engine(&cfg, Policy::Fcfs);
+        let mut a = simple_agent(0, 0.0, 1, 8, 2);
+        a.tasks[0].prefix_group = Some(crate::workload::PrefixGroup { id: 3, tokens: 8 });
+        e.submit(a, 10.0);
+        while e.has_work() {
+            e.step();
+        }
+        assert_eq!(e.prefix_cache().unwrap().cached_pages(), 2);
+        e.admission_blocked = true; // as if a head task had failed to fit
+        e.evict_cache_for(e.kv.free_pages() + 1);
+        assert!(
+            !e.admission_blocked,
+            "eviction grew the free pool: a stale memo would stall admission"
+        );
     }
 
     #[test]

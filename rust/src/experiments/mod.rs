@@ -778,6 +778,164 @@ pub fn dag_agents(
 }
 
 // ---------------------------------------------------------------------------
+// Chunked prefill — token-budget batch formation (beyond the paper: Sarathi-
+// style chunking; FairBatching observes that how prefill and decode tokens
+// share an iteration is itself a fairness lever; DESIGN.md §10)
+// ---------------------------------------------------------------------------
+
+/// Workload families the chunked-prefill sweep replays: the §5.1 staged
+/// suite, map-reduce DAG agents with dynamic spawning, and shared-prefix
+/// families with the radix-tree cache on.
+pub const CHUNKED_WORKLOADS: [&str; 3] = ["staged", "dag", "prefix"];
+
+/// The policies the chunked-prefill sweep compares (the fairness-relevant
+/// subset: fair queuing, token counters, SRJF pampering, and plain FCFS).
+pub const CHUNKED_POLICIES: [Policy; 4] =
+    [Policy::Fcfs, Policy::Vtc, Policy::Srjf, Policy::Justitia];
+
+/// One (workload, policy, chunk) cell of the chunked-prefill experiment.
+pub struct ChunkedPrefillRow {
+    /// Workload family (see [`CHUNKED_WORKLOADS`]).
+    pub workload: &'static str,
+    /// Scheduling policy.
+    pub policy: Policy,
+    /// Prefill chunk size in tokens (0 = chunking off, atomic admission).
+    pub chunk: u32,
+    /// Per-iteration token budget (0 when chunking is off).
+    pub budget: u32,
+    /// Average JCT (s).
+    pub avg_jct: f64,
+    /// P99 JCT (s).
+    pub p99_jct: f64,
+    /// P99 decode inter-token latency (ms) — the headline tail metric: the
+    /// gap a decoding agent sees while someone else's prompt prefills.
+    pub decode_itl_p99_ms: f64,
+    /// Mean decode inter-token latency (ms).
+    pub decode_itl_mean_ms: f64,
+    /// Prefill-pending sequences denied a chunk by the budget or a KV page
+    /// shortage, summed over iterations.
+    pub prefill_stalls: u64,
+    /// Max-min fair-share ratio vs the GPS fluid reference (costs on the
+    /// policy's model; deduped when the prefix cache is on).
+    pub maxmin_ratio: f64,
+    /// Agents completed (must equal the suite size).
+    pub completed: usize,
+}
+
+impl ChunkedPrefillRow {
+    /// Fixed-width report header (one source for the CLI and the bench
+    /// binary, so their outputs cannot drift).
+    pub fn table_header() -> String {
+        format!(
+            "{:<8} {:<10} {:>6} {:>7} {:>9} {:>9} {:>10} {:>10} {:>7} {:>7} {:>5}",
+            "workload", "policy", "chunk", "budget", "avgJCT", "p99JCT", "itl-p99", "itl-mean",
+            "stalls", "maxmin", "done"
+        )
+    }
+
+    /// One fixed-width report row matching [`ChunkedPrefillRow::table_header`].
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<8} {:<10} {:>6} {:>7} {:>8.1}s {:>8.1}s {:>8.1}ms {:>8.1}ms {:>7} {:>6.2}x {:>5}",
+            self.workload,
+            self.policy.name(),
+            if self.chunk == 0 { "off".to_string() } else { self.chunk.to_string() },
+            if self.chunk == 0 { "-".to_string() } else { self.budget.to_string() },
+            self.avg_jct,
+            self.p99_jct,
+            self.decode_itl_p99_ms,
+            self.decode_itl_mean_ms,
+            self.prefill_stalls,
+            self.maxmin_ratio,
+            self.completed
+        )
+    }
+}
+
+/// The chunked-prefill sweep: each workload family × policy replayed with
+/// atomic admission (chunk 0), then with every chunk size in `chunks` under
+/// the fixed per-iteration token `budget`.
+///
+/// All arms — including the atomic baseline — run with a small mixed-batch
+/// interference coefficient (`beta_mixed`), so the decode latency a long
+/// prefill inflicts on concurrent decodes is priced identically everywhere;
+/// the stock profiles keep `beta_mixed = 0` so nothing outside this
+/// experiment changes. Expected shape: decode p99 inter-token latency
+/// improves as the chunk shrinks at fixed budget (atomic is worst), at a
+/// modest JCT cost from spreading prefills over more iterations.
+pub fn chunked_prefill(
+    base: &Config,
+    n_agents: usize,
+    density: f64,
+    chunks: &[u32],
+    budget: u32,
+    seed: u64,
+) -> Vec<ChunkedPrefillRow> {
+    let mut jobs = Vec::new();
+    for workload in CHUNKED_WORKLOADS {
+        for policy in CHUNKED_POLICIES {
+            jobs.push((workload, policy, 0u32)); // atomic-admission baseline
+            for &c in chunks {
+                jobs.push((workload, policy, c));
+            }
+        }
+    }
+    let base = base.clone();
+    let pool = ThreadPool::with_cpus();
+    pool.map(jobs, move |(workload, policy, chunk)| {
+        let mut cfg = base.clone();
+        cfg.workload.n_agents = n_agents;
+        cfg.workload.seed = seed;
+        cfg.workload = cfg.workload.clone().with_density(density);
+        // Price prefill/decode interference on every arm of the sweep (the
+        // built-in profiles carry 0 to keep pre-chunking runs unchanged).
+        cfg.backend.beta_mixed = 1.0e-7;
+        match workload {
+            "dag" => cfg.workload = cfg.workload.clone().with_dag(0.2, 2),
+            "prefix" => {
+                cfg.workload = cfg.workload.clone().with_shared_prefix(4, 512);
+                cfg.prefix_cache = true;
+            }
+            _ => {}
+        }
+        if chunk > 0 {
+            cfg.chunked_prefill = true;
+            cfg.prefill_chunk = chunk;
+            cfg.max_batched_tokens = budget;
+        }
+        let suite = if workload == "dag" {
+            crate::workload::trace::build_dag_suite(
+                &cfg.workload,
+                crate::workload::DagShape::MapReduce,
+            )
+        } else {
+            crate::workload::trace::build_suite(&cfg.workload)
+        };
+        let model = cost_model_for(policy);
+        let oracle = crate::cost::oracle_costs(cfg.prefix_cache, &suite, model);
+        let m = run_policy_oracle(&cfg, &suite, policy);
+
+        let triples: Vec<(AgentId, f64, f64)> =
+            suite.agents.iter().map(|a| (a.id, a.arrival, oracle[&a.id])).collect();
+        let gps = crate::sched::gps::run(&triples, cfg.backend.kv_tokens, rate_scale(&cfg));
+        let maxmin_ratio = maxmin_vs_gps(&suite, &m, &gps);
+        ChunkedPrefillRow {
+            workload,
+            policy,
+            chunk,
+            budget: if chunk > 0 { budget } else { 0 },
+            avg_jct: m.avg_jct(),
+            p99_jct: m.p99_jct(),
+            decode_itl_p99_ms: m.decode_itl_percentile(99.0) * 1e3,
+            decode_itl_mean_ms: m.decode_itl_mean() * 1e3,
+            prefill_stalls: m.prefill_stalls(),
+            maxmin_ratio,
+            completed: m.completed_agents(),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
 // Table 1 — MLP vs shared-model (Distillbert-style) prediction
 // ---------------------------------------------------------------------------
 
@@ -987,6 +1145,44 @@ mod tests {
         assert!((frac(crate::workload::DagShape::Pipeline) - 1.0).abs() < 1e-9);
         assert!(frac(crate::workload::DagShape::MapReduce) < 0.9);
         assert!(frac(crate::workload::DagShape::Tree) < frac(crate::workload::DagShape::Pipeline));
+    }
+
+    #[test]
+    fn chunked_prefill_improves_decode_tail_latency() {
+        let rows = chunked_prefill(&Config::default(), 60, 3.0, &[512, 128], 2048, 42);
+        // 3 workloads × 4 policies × (off + 2 chunk sizes).
+        assert_eq!(rows.len(), 3 * 4 * 3);
+        for r in &rows {
+            assert_eq!(
+                r.completed, 60,
+                "{} {:?} chunk {} dropped agents",
+                r.workload, r.policy, r.chunk
+            );
+            assert!(r.decode_itl_p99_ms > 0.0 && r.maxmin_ratio >= 1.0);
+            // Chunking off records no stalls (pending prefills always run
+            // whole); the counter is meaningful only when chunking is on.
+            if r.chunk == 0 {
+                assert_eq!(r.prefill_stalls, 0, "{} {:?}", r.workload, r.policy);
+            }
+        }
+        // Headline (acceptance): at a fixed budget, decode p99 inter-token
+        // latency improves as the chunk shrinks — atomic admission is
+        // strictly worst, and the smaller chunk is no worse than the larger
+        // (equal only within histogram bucket resolution).
+        let itl = |w: &str, p: Policy, c: u32| {
+            rows.iter()
+                .find(|r| r.workload == w && r.policy == p && r.chunk == c)
+                .unwrap()
+                .decode_itl_p99_ms
+        };
+        for w in CHUNKED_WORKLOADS {
+            for p in CHUNKED_POLICIES {
+                let (off, c512, c128) = (itl(w, p, 0), itl(w, p, 512), itl(w, p, 128));
+                assert!(c128 < off, "{w}/{p:?}: chunk 128 {c128} !< atomic {off}");
+                assert!(c512 <= off, "{w}/{p:?}: chunk 512 {c512} !<= atomic {off}");
+                assert!(c128 <= c512, "{w}/{p:?}: chunk 128 {c128} !<= chunk 512 {c512}");
+            }
+        }
     }
 
     #[test]

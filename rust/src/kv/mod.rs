@@ -294,6 +294,59 @@ impl BlockAllocator {
         Ok(())
     }
 
+    /// Fresh pages required to grow `seq` by `n` tokens right now: new table
+    /// pages plus a copy-on-write page when the partially-filled tail is
+    /// shared. 0 when the tokens fit in pages the sequence already owns
+    /// privately (or for an unknown / swapped sequence, where
+    /// [`extend_tokens`](Self::extend_tokens) fails before allocating).
+    pub fn extend_need(&self, seq: TaskId, n: u32) -> u32 {
+        let Some(a) = self.seqs.get(&seq) else { return 0 };
+        if a.residence != KvResidence::Device || n == 0 {
+            return 0;
+        }
+        let cap = a.pages.len() as u32 * self.page_size;
+        let fresh = self.pages_for(a.tokens + n).saturating_sub(a.pages.len() as u32);
+        let writes_tail = a.tokens < cap;
+        let tail_shared =
+            writes_tail && a.pages.last().map(|&p| self.refs[p as usize] > 1).unwrap_or(false);
+        fresh + u32::from(tail_shared)
+    }
+
+    /// Grow a device-resident sequence by `n` prompt tokens, allocating
+    /// fresh pages (and copy-on-write-splitting a shared, partially-filled
+    /// tail page) as needed — the chunked-prefill path acquires KV chunk by
+    /// chunk through this instead of allocating whole prompts at admission.
+    /// All-or-nothing: on `OutOfPages` no page moves and no token is added.
+    pub fn extend_tokens(&mut self, seq: TaskId, n: u32) -> Result<(), KvError> {
+        if n == 0 {
+            return Ok(());
+        }
+        let (tokens, n_pages, cap) = {
+            let a = self.seqs.get(&seq).ok_or(KvError::UnknownSeq(seq))?;
+            if a.residence != KvResidence::Device {
+                return Err(KvError::Swapped(seq));
+            }
+            (a.tokens, a.pages.len() as u32, a.pages.len() as u32 * self.page_size)
+        };
+        let need = self.extend_need(seq, n);
+        if need > self.free_pages() {
+            return Err(KvError::OutOfPages { need, free: self.free_pages() });
+        }
+        if tokens < cap {
+            // Writing into the current tail page: make it private first.
+            self.cow_split(seq, n_pages as usize - 1)?;
+        }
+        let fresh = self.pages_for(tokens + n).saturating_sub(n_pages);
+        for _ in 0..fresh {
+            let p = self.take_free().expect("need checked against free");
+            self.seqs.get_mut(&seq).expect("checked").pages.push(p);
+        }
+        let a = self.seqs.get_mut(&seq).expect("checked");
+        a.tokens += n;
+        self.device_tokens += n as u64;
+        Ok(())
+    }
+
     /// Whether `append_token` would succeed without side effects.
     pub fn can_append(&self, seq: TaskId) -> bool {
         match self.seqs.get(&seq) {
@@ -659,6 +712,53 @@ mod tests {
         assert_eq!(kv.page_ref(pages[1]), 1);
         assert_eq!(kv.seq_tokens(tid(2)), Some(7));
         // tid(1)'s table is untouched.
+        assert_eq!(kv.block_table(tid(1)).unwrap(), pages.as_slice());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_tokens_grows_chunk_by_chunk() {
+        let mut kv = BlockAllocator::new(4, 4);
+        kv.allocate(tid(1), 3).unwrap(); // 1 page, partially filled
+        assert_eq!(kv.extend_need(tid(1), 1), 0, "fits in the private tail");
+        kv.extend_tokens(tid(1), 1).unwrap();
+        assert_eq!(kv.seq_tokens(tid(1)), Some(4));
+        assert_eq!(kv.free_pages(), 3);
+        // 5 more tokens: 9 total needs 3 pages, 2 fresh.
+        assert_eq!(kv.extend_need(tid(1), 5), 2);
+        kv.extend_tokens(tid(1), 5).unwrap();
+        assert_eq!(kv.seq_tokens(tid(1)), Some(9));
+        assert_eq!(kv.block_table(tid(1)).unwrap().len(), 3);
+        assert_eq!(kv.free_pages(), 1);
+        kv.check_invariants().unwrap();
+        // All-or-nothing failure: 8 more tokens need 2 pages, only 1 free.
+        assert_eq!(
+            kv.extend_tokens(tid(1), 8),
+            Err(KvError::OutOfPages { need: 2, free: 1 })
+        );
+        assert_eq!(kv.seq_tokens(tid(1)), Some(9));
+        assert_eq!(kv.free_pages(), 1);
+        kv.check_invariants().unwrap();
+        kv.swap_out(tid(1)).unwrap();
+        // Zero-token extension is a no-op even on a swapped sequence.
+        kv.extend_tokens(tid(1), 0).unwrap();
+        assert_eq!(kv.extend_tokens(tid(1), 2), Err(KvError::Swapped(tid(1))));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_into_shared_tail_copy_on_writes() {
+        let mut kv = BlockAllocator::new(6, 4);
+        kv.allocate(tid(1), 6).unwrap(); // 2 pages, tail half-full
+        let pages: Vec<PageId> = kv.block_table(tid(1)).unwrap().to_vec();
+        kv.share_prefix(tid(2), &pages, 6).unwrap(); // shares the partial tail
+        // Extending tid(2) writes into the shared tail: 1 CoW page + 1 fresh.
+        assert_eq!(kv.extend_need(tid(2), 4), 2);
+        kv.extend_tokens(tid(2), 4).unwrap();
+        let t2 = kv.block_table(tid(2)).unwrap();
+        assert_ne!(t2[1], pages[1], "tail must be copy-on-write split");
+        assert_eq!(kv.page_ref(pages[1]), 1);
+        assert_eq!(kv.seq_tokens(tid(2)), Some(10));
         assert_eq!(kv.block_table(tid(1)).unwrap(), pages.as_slice());
         kv.check_invariants().unwrap();
     }

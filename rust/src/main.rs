@@ -5,7 +5,8 @@
 //! justitia serve        [--artifacts DIR] [--policy P] [--port N] [--replicas R] [--placement PL]
 //! justitia run          [--policy P] [--backend B] [--agents N] [--density D] [--seed S]
 //! justitia cluster      [--replicas R] [--placement PL] [--agents N] [--density D] [--seed S]
-//! justitia experiment   <fig3|fig7|...|fig13|table1|prefix_sharing|all> [--agents N] [--seed S]
+//! justitia experiment   <fig3|fig7|...|fig13|table1|prefix_sharing|dag_agents|chunked_prefill|all>
+//!                       [--agents N] [--seed S]
 //! justitia gen-workload [--agents N] [--density D] [--seed S] --out FILE
 //! justitia train-predictor [--samples N] [--seed S]
 //! justitia gps          [--agents N] [--density D] [--seed S]   (GPS reference dump)
@@ -30,6 +31,7 @@ fn main() {
         "prefix-cache",
         "dag",
         "online-correction",
+        "chunked-prefill",
     ]);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
@@ -63,7 +65,7 @@ fn print_help() {
            run              run one policy over a generated suite (simulator)\n\
            cluster          multi-replica scale-out experiment (replicas x placement)\n\
            experiment       regenerate a paper figure/table (fig3..fig13, table1,\n\
-                            prefix_sharing, dag_agents, all)\n\
+                            prefix_sharing, dag_agents, chunked_prefill, all)\n\
            gen-workload     write a workload trace JSON\n\
            train-predictor  train + evaluate the per-class MLP predictor\n\
            gps              dump the GPS fluid reference for a suite\n\n\
@@ -73,7 +75,8 @@ fn print_help() {
            --replicas N   --placement round-robin|least-loaded|cluster-vtime|prefix-affinity\n\
            --agents N   --density 1|2|3   --seed S   --lambda L   --predict\n\
            --prefix-cache   --prefix-fanout F   --prefix-tokens T\n\
-           --dag   --spawn-prob P   --branch B   --online-correction"
+           --dag   --spawn-prob P   --branch B   --online-correction\n\
+           --chunked-prefill   --prefill-chunk C   --max-batched-tokens T"
     );
 }
 
@@ -142,6 +145,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if cfg.workload.dag {
         println!("dag workload: {} tasks spawned dynamically", metrics.spawned_tasks());
+    }
+    if cfg.chunked_prefill {
+        println!(
+            "chunked prefill: chunk {} / budget {} tokens, decode ITL mean {:.1} ms \
+             p99 {:.1} ms, {} prefill stalls",
+            cfg.prefill_chunk,
+            cfg.max_batched_tokens,
+            metrics.decode_itl_mean() * 1e3,
+            metrics.decode_itl_percentile(99.0) * 1e3,
+            metrics.prefill_stalls()
+        );
     }
     if cfg.online_correction {
         println!(
@@ -538,6 +552,64 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         );
         std::fs::write("results/dag_agents.json", json.pretty())?;
         out.line("(wrote results/dag_agents.json)".to_string());
+    }
+    if run_all || which == "chunked_prefill" {
+        let mut out = ResultsFile::new("chunked_prefill.txt");
+        out.line("=== Chunked prefill: token-budget batch formation, chunk x budget sweep ===");
+        let budget = args.get_u64("max-batched-tokens", 2048) as u32;
+        let chunks: Vec<u32> = match args.get("prefill-chunk") {
+            Some(c) => vec![c.parse().map_err(|e| anyhow::anyhow!("--prefill-chunk: {e}"))?],
+            None => vec![1024, 512, 128],
+        };
+        let rows = exp::chunked_prefill(&Config::default(), n, 3.0, &chunks, budget, seed);
+        out.line(format!(
+            "workload: {n} agents at 3x density; chunks {chunks:?} under a {budget}-token \
+             iteration budget (chunk `off` = atomic admission)"
+        ));
+        out.line(exp::ChunkedPrefillRow::table_header());
+        for r in &rows {
+            out.line(r.table_row());
+        }
+        for w in exp::CHUNKED_WORKLOADS {
+            let get = |c: u32| {
+                rows.iter().find(|r| {
+                    r.workload == w && r.policy == Policy::Justitia && r.chunk == c
+                })
+            };
+            if let (Some(off), Some(best)) = (get(0), get(*chunks.last().unwrap())) {
+                out.line(format!(
+                    "headline {w} (Justitia): decode ITL p99 {:.1} ms -> {:.1} ms at chunk {}, \
+                     avg JCT {:.1}s -> {:.1}s",
+                    off.decode_itl_p99_ms,
+                    best.decode_itl_p99_ms,
+                    best.chunk,
+                    off.avg_jct,
+                    best.avg_jct
+                ));
+            }
+        }
+        // Machine-readable copy for kick-tires / CI smoke artifacts.
+        let json = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    justitia::util::json::obj([
+                        ("workload", Json::Str(r.workload.into())),
+                        ("policy", Json::Str(r.policy.name().into())),
+                        ("chunk", Json::Num(r.chunk as f64)),
+                        ("budget", Json::Num(r.budget as f64)),
+                        ("avg_jct", Json::Num(r.avg_jct)),
+                        ("p99_jct", Json::Num(r.p99_jct)),
+                        ("decode_itl_p99_ms", Json::Num(r.decode_itl_p99_ms)),
+                        ("decode_itl_mean_ms", Json::Num(r.decode_itl_mean_ms)),
+                        ("prefill_stalls", Json::Num(r.prefill_stalls as f64)),
+                        ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
+                        ("completed", Json::Num(r.completed as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write("results/chunked_prefill.json", json.pretty())?;
+        out.line("(wrote results/chunked_prefill.json)".to_string());
     }
     if run_all || which == "table1" {
         let mut out = ResultsFile::new("table1.txt");

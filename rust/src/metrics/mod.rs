@@ -6,6 +6,89 @@ use crate::workload::{AgentId, TaskId};
 use std::collections::HashMap;
 use std::time::Duration;
 
+/// Buckets of [`LatencyHist`]: 1 µs × 1.1^i, i < 160 (≈ 3.9 s top bucket).
+const LATENCY_BUCKETS: usize = 160;
+/// Smallest distinguishable latency (s) — everything below lands in bucket 0.
+const LATENCY_X0: f64 = 1e-6;
+/// Geometric bucket growth: ~10% relative resolution per bucket.
+const LATENCY_GROWTH: f64 = 1.1;
+
+/// Fixed log-spaced latency histogram: constant memory, exact merges, and
+/// percentile estimates at ~10% relative resolution. Used for the decode
+/// inter-token latency distribution (DESIGN.md §10), where storing every
+/// (iteration × decoder) sample at paper scale would be megabytes per run.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    counts: [u64; LATENCY_BUCKETS],
+    total: u64,
+    sum: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { counts: [0; LATENCY_BUCKETS], total: 0, sum: 0.0 }
+    }
+}
+
+impl LatencyHist {
+    fn bucket(x: f64) -> usize {
+        if x <= LATENCY_X0 {
+            return 0;
+        }
+        (((x / LATENCY_X0).ln() / LATENCY_GROWTH.ln()) as usize).min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Record `weight` samples of value `x` seconds.
+    pub fn record(&mut self, x: f64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        self.counts[Self::bucket(x)] += weight;
+        self.total += weight;
+        self.sum += x * weight as f64;
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of the recorded samples (exact — tracked outside the buckets).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Percentile estimate, `q` in [0, 100]: the geometric midpoint of the
+    /// bucket holding the rank-`q` sample (0 when empty).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return LATENCY_X0 * LATENCY_GROWTH.powf(i as f64 + 0.5);
+            }
+        }
+        LATENCY_X0 * LATENCY_GROWTH.powf(LATENCY_BUCKETS as f64)
+    }
+
+    /// Fold another histogram into this one (bucket-exact).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+}
+
 /// Metrics collected over one engine run.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -38,6 +121,14 @@ pub struct RunMetrics {
     /// Correction error trace: (engine time, relative error) per correction
     /// event, in time order.
     correction_trace: Vec<(f64, f64)>,
+    /// Decode inter-token latency: every decoding sequence experiences its
+    /// iteration's wall time as the gap between consecutive output tokens.
+    decode_itl: LatencyHist,
+    /// Prefill-pending sequences that received no chunk in an iteration
+    /// because the token budget was spent or no KV page could be acquired
+    /// (chunked prefill only — always 0 with the flag off, where a pending
+    /// prefill always runs whole).
+    prefill_stalls: u64,
     /// (engine time, device tokens, per-agent tokens) — Fig. 3 timeline.
     pub kv_samples: Vec<KvSample>,
 }
@@ -97,7 +188,7 @@ impl RunMetrics {
         self.total_decode_seqs += decode as u64;
         self.prefill_tokens_executed += prefill_tokens;
         self.engine_time = now;
-        let _ = elapsed;
+        self.decode_itl.record(elapsed, decode as u64);
     }
 
     /// Record one prefix-cache admission lookup: `matched_tokens` prompt
@@ -123,6 +214,12 @@ impl RunMetrics {
     /// Record one dynamically-spawned task.
     pub fn on_task_spawned(&mut self) {
         self.spawned_tasks += 1;
+    }
+
+    /// Record `n` prefill-pending sequences left without a chunk this
+    /// iteration (token budget spent / no KV page available).
+    pub fn on_prefill_stalls(&mut self, n: u64) {
+        self.prefill_stalls += n;
     }
 
     /// Record one §4.2 online-correction event with its relative error
@@ -167,6 +264,27 @@ impl RunMetrics {
     /// Tasks emitted at runtime by spawn rules.
     pub fn spawned_tasks(&self) -> u64 {
         self.spawned_tasks
+    }
+
+    /// Prefill-chunk stall events (0 unless chunked prefill ran).
+    pub fn prefill_stalls(&self) -> u64 {
+        self.prefill_stalls
+    }
+
+    /// Decode inter-token latency samples recorded (decoders × iterations).
+    pub fn decode_itl_samples(&self) -> u64 {
+        self.decode_itl.count()
+    }
+
+    /// Mean decode inter-token latency (s).
+    pub fn decode_itl_mean(&self) -> f64 {
+        self.decode_itl.mean()
+    }
+
+    /// Decode inter-token latency percentile, `q` in [0, 100] (s) — the
+    /// chunked-prefill experiment's tail metric (p99).
+    pub fn decode_itl_percentile(&self, q: f64) -> f64 {
+        self.decode_itl.percentile(q)
     }
 
     /// Number of §4.2 correction events recorded.
@@ -305,6 +423,8 @@ impl RunMetrics {
         self.cache_pages_peak = self.cache_pages_peak.max(other.cache_pages_peak);
         self.sched_latency.merge(&other.sched_latency);
         self.spawned_tasks += other.spawned_tasks;
+        self.decode_itl.merge(&other.decode_itl);
+        self.prefill_stalls += other.prefill_stalls;
         self.correction_error.merge(&other.correction_error);
         self.correction_trace.extend(other.correction_trace.iter().copied());
         self.correction_trace.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
@@ -522,6 +642,59 @@ mod tests {
         assert!((m.correction_error_mean() - 0.3).abs() < 1e-12);
         // Trace is merged in time order.
         assert_eq!(m.correction_trace(), &[(1.0, 0.5), (1.5, 0.3), (2.0, 0.1)]);
+    }
+
+    #[test]
+    fn latency_hist_percentiles_and_merge() {
+        let mut h = LatencyHist::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        // 90 fast samples, 10 slow: p50 near 1 ms, p99 within bucket
+        // resolution (~10%) of 100 ms (nearest-rank lands in the slow tail).
+        h.record(1e-3, 90);
+        h.record(0.1, 10);
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        assert!((p50 / 1e-3 - 1.0).abs() < 0.11, "p50 {p50}");
+        let p99 = h.percentile(99.0);
+        assert!((p99 / 0.1 - 1.0).abs() < 0.11, "p99 {p99}");
+        assert!((h.mean() - (90.0 * 1e-3 + 10.0 * 0.1) / 100.0).abs() < 1e-12);
+        // Merge is bucket-exact.
+        let mut other = LatencyHist::default();
+        other.record(0.1, 100);
+        h.merge(&other);
+        assert_eq!(h.count(), 200);
+        let p50 = h.percentile(50.0);
+        assert!((p50 / 0.1 - 1.0).abs() < 0.11, "merged p50 {p50}");
+        // Out-of-range values clamp instead of panicking.
+        let mut h = LatencyHist::default();
+        h.record(0.0, 1);
+        h.record(1e9, 1);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) > h.percentile(1.0));
+    }
+
+    #[test]
+    fn decode_itl_and_prefill_stalls_flow_through_metrics() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.decode_itl_samples(), 0);
+        assert_eq!(m.prefill_stalls(), 0);
+        // 3 decoders at 50 ms, then 1 decoder at 200 ms.
+        m.on_iteration(0.05, 0.05, 1, 3, 100);
+        m.on_iteration(0.25, 0.2, 0, 1, 0);
+        m.on_prefill_stalls(2);
+        assert_eq!(m.decode_itl_samples(), 4);
+        assert!((m.decode_itl_percentile(99.0) / 0.2 - 1.0).abs() < 0.11);
+        assert!((m.decode_itl_mean() - (3.0 * 0.05 + 0.2) / 4.0).abs() < 1e-12);
+        assert_eq!(m.prefill_stalls(), 2);
+        // Merge adds counters and folds histograms.
+        let mut other = RunMetrics::new();
+        other.on_iteration(1.0, 0.4, 0, 2, 0);
+        other.on_prefill_stalls(1);
+        m.merge(&other);
+        assert_eq!(m.decode_itl_samples(), 6);
+        assert_eq!(m.prefill_stalls(), 3);
+        assert!((m.decode_itl_percentile(99.0) / 0.4 - 1.0).abs() < 0.11);
     }
 
     #[test]

@@ -202,6 +202,7 @@ pub fn serve(
                     beta_prefill: 0.0,
                     beta_decode: 0.0,
                     swap_cost_per_token: 0.0,
+                    beta_mixed: 0.0,
                 };
                 cfg2.max_batch = model.max_decode_batch();
                 let sched = crate::sched::build(policy, cfg2.backend.kv_tokens, 1.0);

@@ -1,0 +1,225 @@
+//! Property tests for chunked prefill (ISSUE 4 satellite
+//! `prop_chunked_conservation`):
+//!
+//! * **Conservation** — with chunking on (random chunk size and token
+//!   budget), per-sequence filled-token/page accounting holds at every
+//!   engine step (`Engine::check_chunked_accounting` + the KV pool
+//!   invariants), every agent completes, and the pool drains to fully free;
+//! * **Degenerate identity** — `prefill_chunk = u32::MAX` with an unbounded
+//!   budget (and likewise the flag off) replays the unchunked engine bit
+//!   for bit across all schedulers: same JCTs, same iteration count, same
+//!   swap history.
+
+use justitia::config::{BackendProfile, Config, Policy};
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::util::prop::{check, Config as PropConfig, Strategy};
+use justitia::util::rng::Rng;
+use justitia::workload::test_support::dag_agent;
+use justitia::workload::{AgentSpec, Suite};
+
+/// A randomized chunked-prefill scenario: a small DAG workload plus the
+/// chunking knobs (chunk size and per-iteration token budget) and pool
+/// shape, all drawn together so shrinking keeps them consistent.
+#[derive(Clone, Debug)]
+struct ChunkedScenario {
+    agents: Vec<AgentSpec>,
+    pages: u64,
+    page_size: u32,
+    prefill_chunk: u32,
+    max_batched_tokens: u32,
+}
+
+struct ChunkedStrategy;
+
+impl Strategy for ChunkedStrategy {
+    type Value = ChunkedScenario;
+
+    fn generate(&self, rng: &mut Rng) -> ChunkedScenario {
+        let page_size = 8u32;
+        let pages = rng.range_u64(32, 64);
+        let m_tokens = pages * page_size as u64;
+        let n_agents = rng.range_u64(2, 7) as usize;
+        let mut agents = Vec::with_capacity(n_agents);
+        let mut t = 0.0;
+        for id in 0..n_agents {
+            t += rng.exponential(0.05);
+            let n_tasks = rng.range_u64(1, 6) as usize;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for i in 0..n_tasks {
+                // Prompts up to ~half the pool so several mid-prefill
+                // sequences can collide (exercising the starvation valve),
+                // but no single task exceeds capacity.
+                let p = rng.range_u64(2, m_tokens / 2) as u32;
+                let d = rng.range_u64(1, 16) as u32;
+                let deps = if i > 0 && rng.chance(0.3) {
+                    vec![rng.below(i as u64) as u32]
+                } else {
+                    Vec::new()
+                };
+                tasks.push((p, d, deps));
+            }
+            agents.push(dag_agent(id as u32, t, tasks));
+        }
+        ChunkedScenario {
+            agents,
+            pages,
+            page_size,
+            prefill_chunk: rng.range_u64(1, 48) as u32,
+            max_batched_tokens: rng.range_u64(4, 96) as u32,
+        }
+    }
+
+    fn shrink(&self, v: &ChunkedScenario) -> Vec<ChunkedScenario> {
+        let mut out = Vec::new();
+        if v.agents.len() > 1 {
+            let mut w = v.clone();
+            w.agents.pop();
+            out.push(w);
+        }
+        if v.prefill_chunk < 48 {
+            let mut w = v.clone();
+            w.prefill_chunk = 48;
+            out.push(w);
+        }
+        if v.max_batched_tokens < 96 {
+            let mut w = v.clone();
+            w.max_batched_tokens = 96;
+            out.push(w);
+        }
+        out
+    }
+}
+
+fn config_for(sc: &ChunkedScenario) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = BackendProfile {
+        name: "prop-chunked".into(),
+        kv_tokens: sc.pages * sc.page_size as u64,
+        page_size: sc.page_size,
+        alpha: 1.0,
+        beta_prefill: 0.0,
+        beta_decode: 0.0,
+        swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
+    };
+    cfg.max_batch = 64;
+    cfg.chunked_prefill = true;
+    cfg.prefill_chunk = sc.prefill_chunk;
+    cfg.max_batched_tokens = sc.max_batched_tokens;
+    cfg
+}
+
+fn prop_cases(default: usize) -> usize {
+    std::env::var("JUSTITIA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+#[test]
+fn prop_chunked_conservation() {
+    let cfg = PropConfig { cases: prop_cases(40), seed: 0xc4a4_2ed0, max_shrink_steps: 60 };
+    check(&cfg, &ChunkedStrategy, |sc| {
+        for policy in [Policy::Fcfs, Policy::Justitia, Policy::Vtc] {
+            let cfg = config_for(sc);
+            let suite = Suite::new(sc.agents.clone());
+            let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+            let mut engine = Engine::new(&cfg, sched, SimBackend::unit_time());
+            let model = justitia::cost::CostModel::MemoryCentric;
+
+            // Drive arrivals by hand so invariants can be checked per step.
+            let mut next = 0usize;
+            let mut guard = 0u64;
+            loop {
+                while next < suite.agents.len()
+                    && suite.agents[next].arrival <= engine.now() + 1e-12
+                {
+                    let spec = suite.agents[next].clone();
+                    let cost = model.agent_cost(&spec);
+                    engine.submit(spec, cost);
+                    next += 1;
+                }
+                if !engine.has_work() {
+                    if next >= suite.agents.len() {
+                        break;
+                    }
+                    engine.advance_clock(suite.agents[next].arrival);
+                    continue;
+                }
+                engine.step();
+                engine
+                    .check_chunked_accounting()
+                    .map_err(|e| format!("{policy:?}: accounting: {e}"))?;
+                engine
+                    .check_kv_invariants()
+                    .map_err(|e| format!("{policy:?}: kv: {e}"))?;
+                guard += 1;
+                if guard > 2_000_000 {
+                    return Err(format!("{policy:?}: did not terminate"));
+                }
+            }
+            if engine.metrics.completed_agents() != suite.len() {
+                return Err(format!(
+                    "{policy:?}: {}/{} agents completed",
+                    engine.metrics.completed_agents(),
+                    suite.len()
+                ));
+            }
+            if engine.kv.free_pages() != sc.pages as u32 {
+                return Err(format!(
+                    "{policy:?}: leaked pages: {} free of {}",
+                    engine.kv.free_pages(),
+                    sc.pages
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_degenerate_is_bit_identical_across_schedulers() {
+    let cfg = PropConfig { cases: prop_cases(25), seed: 0x1de_47ca1, max_shrink_steps: 60 };
+    check(&cfg, &ChunkedStrategy, |sc| {
+        for policy in [
+            Policy::Fcfs,
+            Policy::Sjf,
+            Policy::AgentFcfs,
+            Policy::Vtc,
+            Policy::Srjf,
+            Policy::Justitia,
+        ] {
+            let run = |mode: u8| {
+                let mut cfg = config_for(sc);
+                match mode {
+                    0 => cfg.chunked_prefill = false, // flag off
+                    _ => {
+                        // Flag on but degenerate: infinite chunk + budget.
+                        cfg.prefill_chunk = u32::MAX;
+                        cfg.max_batched_tokens = u32::MAX;
+                    }
+                }
+                let suite = Suite::new(sc.agents.clone());
+                let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+                let mut engine = Engine::new(&cfg, sched, SimBackend::unit_time());
+                let model = justitia::cost::CostModel::MemoryCentric;
+                engine.run_suite(&suite, |a| model.agent_cost(a));
+                (
+                    engine.metrics.jcts(),
+                    engine.metrics.iterations(),
+                    engine.metrics.swap_out_count(),
+                    engine.metrics.prefill_stalls(),
+                )
+            };
+            let off = run(0);
+            let degenerate = run(1);
+            if off != degenerate {
+                return Err(format!(
+                    "{policy:?}: degenerate chunked run diverged from flag-off \
+                     (off {:?} vs degenerate {:?})",
+                    (off.1, off.2, off.3),
+                    (degenerate.1, degenerate.2, degenerate.3),
+                ));
+            }
+        }
+        Ok(())
+    });
+}

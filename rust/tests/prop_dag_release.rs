@@ -100,6 +100,7 @@ fn run(ds: &DagSuite, policy: Policy) -> (Engine<SimBackend>, Suite) {
         beta_prefill: 0.0,
         beta_decode: 0.0,
         swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
     };
     cfg.max_batch = 1024;
     let suite = Suite::new(ds.agents.clone());

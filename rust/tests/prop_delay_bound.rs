@@ -108,6 +108,7 @@ fn run_justitia(rs: &RandomSuite) -> (Engine<SimBackend>, Suite) {
         beta_prefill: 0.0,
         beta_decode: 0.0,
         swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
     };
     cfg.max_batch = 1024; // memory-limited, not slot-limited (as in the proof)
     let suite = Suite::new(rs.agents.clone());

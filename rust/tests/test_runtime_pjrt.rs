@@ -42,6 +42,7 @@ fn pjrt_config(model: &PjrtModel) -> Config {
         beta_prefill: 0.0,
         beta_decode: 0.0,
         swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
     };
     cfg.max_batch = model.max_decode_batch();
     cfg

@@ -4,7 +4,11 @@
 # under out/. Target: a few minutes on a laptop; no network, no GPU, no
 # Python required (simulator paths only — see DESIGN.md §3, substitution T1).
 #
-# Usage: scripts/kick-tires.sh [--agents N] [--seed S]
+# Usage: scripts/kick-tires.sh [--quick] [--agents N] [--seed S]
+#
+#   --quick   small agent counts (~2 min total) — the CI smoke job's mode;
+#             numbers are directionally meaningful but noisier than the
+#             full 300-agent run used for EXPERIMENTS.md cells.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -13,6 +17,7 @@ AGENTS=300
 SEED=42
 while [ $# -gt 0 ]; do
   case "$1" in
+    --quick) AGENTS=40; shift ;;
     --agents) AGENTS="$2"; shift 2 ;;
     --seed) SEED="$2"; shift 2 ;;
     *) echo "unknown flag $1" >&2; exit 2 ;;
@@ -20,7 +25,7 @@ while [ $# -gt 0 ]; do
 done
 
 echo "== Kick Tires: Justitia reproduction =="
-echo "[1/4] cargo build --release"
+echo "[1/7] cargo build --release"
 (cd rust && cargo build --release)
 BIN="$ROOT/rust/target/release/justitia"
 
@@ -31,28 +36,34 @@ cd "$ROOT"
 rm -rf results
 mkdir -p results
 
-echo "[2/6] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
+echo "[2/7] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
 "$BIN" experiment all --agents "$AGENTS" --seed "$SEED"
 
-echo "[3/6] cluster scale-out sweep (1/2/4/8 replicas x 4 placements)"
+echo "[3/7] cluster scale-out sweep (1/2/4/8 replicas x 4 placements)"
 "$BIN" cluster --agents "$AGENTS" --seed "$SEED"
 
-echo "[4/6] prefix-sharing sweep (radix-tree KV dedup off vs on)"
+echo "[4/7] prefix-sharing sweep (radix-tree KV dedup off vs on)"
 # `experiment all` above already ran the sweep with these arguments; only
 # re-run if its JSON artifact is somehow missing.
 if [ ! -f results/prefix_sharing.json ]; then
   "$BIN" experiment prefix_sharing --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[5/6] DAG-agents sweep (map-reduce/tree/pipeline, correction off vs on)"
+echo "[5/7] DAG-agents sweep (map-reduce/tree/pipeline, correction off vs on)"
 if [ ! -f results/dag_agents.json ]; then
   "$BIN" experiment dag_agents --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[6/6] collecting outputs under out/"
+echo "[6/7] chunked-prefill sweep (chunk x budget vs atomic admission)"
+if [ ! -f results/chunked_prefill.json ]; then
+  "$BIN" experiment chunked_prefill --agents "$AGENTS" --seed "$SEED"
+fi
+
+echo "[7/7] collecting outputs under out/"
 cp results/*.txt out/
 cp results/prefix_sharing.json out/BENCH_prefix.json
 cp results/dag_agents.json out/BENCH_dag.json
+cp results/chunked_prefill.json out/BENCH_chunked.json
 {
   echo "kick-tires run: agents=$AGENTS seed=$SEED date=$(date -u +%Y-%m-%dT%H:%M:%SZ)"
   echo "binary: $BIN"
