@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             Policy::Justitia,
             1,
             justitia::cluster::Placement::ClusterVtime,
+            false,
         ) {
             eprintln!("server error: {e:#}");
             std::process::exit(1);

@@ -1,0 +1,45 @@
+//! Preemption subsystem — 300 agents at 3× density per workload family
+//! (staged / DAG / shared-prefix), host tiers {∞, M/8} × preemption modes
+//! {swap, recompute, auto} × all four victim policies, swap traffic
+//! serialized behind a contended PCIe link (DESIGN.md §11).
+//!
+//! Beyond the paper: the engine's memory hierarchy is finite — swaps land in
+//! a bounded host pool over a real link, so swap-vs-recompute is a priced
+//! choice (vLLM preemption modes; Sarathi-Serve on why stalls must be
+//! priced). Expected shape: under the M/8 host tier, `auto`+`pamper-aware`
+//! beats `swap`+`youngest` on p99 JCT — the swap arms stall behind the
+//! serialized transfers and forced-recompute fallbacks, while auto skips
+//! every round trip whose cached-prefix-adjusted refill is cheaper.
+
+use justitia::config::{Config, PreemptionMode, VictimPolicy};
+use justitia::util::bench::{section, ResultsFile};
+
+fn main() {
+    section("Preemption: workload x host tier x mode x victim (300 agents, 3x density)");
+    let mut out = ResultsFile::new("bench_preemption.txt");
+    let rows = justitia::experiments::preemption(&Config::default(), 300, 3.0, 42);
+    out.line(justitia::experiments::PreemptionRow::table_header());
+    for r in &rows {
+        out.line(r.table_row());
+    }
+    for w in justitia::experiments::PREEMPT_WORKLOADS {
+        let get = |m: PreemptionMode, v: VictimPolicy| {
+            rows.iter().find(|r| r.workload == w && r.host_pages > 0 && r.mode == m && r.victim == v)
+        };
+        if let (Some(swap), Some(auto)) = (
+            get(PreemptionMode::Swap, VictimPolicy::Youngest),
+            get(PreemptionMode::Auto, VictimPolicy::PamperAware),
+        ) {
+            out.line(format!(
+                "headline {w} (host M/8): p99 JCT {:.1}s (swap+youngest) -> {:.1}s \
+                 (auto+pamper-aware); {} -> {} swaps, {} recomputes ({} tokens re-prefilled)",
+                swap.p99_jct,
+                auto.p99_jct,
+                swap.swap_outs,
+                auto.swap_outs,
+                auto.recomputes,
+                auto.recomputed_tokens
+            ));
+        }
+    }
+}

@@ -37,6 +37,19 @@ pub struct BackendProfile {
     /// stock profiles, so every pre-chunking run is numerically unchanged;
     /// the chunked-prefill experiment sets it explicitly.
     pub beta_mixed: f64,
+    /// Host (CPU) memory available for swapped-out KV, in token slots.
+    /// `None` models an infinite host tier — the pre-preemption-subsystem
+    /// behavior, and the default in every stock profile — while `Some(h)`
+    /// bounds the swap area: once `h` tokens are resident on host, further
+    /// swap-outs fail and the engine must recompute instead (DESIGN.md §11).
+    pub host_kv_tokens: Option<u64>,
+    /// Host↔device swap bandwidth in tokens per second. `0.0` (the stock
+    /// default) disables transfer serialization: swaps cost only the
+    /// per-token `swap_cost_per_token` price, exactly as before the
+    /// preemption subsystem. A positive value additionally serializes the
+    /// iteration behind `tokens_moved / bandwidth` seconds of transfer —
+    /// the PCIe reality that makes swap-vs-recompute a genuine choice.
+    pub swap_bw_tokens_per_sec: f64,
 }
 
 impl BackendProfile {
@@ -55,6 +68,8 @@ impl BackendProfile {
             beta_decode: 600.0e-6,
             swap_cost_per_token: 2.0e-6,
             beta_mixed: 0.0,
+            host_kv_tokens: None,
+            swap_bw_tokens_per_sec: 0.0,
         }
     }
 
@@ -70,6 +85,8 @@ impl BackendProfile {
             beta_decode: 1.1e-3,
             swap_cost_per_token: 3.5e-6,
             beta_mixed: 0.0,
+            host_kv_tokens: None,
+            swap_bw_tokens_per_sec: 0.0,
         }
     }
 
@@ -85,6 +102,8 @@ impl BackendProfile {
             beta_decode: 800.0e-6,
             swap_cost_per_token: 1.5e-6,
             beta_mixed: 0.0,
+            host_kv_tokens: None,
+            swap_bw_tokens_per_sec: 0.0,
         }
     }
 
@@ -100,6 +119,8 @@ impl BackendProfile {
             beta_decode: 0.0,
             swap_cost_per_token: 0.0,
             beta_mixed: 0.0,
+            host_kv_tokens: None,
+            swap_bw_tokens_per_sec: 0.0,
         }
     }
 
@@ -172,6 +193,105 @@ impl Policy {
     pub fn all_paper_baselines() -> [Policy; 6] {
         [Policy::Fcfs, Policy::Sjf, Policy::AgentFcfs, Policy::Vtc, Policy::Srjf, Policy::Justitia]
     }
+}
+
+/// What the engine does with a preemption victim when device KV must be
+/// reclaimed (DESIGN.md §11). Default [`Swap`](PreemptionMode::Swap) is the
+/// classical vLLM behavior and is bit-identical to the pre-subsystem engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PreemptionMode {
+    /// Move the victim's KV to host memory and restore it later (vLLM swap
+    /// preemption). Falls back to recompute when the bounded host pool
+    /// cannot take the victim.
+    Swap,
+    /// Discard the victim's KV and re-run its prefill (over prompt + tokens
+    /// generated so far) at re-entry — vLLM's recompute preemption.
+    Recompute,
+    /// Per victim, recompute when its cached-prefix-adjusted refill cost is
+    /// cheaper than the round-trip swap cost, or when host memory is full;
+    /// swap otherwise.
+    Auto,
+}
+
+impl PreemptionMode {
+    /// Parse a mode name.
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "swap" => Ok(PreemptionMode::Swap),
+            "recompute" => Ok(PreemptionMode::Recompute),
+            "auto" => Ok(PreemptionMode::Auto),
+            other => bail!("unknown preemption mode '{other}' (swap|recompute|auto)"),
+        }
+    }
+
+    /// Display name (CLI/JSON key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PreemptionMode::Swap => "swap",
+            PreemptionMode::Recompute => "recompute",
+            PreemptionMode::Auto => "auto",
+        }
+    }
+}
+
+/// How the engine ranks preemption victims among running sequences
+/// (DESIGN.md §11). Default [`Youngest`](VictimPolicy::Youngest) reproduces
+/// the pre-subsystem behavior bit for bit: scheduler preemption rank first,
+/// fewest generated tokens as the tie-break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VictimPolicy {
+    /// Scheduler preemption rank, ties to the youngest sequence (fewest
+    /// generated tokens — the least work is wasted). The classical default.
+    Youngest,
+    /// The sequence holding the most KV pages goes first: one preemption
+    /// frees the most memory, minimizing preemption churn.
+    MostPages,
+    /// The agent whose predicted remaining work is largest goes first
+    /// (cheapest in completion-time terms: it finishes last anyway) —
+    /// ranked by the scheduler's remaining-cost query
+    /// ([`crate::sched::Scheduler::remaining_cost`]) with the engine's
+    /// per-sequence remaining cost (Eq. 1) as the tie-break.
+    CheapestRemaining,
+    /// Selective pampering applied to preemption: protect agents the
+    /// virtual clock says would finish early under GPS (smallest virtual
+    /// finish tag, [`crate::sched::Scheduler::virtual_finish_tag`]) and
+    /// preempt the GPS-latest agent first; within it, the sequence with the
+    /// most remaining service.
+    PamperAware,
+}
+
+impl VictimPolicy {
+    /// Parse a victim-policy name.
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "youngest" => Ok(VictimPolicy::Youngest),
+            "most-pages" => Ok(VictimPolicy::MostPages),
+            "cheapest-remaining" => Ok(VictimPolicy::CheapestRemaining),
+            "pamper-aware" => Ok(VictimPolicy::PamperAware),
+            other => bail!(
+                "unknown victim policy '{other}' \
+                 (youngest|most-pages|cheapest-remaining|pamper-aware)"
+            ),
+        }
+    }
+
+    /// Display name (CLI/JSON key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            VictimPolicy::Youngest => "youngest",
+            VictimPolicy::MostPages => "most-pages",
+            VictimPolicy::CheapestRemaining => "cheapest-remaining",
+            VictimPolicy::PamperAware => "pamper-aware",
+        }
+    }
+
+    /// Every victim policy (experiment sweeps).
+    pub const ALL: [VictimPolicy; 4] = [
+        VictimPolicy::Youngest,
+        VictimPolicy::MostPages,
+        VictimPolicy::CheapestRemaining,
+        VictimPolicy::PamperAware,
+    ];
 }
 
 /// Workload-suite configuration (§5.1 Workloads).
@@ -284,9 +404,10 @@ pub struct Config {
     /// engine blends observed cost into each agent's remaining estimate and
     /// re-derives scheduler tags from the corrected remaining work. Off by
     /// default: the disabled path is bit-identical to a build without it.
-    /// Currently mutually exclusive with `prefix_cache` (the engine gates
-    /// correction off when both are set — observed-cost accounting is not
-    /// yet dedup-aware; see the note in [`crate::engine`]).
+    /// Composes with `prefix_cache`: observed-cost accounting accrues the
+    /// very (dedup-aware) service deltas the schedulers see, so shared
+    /// prefix pages are charged once — the same basis as the
+    /// suite-deduplicated predictions (DESIGN.md §9).
     pub online_correction: bool,
     /// Chunked prefill (Sarathi-style, DESIGN.md §10): split prompt
     /// processing into [`prefill_chunk`](Config::prefill_chunk)-token pieces
@@ -303,6 +424,13 @@ pub struct Config {
     /// Maximum prompt tokens one sequence may prefill per iteration. Only
     /// meaningful with [`chunked_prefill`](Config::chunked_prefill).
     pub prefill_chunk: u32,
+    /// What to do with preemption victims when device KV runs out
+    /// (DESIGN.md §11). Default [`PreemptionMode::Swap`] is the classical
+    /// engine, bit-identical to a build without the subsystem.
+    pub preemption: PreemptionMode,
+    /// How preemption victims are ranked. Default [`VictimPolicy::Youngest`]
+    /// reproduces the pre-subsystem victim choice bit for bit.
+    pub victim: VictimPolicy,
 }
 
 impl Default for Config {
@@ -320,6 +448,8 @@ impl Default for Config {
             chunked_prefill: false,
             max_batched_tokens: 2048,
             prefill_chunk: 512,
+            preemption: PreemptionMode::Swap,
+            victim: VictimPolicy::Youngest,
         }
     }
 }
@@ -362,6 +492,13 @@ impl Config {
             if let Some(x) = obj.get("beta_mixed").and_then(|j| j.as_f64()) {
                 b.beta_mixed = x;
             }
+            if let Some(x) = obj.get("host_kv_tokens").and_then(|j| j.as_u64()) {
+                b.host_kv_tokens = Some(x);
+            }
+            if let Some(x) = obj.get("swap_bw").and_then(|j| j.as_f64()) {
+                anyhow::ensure!(x >= 0.0, "swap_bw must be >= 0");
+                b.swap_bw_tokens_per_sec = x;
+            }
             cfg.backend = b;
         }
         if let Some(name) = v.get("policy").as_str() {
@@ -392,6 +529,12 @@ impl Config {
         if let Some(x) = v.get("prefill_chunk").as_u64() {
             anyhow::ensure!(x >= 1, "prefill_chunk must be >= 1");
             cfg.prefill_chunk = x as u32;
+        }
+        if let Some(x) = v.get("preemption").as_str() {
+            cfg.preemption = PreemptionMode::by_name(x)?;
+        }
+        if let Some(x) = v.get("victim").as_str() {
+            cfg.victim = VictimPolicy::by_name(x)?;
         }
         let c = v.get("cluster");
         if c.as_obj().is_some() {
@@ -500,6 +643,23 @@ impl Config {
             let c: u32 = c.parse().context("--prefill-chunk")?;
             anyhow::ensure!(c >= 1, "--prefill-chunk must be >= 1");
             self.prefill_chunk = c;
+        }
+        if let Some(m) = args.get("preemption") {
+            self.preemption = PreemptionMode::by_name(m)?;
+        }
+        if let Some(v) = args.get("victim") {
+            self.victim = VictimPolicy::by_name(v)?;
+        }
+        if let Some(h) = args.get("host-mem-pages") {
+            // Pages of the *current* backend profile (applied after any
+            // --backend override above, so the page size is the right one).
+            let pages: u64 = h.parse().context("--host-mem-pages")?;
+            self.backend.host_kv_tokens = Some(pages * self.backend.page_size as u64);
+        }
+        if let Some(b) = args.get("swap-bw") {
+            let bw: f64 = b.parse().context("--swap-bw")?;
+            anyhow::ensure!(bw >= 0.0, "--swap-bw must be >= 0");
+            self.backend.swap_bw_tokens_per_sec = bw;
         }
         Ok(self)
     }
@@ -692,6 +852,63 @@ mod tests {
         for n in ["llama7b-a100", "llama13b-4v100", "qwen32b-h800", "tiny-cpu"] {
             assert_eq!(BackendProfile::by_name(n).unwrap().beta_mixed, 0.0);
         }
+    }
+
+    #[test]
+    fn preemption_knobs() {
+        // Defaults: the classical engine — unbounded host, swap, youngest.
+        let cfg = Config::default();
+        assert_eq!(cfg.preemption, PreemptionMode::Swap);
+        assert_eq!(cfg.victim, VictimPolicy::Youngest);
+        assert_eq!(cfg.backend.host_kv_tokens, None);
+        assert_eq!(cfg.backend.swap_bw_tokens_per_sec, 0.0);
+        for n in ["llama7b-a100", "llama13b-4v100", "qwen32b-h800", "tiny-cpu"] {
+            let p = BackendProfile::by_name(n).unwrap();
+            assert_eq!(p.host_kv_tokens, None, "{n} must default to an unbounded host tier");
+            assert_eq!(p.swap_bw_tokens_per_sec, 0.0, "{n} must not serialize swaps");
+        }
+        // Name round-trips.
+        for m in [PreemptionMode::Swap, PreemptionMode::Recompute, PreemptionMode::Auto] {
+            assert_eq!(PreemptionMode::by_name(m.name()).unwrap(), m);
+        }
+        for v in VictimPolicy::ALL {
+            assert_eq!(VictimPolicy::by_name(v.name()).unwrap(), v);
+        }
+        assert!(PreemptionMode::by_name("drop").is_err());
+        assert!(VictimPolicy::by_name("oldest").is_err());
+        // JSON.
+        let j = Json::parse(
+            r#"{"preemption": "auto", "victim": "pamper-aware",
+                "backend": {"host_kv_tokens": 2048, "swap_bw": 30000.0}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.preemption, PreemptionMode::Auto);
+        assert_eq!(cfg.victim, VictimPolicy::PamperAware);
+        assert_eq!(cfg.backend.host_kv_tokens, Some(2048));
+        assert_eq!(cfg.backend.swap_bw_tokens_per_sec, 30000.0);
+        // CLI: --host-mem-pages is in pages of the active profile.
+        let args = crate::cli::Args::parse(
+            [
+                "run",
+                "--preemption",
+                "recompute",
+                "--victim",
+                "most-pages",
+                "--host-mem-pages",
+                "32",
+                "--swap-bw",
+                "20000",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            &[],
+        );
+        let cfg = Config::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.preemption, PreemptionMode::Recompute);
+        assert_eq!(cfg.victim, VictimPolicy::MostPages);
+        assert_eq!(cfg.backend.host_kv_tokens, Some(32 * 16));
+        assert_eq!(cfg.backend.swap_bw_tokens_per_sec, 20000.0);
     }
 
     #[test]

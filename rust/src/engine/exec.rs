@@ -65,14 +65,19 @@ pub trait ExecBackend {
 
 /// Calibrated latency model:
 /// `t = alpha + beta_prefill·(prefill tokens) + beta_decode·(batch seqs)
-///    + beta_mixed·(prefill tokens)·(decode seqs) + swap_cost·(tokens moved)`.
+///    + beta_mixed·(prefill tokens)·(decode seqs) + swap_cost·(tokens moved)
+///    [+ (tokens moved)/swap_bw]`.
 /// The coefficients per backend profile are chosen to land the §5.1 size
 /// buckets in the paper's <1 min / 1–10 min / >10 min ranges; for the
 /// tiny-cpu profile they are measured against the PJRT backend (see
 /// EXPERIMENTS.md §Calibration). `beta_mixed` is the mixed-batch
 /// interference term (DESIGN.md §10): the extra latency every decode in the
 /// iteration pays per prefill token batched alongside it — zero in the
-/// stock profiles, set explicitly by the chunked-prefill experiment.
+/// stock profiles, set explicitly by the chunked-prefill experiment. The
+/// final term serializes swap traffic behind a finite host↔device bandwidth
+/// (DESIGN.md §11) — the whole iteration waits for the transfer, so swaps
+/// are no longer just priced per-token; `swap_bw = 0` (stock profiles)
+/// disables it and reproduces the pre-subsystem latency bit for bit.
 #[derive(Debug, Clone)]
 pub struct SimBackend {
     alpha: f64,
@@ -80,6 +85,7 @@ pub struct SimBackend {
     beta_decode: f64,
     beta_mixed: f64,
     swap_cost_per_token: f64,
+    swap_bw_tokens_per_sec: f64,
     iterations: u64,
 }
 
@@ -92,6 +98,7 @@ impl SimBackend {
             beta_decode: profile.beta_decode,
             beta_mixed: profile.beta_mixed,
             swap_cost_per_token: profile.swap_cost_per_token,
+            swap_bw_tokens_per_sec: profile.swap_bw_tokens_per_sec,
             iterations: 0,
         }
     }
@@ -105,6 +112,7 @@ impl SimBackend {
             beta_decode: 0.0,
             beta_mixed: 0.0,
             swap_cost_per_token: 0.0,
+            swap_bw_tokens_per_sec: 0.0,
             iterations: 0,
         }
     }
@@ -124,11 +132,18 @@ impl SimBackend {
 impl ExecBackend for SimBackend {
     fn run_iteration(&mut self, batch: &IterationBatch) -> IterationResult {
         self.iterations += 1;
-        let elapsed = self.alpha
+        let mut elapsed = self.alpha
             + self.beta_prefill * batch.prefill_tokens() as f64
             + self.beta_decode * batch.batch_size() as f64
             + self.beta_mixed * batch.prefill_tokens() as f64 * batch.decode.len() as f64
             + self.swap_cost_per_token * (batch.swap_out_tokens + batch.swap_in_tokens) as f64;
+        // Serialize swap traffic behind the host↔device link: the iteration
+        // cannot start until the transfers land. Guarded (not `+ 0.0`) so a
+        // zero-bandwidth profile reproduces the pre-subsystem float exactly.
+        if self.swap_bw_tokens_per_sec > 0.0 {
+            elapsed += (batch.swap_out_tokens + batch.swap_in_tokens) as f64
+                / self.swap_bw_tokens_per_sec;
+        }
         IterationResult { elapsed }
     }
 }
@@ -156,6 +171,8 @@ mod tests {
             beta_decode: 1e-3,
             swap_cost_per_token: 1e-5,
             beta_mixed: 0.0,
+            host_kv_tokens: None,
+            swap_bw_tokens_per_sec: 0.0,
         };
         let mut b = SimBackend::new(&profile);
         let prefill = [(tid(0), 100u32)];
@@ -183,6 +200,8 @@ mod tests {
             beta_decode: 1e-3,
             swap_cost_per_token: 0.0,
             beta_mixed: 1e-6,
+            host_kv_tokens: None,
+            swap_bw_tokens_per_sec: 0.0,
         };
         let mut b = SimBackend::new(&profile);
         let prefill = [(tid(0), 200u32)];
@@ -207,6 +226,37 @@ mod tests {
         });
         let want = 0.01 + 1e-4 * 200.0 + 1e-3 * 1.0;
         assert!((r.elapsed - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swap_bandwidth_serializes_transfers() {
+        let mut profile = BackendProfile {
+            name: "t".into(),
+            kv_tokens: 100,
+            page_size: 10,
+            alpha: 0.01,
+            beta_prefill: 1e-4,
+            beta_decode: 1e-3,
+            swap_cost_per_token: 1e-5,
+            beta_mixed: 0.0,
+            host_kv_tokens: None,
+            swap_bw_tokens_per_sec: 0.0,
+        };
+        let batch = |kv: &BlockAllocator| IterationBatch {
+            prefill: &[],
+            decode: &[],
+            swap_out_tokens: 300,
+            swap_in_tokens: 100,
+            kv,
+        };
+        let kv = kv();
+        // bw = 0: only the per-token price — the pre-subsystem model.
+        let r0 = SimBackend::new(&profile).run_iteration(&batch(&kv));
+        assert_eq!(r0.elapsed, 0.01 + 1e-5 * 400.0);
+        // bw > 0: the iteration additionally waits out the transfer.
+        profile.swap_bw_tokens_per_sec = 2000.0;
+        let r1 = SimBackend::new(&profile).run_iteration(&batch(&kv));
+        assert!((r1.elapsed - (0.01 + 1e-5 * 400.0 + 400.0 / 2000.0)).abs() < 1e-12);
     }
 
     #[test]

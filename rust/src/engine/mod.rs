@@ -3,10 +3,12 @@
 //! inference execution (paper §4.3 footnote 3):
 //!
 //!   * a pending request never preempts a running inference;
-//!   * when KV is exhausted mid-decode, running sequences are swapped out
-//!     (victim chosen by the scheduler's preemption rank);
-//!   * the swapped queue has priority over the waiting queue — no new
-//!     admissions while anything is swapped out.
+//!   * when KV is exhausted mid-decode, running sequences are preempted —
+//!     swapped out to a (possibly bounded) host tier or dropped for
+//!     recompute, per [`PreemptionMode`], with the victim chosen by the
+//!     configured [`VictimPolicy`] (DESIGN.md §11);
+//!   * the swapped and recompute queues have priority over the waiting
+//!     queue — no new admissions while anything is preempted.
 //!
 //! The engine is generic over an [`ExecBackend`]: the discrete-event
 //! simulator backend (`exec::SimBackend`, calibrated latency model) and the
@@ -15,7 +17,7 @@
 
 pub mod exec;
 
-use crate::config::{Config, Policy};
+use crate::config::{Config, Policy, PreemptionMode, VictimPolicy};
 use crate::cost::CostModel;
 use crate::kv::{BlockAllocator, KvError};
 use crate::metrics::RunMetrics;
@@ -45,6 +47,26 @@ struct SeqState {
     /// extended to the full prompt chain after prefill). Empty when the
     /// cache is disabled or the sequence was swapped out.
     prefix_path: Vec<usize>,
+    /// Length of the prompt portion that can participate in prefix caching,
+    /// fixed at first admission. A recompute preemption folds generated
+    /// tokens into `prompt`, so this cap (not the live `prompt`) bounds
+    /// cache lookups/inserts — generated content never masquerades as the
+    /// family prefix.
+    shareable: u32,
+    /// Service (in the scheduler's cost units) delivered to this sequence so
+    /// far — the dedup-aware observed-cost basis the §4.2 correction loop
+    /// reads at completion: exactly the deltas `on_service` saw, so shared
+    /// prefix pages are charged once (fractionally per sharer) rather than
+    /// re-derived at full Eq. 1 price from the spec.
+    served: f64,
+    /// Set by a recompute preemption: any later prefill is a *re-run* of
+    /// work whose charge is already in `served` (or, for a mid-prefill
+    /// victim, of work that never completed), so refill deltas still feed
+    /// the scheduler's fairness counters but are excluded from the
+    /// observed-cost accrual — a preempted agent must not look up to twice
+    /// as expensive to the §4.2 correction loop under the compute-centric
+    /// model (memory-centric prefill deltas are 0 either way).
+    recompute_refill: bool,
 }
 
 /// Per-agent progress tracking: dependency-count release over the task DAG
@@ -129,6 +151,23 @@ pub struct Engine<B: ExecBackend> {
     running: Vec<SeqState>,
     /// Swapped-out sequences, FIFO (vLLM swaps back in order).
     swapped: VecDeque<SeqState>,
+    /// Recompute-preempted sequences, FIFO: their KV was dropped and they
+    /// re-enter as (chunked) prefills over prompt + already-generated
+    /// tokens. Same strict priority over fresh admissions as `swapped` —
+    /// a preempted sequence is not a new request (footnote 3).
+    recompute: VecDeque<SeqState>,
+    /// What to do with preemption victims (DESIGN.md §11).
+    preemption: PreemptionMode,
+    /// How preemption victims are ranked.
+    victim_policy: VictimPolicy,
+    /// Auto-mode price of moving one token host↔device one way (per-token
+    /// swap cost + serialized transfer time), from the backend profile.
+    auto_swap_unit: f64,
+    /// Auto-mode price of re-prefilling one token (`beta_prefill`).
+    auto_refill_unit: f64,
+    /// Derive per-task scheduler tags from the agent-level prediction Ĉ_j
+    /// (`cfg.use_predictor`) instead of echoing the oracle decode length.
+    use_predictor_tags: bool,
     agents: HashMap<AgentId, AgentState>,
     clock: f64,
     seq_counter: u64,
@@ -160,7 +199,10 @@ pub struct Engine<B: ExecBackend> {
 impl<B: ExecBackend> Engine<B> {
     /// Engine from a config, a policy scheduler, and an execution backend.
     pub fn new(cfg: &Config, scheduler: Box<dyn Scheduler>, backend: B) -> Self {
-        let kv = BlockAllocator::new(cfg.backend.kv_pages() as u32, cfg.backend.page_size);
+        let mut kv = BlockAllocator::new(cfg.backend.kv_pages() as u32, cfg.backend.page_size);
+        if let Some(host) = cfg.backend.host_kv_tokens {
+            kv.set_host_capacity(host);
+        }
         // With the prefix cache on, memory-centric service accounting
         // switches to the dedup-aware variant (shared pages charged
         // fractionally across sharers — see step 5 of `step()`).
@@ -180,20 +222,30 @@ impl<B: ExecBackend> Engine<B> {
             max_batch: cfg.max_batch,
             running: Vec::new(),
             swapped: VecDeque::new(),
+            recompute: VecDeque::new(),
+            preemption: cfg.preemption,
+            victim_policy: cfg.victim,
+            auto_swap_unit: cfg.backend.swap_cost_per_token
+                + if cfg.backend.swap_bw_tokens_per_sec > 0.0 {
+                    1.0 / cfg.backend.swap_bw_tokens_per_sec
+                } else {
+                    0.0
+                },
+            auto_refill_unit: cfg.backend.beta_prefill,
+            use_predictor_tags: cfg.use_predictor,
             agents: HashMap::new(),
             clock: 0.0,
             seq_counter: 0,
             metrics: RunMetrics::new(),
             record_occupancy: false,
             admission_blocked: false,
-            // The correction loop's observed-cost accounting is on the plain
-            // Eq. 1 basis; with the prefix cache on, predictions and ground
-            // truth switch to the dedup-aware (sharer-split) basis, so the
-            // loop would converge to the *undeduplicated* total and re-tag
-            // shared-prefix agents with inflated F_j. Until observed
-            // accounting is dedup-aware, correction disables itself rather
-            // than silently skewing fairness.
-            online_correction: cfg.online_correction && !cfg.prefix_cache,
+            // Observed-cost accounting accrues the very service deltas the
+            // schedulers see (SeqState::served), so it is dedup-aware by
+            // construction: with the prefix cache on, shared pages are
+            // charged fractionally per sharer — the same basis as the
+            // suite-deduplicated predictions. Correction therefore composes
+            // with the cache (the historical gate is gone).
+            online_correction: cfg.online_correction,
             prefill_chunk: if cfg.chunked_prefill { cfg.prefill_chunk.max(1) } else { u32::MAX },
             token_budget: if cfg.chunked_prefill {
                 cfg.max_batched_tokens.max(1)
@@ -236,7 +288,9 @@ impl<B: ExecBackend> Engine<B> {
         );
         let state = AgentState::new(spec, predicted_cost, true_total);
         // Release every root task (dependency count zero) in index order.
-        // For staged agents these are exactly the stage-0 tasks.
+        // For staged agents these are exactly the stage-0 tasks. The agent
+        // state is registered first so `push_task` can derive per-task tags
+        // from the agent-level prediction (predictor mode).
         let roots: Vec<(TaskId, u32, u32)> = state
             .spec
             .tasks
@@ -244,12 +298,12 @@ impl<B: ExecBackend> Engine<B> {
             .filter(|t| t.deps.is_empty())
             .map(|t| (t.id, t.prompt_tokens, t.decode_tokens))
             .collect();
+        self.agents.insert(id, state);
         for (tid, p, d) in roots {
             self.push_task(tid, p, d);
         }
         self.metrics.on_agent_arrival(id, arrival);
         self.metrics.record_sched_decision(t0.elapsed());
-        self.agents.insert(id, state);
         if state_is_empty(&self.agents, id) {
             // Degenerate agent with zero tasks: completes instantly.
             self.complete_agent(id);
@@ -259,16 +313,30 @@ impl<B: ExecBackend> Engine<B> {
     fn push_task(&mut self, id: TaskId, prompt: u32, decode: u32) {
         self.admission_blocked = false;
         self.seq_counter += 1;
-        let predicted_decode = decode as f64; // per-inference predictor proxy
+        // Per-inference tag the scheduler ranks by (inference-level SJF).
+        // Oracle mode echoes the true decode length; predictor mode derives
+        // the task's share of the trained model's agent-level prediction
+        // Ĉ_j — without this, `--predict` runs silently fed the scheduler
+        // ground truth at the task level (the ISSUE 5 predictor bugfix).
+        let predicted_decode = if self.use_predictor_tags {
+            let a = &self.agents[&id.agent];
+            a.predicted_cost / a.known_tasks.max(1) as f64
+        } else {
+            decode as f64
+        };
         self.scheduler.push_task(
             TaskInfo { id, prompt_tokens: prompt, predicted_decode, seq: self.seq_counter },
             self.clock,
         );
     }
 
-    /// Whether any work remains (waiting, swapped, or running).
+    /// Whether any work remains (waiting, swapped, recompute-pending, or
+    /// running).
     pub fn has_work(&self) -> bool {
-        !self.running.is_empty() || !self.swapped.is_empty() || self.scheduler.waiting_len() > 0
+        !self.running.is_empty()
+            || !self.swapped.is_empty()
+            || !self.recompute.is_empty()
+            || self.scheduler.waiting_len() > 0
     }
 
     /// Advance the clock directly (used when idle between arrivals).
@@ -306,70 +374,54 @@ impl<B: ExecBackend> Engine<B> {
             self.running.push(seq);
         }
 
-        // 2. Fresh admissions only if nothing is swapped out. Under chunked
-        //    prefill a sequence is admitted on its *first chunk's* pages
-        //    (cached prefix + one chunk + decode headroom) instead of the
-        //    whole prompt; later chunks acquire pages incrementally in step
-        //    4. With chunking off `admit_tokens == prompt_tokens` and this
-        //    is the classical atomic admission, call for call.
+        // 1b. Recompute re-entry, once the swap queue has drained: dropped
+        //     victims re-enter as (chunked) prefills over their folded
+        //     prompt — cached prefix + first chunk + decode headroom, like
+        //     any admission — keeping strict priority over fresh work. The
+        //     blocked-admission memo applies here too (§Perf memo audit):
+        //     a failed re-entry repeats its radix-tree lookup + pin/detach
+        //     only after an event that grew the free pool, not every
+        //     iteration of a long decode phase.
         if self.swapped.is_empty() && !self.admission_blocked {
+            while self.running.len() < self.max_batch {
+                let Some(front) = self.recompute.front() else { break };
+                let (id, prompt, cap) = (front.id, front.prompt, front.shareable);
+                match self.try_admit_kv(id, prompt, cap) {
+                    Some((cached, path, _)) => {
+                        let mut seq = self.recompute.pop_front().unwrap();
+                        seq.prefilled = cached;
+                        seq.cached_tokens = cached;
+                        seq.prefix_path = path;
+                        self.running.push(seq);
+                    }
+                    None => {
+                        self.admission_blocked = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // 2. Fresh admissions only if nothing is preempted (swapped or
+        //    recompute-pending). Under chunked prefill a sequence is
+        //    admitted on its *first chunk's* pages (cached prefix + one
+        //    chunk + decode headroom) instead of the whole prompt; later
+        //    chunks acquire pages incrementally in step 4. With chunking
+        //    off `admit_tokens == prompt_tokens` and this is the classical
+        //    atomic admission, call for call.
+        if self.swapped.is_empty() && self.recompute.is_empty() && !self.admission_blocked {
             while self.running.len() < self.max_batch {
                 let Some(next) = self.scheduler.peek_next(self.clock) else {
                     self.admission_blocked = true;
                     break;
                 };
-                // Prefix-cache path: match the prompt against the radix
-                // tree, pin the matched chain, and — if the uncached
-                // remainder doesn't fit — evict unpinned LRU nodes before
-                // giving up and blocking.
-                let mut lookup: Option<PrefixMatch> = None;
-                if let Some(cache) = self.prefix.as_mut() {
-                    // Only the task's *shareable* prefix participates in
-                    // caching; unique suffixes could never match anyone.
-                    let group = prefix_group_in(&self.agents, next.id);
-                    let shareable = shareable_tokens(group, next.prompt_tokens);
-                    let ids = crate::prefix::prompt_token_ids(next.id, shareable, group);
-                    let m = cache.lookup(&ids);
-                    cache.attach(&m.path); // pin before any eviction
-                    lookup = Some(m);
-                }
-                let admit_tokens;
-                if let Some(m) = &lookup {
-                    admit_tokens =
-                        admission_tokens(next.prompt_tokens, m.tokens, self.prefill_chunk);
-                    // Only spend cached chains when eviction can actually
-                    // make this admission fit; an infeasible request must
-                    // not flush other families' prefixes.
-                    let need = self.kv.fresh_pages_needed(admit_tokens, m.pages.len() as u32);
-                    self.evict_cache_for(need);
-                    if !self.kv.can_admit_with_prefix(admit_tokens, m.pages.len() as u32) {
-                        if let Some(cache) = self.prefix.as_mut() {
-                            cache.detach(&m.path);
-                        }
-                        self.admission_blocked = true;
-                        break;
-                    }
-                } else {
-                    admit_tokens = admission_tokens(next.prompt_tokens, 0, self.prefill_chunk);
-                    if !self.kv.can_admit(admit_tokens) {
-                        self.admission_blocked = true;
-                        break;
-                    }
-                }
-                let task = self.scheduler.pop_next(self.clock).unwrap();
-                let (cached_tokens, prefix_path) = match lookup {
-                    Some(m) => {
-                        self.kv
-                            .share_prefix(task.id, &m.pages, admit_tokens)
-                            .expect("admit checked");
-                        self.metrics.on_prefix_lookup(m.tokens as u64);
-                        (m.tokens, m.path)
-                    }
-                    None => {
-                        self.kv.allocate(task.id, admit_tokens).expect("can_admit checked");
-                        (0, Vec::new())
-                    }
+                let Some((cached_tokens, prefix_path, shareable)) =
+                    self.try_admit_kv(next.id, next.prompt_tokens, u32::MAX)
+                else {
+                    self.admission_blocked = true;
+                    break;
                 };
+                let task = self.scheduler.pop_next(self.clock).unwrap();
                 let spec_decode = self.task_decode(task.id);
                 self.running.push(SeqState {
                     id: task.id,
@@ -380,6 +432,9 @@ impl<B: ExecBackend> Engine<B> {
                     prefilled: cached_tokens,
                     cached_tokens,
                     prefix_path,
+                    shareable,
+                    served: 0.0,
+                    recompute_refill: false,
                 });
                 self.metrics.on_task_admitted(task.id, self.clock);
             }
@@ -414,7 +469,7 @@ impl<B: ExecBackend> Engine<B> {
                 }
                 match self.pick_victim(i) {
                     Some(v) => {
-                        swap_out_tokens += self.swap_out_running(v);
+                        swap_out_tokens += self.preempt_running(v);
                         if v < i {
                             i -= 1; // indices shifted
                         }
@@ -503,7 +558,8 @@ impl<B: ExecBackend> Engine<B> {
             }
             // Chunked-prefill starvation valve: every runner is a
             // mid-prefill sequence that could not acquire a single page.
-            // Swap the youngest out so the eldest can progress next round
+            // Preempt one (under the configured victim policy — the
+            // youngest by default) so the others can progress next round
             // (no waiting task is touched, so the non-preemptive rule
             // holds). Unreachable with chunking off: whole prompts are
             // page-backed at admission.
@@ -515,7 +571,7 @@ impl<B: ExecBackend> Engine<B> {
                     self.kv.capacity_tokens()
                 );
             }
-            swap_out_tokens += self.swap_out_running(self.running.len() - 1);
+            swap_out_tokens += self.preempt_running(self.pick_valve_victim());
             self.admission_blocked = false;
         }
         if stalls > 0 {
@@ -555,7 +611,11 @@ impl<B: ExecBackend> Engine<B> {
                 // consumed no service (cache off ⇒ cached_tokens = 0), and
                 // chunked prefill charges chunk by chunk — the per-sequence
                 // total is exactly the unchunked charge.
-                service.push((s.id.agent, serve_delta_prefill(self.cost_model, take)));
+                let delta = serve_delta_prefill(self.cost_model, take);
+                if !s.recompute_refill {
+                    s.served += delta;
+                }
+                service.push((s.id.agent, delta));
                 s.prefilled += take;
                 if s.prefilled < s.prompt {
                     continue; // mid-prefill: no output token yet
@@ -568,9 +628,12 @@ impl<B: ExecBackend> Engine<B> {
                     // pages of the family prefix only — unique suffixes
                     // would bloat the tree with unmatchable nodes) so later
                     // arrivals can share it; same-iteration siblings adopt
-                    // each other's pages here.
+                    // each other's pages here. The cap fixed at first
+                    // admission bounds the chain — a recompute re-entry's
+                    // folded prompt must not publish generated tokens as
+                    // family content.
                     let group = prefix_group_in(&self.agents, s.id);
-                    let shareable = shareable_tokens(group, s.prompt);
+                    let shareable = s.shareable;
                     if shareable >= page_size {
                         let ids = crate::prefix::prompt_token_ids(s.id, shareable, group);
                         let free_before = self.kv.free_pages();
@@ -602,6 +665,7 @@ impl<B: ExecBackend> Engine<B> {
                         }
                         _ => serve_delta_decode(self.cost_model, s.prompt, s.generated),
                     };
+                    s.served += delta;
                     service.push((s.id.agent, delta));
                     if s.generated >= s.target_decode {
                         completed.push(s.id);
@@ -644,22 +708,214 @@ impl<B: ExecBackend> Engine<B> {
         self.agents[&id.agent].task_spec(id.index).decode_tokens
     }
 
-    /// Choose the swap-out victim among running seqs, excluding index
-    /// `protect`. Victim = max scheduler preemption rank; within the agent,
-    /// the youngest sequence (fewest generated tokens) goes first.
+    /// Try to allocate KV (and pin any cached prefix) for a sequence about
+    /// to (re-)enter the running set: radix-tree lookup + chain pin,
+    /// LRU eviction when that can cover the shortfall, then
+    /// `share_prefix`/`allocate` over the admission tokens (cached prefix +
+    /// first chunk + decode headroom). On failure every pin taken here is
+    /// dropped and `None` returned. `shareable_cap` clamps the prompt
+    /// portion eligible for caching — `u32::MAX` for fresh admissions,
+    /// the first-admission cap for recompute re-entries (whose prompt has
+    /// absorbed generated tokens that must never match the family stream).
+    /// Returns `(cached_tokens, prefix_path, shareable)`.
+    fn try_admit_kv(
+        &mut self,
+        id: TaskId,
+        prompt_tokens: u32,
+        shareable_cap: u32,
+    ) -> Option<(u32, Vec<usize>, u32)> {
+        // Prefix-cache path: match the prompt against the radix tree, pin
+        // the matched chain, and — if the uncached remainder doesn't fit —
+        // evict unpinned LRU nodes before giving up.
+        let mut shareable = 0u32;
+        let mut lookup: Option<PrefixMatch> = None;
+        if let Some(cache) = self.prefix.as_mut() {
+            // Only the task's *shareable* prefix participates in caching;
+            // unique suffixes could never match anyone.
+            let group = prefix_group_in(&self.agents, id);
+            shareable = shareable_tokens(group, prompt_tokens).min(shareable_cap);
+            let ids = crate::prefix::prompt_token_ids(id, shareable, group);
+            let m = cache.lookup(&ids);
+            cache.attach(&m.path); // pin before any eviction
+            lookup = Some(m);
+        }
+        match lookup {
+            Some(m) => {
+                let admit_tokens = admission_tokens(prompt_tokens, m.tokens, self.prefill_chunk);
+                // Only spend cached chains when eviction can actually make
+                // this admission fit; an infeasible request must not flush
+                // other families' prefixes.
+                let need = self.kv.fresh_pages_needed(admit_tokens, m.pages.len() as u32);
+                self.evict_cache_for(need);
+                if !self.kv.can_admit_with_prefix(admit_tokens, m.pages.len() as u32) {
+                    if let Some(cache) = self.prefix.as_mut() {
+                        cache.detach(&m.path);
+                    }
+                    return None;
+                }
+                self.kv.share_prefix(id, &m.pages, admit_tokens).expect("admit checked");
+                self.metrics.on_prefix_lookup(m.tokens as u64);
+                Some((m.tokens, m.path, shareable))
+            }
+            None => {
+                let admit_tokens = admission_tokens(prompt_tokens, 0, self.prefill_chunk);
+                if !self.kv.can_admit(admit_tokens) {
+                    return None;
+                }
+                self.kv.allocate(id, admit_tokens).expect("can_admit checked");
+                Some((0, Vec::new(), shareable))
+            }
+        }
+    }
+
+    /// Choose the preemption victim among running seqs, excluding index
+    /// `protect` and mid-prefill sequences (the starvation valve handles
+    /// those). Victim = max [`victim_key`](Self::victim_key) under the
+    /// configured [`VictimPolicy`]; the default `Youngest` reproduces the
+    /// classical choice bit for bit (max scheduler preemption rank; within
+    /// the agent, the youngest sequence goes first).
     fn pick_victim(&mut self, protect: usize) -> Option<usize> {
-        let mut best: Option<(f64, u32, usize)> = None;
+        let mut best: Option<(f64, f64, usize)> = None;
         for (i, s) in self.running.iter().enumerate() {
             if i == protect || s.needs_prefill {
                 continue;
             }
-            let rank = self.scheduler.preemption_rank(s.id.agent, self.clock);
-            let key = (rank, u32::MAX - s.generated);
-            if best.map(|(r, g, _)| (key.0, key.1) > (r, g)).unwrap_or(true) {
+            let key = self.victim_key(s);
+            if best.map(|(k0, k1, _)| (key.0, key.1) > (k0, k1)).unwrap_or(true) {
                 best = Some((key.0, key.1, i));
             }
         }
         best.map(|(_, _, i)| i)
+    }
+
+    /// Victim-ranking key of one running sequence (larger = preempted
+    /// first) under the configured policy — DESIGN.md §11.
+    fn victim_key(&self, s: &SeqState) -> (f64, f64) {
+        let agent = s.id.agent;
+        match self.victim_policy {
+            // Scheduler rank, ties broken toward the youngest sequence
+            // (fewest generated tokens): the pre-subsystem key exactly
+            // (u32 fits f64 losslessly, so the tuple order is unchanged).
+            VictimPolicy::Youngest => (
+                self.scheduler.preemption_rank(agent, self.clock),
+                (u32::MAX - s.generated) as f64,
+            ),
+            // Free the most memory per preemption.
+            VictimPolicy::MostPages => (
+                self.kv.block_table(s.id).map(|t| t.len()).unwrap_or(0) as f64,
+                self.scheduler.preemption_rank(agent, self.clock),
+            ),
+            // Delay the agent whose remaining work is largest — it finishes
+            // last anyway, so its delay is the cheapest in completion-time
+            // terms. SRJF answers the remaining-cost query directly; other
+            // policies fall back to the engine's per-sequence Eq. 1
+            // remaining cost.
+            VictimPolicy::CheapestRemaining => {
+                let seq_rem = self.cost_model.remaining_inference_cost(
+                    s.prompt,
+                    s.target_decode,
+                    s.generated,
+                );
+                match self.scheduler.remaining_cost(agent) {
+                    Some(rem) => (rem, seq_rem),
+                    None => (seq_rem, seq_rem),
+                }
+            }
+            // Selective pampering applied to preemption: protect agents the
+            // virtual clock says would finish early under GPS (smallest
+            // F_j); within the GPS-latest agent, preempt the sequence with
+            // the most remaining service.
+            VictimPolicy::PamperAware => {
+                let tag = self
+                    .scheduler
+                    .virtual_finish_tag(agent)
+                    .unwrap_or_else(|| self.scheduler.preemption_rank(agent, self.clock));
+                let seq_rem = self.cost_model.remaining_inference_cost(
+                    s.prompt,
+                    s.target_decode,
+                    s.generated,
+                );
+                (tag, seq_rem)
+            }
+        }
+    }
+
+    /// The starvation-valve victim: every runner is a mid-prefill sequence
+    /// that could not acquire a page. Under the default `Youngest` policy
+    /// this is the last-admitted runner — bit-identical to the
+    /// pre-subsystem valve; other policies apply
+    /// [`victim_key`](Self::victim_key) with late indices winning ties
+    /// (the same youngest-leaning bias).
+    fn pick_valve_victim(&self) -> usize {
+        match self.victim_policy {
+            VictimPolicy::Youngest => self.running.len() - 1,
+            _ => {
+                let mut best = (f64::NEG_INFINITY, f64::NEG_INFINITY, 0usize);
+                for (i, s) in self.running.iter().enumerate() {
+                    let k = self.victim_key(s);
+                    if (k.0, k.1) >= (best.0, best.1) {
+                        best = (k.0, k.1, i);
+                    }
+                }
+                best.2
+            }
+        }
+    }
+
+    /// Preempt the running sequence at `idx` under the configured
+    /// [`PreemptionMode`]: swap its KV to host, or drop it for recompute
+    /// when the mode demands it, the bounded host pool is full, or (Auto)
+    /// the cached-prefix-adjusted refill is cheaper than the round-trip
+    /// swap (DESIGN.md §11). Returns the tokens moved device→host (0 for a
+    /// recompute drop).
+    fn preempt_running(&mut self, idx: usize) -> u32 {
+        let id = self.running[idx].id;
+        let swap_allowed = self.kv.can_swap_out(id);
+        let recompute = match self.preemption {
+            // Bounded host pool full: forced recompute (the engine cannot
+            // stall forever waiting for host slots that only *it* frees).
+            PreemptionMode::Swap => !swap_allowed,
+            PreemptionMode::Recompute => true,
+            PreemptionMode::Auto => {
+                let s = &self.running[idx];
+                let tokens = self.kv.seq_tokens(id).expect("running seq allocated");
+                let refill =
+                    tokens.saturating_sub(s.cached_tokens) as f64 * self.auto_refill_unit;
+                let round_trip = 2.0 * tokens as f64 * self.auto_swap_unit;
+                !swap_allowed || refill < round_trip
+            }
+        };
+        if recompute {
+            self.drop_running_for_recompute(idx);
+            0
+        } else {
+            self.swap_out_running(idx)
+        }
+    }
+
+    /// Drop the running sequence at `idx` for recompute: discard its device
+    /// KV (shared pages survive via the tree / sibling references), fold
+    /// the generated tokens into the prompt — their content is known, so
+    /// re-entry re-prefills them instead of re-sampling — and queue it for
+    /// FIFO re-admission as a fresh (chunked) prefill.
+    fn drop_running_for_recompute(&mut self, idx: usize) {
+        let mut victim = self.running.remove(idx);
+        let dropped = self.kv.drop_for_recompute(victim.id).expect("victim on device");
+        if let Some(cache) = self.prefix.as_mut() {
+            cache.detach(&victim.prefix_path);
+        }
+        victim.prefix_path = Vec::new();
+        victim.prompt += victim.generated;
+        victim.target_decode -= victim.generated;
+        victim.generated = 0;
+        victim.needs_prefill = true;
+        victim.prefilled = 0;
+        victim.cached_tokens = 0;
+        victim.recompute_refill = true;
+        self.metrics.on_recompute_drop(victim.id, self.clock, dropped as u64);
+        self.recompute.push_back(victim);
+        // Pages returned to the pool: the blocked-admission memo is stale.
+        self.admission_blocked = false;
     }
 
     /// Swap the running sequence at `idx` out to host: release its device
@@ -717,8 +973,15 @@ impl<B: ExecBackend> Engine<B> {
     fn finish_seq(&mut self, id: TaskId) {
         self.admission_blocked = false;
         self.backend.on_seq_released(id);
-        if let Some(cache) = self.prefix.as_mut() {
-            if let Some(s) = self.running.iter().find(|s| s.id == id) {
+        let mut served = 0.0;
+        if let Some(s) = self.running.iter().find(|s| s.id == id) {
+            // Service actually delivered to this task — dedup-aware by
+            // construction (shared pages were charged fractionally per
+            // sharer as they were served), and exactly the Eq. 1 closed
+            // form without the cache: the per-iteration deltas are
+            // integer-valued, so the sum is bit-exact.
+            served = s.served;
+            if let Some(cache) = self.prefix.as_mut() {
                 // The tree keeps its own page references; only this
                 // sequence's pins are dropped.
                 cache.detach(&s.prefix_path);
@@ -730,14 +993,11 @@ impl<B: ExecBackend> Engine<B> {
 
         let now = self.clock;
         let correcting = self.online_correction;
-        let cost_model = self.cost_model;
         let agent_state = self.agents.get_mut(&id.agent).expect("agent exists");
         agent_state.tasks_remaining -= 1;
         agent_state.completed_tasks += 1;
         if correcting {
-            let t = agent_state.task_spec(id.index);
-            agent_state.observed_cost +=
-                cost_model.inference_cost(t.prompt_tokens, t.decode_tokens);
+            agent_state.observed_cost += served;
         }
 
         // 1. Dependency-count release: every static task whose last
@@ -820,6 +1080,11 @@ impl<B: ExecBackend> Engine<B> {
     /// Number of swapped-out sequences.
     pub fn swapped_len(&self) -> usize {
         self.swapped.len()
+    }
+
+    /// Number of recompute-preempted sequences awaiting re-entry.
+    pub fn recompute_len(&self) -> usize {
+        self.recompute.len()
     }
 
     /// Direct access to the scheduler (GPS reference extraction, tests).
@@ -930,6 +1195,17 @@ impl<B: ExecBackend> Engine<B> {
                 // prompts, guarded for safety).
                 if next < suite.agents.len() {
                     self.clock = self.clock.max(suite.agents[next].arrival);
+                } else if self.swapped.is_empty() && !self.recompute.is_empty() {
+                    // A recompute re-entry that cannot be admitted into an
+                    // EMPTY device pool can never run.
+                    let s = self.recompute.front().expect("checked nonempty");
+                    panic!(
+                        "stuck: recompute re-entry of {} with prompt {} cannot fit \
+                         KV capacity {}",
+                        s.id,
+                        s.prompt,
+                        self.kv.capacity_tokens()
+                    );
                 } else if self.swapped.is_empty() && self.scheduler.waiting_len() > 0 {
                     let t = self.scheduler.pop_next(self.clock).expect("waiting task");
                     panic!(
@@ -1016,6 +1292,8 @@ mod tests {
             beta_decode: 1e-4,
             swap_cost_per_token: 1e-6,
             beta_mixed: 0.0,
+            host_kv_tokens: None,
+            swap_bw_tokens_per_sec: 0.0,
         };
         cfg.max_batch = 16;
         cfg
@@ -1490,6 +1768,340 @@ mod tests {
             !e.admission_blocked,
             "eviction grew the free pool: a stale memo would stall admission"
         );
+    }
+
+    #[test]
+    fn recompute_mode_drops_and_refills() {
+        // The kv-pressure scenario under pure recompute preemption: victims
+        // lose their KV instead of swapping, re-enter as prefills over
+        // prompt + generated tokens, and everything still completes.
+        let mut cfg = tiny_config(4, 4);
+        cfg.preemption = PreemptionMode::Recompute;
+        let mut e = engine(&cfg, Policy::Fcfs);
+        e.submit(simple_agent(0, 0.0, 2, 4, 12), 100.0);
+        let mut guard = 0;
+        while e.has_work() {
+            e.step();
+            e.check_kv_invariants().unwrap();
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert_eq!(e.metrics.completed_agents(), 1);
+        assert!(e.metrics.recompute_count() > 0, "expected recompute drops under pressure");
+        assert!(e.metrics.recomputed_tokens() > 0, "wasted-token gauge must move");
+        assert_eq!(e.metrics.swap_out_count(), 0, "recompute mode must never swap");
+        assert_eq!(e.kv.free_pages(), 4);
+    }
+
+    #[test]
+    fn bounded_host_pool_forces_recompute_fallback() {
+        // Swap mode with a zero-token host tier: every swap is impossible,
+        // so the engine must fall back to recompute rather than deadlock.
+        let mut cfg = tiny_config(4, 4);
+        cfg.backend.host_kv_tokens = Some(0);
+        assert_eq!(cfg.preemption, PreemptionMode::Swap);
+        let mut e = engine(&cfg, Policy::Fcfs);
+        e.submit(simple_agent(0, 0.0, 2, 4, 12), 100.0);
+        let mut guard = 0;
+        while e.has_work() {
+            e.step();
+            e.check_kv_invariants().unwrap();
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert_eq!(e.metrics.completed_agents(), 1);
+        assert_eq!(e.metrics.swap_out_count(), 0, "a 0-token host cannot take any victim");
+        assert!(e.metrics.recompute_count() > 0);
+        assert_eq!(e.kv.free_pages(), 4);
+    }
+
+    #[test]
+    fn auto_mode_picks_the_cheaper_side() {
+        let run = |beta_prefill: f64, swap_cost: f64| {
+            let mut cfg = tiny_config(4, 4);
+            cfg.preemption = PreemptionMode::Auto;
+            cfg.backend.beta_prefill = beta_prefill;
+            cfg.backend.swap_cost_per_token = swap_cost;
+            let mut e = engine(&cfg, Policy::Fcfs);
+            e.submit(simple_agent(0, 0.0, 2, 4, 12), 100.0);
+            let mut guard = 0;
+            while e.has_work() {
+                e.step();
+                guard += 1;
+                assert!(guard < 10_000);
+            }
+            assert_eq!(e.metrics.completed_agents(), 1);
+            (e.metrics.swap_out_count(), e.metrics.recompute_count())
+        };
+        // Free refill vs expensive swap: Auto must always recompute.
+        let (swaps, recomputes) = run(0.0, 1.0);
+        assert_eq!(swaps, 0, "refill is free: swapping is never the cheaper side");
+        assert!(recomputes > 0);
+        // Expensive refill vs free swap: Auto must always swap.
+        let (swaps, recomputes) = run(1.0, 0.0);
+        assert!(swaps > 0);
+        assert_eq!(recomputes, 0, "swap is free: recompute is never the cheaper side");
+    }
+
+    #[test]
+    fn default_knobs_match_explicit_classical_config() {
+        // Unbounded host + Swap + Youngest spelled out must replay the
+        // default engine bit for bit on a swap-heavy run (the host bound is
+        // merely large enough to never bind).
+        let run = |explicit: bool| {
+            let mut cfg = tiny_config(4, 4);
+            if explicit {
+                cfg.preemption = PreemptionMode::Swap;
+                cfg.victim = VictimPolicy::Youngest;
+                cfg.backend.host_kv_tokens = Some(1 << 40);
+            }
+            let mut e = engine(&cfg, Policy::Fcfs);
+            e.submit(simple_agent(0, 0.0, 2, 4, 12), 100.0);
+            while e.has_work() {
+                e.step();
+            }
+            (e.metrics.jcts(), e.metrics.swap_out_count(), e.metrics.recompute_count())
+        };
+        assert_eq!(run(false), run(true));
+        assert_eq!(run(false).2, 0, "classical config never recomputes");
+    }
+
+    #[test]
+    fn victim_policies_all_complete_under_pressure() {
+        for victim in VictimPolicy::ALL {
+            for mode in
+                [PreemptionMode::Swap, PreemptionMode::Recompute, PreemptionMode::Auto]
+            {
+                let mut cfg = tiny_config(6, 4);
+                cfg.preemption = mode;
+                cfg.victim = victim;
+                let mut e = engine(&cfg, Policy::Justitia);
+                e.submit(simple_agent(0, 0.0, 2, 4, 10), 500.0);
+                e.submit(simple_agent(1, 0.0, 1, 4, 8), 50.0);
+                let mut guard = 0;
+                while e.has_work() {
+                    e.step();
+                    e.check_kv_invariants().unwrap();
+                    guard += 1;
+                    assert!(guard < 10_000, "{victim:?}/{mode:?} did not terminate");
+                }
+                assert_eq!(e.metrics.completed_agents(), 2, "{victim:?}/{mode:?}");
+                assert_eq!(e.kv.free_pages(), 6, "{victim:?}/{mode:?} leaked pages");
+            }
+        }
+    }
+
+    #[test]
+    fn victim_key_ranks_by_policy() {
+        // Two decoders under Justitia: agent 0 expensive (GPS-latest, big
+        // F tag), agent 1 cheap but holding more pages.
+        let cfg = tiny_config(64, 16);
+        let mut e = engine(&cfg, Policy::Justitia);
+        e.submit(simple_agent(0, 0.0, 1, 16, 30), 5000.0);
+        e.submit(simple_agent(1, 0.0, 1, 64, 30), 50.0);
+        e.step(); // both prefilled; both now decoders
+        assert_eq!(e.running_len(), 2);
+        let victim_agent = |e: &mut Engine<SimBackend>, policy: VictimPolicy| {
+            e.victim_policy = policy;
+            let v = e.pick_victim(usize::MAX).unwrap();
+            e.running[v].id.agent
+        };
+        // PamperAware protects the cheap (GPS-early) agent.
+        assert_eq!(victim_agent(&mut e, VictimPolicy::PamperAware), 0);
+        // Youngest keys on the scheduler rank — same agent here (largest
+        // virtual finish tag under Justitia).
+        assert_eq!(victim_agent(&mut e, VictimPolicy::Youngest), 0);
+        // MostPages frees the most memory: agent 1's 64-token prompt.
+        assert_eq!(victim_agent(&mut e, VictimPolicy::MostPages), 1);
+        // CheapestRemaining (engine fallback): agent 1's sequence has the
+        // larger per-sequence remaining cost (64-token prompt occupancy).
+        assert_eq!(victim_agent(&mut e, VictimPolicy::CheapestRemaining), 1);
+    }
+
+    #[test]
+    fn predictor_tags_reach_the_task_queue() {
+        // `--use-predictor`: per-task scheduler tags must derive from the
+        // agent-level prediction Ĉ_j, not echo the oracle decode length
+        // (the ISSUE 5 predictor bugfix).
+        let mut cfg = tiny_config(64, 16);
+        cfg.use_predictor = true;
+        let mut e = engine(&cfg, Policy::Sjf);
+        e.submit(simple_agent(0, 0.0, 2, 16, 8), 500.0);
+        let t = e.scheduler_mut().peek_next(0.0).unwrap();
+        assert_eq!(t.predicted_decode, 250.0, "tag = Ĉ_j / known_tasks, not the decode oracle");
+        // Oracle mode is unchanged: the tag is the true decode length.
+        let mut e = engine(&tiny_config(64, 16), Policy::Sjf);
+        e.submit(simple_agent(0, 0.0, 2, 16, 8), 500.0);
+        let t = e.scheduler_mut().peek_next(0.0).unwrap();
+        assert_eq!(t.predicted_decode, 8.0);
+    }
+
+    #[test]
+    fn predictor_run_differs_from_oracle_run_under_noisy_predictions() {
+        // A noisy predictor that inverts the two agents' costs must produce
+        // a different SJF schedule than the oracle run — before the fix,
+        // inference-level tags silently fell back to ground truth and the
+        // two runs were identical.
+        let run = |use_predictor: bool| {
+            let mut cfg = tiny_config(64, 16);
+            cfg.max_batch = 1;
+            cfg.use_predictor = use_predictor;
+            let mut e = engine(&cfg, Policy::Sjf);
+            // Noisy predictions: slow agent predicted tiny, fast predicted
+            // huge (oracle-mode costs are ignored by inference-level SJF).
+            e.submit(simple_agent(0, 0.0, 1, 16, 20), 1.0);
+            e.submit(simple_agent(1, 0.0, 1, 16, 2), 1000.0);
+            while e.has_work() {
+                e.step();
+            }
+            e.metrics.jcts()
+        };
+        let oracle = run(false);
+        let predicted = run(true);
+        assert_ne!(oracle, predicted, "noisy predictor must change the SJF schedule");
+        // Oracle SJF runs the short job first; the inverted predictor runs
+        // the long one first, delaying the short job past it.
+        let jct = |m: &[(u32, f64)], a: u32| m.iter().find(|(id, _)| *id == a).unwrap().1;
+        assert!(jct(&oracle, 1) < jct(&oracle, 0));
+        assert!(jct(&predicted, 1) > jct(&predicted, 0));
+    }
+
+    #[test]
+    fn correction_composes_with_prefix_cache() {
+        // ISSUE 5 satellite: observed-service accounting is dedup-aware
+        // (accrued from the very service deltas the scheduler sees), so the
+        // historical correction×cache gate is gone — with both flags on the
+        // loop must run and its error must shrink, not explode.
+        let mk = || {
+            let mut a = simple_agent(0, 0.0, 4, 32, 8);
+            for t in &mut a.tasks {
+                t.prefix_group = Some(crate::workload::PrefixGroup { id: 5, tokens: 32 });
+            }
+            a
+        };
+        // The discriminating check: predict the *deduplicated* truth
+        // exactly. Dedup-aware observed accounting keeps the corrected
+        // estimate pinned near it; the old plain-Eq. 1 accounting would
+        // extrapolate the UNdeduplicated total (~2.9× here) and drift the
+        // error up to ~0.5 by the third event.
+        let truth = crate::cost::CostModel::SharedMemoryCentric.agent_cost(&mk());
+        let mut cfg = tiny_config(64, 16);
+        cfg.prefix_cache = true;
+        cfg.online_correction = true;
+        let mut e = engine(&cfg, Policy::Justitia);
+        e.submit(mk(), truth);
+        while e.has_work() {
+            e.step();
+        }
+        assert_eq!(e.metrics.completed_agents(), 1);
+        assert!(
+            e.metrics.correction_samples() > 0,
+            "correction must run with the prefix cache on (the gate is gone)"
+        );
+        for (t, err) in e.metrics.correction_trace() {
+            assert!(
+                *err < 0.2,
+                "correction drifted from an exact deduped prediction at t={t:.2}: {err:.3}"
+            );
+        }
+
+        // And from a badly wrong prediction the error must shrink, not
+        // explode, as completions accumulate.
+        let mut e = engine(&cfg, Policy::Justitia);
+        e.submit(mk(), truth * 10.0);
+        while e.has_work() {
+            e.step();
+        }
+        let trace = e.metrics.correction_trace();
+        let (first, last) = (trace.first().unwrap().1, trace.last().unwrap().1);
+        assert!(
+            last <= first + 1e-9,
+            "dedup-aware correction error must shrink: first {first:.3}, last {last:.3}"
+        );
+    }
+
+    /// Records the swap hooks a backend sees (S3 regression harness).
+    struct RecordingBackend {
+        inner: SimBackend,
+        /// (seq, token count at swap-out, pages at swap-out).
+        outs: std::rc::Rc<std::cell::RefCell<Vec<(TaskId, u32, usize)>>>,
+        /// (seq, pages at swap-in).
+        ins: std::rc::Rc<std::cell::RefCell<Vec<(TaskId, usize)>>>,
+    }
+
+    impl ExecBackend for RecordingBackend {
+        fn run_iteration(&mut self, batch: &IterationBatch) -> exec::IterationResult {
+            self.inner.run_iteration(batch)
+        }
+        fn on_swap_out(&mut self, seq: TaskId, pages: &[crate::kv::PageId], tokens: u32) {
+            self.outs.borrow_mut().push((seq, tokens, pages.len()));
+        }
+        fn on_swap_in(&mut self, seq: TaskId, pages: &[crate::kv::PageId]) {
+            self.ins.borrow_mut().push((seq, pages.len()));
+        }
+    }
+
+    #[test]
+    fn valve_swap_preserves_prefill_cursor_and_shared_tail() {
+        // ISSUE 5 satellite: a mid-prefill sequence swapped out by the
+        // starvation valve must swap back in with its `prefilled` cursor
+        // and CoW-shared tail intact — no prompt token is ever prefilled
+        // twice, and the backend's swap hooks see consistent page sets.
+        let mut cfg = tiny_config(8, 16); // 128-token pool
+        cfg.max_batch = 4;
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 32;
+        cfg.max_batched_tokens = 64;
+        cfg.prefix_cache = true;
+        let outs = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let ins = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let backend = RecordingBackend {
+            inner: SimBackend::new(&cfg.backend),
+            outs: std::rc::Rc::clone(&outs),
+            ins: std::rc::Rc::clone(&ins),
+        };
+        let sched = crate::sched::build(Policy::Fcfs, cfg.backend.kv_tokens, 1.0);
+        let mut e = Engine::new(&cfg, sched, backend);
+        let mut a = simple_agent(0, 0.0, 2, 96, 2);
+        for t in &mut a.tasks {
+            t.prefix_group = Some(crate::workload::PrefixGroup { id: 9, tokens: 32 });
+        }
+        e.submit(a, 10.0);
+        let mut guard = 0;
+        while e.has_work() {
+            e.step();
+            e.check_chunked_accounting().unwrap();
+            e.check_kv_invariants().unwrap();
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert_eq!(e.metrics.completed_agents(), 1);
+        assert!(e.metrics.swap_out_count() > 0, "valve never fired");
+        // Every page is either free or retained by the radix tree.
+        assert_eq!(e.kv.device_tokens(), 0);
+        assert_eq!(
+            e.kv.free_pages() as u64 + e.prefix_cache().unwrap().cached_pages() as u64,
+            8
+        );
+        // Cursor intact: every prompt token was prefilled exactly once (or
+        // served from the cache) — a reset cursor would re-run tokens and
+        // break this identity.
+        assert_eq!(
+            e.metrics.prefill_tokens_executed() + e.metrics.prefill_tokens_saved(),
+            192,
+            "prefill work must be conserved across valve swaps"
+        );
+        // Backend hooks: every swap-out is matched by a swap-in of the same
+        // sequence with the same page count (tokens did not change while
+        // off-device).
+        let outs = outs.borrow();
+        let ins = ins.borrow();
+        assert_eq!(outs.len(), ins.len(), "every victim must return");
+        for ((so, st, sp), (is, ip)) in outs.iter().zip(ins.iter()) {
+            assert_eq!(so, is, "FIFO swap order");
+            assert_eq!(sp, ip, "page count must survive the round trip");
+            assert!(*st > 0, "mid-prefill victim held real tokens");
+        }
     }
 
     #[test]

@@ -60,6 +60,15 @@ pub enum KvError {
     /// The operation needs a device-resident sequence.
     #[error("sequence {0} is swapped out")]
     Swapped(TaskId),
+    /// The bounded host (CPU) swap pool cannot take the sequence — the
+    /// engine must recompute-preempt instead (DESIGN.md §11).
+    #[error("host KV pool full (need {need} tokens, free {free})")]
+    HostFull {
+        /// Tokens the swap-out would move to host.
+        need: u32,
+        /// Host token slots still free.
+        free: u64,
+    },
 }
 
 /// The paged KV-cache allocator.
@@ -77,6 +86,10 @@ pub struct BlockAllocator {
     /// Logical tokens: shared pages count once per *sharing sequence*.
     device_tokens: u64,
     swapped_tokens: u64,
+    /// Host (CPU) swap-pool capacity in token slots; `u64::MAX` models the
+    /// classical unbounded host tier (the default — every pre-subsystem
+    /// code path is unchanged).
+    host_capacity_tokens: u64,
 }
 
 impl BlockAllocator {
@@ -91,6 +104,33 @@ impl BlockAllocator {
             seqs: HashMap::new(),
             device_tokens: 0,
             swapped_tokens: 0,
+            host_capacity_tokens: u64::MAX,
+        }
+    }
+
+    /// Bound the host (CPU) swap pool to `tokens` slots. Swap-outs beyond it
+    /// fail with [`KvError::HostFull`]; the engine then recompute-preempts.
+    pub fn set_host_capacity(&mut self, tokens: u64) {
+        self.host_capacity_tokens = tokens;
+    }
+
+    /// The host swap-pool capacity (`u64::MAX` = unbounded).
+    pub fn host_capacity_tokens(&self) -> u64 {
+        self.host_capacity_tokens
+    }
+
+    /// Host token slots still free for swap-outs.
+    pub fn host_free_tokens(&self) -> u64 {
+        self.host_capacity_tokens.saturating_sub(self.swapped_tokens)
+    }
+
+    /// Whether a device-resident sequence fits in the host swap pool.
+    pub fn can_swap_out(&self, seq: TaskId) -> bool {
+        match self.seqs.get(&seq) {
+            Some(a) if a.residence == KvResidence::Device => {
+                a.tokens as u64 <= self.host_free_tokens()
+            }
+            _ => false,
         }
     }
 
@@ -383,9 +423,13 @@ impl BlockAllocator {
     /// references. Returns the number of tokens moved (for swap-latency
     /// accounting).
     pub fn swap_out(&mut self, seq: TaskId) -> Result<u32, KvError> {
+        let host_free = self.host_free_tokens();
         let alloc = self.seqs.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
         if alloc.residence == KvResidence::Swapped {
             return Err(KvError::Swapped(seq));
+        }
+        if alloc.tokens as u64 > host_free {
+            return Err(KvError::HostFull { need: alloc.tokens, free: host_free });
         }
         let pages = std::mem::take(&mut alloc.pages);
         alloc.residence = KvResidence::Swapped;
@@ -396,6 +440,28 @@ impl BlockAllocator {
         self.device_tokens -= tokens as u64;
         self.swapped_tokens += tokens as u64;
         Ok(tokens)
+    }
+
+    /// Release a device-resident sequence's allocation entirely — the
+    /// recompute-preemption path (DESIGN.md §11): unlike
+    /// [`swap_out`](Self::swap_out) nothing moves to host; the KV is
+    /// discarded and re-built by a fresh prefill at re-entry. The engine's
+    /// prefilled cursor resets accordingly. Pages shared with other holders
+    /// (sibling sequences, the prefix cache) survive via their remaining
+    /// references, so a cached shared prefix stays resident for the refill
+    /// to match against. Returns the tokens dropped (the wasted-work gauge).
+    pub fn drop_for_recompute(&mut self, seq: TaskId) -> Result<u32, KvError> {
+        match self.residence(seq) {
+            None => return Err(KvError::UnknownSeq(seq)),
+            Some(KvResidence::Swapped) => return Err(KvError::Swapped(seq)),
+            Some(KvResidence::Device) => {}
+        }
+        let alloc = self.seqs.remove(&seq).expect("residence checked");
+        for p in alloc.pages {
+            self.release_page(p);
+        }
+        self.device_tokens -= alloc.tokens as u64;
+        Ok(alloc.tokens)
     }
 
     /// Whether a swapped sequence fits back on device (plus one page of
@@ -531,6 +597,12 @@ impl BlockAllocator {
         if swap_tokens != self.swapped_tokens {
             return Err(format!("swapped_tokens {} != {}", self.swapped_tokens, swap_tokens));
         }
+        if self.swapped_tokens > self.host_capacity_tokens {
+            return Err(format!(
+                "host pool overrun: {} swapped tokens > capacity {}",
+                self.swapped_tokens, self.host_capacity_tokens
+            ));
+        }
         Ok(())
     }
 }
@@ -620,6 +692,57 @@ mod tests {
         assert!(kv.swap_in(tid(1)).is_err());
         kv.release(tid(2)).unwrap();
         assert!(kv.can_swap_in(tid(1)));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn bounded_host_pool_limits_swap_outs() {
+        let mut kv = BlockAllocator::new(8, 8);
+        kv.set_host_capacity(16);
+        assert_eq!(kv.host_capacity_tokens(), 16);
+        kv.allocate(tid(1), 12).unwrap();
+        kv.allocate(tid(2), 10).unwrap();
+        assert!(kv.can_swap_out(tid(1)));
+        kv.swap_out(tid(1)).unwrap(); // 12 of 16 host slots used
+        assert_eq!(kv.host_free_tokens(), 4);
+        // tid(2)'s 10 tokens no longer fit on host.
+        assert!(!kv.can_swap_out(tid(2)));
+        assert_eq!(kv.swap_out(tid(2)), Err(KvError::HostFull { need: 10, free: 4 }));
+        kv.check_invariants().unwrap();
+        // Swap-in frees host slots again.
+        kv.swap_in(tid(1)).unwrap();
+        assert_eq!(kv.host_free_tokens(), 16);
+        assert!(kv.can_swap_out(tid(2)));
+        kv.check_invariants().unwrap();
+        // Unknown / swapped sequences are never swappable-out.
+        assert!(!kv.can_swap_out(tid(9)));
+    }
+
+    #[test]
+    fn drop_for_recompute_frees_private_keeps_shared() {
+        let mut kv = BlockAllocator::new(6, 4);
+        kv.allocate(tid(1), 8).unwrap(); // 2 pages
+        let shared: Vec<PageId> = kv.block_table(tid(1)).unwrap().to_vec();
+        kv.share_prefix(tid(2), &shared, 10).unwrap(); // 2 shared + 1 private
+        assert_eq!(kv.free_pages(), 3);
+        let dropped = kv.drop_for_recompute(tid(2)).unwrap();
+        assert_eq!(dropped, 10);
+        // The private page returned to the pool; the shared pages survive
+        // for tid(1).
+        assert_eq!(kv.free_pages(), 4);
+        for &p in &shared {
+            assert_eq!(kv.page_ref(p), 1);
+        }
+        assert_eq!(kv.seq_tokens(tid(2)), None, "allocation fully removed");
+        assert_eq!(kv.device_tokens(), 8);
+        kv.check_invariants().unwrap();
+        // The id is reusable for the re-entry allocation.
+        kv.allocate(tid(2), 4).unwrap();
+        kv.check_invariants().unwrap();
+        // Error paths: unknown and swapped sequences.
+        assert_eq!(kv.drop_for_recompute(tid(9)), Err(KvError::UnknownSeq(tid(9))));
+        kv.swap_out(tid(1)).unwrap();
+        assert_eq!(kv.drop_for_recompute(tid(1)), Err(KvError::Swapped(tid(1))));
         kv.check_invariants().unwrap();
     }
 

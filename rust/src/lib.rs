@@ -33,6 +33,12 @@
 //! cache over token sequences with ref-counted, copy-on-write KV pages
 //! ([`kv`]), fractional cost accounting ([`cost`]), and a prefix-affinity
 //! cluster placement policy (DESIGN.md §8).
+//!
+//! The memory hierarchy is finite: swapped KV lands in a bounded host pool
+//! over a finite link, and preemption chooses between swapping and
+//! recomputing per victim under pluggable victim policies — up to
+//! `pamper-aware`, selective pampering applied to eviction
+//! ([`config::PreemptionMode`], [`config::VictimPolicy`], DESIGN.md §11).
 
 #![warn(missing_docs)]
 

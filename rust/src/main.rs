@@ -65,7 +65,7 @@ fn print_help() {
            run              run one policy over a generated suite (simulator)\n\
            cluster          multi-replica scale-out experiment (replicas x placement)\n\
            experiment       regenerate a paper figure/table (fig3..fig13, table1,\n\
-                            prefix_sharing, dag_agents, chunked_prefill, all)\n\
+                            prefix_sharing, dag_agents, chunked_prefill, preemption, all)\n\
            gen-workload     write a workload trace JSON\n\
            train-predictor  train + evaluate the per-class MLP predictor\n\
            gps              dump the GPS fluid reference for a suite\n\n\
@@ -76,7 +76,10 @@ fn print_help() {
            --agents N   --density 1|2|3   --seed S   --lambda L   --predict\n\
            --prefix-cache   --prefix-fanout F   --prefix-tokens T\n\
            --dag   --spawn-prob P   --branch B   --online-correction\n\
-           --chunked-prefill   --prefill-chunk C   --max-batched-tokens T"
+           --chunked-prefill   --prefill-chunk C   --max-batched-tokens T\n\
+           --preemption swap|recompute|auto   --victim youngest|most-pages|\n\
+                        cheapest-remaining|pamper-aware\n\
+           --host-mem-pages N   --swap-bw TOKENS_PER_SEC"
     );
 }
 
@@ -162,6 +165,20 @@ fn cmd_run(args: &Args) -> Result<()> {
             "online correction: {} events, mean rel error {:.1}%",
             metrics.correction_samples(),
             metrics.correction_error_mean() * 100.0
+        );
+    }
+    if metrics.recompute_count() > 0 || cfg.backend.host_kv_tokens.is_some() {
+        println!(
+            "preemption: mode {} / victim {}, host {} tokens, {} recomputes \
+             ({} tokens re-prefilled)",
+            cfg.preemption.name(),
+            cfg.victim.name(),
+            cfg.backend
+                .host_kv_tokens
+                .map(|t| t.to_string())
+                .unwrap_or_else(|| "inf".into()),
+            metrics.recompute_count(),
+            metrics.recomputed_tokens()
         );
     }
     Ok(())
@@ -295,7 +312,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => 1,
     };
     let placement = Placement::by_name(args.get_or("placement", "cluster-vtime"))?;
-    justitia::server::http::serve(std::path::Path::new(artifacts), port, policy, replicas, placement)
+    justitia::server::http::serve(
+        std::path::Path::new(artifacts),
+        port,
+        policy,
+        replicas,
+        placement,
+        args.has("predict"),
+    )
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -610,6 +634,60 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         );
         std::fs::write("results/chunked_prefill.json", json.pretty())?;
         out.line("(wrote results/chunked_prefill.json)".to_string());
+    }
+    if run_all || which == "preemption" {
+        let mut out = ResultsFile::new("preemption.txt");
+        out.line("=== Preemption: bounded host memory, swap vs recompute, victim policies ===");
+        let rows = exp::preemption(&Config::default(), n, 3.0, seed);
+        out.line(format!(
+            "workload: {n} agents at 3x density; host tiers {{inf, M/8}}, swap bw {} tokens/s \
+             on every arm (stock profiles keep bw 0)",
+            exp::PREEMPT_SWAP_BW
+        ));
+        out.line(exp::PreemptionRow::table_header());
+        for r in &rows {
+            out.line(r.table_row());
+        }
+        for w in exp::PREEMPT_WORKLOADS {
+            let get = |mode: &str, victim: &str| {
+                rows.iter().find(|r| {
+                    r.workload == w
+                        && r.host_pages > 0
+                        && r.mode.name() == mode
+                        && r.victim.name() == victim
+                })
+            };
+            if let (Some(swap), Some(auto)) = (get("swap", "youngest"), get("auto", "pamper-aware"))
+            {
+                out.line(format!(
+                    "headline {w} (host M/8): p99 JCT {:.1}s (swap+youngest) -> {:.1}s \
+                     (auto+pamper-aware), {} recomputes / {} wasted tokens",
+                    swap.p99_jct, auto.p99_jct, auto.recomputes, auto.recomputed_tokens
+                ));
+            }
+        }
+        // Machine-readable copy for kick-tires / CI smoke artifacts.
+        let json = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    justitia::util::json::obj([
+                        ("workload", Json::Str(r.workload.into())),
+                        ("host_pages", Json::Num(r.host_pages as f64)),
+                        ("mode", Json::Str(r.mode.name().into())),
+                        ("victim", Json::Str(r.victim.name().into())),
+                        ("avg_jct", Json::Num(r.avg_jct)),
+                        ("p99_jct", Json::Num(r.p99_jct)),
+                        ("swap_outs", Json::Num(r.swap_outs as f64)),
+                        ("recomputes", Json::Num(r.recomputes as f64)),
+                        ("recomputed_tokens", Json::Num(r.recomputed_tokens as f64)),
+                        ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
+                        ("completed", Json::Num(r.completed as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write("results/preemption.json", json.pretty())?;
+        out.line("(wrote results/preemption.json)".to_string());
     }
     if run_all || which == "table1" {
         let mut out = ResultsFile::new("table1.txt");

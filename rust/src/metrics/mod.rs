@@ -101,6 +101,13 @@ pub struct RunMetrics {
     total_decode_seqs: u64,
     engine_time: f64,
     swap_outs: u64,
+    /// Recompute preemptions: victims whose KV was discarded instead of
+    /// swapped (DESIGN.md §11).
+    recompute_drops: u64,
+    /// Wasted-token gauge: KV tokens discarded by recompute preemptions,
+    /// all of which must be re-prefilled (minus whatever the prefix cache
+    /// still covers at re-entry).
+    recomputed_tokens: u64,
     /// Prompt tokens actually prefilled (shared-prefix tokens excluded).
     prefill_tokens_executed: u64,
     /// Prefix-cache lookups at admission (0 when the cache is disabled).
@@ -211,6 +218,12 @@ impl RunMetrics {
         self.swap_outs += 1;
     }
 
+    /// Record a recompute preemption dropping `tokens` of computed KV.
+    pub fn on_recompute_drop(&mut self, _task: TaskId, _t: f64, tokens: u64) {
+        self.recompute_drops += 1;
+        self.recomputed_tokens += tokens;
+    }
+
     /// Record one dynamically-spawned task.
     pub fn on_task_spawned(&mut self) {
         self.spawned_tasks += 1;
@@ -259,6 +272,18 @@ impl RunMetrics {
     /// Swap-outs performed.
     pub fn swap_out_count(&self) -> u64 {
         self.swap_outs
+    }
+
+    /// Recompute preemptions performed (0 unless a bounded host pool or a
+    /// recompute/auto preemption mode forced KV drops).
+    pub fn recompute_count(&self) -> u64 {
+        self.recompute_drops
+    }
+
+    /// KV tokens discarded by recompute preemptions (the wasted-token
+    /// gauge: work the engine will re-run as prefill).
+    pub fn recomputed_tokens(&self) -> u64 {
+        self.recomputed_tokens
     }
 
     /// Tasks emitted at runtime by spawn rules.
@@ -414,6 +439,8 @@ impl RunMetrics {
         self.total_decode_seqs += other.total_decode_seqs;
         self.engine_time = self.engine_time.max(other.engine_time);
         self.swap_outs += other.swap_outs;
+        self.recompute_drops += other.recompute_drops;
+        self.recomputed_tokens += other.recomputed_tokens;
         // Prefix-cache counters add across replicas; the occupancy gauge is
         // a peak, so it maxes (each replica has its own cache).
         self.prefill_tokens_executed += other.prefill_tokens_executed;
@@ -672,6 +699,99 @@ mod tests {
         h.record(1e9, 1);
         assert_eq!(h.count(), 2);
         assert!(h.percentile(100.0) > h.percentile(1.0));
+    }
+
+    #[test]
+    fn latency_hist_edge_cases() {
+        // Empty histogram: every statistic is a well-defined zero, at any q.
+        let empty = LatencyHist::default();
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.mean(), 0.0);
+        for q in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(empty.percentile(q), 0.0, "empty hist q={q}");
+        }
+        // Merging an empty histogram changes nothing; merging INTO an empty
+        // one reproduces the source exactly (buckets are copied, not
+        // re-quantized).
+        let mut h = LatencyHist::default();
+        h.record(2e-3, 5);
+        h.record(0.5, 1);
+        let snapshot = (h.count(), h.mean(), h.percentile(50.0), h.percentile(99.0));
+        h.merge(&LatencyHist::default());
+        assert_eq!((h.count(), h.mean(), h.percentile(50.0), h.percentile(99.0)), snapshot);
+        let mut fresh = LatencyHist::default();
+        fresh.merge(&h);
+        assert_eq!(
+            (fresh.count(), fresh.mean(), fresh.percentile(50.0), fresh.percentile(99.0)),
+            snapshot
+        );
+
+        // Single sample: every percentile (incl. the q=0 and q=100 extremes)
+        // lands in its bucket, within the ~10% bucket resolution.
+        let mut one = LatencyHist::default();
+        one.record(3e-3, 1);
+        assert_eq!(one.count(), 1);
+        assert_eq!(one.mean(), 3e-3);
+        for q in [0.0, 50.0, 100.0] {
+            let p = one.percentile(q);
+            assert!((p / 3e-3 - 1.0).abs() < 0.11, "single-sample q={q} -> {p}");
+        }
+
+        // q=0 and q=100 bracket the distribution: q=0 clamps to rank 1 (the
+        // smallest sample), q=100 reaches the largest.
+        let mut two = LatencyHist::default();
+        two.record(1e-3, 10);
+        two.record(0.1, 10);
+        let (p0, p100) = (two.percentile(0.0), two.percentile(100.0));
+        assert!((p0 / 1e-3 - 1.0).abs() < 0.11, "q=0 -> {p0}");
+        assert!((p100 / 0.1 - 1.0).abs() < 0.11, "q=100 -> {p100}");
+        assert!(two.percentile(50.0) <= p100 && p0 <= two.percentile(50.0));
+
+        // Merge-then-percentile == record-everything-then-percentile: the
+        // merge is bucket-exact, so the two orders cannot disagree.
+        let samples_a = [(1e-4, 7u64), (2e-3, 3), (0.05, 2)];
+        let samples_b = [(5e-4, 4u64), (0.01, 6), (1.5, 1)];
+        let mut merged = LatencyHist::default();
+        let mut direct = LatencyHist::default();
+        let mut a = LatencyHist::default();
+        let mut b = LatencyHist::default();
+        for &(x, w) in &samples_a {
+            a.record(x, w);
+            direct.record(x, w);
+        }
+        for &(x, w) in &samples_b {
+            b.record(x, w);
+            direct.record(x, w);
+        }
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.count(), direct.count());
+        // Counts/buckets are integer-exact; the mean's running sum may
+        // associate differently, so compare within float tolerance.
+        assert!((merged.mean() - direct.mean()).abs() < 1e-12);
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(q), direct.percentile(q), "q={q} diverged");
+        }
+        // Zero-weight records are dropped entirely.
+        let before = merged.count();
+        merged.record(1.0, 0);
+        assert_eq!(merged.count(), before);
+    }
+
+    #[test]
+    fn recompute_counters_and_merge() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.recompute_count(), 0);
+        assert_eq!(m.recomputed_tokens(), 0);
+        m.on_recompute_drop(tid(1, 0), 1.0, 120);
+        m.on_recompute_drop(tid(2, 0), 2.0, 30);
+        assert_eq!(m.recompute_count(), 2);
+        assert_eq!(m.recomputed_tokens(), 150);
+        let mut other = RunMetrics::new();
+        other.on_recompute_drop(tid(3, 0), 0.5, 50);
+        m.merge(&other);
+        assert_eq!(m.recompute_count(), 3);
+        assert_eq!(m.recomputed_tokens(), 200);
     }
 
     #[test]

@@ -59,7 +59,7 @@ mod tests {
         let truth = CostModel::MemoryCentric.agent_cost(&a);
         for _ in 0..1000 {
             let c = o.cost(&a);
-            assert!(c >= truth / 3.0 - 1e-9 && c <= truth * 3.0 + 1e-9);
+            assert!((truth / 3.0 - 1e-9..=truth * 3.0 + 1e-9).contains(&c));
         }
     }
 

@@ -187,6 +187,10 @@ impl Scheduler for Justitia {
         self.tags.get(&agent).copied().unwrap_or(f64::MAX)
     }
 
+    fn virtual_finish_tag(&self, agent: AgentId) -> Option<f64> {
+        self.tags.get(&agent).copied()
+    }
+
     fn gps_finish_estimate(&mut self, cost: f64, now: f64) -> Option<f64> {
         // Probe the live virtual clock with a sentinel id (AgentId::MAX is
         // never assigned by Suite re-indexing); the clone-based simulation

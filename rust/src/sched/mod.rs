@@ -102,6 +102,25 @@ pub trait Scheduler: Send {
     /// first-to-be-preempted).
     fn preemption_rank(&self, agent: AgentId, now: f64) -> f64;
 
+    /// Remaining predicted cost of an agent, if this policy tracks it
+    /// (SRJF's service-decremented counter). The engine's
+    /// [`VictimPolicy::CheapestRemaining`](crate::config::VictimPolicy)
+    /// victim ranking consults it; `None` (the default) falls back to the
+    /// engine-side per-sequence remaining-cost estimate (Eq. 1).
+    fn remaining_cost(&self, _agent: AgentId) -> Option<f64> {
+        None
+    }
+
+    /// The agent's virtual finish tag F_j under this policy's GPS clock, if
+    /// it keeps one (Justitia). The engine's
+    /// [`VictimPolicy::PamperAware`](crate::config::VictimPolicy) victim
+    /// ranking protects agents with the *smallest* tag — the ones the
+    /// virtual clock says would finish early under GPS — and `None` (the
+    /// default) falls back to [`preemption_rank`](Self::preemption_rank).
+    fn virtual_finish_tag(&self, _agent: AgentId) -> Option<f64> {
+        None
+    }
+
     /// Estimate the real-time GPS finish a hypothetical agent with predicted
     /// cost `cost` arriving at `now` would achieve on this scheduler's
     /// server — the virtual-time finish-tag estimation the cluster

@@ -96,6 +96,10 @@ impl Scheduler for Srjf {
         // Preempt the agent with the most remaining work first.
         self.remaining.get(&agent).copied().unwrap_or(f64::MAX)
     }
+
+    fn remaining_cost(&self, agent: AgentId) -> Option<f64> {
+        self.remaining.get(&agent).copied()
+    }
 }
 
 #[cfg(test)]

@@ -92,6 +92,11 @@ pub(crate) struct Shared {
     /// agent id → (class, submit wall time, Option<jct>).
     agents: Mutex<BTreeMap<u32, (String, std::time::Instant, Option<f64>)>>,
     next_id: AtomicU32,
+    /// Trained per-class cost predictor (`--predict`): submissions are
+    /// priced by the model (prompt text → Ĉ_j) instead of the ground-truth
+    /// oracle, and the engines derive per-task tags from the same
+    /// prediction — the predictor-in-the-loop serving path (ISSUE 5).
+    predictor: Option<crate::predictor::PerClassPredictor>,
 }
 
 /// Parse an agent submission body into an AgentSpec.
@@ -145,15 +150,36 @@ pub fn parse_agent_submission(
 
 /// Run the HTTP server (blocks forever). `replicas` PJRT engines are stood
 /// up behind a [`ClusterDispatcher`] using `placement`; with one replica the
-/// dispatcher is a transparent pass-through.
+/// dispatcher is a transparent pass-through. With `use_predictor` a
+/// per-class cost predictor is trained at startup and submissions are
+/// priced by it (the schedulers never see oracle costs).
 pub fn serve(
     artifacts: &std::path::Path,
     port: u16,
     policy: Policy,
     replicas: usize,
     placement: Placement,
+    use_predictor: bool,
 ) -> Result<()> {
-    let shared = Arc::new(Shared { agents: Mutex::new(BTreeMap::new()), next_id: AtomicU32::new(0) });
+    let predictor = if use_predictor {
+        println!("training per-class cost predictor…");
+        let (p, report) =
+            crate::predictor::train_per_class(CostModel::MemoryCentric, 60, 10, 0x5eed);
+        println!(
+            "predictor: rel_error {:.1}%, infer {:.2} ms, trained in {:.1}s",
+            report.rel_error * 100.0,
+            report.infer_ms,
+            report.train_secs
+        );
+        Some(p)
+    } else {
+        None
+    };
+    let shared = Arc::new(Shared {
+        agents: Mutex::new(BTreeMap::new()),
+        next_id: AtomicU32::new(0),
+        predictor,
+    });
     let (tx, rx) = mpsc::channel::<(AgentSpec, f64)>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
 
@@ -203,8 +229,13 @@ pub fn serve(
                     beta_decode: 0.0,
                     swap_cost_per_token: 0.0,
                     beta_mixed: 0.0,
+                    host_kv_tokens: None,
+                    swap_bw_tokens_per_sec: 0.0,
                 };
                 cfg2.max_batch = model.max_decode_batch();
+                // Per-task scheduler tags derive from the submitted Ĉ_j in
+                // predictor mode (see Engine::push_task).
+                cfg2.use_predictor = use_predictor;
                 let sched = crate::sched::build(policy, cfg2.backend.kv_tokens, 1.0);
                 engines.push(Engine::new(&cfg2, sched, PjrtBackend::new(model)));
             }
@@ -298,12 +329,23 @@ pub(crate) fn route(
             match parse_agent_submission(&body, id, 0x5eed) {
                 Ok(spec) => {
                     shared.next_id.store(id + 1, Ordering::SeqCst);
-                    let cost = CostModel::MemoryCentric.agent_cost(&spec);
                     agents.insert(
                         id,
                         (spec.class.short_name().into(), std::time::Instant::now(), None),
                     );
                     drop(agents);
+                    // Price OUTSIDE the id-assignment critical section:
+                    // predictor mode runs a TF-IDF + MLP forward pass
+                    // (milliseconds), and holding the agents mutex across
+                    // it would serialize every concurrent poll behind each
+                    // submission. Predictor mode prices the agent from its
+                    // prompt text (Ĉ_j); oracle mode keeps ground truth.
+                    let cost = match &shared.predictor {
+                        Some(p) => {
+                            crate::predictor::Predictor::predict(p, spec.class, &spec.input_text)
+                        }
+                        None => CostModel::MemoryCentric.agent_cost(&spec),
+                    };
                     let _ = tx.send((spec, cost));
                     (202, obj([("id", id.into()), ("predicted_cost", cost.into())]).dump())
                 }
@@ -396,8 +438,42 @@ mod tests {
     }
 
     #[test]
+    fn predictor_mode_prices_submissions_with_the_model() {
+        // With a predictor installed, the submit path must price agents
+        // through it — an empty model predicts the 1.0 floor, which can
+        // never coincide with the oracle cost of a generated agent.
+        let shared = Shared {
+            agents: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU32::new(0),
+            predictor: Some(crate::predictor::PerClassPredictor {
+                models: std::collections::HashMap::new(),
+            }),
+        };
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            method: "POST".into(),
+            path: "/agents".into(),
+            body: br#"{"class": "EV"}"#.to_vec(),
+        };
+        let (s, body) = route(&req, &shared, &tx);
+        assert_eq!(s, 202);
+        assert!(body.contains("predicted_cost"), "response must echo the prediction: {body}");
+        let (spec, cost) = rx.try_recv().unwrap();
+        assert_eq!(cost, 1.0);
+        assert_ne!(
+            cost,
+            CostModel::MemoryCentric.agent_cost(&spec),
+            "predictor-run tags must differ from the oracle's"
+        );
+    }
+
+    #[test]
     fn routing_without_engine() {
-        let shared = Shared { agents: Mutex::new(BTreeMap::new()), next_id: AtomicU32::new(0) };
+        let shared = Shared {
+            agents: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU32::new(0),
+            predictor: None,
+        };
         let (tx, rx) = mpsc::channel();
         let req = |m: &str, p: &str, b: &str| Request {
             method: m.into(),

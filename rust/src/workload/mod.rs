@@ -539,7 +539,7 @@ mod tests {
             assert_eq!(c.kind, "spawned");
             assert_eq!(c.deps.len(), 1);
             let g = spawn.generation(c.id.index, base);
-            assert!(g >= 1 && g <= 2, "generation {g}");
+            assert!((1..=2).contains(&g), "generation {g}");
             // Child index closed form inverts to the parent.
             let parent = (c.id.index - base) / spawn.branch;
             assert_eq!(c.deps[0].index, parent);

@@ -102,6 +102,8 @@ fn config_for(sc: &ChunkedScenario) -> Config {
         beta_decode: 0.0,
         swap_cost_per_token: 0.0,
         beta_mixed: 0.0,
+        host_kv_tokens: None,
+        swap_bw_tokens_per_sec: 0.0,
     };
     cfg.max_batch = 64;
     cfg.chunked_prefill = true;

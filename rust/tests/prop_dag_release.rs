@@ -101,6 +101,8 @@ fn run(ds: &DagSuite, policy: Policy) -> (Engine<SimBackend>, Suite) {
         beta_decode: 0.0,
         swap_cost_per_token: 0.0,
         beta_mixed: 0.0,
+        host_kv_tokens: None,
+        swap_bw_tokens_per_sec: 0.0,
     };
     cfg.max_batch = 1024;
     let suite = Suite::new(ds.agents.clone());

@@ -109,6 +109,8 @@ fn run_justitia(rs: &RandomSuite) -> (Engine<SimBackend>, Suite) {
         beta_decode: 0.0,
         swap_cost_per_token: 0.0,
         beta_mixed: 0.0,
+        host_kv_tokens: None,
+        swap_bw_tokens_per_sec: 0.0,
     };
     cfg.max_batch = 1024; // memory-limited, not slot-limited (as in the proof)
     let suite = Suite::new(rs.agents.clone());

@@ -1,0 +1,276 @@
+//! Property tests for the preemption subsystem (ISSUE 5 tentpole,
+//! DESIGN.md §11):
+//!
+//! * **Default identity** — the default knobs (unbounded host, `Swap`,
+//!   `Youngest`) replay exactly the same engine as spelling those knobs out
+//!   with a never-binding host bound, across all six schedulers, on
+//!   swap-heavy workloads: same JCTs, same iteration count, same swap
+//!   history, and zero recompute drops — the pre-subsystem engine bit for
+//!   bit.
+//! * **Conservation** — under every (mode × victim × host tier) drawn at
+//!   random, per-step KV invariants hold (including the bounded-host
+//!   overrun check), every agent completes, and the pool drains to fully
+//!   free.
+
+use justitia::config::{BackendProfile, Config, Policy, PreemptionMode, VictimPolicy};
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::util::prop::{check, Config as PropConfig, Strategy};
+use justitia::util::rng::Rng;
+use justitia::workload::test_support::dag_agent;
+use justitia::workload::{AgentSpec, Suite};
+
+/// A randomized preemption scenario: a small DAG workload over a pool tight
+/// enough to force preemptions, plus the subsystem knobs.
+#[derive(Clone, Debug)]
+struct PreemptScenario {
+    agents: Vec<AgentSpec>,
+    pages: u64,
+    page_size: u32,
+    mode: PreemptionMode,
+    victim: VictimPolicy,
+    /// Host pool in tokens; `None` = unbounded.
+    host_tokens: Option<u64>,
+    /// Chunked prefill on (exercises the starvation valve under recompute).
+    chunked: bool,
+    swap_bw: f64,
+    beta_prefill: f64,
+}
+
+struct PreemptStrategy;
+
+impl Strategy for PreemptStrategy {
+    type Value = PreemptScenario;
+
+    fn generate(&self, rng: &mut Rng) -> PreemptScenario {
+        let page_size = 8u32;
+        let pages = rng.range_u64(24, 48);
+        let m_tokens = pages * page_size as u64;
+        let n_agents = rng.range_u64(2, 7) as usize;
+        let mut agents = Vec::with_capacity(n_agents);
+        let mut t = 0.0;
+        for id in 0..n_agents {
+            t += rng.exponential(0.05);
+            let n_tasks = rng.range_u64(1, 5) as usize;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for i in 0..n_tasks {
+                // Prompts up to ~a third of the pool: several sequences
+                // collide (forcing preemptions), and even a recompute
+                // re-entry whose prompt absorbed its generated tokens
+                // still fits an empty pool.
+                let p = rng.range_u64(2, m_tokens / 3) as u32;
+                let d = rng.range_u64(1, 16) as u32;
+                let deps = if i > 0 && rng.chance(0.3) {
+                    vec![rng.below(i as u64) as u32]
+                } else {
+                    Vec::new()
+                };
+                tasks.push((p, d, deps));
+            }
+            agents.push(dag_agent(id as u32, t, tasks));
+        }
+        let mode = *rng.choose(&[
+            PreemptionMode::Swap,
+            PreemptionMode::Recompute,
+            PreemptionMode::Auto,
+        ]);
+        let victim = *rng.choose(&VictimPolicy::ALL);
+        let host_tokens = match rng.below(3) {
+            0 => None,
+            1 => Some(m_tokens / 4),
+            _ => Some(0),
+        };
+        PreemptScenario {
+            agents,
+            pages,
+            page_size,
+            mode,
+            victim,
+            host_tokens,
+            chunked: rng.chance(0.5),
+            swap_bw: if rng.chance(0.5) { 1000.0 } else { 0.0 },
+            beta_prefill: if rng.chance(0.5) { 1e-3 } else { 0.0 },
+        }
+    }
+
+    fn shrink(&self, v: &PreemptScenario) -> Vec<PreemptScenario> {
+        let mut out = Vec::new();
+        if v.agents.len() > 1 {
+            let mut w = v.clone();
+            w.agents.pop();
+            out.push(w);
+        }
+        if v.chunked {
+            let mut w = v.clone();
+            w.chunked = false;
+            out.push(w);
+        }
+        if v.host_tokens.is_some() {
+            let mut w = v.clone();
+            w.host_tokens = None;
+            out.push(w);
+        }
+        out
+    }
+}
+
+fn config_for(sc: &PreemptScenario) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = BackendProfile {
+        name: "prop-preempt".into(),
+        kv_tokens: sc.pages * sc.page_size as u64,
+        page_size: sc.page_size,
+        alpha: 1.0,
+        beta_prefill: sc.beta_prefill,
+        beta_decode: 0.0,
+        swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
+        host_kv_tokens: sc.host_tokens,
+        swap_bw_tokens_per_sec: sc.swap_bw,
+    };
+    cfg.max_batch = 64;
+    cfg.preemption = sc.mode;
+    cfg.victim = sc.victim;
+    if sc.chunked {
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 16;
+        cfg.max_batched_tokens = 48;
+    }
+    cfg
+}
+
+fn prop_cases(default: usize) -> usize {
+    std::env::var("JUSTITIA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+#[test]
+fn prop_default_knobs_are_bit_identical_across_schedulers() {
+    let cfg = PropConfig { cases: prop_cases(30), seed: 0x9ee3_7a01, max_shrink_steps: 60 };
+    check(&cfg, &PreemptStrategy, |sc| {
+        for policy in [
+            Policy::Fcfs,
+            Policy::Sjf,
+            Policy::AgentFcfs,
+            Policy::Vtc,
+            Policy::Srjf,
+            Policy::Justitia,
+        ] {
+            let run = |explicit: bool| {
+                let mut cfg = config_for(sc);
+                // Neutralize the scenario's preemption knobs: this property
+                // is about the DEFAULT configuration.
+                cfg.preemption = PreemptionMode::Swap;
+                cfg.victim = VictimPolicy::Youngest;
+                cfg.backend.host_kv_tokens = if explicit { Some(1 << 40) } else { None };
+                cfg.backend.swap_bw_tokens_per_sec = 0.0;
+                let suite = Suite::new(sc.agents.clone());
+                let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+                let mut engine = Engine::new(&cfg, sched, SimBackend::unit_time());
+                let model = justitia::cost::CostModel::MemoryCentric;
+                engine.run_suite(&suite, |a| model.agent_cost(a));
+                (
+                    engine.metrics.jcts(),
+                    engine.metrics.iterations(),
+                    engine.metrics.swap_out_count(),
+                    engine.metrics.recompute_count(),
+                )
+            };
+            let default = run(false);
+            let explicit = run(true);
+            if default != explicit {
+                return Err(format!(
+                    "{policy:?}: classical config diverged from default \
+                     (default {:?} vs explicit {:?})",
+                    (default.1, default.2, default.3),
+                    (explicit.1, explicit.2, explicit.3),
+                ));
+            }
+            if default.3 != 0 {
+                return Err(format!(
+                    "{policy:?}: default (swap/youngest/unbounded) engine recomputed \
+                     {} times",
+                    default.3
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_preemption_conservation() {
+    let cfg = PropConfig { cases: prop_cases(40), seed: 0x5eed_90b2, max_shrink_steps: 60 };
+    check(&cfg, &PreemptStrategy, |sc| {
+        for policy in [Policy::Fcfs, Policy::Justitia, Policy::Srjf] {
+            let cfg = config_for(sc);
+            let suite = Suite::new(sc.agents.clone());
+            let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+            let mut engine = Engine::new(&cfg, sched, SimBackend::unit_time());
+            let model = justitia::cost::CostModel::MemoryCentric;
+
+            // Drive arrivals by hand so invariants can be checked per step.
+            let mut next = 0usize;
+            let mut guard = 0u64;
+            loop {
+                while next < suite.agents.len()
+                    && suite.agents[next].arrival <= engine.now() + 1e-12
+                {
+                    let spec = suite.agents[next].clone();
+                    let cost = model.agent_cost(&spec);
+                    engine.submit(spec, cost);
+                    next += 1;
+                }
+                if !engine.has_work() {
+                    if next >= suite.agents.len() {
+                        break;
+                    }
+                    engine.advance_clock(suite.agents[next].arrival);
+                    continue;
+                }
+                engine.step();
+                engine
+                    .check_chunked_accounting()
+                    .map_err(|e| format!("{policy:?} {:?}/{:?}: accounting: {e}", sc.mode, sc.victim))?;
+                engine
+                    .check_kv_invariants()
+                    .map_err(|e| format!("{policy:?} {:?}/{:?}: kv: {e}", sc.mode, sc.victim))?;
+                guard += 1;
+                if guard > 2_000_000 {
+                    return Err(format!("{policy:?}: did not terminate"));
+                }
+            }
+            if engine.metrics.completed_agents() != suite.len() {
+                return Err(format!(
+                    "{policy:?} {:?}/{:?}: {}/{} agents completed",
+                    sc.mode,
+                    sc.victim,
+                    engine.metrics.completed_agents(),
+                    suite.len()
+                ));
+            }
+            if engine.kv.free_pages() != sc.pages as u32 {
+                return Err(format!(
+                    "{policy:?}: leaked pages: {} free of {}",
+                    engine.kv.free_pages(),
+                    sc.pages
+                ));
+            }
+            // A zero-token host can never hold a victim: every preemption
+            // must have been a recompute drop.
+            if sc.host_tokens == Some(0) && engine.metrics.swap_out_count() > 0 {
+                return Err(format!(
+                    "{policy:?}: {} swap-outs into a 0-token host pool",
+                    engine.metrics.swap_out_count()
+                ));
+            }
+            // Recompute mode never swaps.
+            if sc.mode == PreemptionMode::Recompute && engine.metrics.swap_out_count() > 0 {
+                return Err(format!(
+                    "{policy:?}: recompute mode performed {} swap-outs",
+                    engine.metrics.swap_out_count()
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -43,6 +43,8 @@ fn pjrt_config(model: &PjrtModel) -> Config {
         beta_decode: 0.0,
         swap_cost_per_token: 0.0,
         beta_mixed: 0.0,
+        host_kv_tokens: None,
+        swap_bw_tokens_per_sec: 0.0,
     };
     cfg.max_batch = model.max_decode_batch();
     cfg

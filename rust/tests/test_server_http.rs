@@ -43,6 +43,7 @@ fn serve_submit_poll_complete() {
             justitia::config::Policy::Justitia,
             1,
             justitia::cluster::Placement::ClusterVtime,
+            false,
         );
     });
 

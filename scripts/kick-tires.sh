@@ -25,7 +25,7 @@ while [ $# -gt 0 ]; do
 done
 
 echo "== Kick Tires: Justitia reproduction =="
-echo "[1/7] cargo build --release"
+echo "[1/8] cargo build --release"
 (cd rust && cargo build --release)
 BIN="$ROOT/rust/target/release/justitia"
 
@@ -36,34 +36,40 @@ cd "$ROOT"
 rm -rf results
 mkdir -p results
 
-echo "[2/7] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
+echo "[2/8] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
 "$BIN" experiment all --agents "$AGENTS" --seed "$SEED"
 
-echo "[3/7] cluster scale-out sweep (1/2/4/8 replicas x 4 placements)"
+echo "[3/8] cluster scale-out sweep (1/2/4/8 replicas x 4 placements)"
 "$BIN" cluster --agents "$AGENTS" --seed "$SEED"
 
-echo "[4/7] prefix-sharing sweep (radix-tree KV dedup off vs on)"
+echo "[4/8] prefix-sharing sweep (radix-tree KV dedup off vs on)"
 # `experiment all` above already ran the sweep with these arguments; only
 # re-run if its JSON artifact is somehow missing.
 if [ ! -f results/prefix_sharing.json ]; then
   "$BIN" experiment prefix_sharing --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[5/7] DAG-agents sweep (map-reduce/tree/pipeline, correction off vs on)"
+echo "[5/8] DAG-agents sweep (map-reduce/tree/pipeline, correction off vs on)"
 if [ ! -f results/dag_agents.json ]; then
   "$BIN" experiment dag_agents --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[6/7] chunked-prefill sweep (chunk x budget vs atomic admission)"
+echo "[6/8] chunked-prefill sweep (chunk x budget vs atomic admission)"
 if [ ! -f results/chunked_prefill.json ]; then
   "$BIN" experiment chunked_prefill --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[7/7] collecting outputs under out/"
+echo "[7/8] preemption sweep (host tier x mode x victim)"
+if [ ! -f results/preemption.json ]; then
+  "$BIN" experiment preemption --agents "$AGENTS" --seed "$SEED"
+fi
+
+echo "[8/8] collecting outputs under out/"
 cp results/*.txt out/
 cp results/prefix_sharing.json out/BENCH_prefix.json
 cp results/dag_agents.json out/BENCH_dag.json
 cp results/chunked_prefill.json out/BENCH_chunked.json
+cp results/preemption.json out/BENCH_preempt.json
 {
   echo "kick-tires run: agents=$AGENTS seed=$SEED date=$(date -u +%Y-%m-%dT%H:%M:%SZ)"
   echo "binary: $BIN"
