@@ -1,0 +1,144 @@
+//! Engine hot-path macro-bench (ISSUE 6): events/sec of the event-driven
+//! core at 10k and 100k agents, with a regression gate against a committed
+//! baseline.
+//!
+//! One timed end-to-end `run_suite` per size (suite-scale runs are too long
+//! for iterated sampling); "events/sec" is retired engine iterations per
+//! wall second — the discrete-event analogue of a tick rate. The JSON
+//! artifact lands at `results/BENCH_engine.json`; CI uploads it and fails
+//! the job when a measured rate drops more than `tolerance` (default 15%)
+//! below the committed baseline `ci/bench_engine_baseline.json` (pointed at
+//! via `JUSTITIA_BENCH_BASELINE`; without the env var the gate is skipped so
+//! local runs never fail on slow laptops). Baseline numbers are deliberately
+//! conservative floors — ratchet them upward as real runner numbers accrue.
+
+use justitia::config::{Config, Policy, WorkloadConfig};
+use justitia::cost::CostModel;
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::util::bench::section;
+use justitia::util::json::{obj, Json};
+use std::time::Instant;
+
+struct Row {
+    agents: usize,
+    iterations: u64,
+    wall_s: f64,
+    events_per_sec: f64,
+}
+
+fn run_once(n_agents: usize, event_core: bool) -> Row {
+    let mut cfg = Config::default();
+    cfg.event_core = event_core;
+    cfg.workload =
+        WorkloadConfig { n_agents, seed: 42, ..Default::default() }.with_density(3.0);
+    // Lean suite: input text is predictor-only and dominates memory at scale.
+    let suite = justitia::workload::trace::build_suite_lean(&cfg.workload);
+    let sched = justitia::sched::build(Policy::Justitia, cfg.backend.kv_tokens, 1.0);
+    let mut engine = Engine::new(&cfg, sched, SimBackend::new(&cfg.backend));
+    let model = CostModel::MemoryCentric;
+    let t0 = Instant::now();
+    let makespan = engine.run_suite(&suite, |a| model.agent_cost(a));
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let iterations = engine.metrics.iterations();
+    assert_eq!(
+        engine.metrics.completed_agents(),
+        n_agents,
+        "bench run dropped agents (makespan {makespan:.1}s)"
+    );
+    Row { agents: n_agents, iterations, wall_s, events_per_sec: iterations as f64 / wall_s }
+}
+
+fn main() {
+    section("engine hot path (event core)");
+    let mut rows = Vec::new();
+    for n in [10_000usize, 100_000] {
+        let r = run_once(n, true);
+        println!(
+            "event-core {:>7} agents: {:>9} iterations in {:>7.2}s = {:>10.0} events/sec",
+            r.agents, r.iterations, r.wall_s, r.events_per_sec
+        );
+        rows.push(r);
+    }
+
+    // The legacy tick loop at the small size, for the speedup column.
+    let tick = run_once(10_000, false);
+    println!(
+        "tick-loop  {:>7} agents: {:>9} iterations in {:>7.2}s = {:>10.0} events/sec",
+        tick.agents, tick.iterations, tick.wall_s, tick.events_per_sec
+    );
+    let speedup = rows[0].events_per_sec / tick.events_per_sec.max(1e-9);
+    println!("event core vs tick loop at 10k agents: {speedup:.2}x");
+
+    let json = obj([
+        ("bench", Json::Str("engine_hot_path".into())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj([
+                            ("agents", Json::Num(r.agents as f64)),
+                            ("iterations", Json::Num(r.iterations as f64)),
+                            ("wall_s", Json::Num(r.wall_s)),
+                            ("events_per_sec", Json::Num(r.events_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("tick_10k_events_per_sec", Json::Num(tick.events_per_sec)),
+        ("event_vs_tick_speedup_10k", Json::Num(speedup)),
+    ]);
+    let _ = std::fs::create_dir_all("results");
+    let path = std::path::Path::new("results/BENCH_engine.json");
+    if let Err(e) = std::fs::write(path, json.pretty() + "\n") {
+        eprintln!("warn: failed writing {}: {e}", path.display());
+    } else {
+        println!("wrote {}", path.display());
+    }
+
+    // Regression gate (CI only: JUSTITIA_BENCH_BASELINE points at the
+    // committed baseline; absent locally, the gate is informational).
+    let Some(baseline_path) = std::env::var_os("JUSTITIA_BENCH_BASELINE") else {
+        println!("JUSTITIA_BENCH_BASELINE unset; skipping the regression gate");
+        return;
+    };
+    let text = std::fs::read_to_string(&baseline_path)
+        .unwrap_or_else(|e| panic!("read baseline {baseline_path:?}: {e}"));
+    let base = Json::parse(&text).expect("baseline JSON");
+    let tolerance = base.get("tolerance").as_f64().unwrap_or(0.15);
+    let mut failed = false;
+    for r in &rows {
+        let key = r.agents.to_string();
+        let Some(floor) = base.get("events_per_sec").get(&key).as_f64() else {
+            println!("baseline has no floor for {key} agents; skipping");
+            continue;
+        };
+        let min_ok = floor * (1.0 - tolerance);
+        if r.events_per_sec < min_ok {
+            eprintln!(
+                "REGRESSION: {} agents at {:.0} events/sec, more than {:.0}% below \
+                 the baseline {:.0} (floor {:.0})",
+                r.agents,
+                r.events_per_sec,
+                tolerance * 100.0,
+                floor,
+                min_ok
+            );
+            failed = true;
+        } else {
+            println!(
+                "gate ok: {} agents at {:.0} events/sec >= {:.0} (baseline {:.0} - {:.0}%)",
+                r.agents,
+                r.events_per_sec,
+                min_ok,
+                floor,
+                tolerance * 100.0
+            );
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

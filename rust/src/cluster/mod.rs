@@ -189,6 +189,30 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
         mut predict: F,
     ) -> f64 {
         // Phase 1: placement, in global arrival order.
+        let (subs, costs) = self.place_suite(suite, &mut predict);
+        // Phase 2: independent replica runs over the (already arrival-sorted,
+        // globally-id'd) sub-traces. Suite::new would re-index ids, so the
+        // sub-suites are constructed directly.
+        for (r, agents) in subs.into_iter().enumerate() {
+            if agents.is_empty() {
+                continue;
+            }
+            let sub = Suite { agents };
+            self.replicas[r].run_suite(&sub, |a| costs[&a.id]);
+        }
+        self.makespan()
+    }
+
+    /// Placement phase shared by the serial and parallel suite drivers:
+    /// route every agent in global arrival order, recording assignments and
+    /// the predicted cost (`predict` is called exactly once per agent, in
+    /// suite order, preserving any stateful noise stream). Returns the
+    /// per-replica sub-traces and the cost table.
+    fn place_suite<F: FnMut(&AgentSpec) -> f64>(
+        &mut self,
+        suite: &Suite,
+        predict: &mut F,
+    ) -> (Vec<Vec<AgentSpec>>, HashMap<AgentId, f64>) {
         let n = self.replicas.len();
         let mut subs: Vec<Vec<AgentSpec>> = vec![Vec::new(); n];
         let mut costs: HashMap<AgentId, f64> = HashMap::with_capacity(suite.len());
@@ -200,16 +224,43 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
             costs.insert(a.id, cost);
             subs[r].push(a.clone());
         }
-        // Phase 2: independent replica runs over the (already arrival-sorted,
-        // globally-id'd) sub-traces. Suite::new would re-index ids, so the
-        // sub-suites are constructed directly.
-        for (r, agents) in subs.into_iter().enumerate() {
-            if agents.is_empty() {
-                continue;
-            }
-            let sub = Suite { agents };
-            self.replicas[r].run_suite(&sub, |a| costs[&a.id]);
+        (subs, costs)
+    }
+
+    /// [`run_suite`](Self::run_suite) with the phase-2 replica simulations
+    /// spread over a [`ThreadPool`](crate::util::threadpool::ThreadPool) of
+    /// `threads` workers. Replicas are *independent* discrete-event
+    /// simulations over disjoint sub-traces, so running them concurrently
+    /// changes nothing observable: placement (phase 1) stays serial in
+    /// global arrival order, every engine computes exactly what it computes
+    /// under the serial driver, engines are reinstalled in replica index
+    /// order (`ThreadPool::map` preserves input order), and
+    /// [`merged_metrics`](Self::merged_metrics) folds them in that same
+    /// order — so the merged metrics are byte-identical for ANY thread
+    /// count, 1 worker included (asserted by
+    /// `tests/test_parallel_replica_determinism.rs`). `threads <= 1`
+    /// delegates to the serial driver outright.
+    pub fn run_suite_parallel<F>(&mut self, suite: &Suite, mut predict: F, threads: usize) -> f64
+    where
+        F: FnMut(&AgentSpec) -> f64,
+        B: Send + 'static,
+    {
+        if threads <= 1 {
+            return self.run_suite(suite, predict);
         }
+        let (subs, costs) = self.place_suite(suite, &mut predict);
+        let costs = std::sync::Arc::new(costs);
+        // Engines move onto the pool and come back in input order.
+        let replicas = std::mem::take(&mut self.replicas);
+        let jobs: Vec<(Engine<B>, Vec<AgentSpec>)> = replicas.into_iter().zip(subs).collect();
+        let pool = crate::util::threadpool::ThreadPool::new(threads);
+        self.replicas = pool.map(jobs, move |(mut engine, agents)| {
+            if !agents.is_empty() {
+                let sub = Suite { agents };
+                engine.run_suite(&sub, |a| costs[&a.id]);
+            }
+            engine
+        });
         self.makespan()
     }
 

@@ -431,6 +431,13 @@ pub struct Config {
     /// How preemption victims are ranked. Default [`VictimPolicy::Youngest`]
     /// reproduces the pre-subsystem victim choice bit for bit.
     pub victim: VictimPolicy,
+    /// Drive suites through the event/calendar-queue core (DESIGN.md §12):
+    /// arrivals fire from a deterministic binary-heap calendar, batch
+    /// composition is incremental between events, and the scheduler receives
+    /// engine-event hooks. Off by default for one PR — the legacy tick loop
+    /// is the differential-test oracle the event core is proven bit-identical
+    /// against (`prop_event_core_identity`).
+    pub event_core: bool,
 }
 
 impl Default for Config {
@@ -450,6 +457,7 @@ impl Default for Config {
             prefill_chunk: 512,
             preemption: PreemptionMode::Swap,
             victim: VictimPolicy::Youngest,
+            event_core: false,
         }
     }
 }
@@ -535,6 +543,9 @@ impl Config {
         }
         if let Some(x) = v.get("victim").as_str() {
             cfg.victim = VictimPolicy::by_name(x)?;
+        }
+        if let Some(x) = v.get("event_core").as_bool() {
+            cfg.event_core = x;
         }
         let c = v.get("cluster");
         if c.as_obj().is_some() {
@@ -649,6 +660,9 @@ impl Config {
         }
         if let Some(v) = args.get("victim") {
             self.victim = VictimPolicy::by_name(v)?;
+        }
+        if args.has("event-core") {
+            self.event_core = true;
         }
         if let Some(h) = args.get("host-mem-pages") {
             // Pages of the *current* backend profile (applied after any

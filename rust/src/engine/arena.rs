@@ -1,0 +1,148 @@
+//! A flat slot arena with dense `u32` ids (DESIGN.md §12).
+//!
+//! The event core keeps bulk state — pending arrivals today; sequence and
+//! KV-page records as the tick-era hash maps retire — in flat vectors
+//! indexed by dense ids instead of `HashMap`s keyed by sparse ids: one
+//! bounds-checked index replaces a hash + probe on the hot path, iteration
+//! is cache-linear, and freed slots are recycled LIFO so the arena's
+//! footprint tracks the *live* population, not the total ever inserted.
+//!
+//! Determinism note: slot ids are assigned by a free-list pop (LIFO) falling
+//! back to append, a pure function of the insert/remove call sequence — two
+//! identical replays hand out identical ids.
+
+/// A flat arena of `T` slots with LIFO slot reuse.
+#[derive(Debug, Clone)]
+pub struct Arena<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Arena { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+}
+
+impl<T> Arena<T> {
+    /// An empty arena.
+    pub fn new() -> Self {
+        Arena::default()
+    }
+
+    /// An empty arena with room for `n` slots before reallocating.
+    pub fn with_capacity(n: usize) -> Self {
+        Arena { slots: Vec::with_capacity(n), free: Vec::new(), live: 0 }
+    }
+
+    /// Insert a value, returning its dense slot id.
+    pub fn insert(&mut self, value: T) -> u32 {
+        self.live += 1;
+        match self.free.pop() {
+            Some(id) => {
+                debug_assert!(self.slots[id as usize].is_none(), "free list corrupt");
+                self.slots[id as usize] = Some(value);
+                id
+            }
+            None => {
+                let id = u32::try_from(self.slots.len()).expect("arena overflow");
+                self.slots.push(Some(value));
+                id
+            }
+        }
+    }
+
+    /// The value in `slot`, if live.
+    pub fn get(&self, slot: u32) -> Option<&T> {
+        self.slots.get(slot as usize).and_then(|s| s.as_ref())
+    }
+
+    /// Mutable access to the value in `slot`, if live.
+    pub fn get_mut(&mut self, slot: u32) -> Option<&mut T> {
+        self.slots.get_mut(slot as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Remove and return the value in `slot`; the slot is recycled by the
+    /// next insert. Returns `None` if the slot was already free.
+    pub fn remove(&mut self, slot: u32) -> Option<T> {
+        let v = self.slots.get_mut(slot as usize).and_then(|s| s.take());
+        if v.is_some() {
+            self.live -= 1;
+            self.free.push(slot);
+        }
+        v
+    }
+
+    /// Number of live values.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    /// Whether no values are live.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate `(slot, &value)` over live slots in ascending slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (i as u32, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut a = Arena::new();
+        let x = a.insert("x");
+        let y = a.insert("y");
+        assert_eq!((x, y), (0, 1));
+        assert_eq!(a.get(x), Some(&"x"));
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.remove(x), Some("x"));
+        assert_eq!(a.get(x), None);
+        assert_eq!(a.remove(x), None, "double remove is inert");
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn slots_recycle_lifo() {
+        let mut a = Arena::with_capacity(4);
+        let ids: Vec<u32> = (0..4).map(|i| a.insert(i)).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        a.remove(1);
+        a.remove(3);
+        // LIFO reuse: last freed slot hands out first.
+        assert_eq!(a.insert(30), 3);
+        assert_eq!(a.insert(10), 1);
+        assert_eq!(a.insert(40), 4);
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn get_mut_and_iter() {
+        let mut a = Arena::new();
+        for i in 0..5 {
+            a.insert(i * 10);
+        }
+        a.remove(2);
+        *a.get_mut(4).unwrap() += 1;
+        let live: Vec<(u32, i32)> = a.iter().map(|(s, &v)| (s, v)).collect();
+        assert_eq!(live, vec![(0, 0), (1, 10), (3, 30), (4, 41)]);
+        assert!(a.get_mut(2).is_none());
+    }
+
+    #[test]
+    fn empty_arena() {
+        let a: Arena<u8> = Arena::new();
+        assert!(a.is_empty());
+        assert_eq!(a.iter().count(), 0);
+        assert!(a.get(0).is_none());
+    }
+}

@@ -1,0 +1,200 @@
+//! The event/calendar-queue core of the simulator (DESIGN.md §12).
+//!
+//! A discrete-event simulator advances time by *popping the next event*,
+//! not by scanning every sequence every tick. This module provides the
+//! calendar: a binary-heap [`EventQueue`] of timestamped [`Event`]s with a
+//! deterministic total order — events pop in global time order, and ties
+//! break by insertion sequence (FIFO within one timestamp), so a replay is
+//! reproducible bit for bit regardless of how the heap happened to
+//! rebalance.
+//!
+//! Event taxonomy (DESIGN.md §12): the queue carries the *exogenous*
+//! events — agent [`EventKind::Admission`] arrivals, whose timestamps are
+//! known when the trace is loaded. The *endogenous* events (chunk-complete,
+//! decode-batch-complete, swap-done, recompute-ready, spawn) are emitted by
+//! the engine at iteration boundaries as [`EngineEvent`]s into the
+//! scheduler's [`on_event`](crate::sched::Scheduler::on_event) hook instead
+//! of being enqueued ahead of time: under continuous batching their
+//! timestamps are a function of batch composition (the backend prices the
+//! whole iteration at once), so a pre-queued endogenous event would have to
+//! be speculatively invalidated whenever the batch changed — the classical
+//! event-cancellation problem. Emitting them at the boundary keeps the
+//! calendar monotone and the determinism argument trivial.
+
+use crate::workload::TaskId;
+use std::collections::BinaryHeap;
+
+/// What a queued calendar event does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// An agent arrival: `slot` indexes the pending-arrival
+    /// [`Arena`](super::arena::Arena) holding the spec to submit.
+    Admission { slot: u32 },
+}
+
+/// A timestamped calendar entry. Ordering is `(time, seq)` ascending — the
+/// queue assigns `seq` at push, so equal-time events fire in insertion
+/// order (FIFO), which is exactly the legacy tick loop's suite order.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Fire time (engine seconds).
+    pub time: f64,
+    /// Insertion sequence number — the deterministic tie-break.
+    pub seq: u64,
+    /// Payload.
+    pub kind: EventKind,
+}
+
+// `BinaryHeap` is a max-heap; reverse the comparison so the *smallest*
+// (time, seq) pops first. `total_cmp` gives a total order over every f64
+// (NaN included), so `Ord` is honest and the heap can never misbehave on
+// exotic timestamps.
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: earliest time first, then lowest seq (FIFO at one time).
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The calendar: a binary heap of [`Event`]s popping in deterministic
+/// `(time, insertion seq)` order.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    /// An empty calendar.
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Queue `kind` to fire at `time`. Assigns the insertion sequence
+    /// number that breaks same-time ties FIFO.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    /// The earliest event without removing it.
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek()
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    /// Number of queued events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether the calendar is empty.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// An endogenous engine event, emitted at iteration boundaries into the
+/// scheduler's [`on_event`](crate::sched::Scheduler::on_event) hook (the
+/// event-hook replacement for per-tick polling; see the module docs for why
+/// these are not queue-borne). Every variant fires *after* the engine state
+/// change it describes, at the engine clock passed alongside.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineEvent {
+    /// A task was admitted from the waiting queue into the running batch.
+    Admission { task: TaskId },
+    /// A sequence's prefill advanced by `tokens` this iteration (the chunk
+    /// that completed; the full uncached prompt when chunking is off).
+    ChunkComplete { task: TaskId, tokens: u32 },
+    /// One engine iteration retired: `decoders` sequences appended a token
+    /// and `prefills` sequences ran prefill work.
+    DecodeBatchComplete { decoders: usize, prefills: usize },
+    /// A swapped-out sequence finished swapping back onto the device.
+    SwapDone { task: TaskId },
+    /// A recompute-preempted sequence re-entered the running batch.
+    RecomputeReady { task: TaskId },
+    /// A completed task dynamically spawned a child task.
+    Spawn { task: TaskId },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        for (i, t) in [5.0, 1.0, 3.0, 0.5, 4.0].iter().enumerate() {
+            q.push(*t, EventKind::Admission { slot: i as u32 });
+        }
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(order, vec![0.5, 1.0, 3.0, 4.0, 5.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_times_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for slot in 0..100u32 {
+            q.push(7.25, EventKind::Admission { slot });
+        }
+        let slots: Vec<u32> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::Admission { slot } => slot,
+            })
+            .collect();
+        assert_eq!(slots, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::Admission { slot: 0 });
+        q.push(1.0, EventKind::Admission { slot: 1 });
+        assert_eq!(q.pop().unwrap().time, 1.0);
+        q.push(0.5, EventKind::Admission { slot: 2 });
+        q.push(2.0, EventKind::Admission { slot: 3 });
+        assert_eq!(q.pop().unwrap().time, 0.5);
+        // The two time-2.0 events fire in push order despite the pops
+        // between them.
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        assert_eq!((a.time, b.time), (2.0, 2.0));
+        assert!(a.seq < b.seq);
+        match (a.kind, b.kind) {
+            (EventKind::Admission { slot: x }, EventKind::Admission { slot: y }) => {
+                assert_eq!((x, y), (0, 3));
+            }
+        }
+    }
+
+    #[test]
+    fn len_and_peek() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.len(), 0);
+        assert!(q.peek().is_none());
+        q.push(1.5, EventKind::Admission { slot: 9 });
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek().unwrap().time, 1.5);
+        assert_eq!(q.len(), 1, "peek must not consume");
+    }
+}

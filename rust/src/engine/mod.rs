@@ -15,6 +15,8 @@
 //! real PJRT transformer backend (`runtime::PjrtBackend`) run the *same*
 //! engine/scheduler code — DESIGN.md substitution T1 hinges on this.
 
+pub mod arena;
+pub mod event;
 pub mod exec;
 
 use crate::config::{Config, Policy, PreemptionMode, VictimPolicy};
@@ -24,6 +26,8 @@ use crate::metrics::RunMetrics;
 use crate::prefix::{PrefixCache, PrefixMatch};
 use crate::sched::{AgentInfo, Scheduler, TaskInfo};
 use crate::workload::{AgentId, AgentSpec, InferenceSpec, PrefixGroup, Suite, TaskId};
+use arena::Arena;
+use event::{EngineEvent, EventKind, EventQueue};
 use exec::{ExecBackend, IterationBatch};
 use std::collections::{HashMap, VecDeque};
 
@@ -194,6 +198,20 @@ pub struct Engine<B: ExecBackend> {
     /// Per-iteration token budget shared by decodes (one token each) and
     /// prefill chunks; `u32::MAX` when chunking is off.
     token_budget: u32,
+    /// Event/calendar-queue core (`cfg.event_core`, DESIGN.md §12): suites
+    /// run off a deterministic event calendar, batch composition becomes
+    /// incremental between events, and the scheduler receives
+    /// [`EngineEvent`] hooks. Off ⇒ the legacy tick loop, untouched — the
+    /// differential-test oracle.
+    event_core: bool,
+    /// Incremental-composition dirty bit: set whenever the running set's
+    /// membership (admission, swap, preemption, completion) or a prefill
+    /// transition invalidates [`decode_cache`](Self::decode_cache).
+    batch_dirty: bool,
+    /// The cached all-decoder batch, valid iff `!batch_dirty`: outside
+    /// chunk mode, composition is a pure function of running-set
+    /// membership, so between mutating events it need not be recomputed.
+    decode_cache: Vec<TaskId>,
 }
 
 impl<B: ExecBackend> Engine<B> {
@@ -252,6 +270,9 @@ impl<B: ExecBackend> Engine<B> {
             } else {
                 u32::MAX
             },
+            event_core: cfg.event_core,
+            batch_dirty: true,
+            decode_cache: Vec::new(),
         }
     }
 
@@ -372,6 +393,10 @@ impl<B: ExecBackend> Engine<B> {
             swap_in_tokens += self.kv.swap_in(seq.id).expect("can_swap_in checked");
             self.backend.on_swap_in(seq.id, self.kv.block_table(seq.id).unwrap());
             self.running.push(seq);
+            self.batch_dirty = true;
+            if self.event_core {
+                self.scheduler.on_event(&EngineEvent::SwapDone { task: id }, self.clock);
+            }
         }
 
         // 1b. Recompute re-entry, once the swap queue has drained: dropped
@@ -393,6 +418,11 @@ impl<B: ExecBackend> Engine<B> {
                         seq.cached_tokens = cached;
                         seq.prefix_path = path;
                         self.running.push(seq);
+                        self.batch_dirty = true;
+                        if self.event_core {
+                            self.scheduler
+                                .on_event(&EngineEvent::RecomputeReady { task: id }, self.clock);
+                        }
                     }
                     None => {
                         self.admission_blocked = true;
@@ -436,7 +466,11 @@ impl<B: ExecBackend> Engine<B> {
                     served: 0.0,
                     recompute_refill: false,
                 });
+                self.batch_dirty = true;
                 self.metrics.on_task_admitted(task.id, self.clock);
+                if self.event_core {
+                    self.scheduler.on_event(&EngineEvent::Admission { task: task.id }, self.clock);
+                }
             }
             if self.running.len() >= self.max_batch {
                 self.admission_blocked = true;
@@ -496,83 +530,102 @@ impl<B: ExecBackend> Engine<B> {
         //    exactly the atomic-admission batch. `plan[i]` holds running
         //    sequence i's prefill tokens this iteration (`None` = decoder,
         //    or a pending prefill stalled by the budget / page shortage).
-        let mut plan: Vec<Option<u32>>;
-        let mut prefill: Vec<(TaskId, u32)>;
+        let mut plan: Vec<Option<u32>> = Vec::new();
+        let mut prefill: Vec<(TaskId, u32)> = Vec::new();
         let mut decode: Vec<TaskId>;
-        let mut stalls: u64;
+        let mut stalls: u64 = 0;
         // Real chunking in effect (not the flag-off / degenerate path whose
         // bit-identity to the atomic engine is guaranteed).
         let chunk_mode = self.prefill_chunk != u32::MAX || self.token_budget != u32::MAX;
-        loop {
-            plan = vec![None; self.running.len()];
-            prefill = Vec::new();
-            decode = Vec::new();
-            stalls = 0;
-            let mut budget = self.token_budget;
-            for s in &self.running {
-                if !s.needs_prefill {
-                    decode.push(s.id);
-                    budget = budget.saturating_sub(1);
-                }
-            }
-            for i in 0..self.running.len() {
-                let (id, prefilled, remaining) = {
-                    let s = &self.running[i];
+        // Incremental composition (event core, DESIGN.md §12): outside chunk
+        // mode the batch is a pure function of running-set membership, so
+        // when no admission, swap, preemption, completion, or prefill
+        // transition has fired since the last iteration, the cached
+        // all-decoder list IS the batch — no per-sequence re-examination.
+        let cached_batch = self.event_core && !chunk_mode && !self.batch_dirty;
+        if cached_batch {
+            decode = std::mem::take(&mut self.decode_cache);
+            debug_assert_eq!(
+                decode,
+                self.running.iter().map(|s| s.id).collect::<Vec<_>>(),
+                "decode cache out of sync with the running set"
+            );
+        } else {
+            loop {
+                plan = vec![None; self.running.len()];
+                prefill = Vec::new();
+                decode = Vec::new();
+                stalls = 0;
+                let mut budget = self.token_budget;
+                for s in &self.running {
                     if !s.needs_prefill {
-                        continue;
-                    }
-                    (s.id, s.prefilled, s.prompt - s.prefilled)
-                };
-                let mut take = remaining.min(self.prefill_chunk).min(budget);
-                if take == 0 && remaining > 0 {
-                    stalls += 1; // budget spent before this sequence's turn
-                    continue;
-                }
-                // Pages already acquired but not yet filled (the admission
-                // chunk, or a prior iteration's budget shortfall).
-                let covered = self.kv.seq_tokens(id).expect("running seq allocated") - prefilled;
-                if take > covered && self.try_extend(id, take - covered).is_err() {
-                    // No page even after cache eviction: prefill only what
-                    // is already covered, possibly nothing, this iteration.
-                    take = covered;
-                    if take == 0 {
-                        stalls += 1;
-                        continue;
+                        decode.push(s.id);
+                        budget = budget.saturating_sub(1);
                     }
                 }
-                if chunk_mode && take == remaining && !self.kv.can_append(id) {
-                    // The iteration completing this prefill also appends the
-                    // first output token, but try_extend reclaimed only the
-                    // chunk's own pages. Give the append the same cheapest-
-                    // reclaim chance the decode path gets, or a lone runner
-                    // could hit the capacity panic in step 5 while
-                    // reclaimable cache pages still exist.
-                    self.evict_cache_for(1);
+                for i in 0..self.running.len() {
+                    let (id, prefilled, remaining) = {
+                        let s = &self.running[i];
+                        if !s.needs_prefill {
+                            continue;
+                        }
+                        (s.id, s.prefilled, s.prompt - s.prefilled)
+                    };
+                    let mut take = remaining.min(self.prefill_chunk).min(budget);
+                    if take == 0 && remaining > 0 {
+                        stalls += 1; // budget spent before this sequence's turn
+                        continue;
+                    }
+                    // Pages already acquired but not yet filled (the admission
+                    // chunk, or a prior iteration's budget shortfall).
+                    let covered = self.kv.seq_tokens(id).expect("running seq allocated") - prefilled;
+                    if take > covered && self.try_extend(id, take - covered).is_err() {
+                        // No page even after cache eviction: prefill only what
+                        // is already covered, possibly nothing, this iteration.
+                        take = covered;
+                        if take == 0 {
+                            stalls += 1;
+                            continue;
+                        }
+                    }
+                    if chunk_mode && take == remaining && !self.kv.can_append(id) {
+                        // The iteration completing this prefill also appends the
+                        // first output token, but try_extend reclaimed only the
+                        // chunk's own pages. Give the append the same cheapest-
+                        // reclaim chance the decode path gets, or a lone runner
+                        // could hit the capacity panic in step 5 while
+                        // reclaimable cache pages still exist.
+                        self.evict_cache_for(1);
+                    }
+                    plan[i] = Some(take);
+                    prefill.push((id, take));
+                    budget = budget.saturating_sub(take);
                 }
-                plan[i] = Some(take);
-                prefill.push((id, take));
-                budget = budget.saturating_sub(take);
+                if !prefill.is_empty() || !decode.is_empty() {
+                    break;
+                }
+                // Chunked-prefill starvation valve: every runner is a
+                // mid-prefill sequence that could not acquire a single page.
+                // Preempt one (under the configured victim policy — the
+                // youngest by default) so the others can progress next round
+                // (no waiting task is touched, so the non-preemptive rule
+                // holds). Unreachable with chunking off: whole prompts are
+                // page-backed at admission.
+                if self.running.len() == 1 {
+                    panic!(
+                        "sequence {} needs more KV than the whole pool ({} tokens): \
+                         workload exceeds capacity",
+                        self.running[0].id,
+                        self.kv.capacity_tokens()
+                    );
+                }
+                swap_out_tokens += self.preempt_running(self.pick_valve_victim());
+                self.admission_blocked = false;
             }
-            if !prefill.is_empty() || !decode.is_empty() {
-                break;
-            }
-            // Chunked-prefill starvation valve: every runner is a
-            // mid-prefill sequence that could not acquire a single page.
-            // Preempt one (under the configured victim policy — the
-            // youngest by default) so the others can progress next round
-            // (no waiting task is touched, so the non-preemptive rule
-            // holds). Unreachable with chunking off: whole prompts are
-            // page-backed at admission.
-            if self.running.len() == 1 {
-                panic!(
-                    "sequence {} needs more KV than the whole pool ({} tokens): \
-                     workload exceeds capacity",
-                    self.running[0].id,
-                    self.kv.capacity_tokens()
-                );
-            }
-            swap_out_tokens += self.preempt_running(self.pick_valve_victim());
-            self.admission_blocked = false;
+            // Composition re-examined every running sequence: the cached-
+            // batch state is clean until the next membership or prefill
+            // mutation re-dirties it.
+            self.batch_dirty = false;
         }
         if stalls > 0 {
             self.metrics.on_prefill_stalls(stalls);
@@ -593,6 +646,21 @@ impl<B: ExecBackend> Engine<B> {
             decode.len(),
             prefill_tokens,
         );
+        if self.event_core {
+            // Endogenous events fire at the iteration boundary, stamped with
+            // the post-iteration clock (DESIGN.md §12): each chunk that ran,
+            // then the batch-retirement summary.
+            for &(task, tokens) in &prefill {
+                self.scheduler.on_event(&EngineEvent::ChunkComplete { task, tokens }, self.clock);
+            }
+            self.scheduler.on_event(
+                &EngineEvent::DecodeBatchComplete {
+                    decoders: decode.len(),
+                    prefills: prefill.len(),
+                },
+                self.clock,
+            );
+        }
 
         // 5. Token bookkeeping: sequences whose prefill completed become
         //    decoders (that iteration also emits their first token);
@@ -605,7 +673,9 @@ impl<B: ExecBackend> Engine<B> {
         for (i, s) in self.running.iter_mut().enumerate() {
             if s.needs_prefill {
                 // Stalled sequences ran no chunk: no progress, no service.
-                let Some(take) = plan[i] else { continue };
+                // (`plan` is empty on the cached-batch path, which carries
+                // no prefills — `.get` keeps the lookup total.)
+                let Some(take) = plan.get(i).copied().flatten() else { continue };
                 // VTC-style service accounting for the prompt tokens
                 // actually prefilled this iteration; cached-prefix tokens
                 // consumed no service (cache off ⇒ cached_tokens = 0), and
@@ -700,6 +770,18 @@ impl<B: ExecBackend> Engine<B> {
         }
         if let Some(cache) = self.prefix.as_ref() {
             self.metrics.on_cache_occupancy(cache.cached_pages() as u64);
+        }
+        if self.event_core {
+            if !chunk_mode && !self.batch_dirty && prefill.is_empty() {
+                // The batch that just ran was the pure all-decoder membership
+                // list and nothing mutated the running set during bookkeeping
+                // (no completion, no prefill transition): it IS the next
+                // iteration's batch.
+                self.decode_cache = decode;
+            } else {
+                self.decode_cache.clear();
+                self.batch_dirty = true;
+            }
         }
         result.elapsed
     }
@@ -916,6 +998,7 @@ impl<B: ExecBackend> Engine<B> {
         self.recompute.push_back(victim);
         // Pages returned to the pool: the blocked-admission memo is stale.
         self.admission_blocked = false;
+        self.batch_dirty = true;
     }
 
     /// Swap the running sequence at `idx` out to host: release its device
@@ -937,6 +1020,7 @@ impl<B: ExecBackend> Engine<B> {
         victim.cached_tokens = 0;
         self.metrics.on_swap_out(victim.id, self.clock);
         self.swapped.push_back(victim);
+        self.batch_dirty = true;
         moved
     }
 
@@ -989,6 +1073,7 @@ impl<B: ExecBackend> Engine<B> {
         }
         self.kv.release(id).expect("release finished seq");
         self.running.retain(|s| s.id != id);
+        self.batch_dirty = true;
         self.metrics.on_task_complete(id, self.clock);
 
         let now = self.clock;
@@ -1020,6 +1105,7 @@ impl<B: ExecBackend> Engine<B> {
         //    function of the spec — see workload::SpawnSpec). Children
         //    depend only on their parent, so they are released immediately,
         //    after any dependency releases (deterministic order).
+        let mut spawned_events: Vec<TaskId> = Vec::new();
         if let Some(spawn) = agent_state.spec.spawn.clone() {
             let base = agent_state.spec.tasks.len() as u32;
             let parent = agent_state.task_spec(id.index).clone();
@@ -1027,6 +1113,7 @@ impl<B: ExecBackend> Engine<B> {
                 agent_state.tasks_remaining += 1;
                 agent_state.known_tasks += 1;
                 released.push((child.id, child.prompt_tokens, child.decode_tokens));
+                spawned_events.push(child.id);
                 agent_state.spawned.insert(child.id.index, child);
                 self.metrics.on_task_spawned();
             }
@@ -1053,6 +1140,11 @@ impl<B: ExecBackend> Engine<B> {
 
         for (tid, p, d) in released {
             self.push_task(tid, p, d);
+        }
+        if self.event_core {
+            for task in spawned_events {
+                self.scheduler.on_event(&EngineEvent::Spawn { task }, self.clock);
+            }
         }
         if let Some((remaining, total)) = correction {
             self.scheduler.on_cost_update(id.agent, remaining, total, now);
@@ -1161,11 +1253,19 @@ impl<B: ExecBackend> Engine<B> {
     /// Drive the engine over a whole suite to completion, injecting arrivals
     /// at their trace times. `predict` maps an agent spec to the cost the
     /// scheduler sees. Returns total engine time.
+    ///
+    /// With `cfg.event_core` the suite runs off the event calendar
+    /// ([`run_suite_events`](Self::run_suite_events)); the default is the
+    /// legacy tick loop — `prop_event_core_identity` proves the two
+    /// bit-identical.
     pub fn run_suite<F: FnMut(&AgentSpec) -> f64>(
         &mut self,
         suite: &Suite,
         mut predict: F,
     ) -> f64 {
+        if self.event_core {
+            return self.run_suite_events(suite, predict);
+        }
         let mut next = 0usize;
         loop {
             // Inject all arrivals due at or before the current clock.
@@ -1198,6 +1298,94 @@ impl<B: ExecBackend> Engine<B> {
                 } else if self.swapped.is_empty() && !self.recompute.is_empty() {
                     // A recompute re-entry that cannot be admitted into an
                     // EMPTY device pool can never run.
+                    let s = self.recompute.front().expect("checked nonempty");
+                    panic!(
+                        "stuck: recompute re-entry of {} with prompt {} cannot fit \
+                         KV capacity {}",
+                        s.id,
+                        s.prompt,
+                        self.kv.capacity_tokens()
+                    );
+                } else if self.swapped.is_empty() && self.scheduler.waiting_len() > 0 {
+                    let t = self.scheduler.pop_next(self.clock).expect("waiting task");
+                    panic!(
+                        "stuck: task {} with prompt {} cannot fit KV capacity {}",
+                        t.id,
+                        t.prompt_tokens,
+                        self.kv.capacity_tokens()
+                    );
+                }
+            }
+        }
+        self.clock
+    }
+
+    /// The event/calendar-queue suite driver (DESIGN.md §12). The calendar
+    /// carries the exogenous events — one [`EventKind::Admission`] per
+    /// agent, timestamped with its trace arrival, payload a dense slot into
+    /// the pending-arrival [`Arena`] — and pops them in deterministic
+    /// `(time, insertion seq)` order, which is exactly the tick loop's
+    /// suite order (suites are arrival-sorted, equal arrivals in index
+    /// order). Between events the engine steps as usual; endogenous events
+    /// (chunk-complete, batch-complete, swap-done, recompute-ready, spawn)
+    /// are emitted from [`step`](Self::step) into the scheduler's
+    /// [`on_event`](crate::sched::Scheduler::on_event) hook at the
+    /// iteration boundary where their timestamps become known.
+    fn run_suite_events<F: FnMut(&AgentSpec) -> f64>(
+        &mut self,
+        suite: &Suite,
+        mut predict: F,
+    ) -> f64 {
+        // Pending arrivals live in a flat arena; the event payload is the
+        // dense slot id (== suite index here: inserts precede every
+        // remove). Specs are cloned lazily at fire time, so the calendar
+        // itself stays a few machine words per agent.
+        let mut pending: Arena<u32> = Arena::with_capacity(suite.agents.len());
+        let mut calendar = EventQueue::new();
+        for (i, a) in suite.agents.iter().enumerate() {
+            let slot = pending.insert(i as u32);
+            calendar.push(a.arrival, EventKind::Admission { slot });
+        }
+        loop {
+            // Fire every event due at or before the current clock — the
+            // same epsilon as the tick loop's arrival injection.
+            while let Some(ev) = calendar.peek() {
+                if ev.time > self.clock + 1e-12 {
+                    break;
+                }
+                let ev = calendar.pop().expect("peeked event");
+                match ev.kind {
+                    EventKind::Admission { slot } => {
+                        let idx = pending.remove(slot).expect("pending arrival") as usize;
+                        let spec = suite.agents[idx].clone();
+                        let cost = predict(&spec);
+                        // Align the engine clock with the trace arrival
+                        // (idle-skip safe), exactly as the tick loop does.
+                        if spec.arrival > self.clock {
+                            self.clock = spec.arrival;
+                        }
+                        self.submit(spec, cost);
+                    }
+                }
+            }
+            if !self.has_work() {
+                match calendar.peek() {
+                    None => break,
+                    // Idle: hop the clock straight to the next event.
+                    Some(ev) => {
+                        self.clock = ev.time;
+                        continue;
+                    }
+                }
+            }
+            let elapsed = self.step();
+            if elapsed == 0.0 && self.running.is_empty() {
+                // Blocked (nothing admissible): advance to the next
+                // calendar event, or bail if the workload is stuck — the
+                // same guards (and messages) as the tick loop.
+                if let Some(ev) = calendar.peek() {
+                    self.clock = self.clock.max(ev.time);
+                } else if self.swapped.is_empty() && !self.recompute.is_empty() {
                     let s = self.recompute.front().expect("checked nonempty");
                     panic!(
                         "stuck: recompute re-entry of {} with prompt {} cannot fit \

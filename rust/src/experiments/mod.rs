@@ -503,6 +503,16 @@ pub fn cluster_scaleout(
         }
     }
     let base = base.clone();
+    // Two levels of parallelism share one core budget: many small jobs run
+    // concurrently on the outer pool with serial replicas; a single huge job
+    // (the 1M-agent scale-out smoke) instead gives ALL cores to its replica
+    // simulations via `run_suite_parallel` — the merged metrics are
+    // byte-identical either way (see cluster::run_suite_parallel).
+    let inner_threads = if jobs.len() == 1 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        1
+    };
     let pool = ThreadPool::with_cpus();
     pool.map(jobs, move |(n_r, placement)| {
         let mut cfg = base.clone();
@@ -512,7 +522,14 @@ pub fn cluster_scaleout(
         cfg.workload.seed = seed;
         cfg.workload = cfg.workload.clone().with_density(density);
         cfg.cluster = crate::config::ClusterConfig { replicas: n_r, placement };
-        let suite = crate::workload::trace::build_suite(&cfg.workload);
+        // Past ~200k agents the synthesized prompt text dominates memory and
+        // nothing below reads it (costs come from the oracle): use the lean
+        // suite, which is identical except for empty `input_text`.
+        let suite = if n_agents >= 200_000 {
+            crate::workload::trace::build_suite_lean(&cfg.workload)
+        } else {
+            crate::workload::trace::build_suite(&cfg.workload)
+        };
         let model = cost_model_for(policy);
         let mut cluster = build_sim_cluster(&cfg, policy);
         // Same dedup-aware oracle rule as `run_policy`: with the prefix
@@ -523,7 +540,7 @@ pub fn cluster_scaleout(
         // overstating slowdowns for placements that scatter families and
         // therefore realize less physical sharing.
         let oracle = crate::cost::oracle_costs(cfg.prefix_cache, &suite, model);
-        let makespan = cluster.run_suite(&suite, |a| oracle[&a.id]);
+        let makespan = cluster.run_suite_parallel(&suite, |a| oracle[&a.id], inner_threads);
         let m = cluster.merged_metrics();
 
         // Fairness yardstick: the whole cluster as ONE GPS server of

@@ -32,6 +32,7 @@ fn main() {
         "dag",
         "online-correction",
         "chunked-prefill",
+        "event-core",
     ]);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
@@ -79,7 +80,8 @@ fn print_help() {
            --chunked-prefill   --prefill-chunk C   --max-batched-tokens T\n\
            --preemption swap|recompute|auto   --victim youngest|most-pages|\n\
                         cheapest-remaining|pamper-aware\n\
-           --host-mem-pages N   --swap-bw TOKENS_PER_SEC"
+           --host-mem-pages N   --swap-bw TOKENS_PER_SEC\n\
+           --event-core   (event-driven engine core; bit-identical, faster)"
     );
 }
 

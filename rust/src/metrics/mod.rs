@@ -779,6 +779,85 @@ mod tests {
     }
 
     #[test]
+    fn latency_hist_merge_is_associative_and_commutative() {
+        // ISSUE 6: parallel replica simulation merges per-replica histograms
+        // in replica index order, and the determinism guarantee leans on the
+        // merge being order-insensitive. Buckets and totals are u64 sums —
+        // exactly associative AND commutative — so every permutation and
+        // every grouping of the same histograms must agree bit for bit on
+        // counts and percentiles. The samples here are dyadic rationals
+        // (exact in binary), so even the f64 running sum (and therefore the
+        // mean) is bit-identical across orders.
+        let parts: Vec<LatencyHist> = [
+            vec![(0.25, 7u64), (0.5, 3)],
+            vec![(0.125, 4), (8.0, 2)],
+            vec![(0.0625, 1), (0.25, 9), (2.0, 5)],
+            vec![(16.0, 6)],
+        ]
+        .into_iter()
+        .map(|samples| {
+            let mut h = LatencyHist::default();
+            for (x, w) in samples {
+                h.record(x, w);
+            }
+            h
+        })
+        .collect();
+
+        let fold = |order: &[usize]| {
+            let mut acc = LatencyHist::default();
+            for &i in order {
+                acc.merge(&parts[i]);
+            }
+            acc
+        };
+        let fingerprint = |h: &LatencyHist| {
+            (h.counts, h.total, h.sum.to_bits())
+        };
+
+        let want = fingerprint(&fold(&[0, 1, 2, 3]));
+        // Commutativity: every permutation of the four parts.
+        let mut perms: Vec<Vec<usize>> = Vec::new();
+        for a in 0..4usize {
+            for b in 0..4 {
+                for c in 0..4 {
+                    for d in 0..4 {
+                        let p = vec![a, b, c, d];
+                        let mut s = p.clone();
+                        s.sort_unstable();
+                        if s == [0, 1, 2, 3] {
+                            perms.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(perms.len(), 24);
+        for p in &perms {
+            let got = fold(p);
+            assert_eq!(fingerprint(&got), want, "permutation {p:?} diverged");
+            for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+                assert_eq!(
+                    got.percentile(q).to_bits(),
+                    fold(&[0, 1, 2, 3]).percentile(q).to_bits(),
+                    "q={q} diverged under permutation {p:?}"
+                );
+            }
+        }
+        // Associativity: (a⊕b)⊕(c⊕d) equals ((a⊕b)⊕c)⊕d.
+        let mut left = LatencyHist::default();
+        left.merge(&parts[0]);
+        left.merge(&parts[1]);
+        let mut right = LatencyHist::default();
+        right.merge(&parts[2]);
+        right.merge(&parts[3]);
+        let mut grouped = LatencyHist::default();
+        grouped.merge(&left);
+        grouped.merge(&right);
+        assert_eq!(fingerprint(&grouped), want, "re-grouped merge diverged");
+    }
+
+    #[test]
     fn recompute_counters_and_merge() {
         let mut m = RunMetrics::new();
         assert_eq!(m.recompute_count(), 0);

@@ -18,6 +18,7 @@ pub mod vtime;
 
 use crate::config::Policy;
 use crate::cost::CostModel;
+pub use crate::engine::event::EngineEvent;
 use crate::workload::{AgentId, TaskId};
 
 /// What the scheduler learns about an agent on arrival. `cost` is the
@@ -130,6 +131,17 @@ pub trait Scheduler: Send {
     fn gps_finish_estimate(&mut self, _cost: f64, _now: f64) -> Option<f64> {
         None
     }
+
+    /// Engine-event hook (the event core's replacement for per-tick polling,
+    /// DESIGN.md §12): the engine emits an [`EngineEvent`] the moment the
+    /// state change it describes lands — a task admitted, a prefill chunk or
+    /// decode batch retired, a swap-in or recompute re-entry completed, a
+    /// child task spawned. Only called when `cfg.event_core` is on. The
+    /// default ignores every event, so all built-in policies behave
+    /// identically under both cores; policies that want event-driven state
+    /// (e.g. aging timers keyed on real progress instead of wall polling)
+    /// override it.
+    fn on_event(&mut self, _event: &EngineEvent, _now: f64) {}
 }
 
 /// Construct a scheduler for a policy.

@@ -90,6 +90,26 @@ pub fn build_suite_shaped(
     cfg: &crate::config::WorkloadConfig,
     shape: Option<DagShape>,
 ) -> Suite {
+    build_suite_inner(cfg, shape, false)
+}
+
+/// [`build_suite`] with every agent's `input_text` dropped after generation.
+///
+/// At 1M+ agents the synthesized prompt text dominates suite memory by an
+/// order of magnitude and nothing in a cost-oracle cluster run reads it
+/// (predictor work passes `with_text` traces instead). Dropping it is
+/// RNG-safe — `synthesize_input` is the *last* draw from each agent's forked
+/// stream — so the lean suite is identical to [`build_suite`]'s except for
+/// the empty `input_text` (asserted in tests).
+pub fn build_suite_lean(cfg: &crate::config::WorkloadConfig) -> Suite {
+    build_suite_inner(cfg, None, true)
+}
+
+fn build_suite_inner(
+    cfg: &crate::config::WorkloadConfig,
+    shape: Option<DagShape>,
+    lean: bool,
+) -> Suite {
     let mut rng = Rng::with_stream(cfg.seed, 0x7ace);
     // Shapes draw from their own stream: enabling DAG mode must not shift
     // the shared stream's class draws, so same-seed suites keep identical
@@ -102,12 +122,16 @@ pub fn build_suite_shaped(
         .enumerate()
         .map(|(i, t)| {
             let class = sample_class(&mut rng, &cfg.class_mix);
-            if cfg.dag || shape.is_some() {
+            let mut a = if cfg.dag || shape.is_some() {
                 let s = shape.unwrap_or_else(|| *shape_rng.choose(&DagShape::ALL));
                 gen.dag_agent(class, s, i as u32, t, cfg.spawn_prob, cfg.branch)
             } else {
                 gen.agent(class, i as u32, t)
+            };
+            if lean {
+                a.input_text = String::new();
             }
+            a
         })
         .collect();
     let mut suite = Suite::new(agents);
@@ -422,6 +446,21 @@ mod tests {
         let cfg2 = WorkloadConfig { seed: 43, ..cfg };
         let s3 = build_suite(&cfg2);
         assert_ne!(s1.agents, s3.agents);
+    }
+
+    #[test]
+    fn lean_suite_matches_full_except_text() {
+        let cfg = WorkloadConfig { n_agents: 30, window_secs: 90.0, ..Default::default() };
+        let full = build_suite(&cfg);
+        let lean = build_suite_lean(&cfg);
+        assert_eq!(full.len(), lean.len());
+        for (a, b) in full.agents.iter().zip(lean.agents.iter()) {
+            assert!(b.input_text.is_empty(), "lean suite must drop input text");
+            assert!(!a.input_text.is_empty(), "full suite keeps input text");
+            let mut stripped = a.clone();
+            stripped.input_text = String::new();
+            assert_eq!(&stripped, b, "lean suite differs beyond input_text");
+        }
     }
 
     #[test]

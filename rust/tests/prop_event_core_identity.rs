@@ -1,0 +1,266 @@
+//! Differential test for the event-driven engine core (ISSUE 6 tentpole):
+//! the calendar-queue driver (`cfg.event_core = true`) must replay EXACTLY
+//! the same simulation as the legacy tick loop — bit-identical per-agent
+//! JCTs, per-task schedule order (admit/complete times), iteration counts,
+//! and counter metrics — across all six schedulers and every knob draw:
+//! {prefix cache, DAG + dynamic spawning, chunked prefill, preemption auto}
+//! over randomized tight-pool workloads.
+//!
+//! The legacy loop is the oracle for one PR (it predates the event core and
+//! is untouched by it); any divergence here is a bug in the event core's
+//! dirty tracking, cached batch composition, or clock advancement.
+
+use justitia::config::{BackendProfile, Config, Policy, PreemptionMode};
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::util::prop::{check, Config as PropConfig, Strategy};
+use justitia::util::rng::Rng;
+use justitia::workload::test_support::dag_agent;
+use justitia::workload::{AgentSpec, SpawnSpec, Suite};
+
+/// A randomized workload plus the four knob draws the event core must agree
+/// with the tick loop under.
+#[derive(Clone, Debug)]
+struct IdentityScenario {
+    agents: Vec<AgentSpec>,
+    pages: u64,
+    page_size: u32,
+    /// Radix-tree prefix cache on, with the suite annotated into families.
+    prefix_cache: bool,
+    /// Agents carry spawn rules (dynamic task spawning at runtime).
+    spawn: bool,
+    /// Chunked prefill + token-budget batching.
+    chunked: bool,
+    /// `PreemptionMode::Auto` with a bounded host pool (else default Swap).
+    preempt_auto: bool,
+    host_tokens: Option<u64>,
+    swap_bw: f64,
+}
+
+struct IdentityStrategy;
+
+impl Strategy for IdentityStrategy {
+    type Value = IdentityScenario;
+
+    fn generate(&self, rng: &mut Rng) -> IdentityScenario {
+        let page_size = 8u32;
+        let pages = rng.range_u64(24, 48);
+        let m_tokens = pages * page_size as u64;
+        let n_agents = rng.range_u64(2, 7) as usize;
+        let spawn = rng.chance(0.5);
+        let mut agents = Vec::with_capacity(n_agents);
+        let mut t = 0.0;
+        for id in 0..n_agents {
+            t += rng.exponential(0.05);
+            let n_tasks = rng.range_u64(1, 5) as usize;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for i in 0..n_tasks {
+                // Prompts up to a third of the pool force preemption traffic
+                // while every (re-entered) sequence still fits an empty pool.
+                let p = rng.range_u64(2, m_tokens / 3) as u32;
+                let d = rng.range_u64(1, 16) as u32;
+                let deps = if i > 0 && rng.chance(0.3) {
+                    vec![rng.below(i as u64) as u32]
+                } else {
+                    Vec::new()
+                };
+                tasks.push((p, d, deps));
+            }
+            let mut a = dag_agent(id as u32, t, tasks);
+            if spawn {
+                a.spawn = Some(SpawnSpec {
+                    prob: 0.6,
+                    branch: 2,
+                    max_depth: 1,
+                    seed: rng.next_u64(),
+                });
+            }
+            agents.push(a);
+        }
+        IdentityScenario {
+            agents,
+            pages,
+            page_size,
+            prefix_cache: rng.chance(0.5),
+            spawn,
+            chunked: rng.chance(0.5),
+            preempt_auto: rng.chance(0.5),
+            host_tokens: match rng.below(3) {
+                0 => None,
+                1 => Some(m_tokens / 4),
+                _ => Some(0),
+            },
+            swap_bw: if rng.chance(0.5) { 1000.0 } else { 0.0 },
+        }
+    }
+
+    fn shrink(&self, v: &IdentityScenario) -> Vec<IdentityScenario> {
+        let mut out = Vec::new();
+        if v.agents.len() > 1 {
+            let mut w = v.clone();
+            w.agents.pop();
+            out.push(w);
+        }
+        for knob in 0..4 {
+            let mut w = v.clone();
+            let on = match knob {
+                0 => std::mem::replace(&mut w.prefix_cache, false),
+                1 => {
+                    let on = w.spawn;
+                    w.spawn = false;
+                    for a in &mut w.agents {
+                        a.spawn = None;
+                    }
+                    on
+                }
+                2 => std::mem::replace(&mut w.chunked, false),
+                _ => std::mem::replace(&mut w.preempt_auto, false),
+            };
+            if on {
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+fn config_for(sc: &IdentityScenario) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = BackendProfile {
+        name: "prop-evcore".into(),
+        kv_tokens: sc.pages * sc.page_size as u64,
+        page_size: sc.page_size,
+        alpha: 1.0,
+        beta_prefill: 1e-3,
+        beta_decode: 0.0,
+        swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
+        host_kv_tokens: sc.host_tokens,
+        swap_bw_tokens_per_sec: sc.swap_bw,
+    };
+    cfg.max_batch = 64;
+    cfg.prefix_cache = sc.prefix_cache;
+    if sc.preempt_auto {
+        cfg.preemption = PreemptionMode::Auto;
+    }
+    if sc.chunked {
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 16;
+        cfg.max_batched_tokens = 48;
+    }
+    cfg
+}
+
+fn suite_for(sc: &IdentityScenario) -> Suite {
+    let mut suite = Suite::new(sc.agents.clone());
+    if sc.prefix_cache {
+        // Families of 2 sharing a 2-page prefix: enough to exercise dedup.
+        justitia::workload::trace::annotate_families(&mut suite, 2, 16, 0xfa7e);
+    }
+    suite
+}
+
+/// Everything the engine observably computed, in exact (bit-level) form.
+/// Schedule order is pinned by the per-task admit/complete time vectors over
+/// the full dynamic task set (spawn expansion included).
+type Trace = (f64, Vec<(u32, f64)>, Vec<(u32, u32, Option<f64>, Option<f64>)>, [u64; 7]);
+
+fn replay(sc: &IdentityScenario, policy: Policy, event_core: bool) -> Trace {
+    let mut cfg = config_for(sc);
+    cfg.event_core = event_core;
+    let suite = suite_for(sc);
+    let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+    let mut engine = Engine::new(&cfg, sched, SimBackend::unit_time());
+    let model = justitia::cost::CostModel::MemoryCentric;
+    let makespan = engine.run_suite(&suite, |a| model.agent_cost(a));
+    let m = &engine.metrics;
+    let mut tasks = Vec::new();
+    for a in &suite.agents {
+        for t in a.tasks.iter().chain(a.expand_spawns().iter()) {
+            tasks.push((
+                t.id.agent,
+                t.id.index,
+                m.task_admit_time(t.id),
+                m.task_complete_time(t.id),
+            ));
+        }
+    }
+    (
+        makespan,
+        m.jcts(),
+        tasks,
+        [
+            m.iterations(),
+            m.swap_out_count(),
+            m.recompute_count(),
+            m.prefill_tokens_executed(),
+            m.prefix_hits(),
+            m.spawned_tasks(),
+            m.prefill_stalls(),
+        ],
+    )
+}
+
+#[test]
+fn prop_event_core_is_bit_identical_to_tick_loop() {
+    let cfg = PropConfig { cases: prop_cases(25), seed: 0xca1e_17da, max_shrink_steps: 60 };
+    check(&cfg, &IdentityStrategy, |sc| {
+        for policy in [
+            Policy::Fcfs,
+            Policy::Sjf,
+            Policy::AgentFcfs,
+            Policy::Vtc,
+            Policy::Srjf,
+            Policy::Justitia,
+        ] {
+            let tick = replay(sc, policy, false);
+            let event = replay(sc, policy, true);
+            if tick != event {
+                let what = if tick.1 != event.1 {
+                    "per-agent JCTs"
+                } else if tick.2 != event.2 {
+                    "per-task schedule order"
+                } else if tick.3 != event.3 {
+                    "counter metrics"
+                } else {
+                    "makespan"
+                };
+                return Err(format!(
+                    "{policy:?}: event core diverged from tick loop on {what} \
+                     (tick counters {:?} vs event {:?}, makespan {} vs {})",
+                    tick.3, event.3, tick.0, event.0,
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The default configuration (every knob off) must also agree — this is the
+/// exact path `cfg.event_core` toggles in production runs.
+#[test]
+fn prop_event_core_identity_with_default_knobs() {
+    let cfg = PropConfig { cases: prop_cases(15), seed: 0xdeaf_0001, max_shrink_steps: 40 };
+    check(&cfg, &IdentityStrategy, |sc| {
+        let mut sc = sc.clone();
+        sc.prefix_cache = false;
+        sc.chunked = false;
+        sc.preempt_auto = false;
+        sc.host_tokens = None;
+        for policy in [Policy::Fcfs, Policy::Justitia] {
+            let tick = replay(&sc, policy, false);
+            let event = replay(&sc, policy, true);
+            if tick != event {
+                return Err(format!(
+                    "{policy:?}: default-knob divergence (tick {:?} vs event {:?})",
+                    tick.3, event.3
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn prop_cases(default: usize) -> usize {
+    std::env::var("JUSTITIA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}

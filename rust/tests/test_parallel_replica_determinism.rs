@@ -1,0 +1,105 @@
+//! Parallel replica simulation determinism (ISSUE 6 acceptance): running a
+//! cluster's replicas on a 1-worker vs 8-worker thread pool must produce
+//! BYTE-identical merged `RunMetrics` and results JSON. Replicas are
+//! independent simulations over disjoint sub-traces; `run_suite_parallel`
+//! keeps placement serial and reinstalls engines in replica index order, so
+//! thread count can change nothing observable (seeded, three placements).
+
+use justitia::cluster::Placement;
+use justitia::config::{Config, Policy, WorkloadConfig};
+use justitia::cost::CostModel;
+use justitia::experiments::build_sim_cluster;
+use justitia::metrics::RunMetrics;
+use justitia::util::json::{obj, Json};
+use justitia::workload::trace;
+use justitia::workload::Suite;
+
+fn cfg_with(n_agents: usize, seed: u64, replicas: usize, p: Placement) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload = WorkloadConfig { n_agents, seed, ..Default::default() }.with_density(3.0);
+    cfg.cluster.replicas = replicas;
+    cfg.cluster.placement = p;
+    cfg.event_core = true; // the scale-out production path
+    cfg
+}
+
+/// Canonical results JSON over the merged metrics — the same kind of
+/// artifact the experiment writes. Byte equality of this string is the
+/// test's definition of "identical results".
+fn results_json(m: &RunMetrics) -> String {
+    let jcts: Vec<Json> = m
+        .jcts()
+        .into_iter()
+        .map(|(id, j)| obj([("agent", Json::Num(id as f64)), ("jct", Json::Num(j))]))
+        .collect();
+    obj([
+        ("completed", Json::Num(m.completed_agents() as f64)),
+        ("iterations", Json::Num(m.iterations() as f64)),
+        ("swap_outs", Json::Num(m.swap_out_count() as f64)),
+        ("recomputes", Json::Num(m.recompute_count() as f64)),
+        ("engine_time", Json::Num(m.engine_time())),
+        ("avg_jct", Json::Num(m.avg_jct())),
+        ("p99_jct", Json::Num(m.p99_jct())),
+        ("jcts", Json::Arr(jcts)),
+    ])
+    .pretty()
+}
+
+/// Run the cluster over `threads` workers; return the results JSON plus the
+/// raw JCT bits (f64-bit-exact, stronger than the printed form).
+fn run(cfg: &Config, suite: &Suite, threads: usize) -> (String, Vec<(u32, u64)>) {
+    let costs = justitia::cost::oracle_costs(false, suite, CostModel::MemoryCentric);
+    let mut cluster = build_sim_cluster(cfg, Policy::Justitia);
+    cluster.run_suite_parallel(suite, |a| costs[&a.id], threads);
+    let m = cluster.merged_metrics();
+    let bits = m.jcts().into_iter().map(|(id, j)| (id, j.to_bits())).collect();
+    (results_json(&m), bits)
+}
+
+#[test]
+fn thread_pool_size_cannot_change_merged_results() {
+    for (seed, p) in [
+        (42u64, Placement::RoundRobin),
+        (7, Placement::LeastLoaded),
+        (1234, Placement::ClusterVtime),
+    ] {
+        let cfg = cfg_with(160, seed, 8, p);
+        let suite = trace::build_suite(&cfg.workload);
+        let (json1, bits1) = run(&cfg, &suite, 1);
+        assert!(json1.contains("\"completed\""));
+        for threads in [2usize, 8] {
+            let (json_t, bits_t) = run(&cfg, &suite, threads);
+            assert_eq!(
+                bits1, bits_t,
+                "seed {seed} {p:?}: JCT bits diverged at {threads} threads"
+            );
+            assert_eq!(
+                json1, json_t,
+                "seed {seed} {p:?}: results JSON diverged at {threads} threads"
+            );
+        }
+
+        // The serial driver is the same computation by construction — pin it.
+        let costs = justitia::cost::oracle_costs(false, &suite, CostModel::MemoryCentric);
+        let mut serial = build_sim_cluster(&cfg, Policy::Justitia);
+        serial.run_suite(&suite, |a| costs[&a.id]);
+        assert_eq!(
+            results_json(&serial.merged_metrics()),
+            json1,
+            "seed {seed} {p:?}: run_suite_parallel(1) differs from run_suite"
+        );
+    }
+}
+
+#[test]
+fn legacy_tick_core_is_equally_thread_insensitive() {
+    // The guarantee is about the dispatcher, not the engine core: the
+    // legacy tick loop must survive parallel replicas identically.
+    let mut cfg = cfg_with(120, 42, 4, Placement::ClusterVtime);
+    cfg.event_core = false;
+    let suite = trace::build_suite(&cfg.workload);
+    let (j1, b1) = run(&cfg, &suite, 1);
+    let (j8, b8) = run(&cfg, &suite, 8);
+    assert_eq!(b1, b8);
+    assert_eq!(j1, j8);
+}
