@@ -11,6 +11,12 @@
 //! via `JUSTITIA_BENCH_BASELINE`; without the env var the gate is skipped so
 //! local runs never fail on slow laptops). Baseline numbers are deliberately
 //! conservative floors — ratchet them upward as real runner numbers accrue.
+//!
+//! ISSUE 7 adds a traced row: the same 10k event-core run with the flight
+//! recorder ON at the default sample stride, reported as an overhead
+//! percentage against the untraced rate. The regression gate stays on the
+//! untraced rows; a separate `trace_overhead_pct_max` key in the baseline
+//! (default 5%) bounds the recorder's cost when the gate is armed.
 
 use justitia::config::{Config, Policy, WorkloadConfig};
 use justitia::cost::CostModel;
@@ -27,9 +33,11 @@ struct Row {
     events_per_sec: f64,
 }
 
-fn run_once(n_agents: usize, event_core: bool) -> Row {
+fn run_once(n_agents: usize, event_core: bool, trace: bool) -> Row {
     let mut cfg = Config::default();
     cfg.event_core = event_core;
+    // Default trace_sample / trace_cap — exactly what `--trace` ships.
+    cfg.trace = trace;
     cfg.workload =
         WorkloadConfig { n_agents, seed: 42, ..Default::default() }.with_density(3.0);
     // Lean suite: input text is predictor-only and dominates memory at scale.
@@ -53,7 +61,7 @@ fn main() {
     section("engine hot path (event core)");
     let mut rows = Vec::new();
     for n in [10_000usize, 100_000] {
-        let r = run_once(n, true);
+        let r = run_once(n, true, false);
         println!(
             "event-core {:>7} agents: {:>9} iterations in {:>7.2}s = {:>10.0} events/sec",
             r.agents, r.iterations, r.wall_s, r.events_per_sec
@@ -62,13 +70,24 @@ fn main() {
     }
 
     // The legacy tick loop at the small size, for the speedup column.
-    let tick = run_once(10_000, false);
+    let tick = run_once(10_000, false, false);
     println!(
         "tick-loop  {:>7} agents: {:>9} iterations in {:>7.2}s = {:>10.0} events/sec",
         tick.agents, tick.iterations, tick.wall_s, tick.events_per_sec
     );
     let speedup = rows[0].events_per_sec / tick.events_per_sec.max(1e-9);
     println!("event core vs tick loop at 10k agents: {speedup:.2}x");
+
+    // Flight recorder overhead at the default sample stride (ISSUE 7): same
+    // 10k event-core run with `--trace` on. Must stay under ~5%.
+    let traced = run_once(10_000, true, true);
+    println!(
+        "traced     {:>7} agents: {:>9} iterations in {:>7.2}s = {:>10.0} events/sec",
+        traced.agents, traced.iterations, traced.wall_s, traced.events_per_sec
+    );
+    let trace_overhead_pct =
+        (1.0 - traced.events_per_sec / rows[0].events_per_sec.max(1e-9)) * 100.0;
+    println!("flight recorder overhead at 10k agents: {trace_overhead_pct:.1}%");
 
     let json = obj([
         ("bench", Json::Str("engine_hot_path".into())),
@@ -89,6 +108,8 @@ fn main() {
         ),
         ("tick_10k_events_per_sec", Json::Num(tick.events_per_sec)),
         ("event_vs_tick_speedup_10k", Json::Num(speedup)),
+        ("traced_10k_events_per_sec", Json::Num(traced.events_per_sec)),
+        ("trace_overhead_pct", Json::Num(trace_overhead_pct)),
     ]);
     let _ = std::fs::create_dir_all("results");
     let path = std::path::Path::new("results/BENCH_engine.json");
@@ -137,6 +158,18 @@ fn main() {
                 tolerance * 100.0
             );
         }
+    }
+    // Recorder overhead gate: untraced vs traced back-to-back in the same
+    // process, so runner noise largely cancels.
+    let overhead_max = base.get("trace_overhead_pct_max").as_f64().unwrap_or(5.0);
+    if trace_overhead_pct > overhead_max {
+        eprintln!(
+            "REGRESSION: flight recorder overhead {trace_overhead_pct:.1}% exceeds \
+             the {overhead_max:.1}% budget at the default sample stride"
+        );
+        failed = true;
+    } else {
+        println!("gate ok: trace overhead {trace_overhead_pct:.1}% <= {overhead_max:.1}%");
     }
     if failed {
         std::process::exit(1);

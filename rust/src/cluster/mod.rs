@@ -273,6 +273,27 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
         }
         out
     }
+
+    /// Export every traced replica's flight recorder as one Chrome trace:
+    /// one Perfetto process per replica ("replica N"), one thread row per
+    /// agent within it (see [`crate::trace::chrome_trace`]). Returns `None`
+    /// when no replica carries a recorder — tracing off, the default — so
+    /// the HTTP `/trace` endpoint can 404 instead of serving an empty dump.
+    pub fn merged_trace_chrome(&self) -> Option<crate::util::json::Json> {
+        let labels: Vec<String> =
+            (0..self.replicas.len()).map(|r| format!("replica {r}")).collect();
+        let parts: Vec<(u32, &str, &crate::trace::TraceRecorder)> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter_map(|(r, e)| e.trace().map(|t| (r as u32, labels[r].as_str(), t)))
+            .collect();
+        if parts.is_empty() {
+            None
+        } else {
+            Some(crate::trace::chrome_trace(&parts))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -402,6 +423,30 @@ mod tests {
         assert_eq!(m.completed_agents(), 2);
         assert!(c.agent_complete_time(0).is_some() && c.agent_complete_time(1).is_some());
         assert!(c.makespan() > 0.0);
+    }
+
+    #[test]
+    fn merged_trace_spans_replicas_and_is_absent_when_off() {
+        let cfg = Config::default();
+        let suite = small_suite(24, 7);
+        let model = CostModel::MemoryCentric;
+        // Tracing off (the default): nothing to merge.
+        let mut c = dispatcher(&cfg, 2, Placement::RoundRobin);
+        c.run_suite(&suite, |a| model.agent_cost(a));
+        assert!(c.merged_trace_chrome().is_none());
+        // Tracing on: one Perfetto process per replica.
+        let mut cfg = cfg;
+        cfg.trace = true;
+        let mut c = dispatcher(&cfg, 2, Placement::RoundRobin);
+        c.run_suite(&suite, |a| model.agent_cost(a));
+        let json = c.merged_trace_chrome().expect("both replicas traced");
+        let events = json.get("traceEvents").as_arr().unwrap();
+        let processes: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("name").as_str() == Some("process_name"))
+            .filter_map(|e| e.get("args").get("name").as_str())
+            .collect();
+        assert_eq!(processes, vec!["replica 0", "replica 1"]);
     }
 
     #[test]

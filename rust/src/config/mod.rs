@@ -438,6 +438,19 @@ pub struct Config {
     /// is the differential-test oracle the event core is proven bit-identical
     /// against (`prop_event_core_identity`).
     pub event_core: bool,
+    /// Observability layer (DESIGN.md §13): record a bounded flight
+    /// recorder of lifecycle events, a per-iteration fairness sampler, and
+    /// a scheduler decision audit log ([`crate::trace`]). Off by default:
+    /// with the flag off no recorder exists and every engine path is
+    /// bit-identical to a build without the subsystem
+    /// (`prop_trace_identity`).
+    pub trace: bool,
+    /// Sampler stride: record one telemetry sample every this many engine
+    /// iterations (only meaningful with [`trace`](Config::trace); ≥ 1).
+    pub trace_sample: u32,
+    /// Ring capacity per trace stream (events, samples, audit entries);
+    /// the oldest entries are dropped — and counted — beyond it.
+    pub trace_cap: usize,
 }
 
 impl Default for Config {
@@ -458,6 +471,9 @@ impl Default for Config {
             preemption: PreemptionMode::Swap,
             victim: VictimPolicy::Youngest,
             event_core: false,
+            trace: false,
+            trace_sample: 8,
+            trace_cap: 65536,
         }
     }
 }
@@ -546,6 +562,17 @@ impl Config {
         }
         if let Some(x) = v.get("event_core").as_bool() {
             cfg.event_core = x;
+        }
+        if let Some(x) = v.get("trace").as_bool() {
+            cfg.trace = x;
+        }
+        if let Some(x) = v.get("trace_sample").as_u64() {
+            anyhow::ensure!(x >= 1, "trace_sample must be >= 1");
+            cfg.trace_sample = x as u32;
+        }
+        if let Some(x) = v.get("trace_cap").as_u64() {
+            anyhow::ensure!(x >= 1, "trace_cap must be >= 1");
+            cfg.trace_cap = x as usize;
         }
         let c = v.get("cluster");
         if c.as_obj().is_some() {
@@ -663,6 +690,19 @@ impl Config {
         }
         if args.has("event-core") {
             self.event_core = true;
+        }
+        if args.has("trace") {
+            self.trace = true;
+        }
+        if let Some(s) = args.get("trace-sample") {
+            let s: u32 = s.parse().context("--trace-sample")?;
+            anyhow::ensure!(s >= 1, "--trace-sample must be >= 1");
+            self.trace_sample = s;
+        }
+        if let Some(c) = args.get("trace-cap") {
+            let c: usize = c.parse().context("--trace-cap")?;
+            anyhow::ensure!(c >= 1, "--trace-cap must be >= 1");
+            self.trace_cap = c;
         }
         if let Some(h) = args.get("host-mem-pages") {
             // Pages of the *current* backend profile (applied after any
@@ -866,6 +906,35 @@ mod tests {
         for n in ["llama7b-a100", "llama13b-4v100", "qwen32b-h800", "tiny-cpu"] {
             assert_eq!(BackendProfile::by_name(n).unwrap().beta_mixed, 0.0);
         }
+    }
+
+    #[test]
+    fn trace_knobs() {
+        // Defaults: off, with sane stride/cap values ready to enable.
+        let cfg = Config::default();
+        assert!(!cfg.trace);
+        assert_eq!(cfg.trace_sample, 8);
+        assert_eq!(cfg.trace_cap, 65536);
+        // JSON.
+        let j = Json::parse(r#"{"trace": true, "trace_sample": 4, "trace_cap": 1024}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert!(cfg.trace);
+        assert_eq!(cfg.trace_sample, 4);
+        assert_eq!(cfg.trace_cap, 1024);
+        // Degenerate values are rejected.
+        assert!(Config::from_json(&Json::parse(r#"{"trace_sample": 0}"#).unwrap()).is_err());
+        assert!(Config::from_json(&Json::parse(r#"{"trace_cap": 0}"#).unwrap()).is_err());
+        // CLI overrides (--trace is a boolean switch).
+        let args = crate::cli::Args::parse(
+            ["run", "--trace", "--trace-sample", "2", "--trace-cap", "512"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["trace"],
+        );
+        let cfg = Config::default().apply_args(&args).unwrap();
+        assert!(cfg.trace);
+        assert_eq!(cfg.trace_sample, 2);
+        assert_eq!(cfg.trace_cap, 512);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::kv::{BlockAllocator, KvError};
 use crate::metrics::RunMetrics;
 use crate::prefix::{PrefixCache, PrefixMatch};
 use crate::sched::{AgentInfo, Scheduler, TaskInfo};
+use crate::trace::{IterSample, PickDecision, TraceEventKind, TraceRecorder, ENGINE_ROW};
 use crate::workload::{AgentId, AgentSpec, InferenceSpec, PrefixGroup, Suite, TaskId};
 use arena::Arena;
 use event::{EngineEvent, EventKind, EventQueue};
@@ -71,6 +72,11 @@ struct SeqState {
     /// as expensive to the §4.2 correction loop under the compute-centric
     /// model (memory-centric prefill deltas are 0 either way).
     recompute_refill: bool,
+    /// Whether this sequence already emitted its first output token (TTFT
+    /// recorded). Survives preemption — a recompute re-entry's second
+    /// prefill completion must not re-record TTFT, while a mid-prefill
+    /// valve victim that never produced a token still gets one.
+    first_token_done: bool,
 }
 
 /// Per-agent progress tracking: dependency-count release over the task DAG
@@ -212,6 +218,14 @@ pub struct Engine<B: ExecBackend> {
     /// chunk mode, composition is a pure function of running-set
     /// membership, so between mutating events it need not be recomputed.
     decode_cache: Vec<TaskId>,
+    /// Observability layer (`Some` iff `cfg.trace`, DESIGN.md §13): flight
+    /// recorder + per-iteration sampler + scheduler decision audit log.
+    /// `None` means no emit site runs — the off path is bit-identical to a
+    /// build without the subsystem. Every emit site lives in code shared by
+    /// both engine cores, stamped with the engine clock, so tick and event
+    /// cores produce identical streams by construction
+    /// (`prop_trace_identity`).
+    trace: Option<TraceRecorder>,
 }
 
 impl<B: ExecBackend> Engine<B> {
@@ -273,6 +287,7 @@ impl<B: ExecBackend> Engine<B> {
             event_core: cfg.event_core,
             batch_dirty: true,
             decode_cache: Vec::new(),
+            trace: cfg.trace.then(|| TraceRecorder::new(cfg.trace_cap, cfg.trace_sample)),
         }
     }
 
@@ -325,6 +340,9 @@ impl<B: ExecBackend> Engine<B> {
         }
         self.metrics.on_agent_arrival(id, arrival);
         self.metrics.record_sched_decision(t0.elapsed());
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(arrival, id, None, TraceEventKind::Arrival);
+        }
         if state_is_empty(&self.agents, id) {
             // Degenerate agent with zero tasks: completes instantly.
             self.complete_agent(id);
@@ -334,6 +352,9 @@ impl<B: ExecBackend> Engine<B> {
     fn push_task(&mut self, id: TaskId, prompt: u32, decode: u32) {
         self.admission_blocked = false;
         self.seq_counter += 1;
+        // TTFT anchor: the task became ready now (dependencies met / just
+        // spawned), so queueing delay counts toward its first token.
+        self.metrics.on_task_ready(id, self.clock);
         // Per-inference tag the scheduler ranks by (inference-level SJF).
         // Oracle mode echoes the true decode length; predictor mode derives
         // the task's share of the trained model's agent-level prediction
@@ -394,6 +415,9 @@ impl<B: ExecBackend> Engine<B> {
             self.backend.on_swap_in(seq.id, self.kv.block_table(seq.id).unwrap());
             self.running.push(seq);
             self.batch_dirty = true;
+            if let Some(tr) = self.trace.as_mut() {
+                tr.push(self.clock, id.agent, Some(id.index), TraceEventKind::SwapIn);
+            }
             if self.event_core {
                 self.scheduler.on_event(&EngineEvent::SwapDone { task: id }, self.clock);
             }
@@ -419,12 +443,23 @@ impl<B: ExecBackend> Engine<B> {
                         seq.prefix_path = path;
                         self.running.push(seq);
                         self.batch_dirty = true;
+                        if let Some(tr) = self.trace.as_mut() {
+                            tr.push(
+                                self.clock,
+                                id.agent,
+                                Some(id.index),
+                                TraceEventKind::RecomputeReady,
+                            );
+                        }
                         if self.event_core {
                             self.scheduler
                                 .on_event(&EngineEvent::RecomputeReady { task: id }, self.clock);
                         }
                     }
                     None => {
+                        if let Some(tr) = self.trace.as_mut() {
+                            tr.push(self.clock, id.agent, Some(id.index), TraceEventKind::Blocked);
+                        }
                         self.admission_blocked = true;
                         break;
                     }
@@ -448,9 +483,34 @@ impl<B: ExecBackend> Engine<B> {
                 let Some((cached_tokens, prefix_path, shareable)) =
                     self.try_admit_kv(next.id, next.prompt_tokens, u32::MAX)
                 else {
+                    if let Some(tr) = self.trace.as_mut() {
+                        tr.push(
+                            self.clock,
+                            next.id.agent,
+                            Some(next.id.index),
+                            TraceEventKind::Blocked,
+                        );
+                    }
                     self.admission_blocked = true;
                     break;
                 };
+                if self.trace.is_some() {
+                    // Audit the pick BEFORE pop_next, while the policy's
+                    // queues are intact (Justitia's heap still holds the
+                    // runner-up). explain_pick may mutate only lazily-
+                    // skimmable state, so the untraced run is unaffected.
+                    let expl =
+                        self.scheduler.explain_pick(&next, self.clock).unwrap_or_default();
+                    self.trace.as_mut().unwrap().push_pick(PickDecision {
+                        t: self.clock,
+                        agent: next.id.agent,
+                        task_index: next.id.index,
+                        winner_tag: expl.winner_tag,
+                        runner_up: expl.runner_up,
+                        runner_up_tag: expl.runner_up_tag,
+                        pampered: expl.pampered,
+                    });
+                }
                 let task = self.scheduler.pop_next(self.clock).unwrap();
                 let spec_decode = self.task_decode(task.id);
                 self.running.push(SeqState {
@@ -465,9 +525,18 @@ impl<B: ExecBackend> Engine<B> {
                     shareable,
                     served: 0.0,
                     recompute_refill: false,
+                    first_token_done: false,
                 });
                 self.batch_dirty = true;
                 self.metrics.on_task_admitted(task.id, self.clock);
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.push(
+                        self.clock,
+                        task.id.agent,
+                        Some(task.id.index),
+                        TraceEventKind::Admitted,
+                    );
+                }
                 if self.event_core {
                     self.scheduler.on_event(&EngineEvent::Admission { task: task.id }, self.clock);
                 }
@@ -646,6 +715,9 @@ impl<B: ExecBackend> Engine<B> {
             decode.len(),
             prefill_tokens,
         );
+        if self.trace.is_some() {
+            self.trace_iteration(&prefill, &decode, prefill_tokens);
+        }
         if self.event_core {
             // Endogenous events fire at the iteration boundary, stamped with
             // the post-iteration clock (DESIGN.md §12): each chunk that ran,
@@ -693,6 +765,18 @@ impl<B: ExecBackend> Engine<B> {
                 s.needs_prefill = false;
                 // The iteration finishing the prefill also emits the first
                 // token.
+                if !s.first_token_done {
+                    s.first_token_done = true;
+                    self.metrics.on_first_token(s.id, self.clock);
+                    if let Some(tr) = self.trace.as_mut() {
+                        tr.push(
+                            self.clock,
+                            s.id.agent,
+                            Some(s.id.index),
+                            TraceEventKind::FirstToken,
+                        );
+                    }
+                }
                 if let Some(cache) = self.prefix.as_mut() {
                     // Register the freshly-built *shareable* chain (full
                     // pages of the family prefix only — unique suffixes
@@ -788,6 +872,87 @@ impl<B: ExecBackend> Engine<B> {
 
     fn task_decode(&self, id: TaskId) -> u32 {
         self.agents[&id.agent].task_spec(id.index).decode_tokens
+    }
+
+    /// Trace bookkeeping for the iteration that just ran (called only when
+    /// tracing is on, right after `metrics.on_iteration`, from code shared
+    /// by both engine cores): per-sequence prefill-chunk events always, and
+    /// on every `sample_stride`-th iteration the engine-row decode-batch
+    /// event plus one [`IterSample`]. Every value read here is identical
+    /// across cores at this point, and the sampler's virtual-clock probe is
+    /// exact piecewise-linear integration — extra `vt(now)` calls never
+    /// perturb later tags, so metrics are unchanged with tracing on.
+    fn trace_iteration(
+        &mut self,
+        prefill: &[(TaskId, u32)],
+        decode: &[TaskId],
+        prefill_tokens: u64,
+    ) {
+        for &(id, tokens) in prefill {
+            self.trace.as_mut().unwrap().push(
+                self.clock,
+                id.agent,
+                Some(id.index),
+                TraceEventKind::PrefillChunk { tokens },
+            );
+        }
+        if !self.trace.as_mut().unwrap().tick_iteration() {
+            return;
+        }
+        let batch_tokens = prefill_tokens + decode.len() as u64;
+        let token_budget_util = if self.token_budget == u32::MAX {
+            0.0 // chunking off: the budget is unbounded, utilization undefined
+        } else {
+            batch_tokens as f64 / self.token_budget as f64
+        };
+        // Virtual-time lag per active agent, sorted by id: HashMap iteration
+        // order is nondeterministic and must not leak into the artifact.
+        let mut vt_lags: Vec<(AgentId, f64)> = Vec::new();
+        let mut max_gap = 0.0f64;
+        if let Some(v) = self.scheduler.virtual_time(self.clock) {
+            let mut ids: Vec<AgentId> = self
+                .agents
+                .iter()
+                .filter(|(_, a)| a.tasks_remaining > 0)
+                .map(|(&id, _)| id)
+                .collect();
+            ids.sort_unstable();
+            for id in ids {
+                if let Some(f) = self.scheduler.virtual_finish_tag(id) {
+                    let lag = v - f;
+                    max_gap = max_gap.max(lag);
+                    vt_lags.push((id, lag));
+                }
+            }
+        }
+        let sample = IterSample {
+            t: self.clock,
+            iteration: self.metrics.iterations(),
+            batch_seqs: (prefill.len() + decode.len()) as u32,
+            batch_tokens,
+            token_budget_util,
+            kv_free_pages: self.kv.free_pages() as u64,
+            kv_swapped_tokens: self.kv.swapped_tokens(),
+            kv_host_free_tokens: if self.kv.host_capacity_tokens() == u64::MAX {
+                u64::MAX // unbounded pool: "free" is meaningless, mark it
+            } else {
+                self.kv.host_free_tokens()
+            },
+            waiting: self.scheduler.waiting_len() as u64,
+            running: self.running.len() as u64,
+            swapped_q: self.swapped.len() as u64,
+            recompute_q: self.recompute.len() as u64,
+            vt_lags,
+            max_service_gap: max_gap,
+        };
+        let tr = self.trace.as_mut().unwrap();
+        tr.push(
+            self.clock,
+            ENGINE_ROW,
+            None,
+            TraceEventKind::DecodeBatch { seqs: decode.len() as u32 },
+        );
+        tr.push_sample(sample);
     }
 
     /// Try to allocate KV (and pin any cached prefix) for a sequence about
@@ -995,6 +1160,14 @@ impl<B: ExecBackend> Engine<B> {
         victim.cached_tokens = 0;
         victim.recompute_refill = true;
         self.metrics.on_recompute_drop(victim.id, self.clock, dropped as u64);
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(
+                self.clock,
+                victim.id.agent,
+                Some(victim.id.index),
+                TraceEventKind::PreemptRecompute { dropped_tokens: dropped as u64 },
+            );
+        }
         self.recompute.push_back(victim);
         // Pages returned to the pool: the blocked-admission memo is stale.
         self.admission_blocked = false;
@@ -1019,6 +1192,14 @@ impl<B: ExecBackend> Engine<B> {
         victim.prefix_path = Vec::new();
         victim.cached_tokens = 0;
         self.metrics.on_swap_out(victim.id, self.clock);
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(
+                self.clock,
+                victim.id.agent,
+                Some(victim.id.index),
+                TraceEventKind::PreemptSwap,
+            );
+        }
         self.swapped.push_back(victim);
         self.batch_dirty = true;
         moved
@@ -1075,6 +1256,9 @@ impl<B: ExecBackend> Engine<B> {
         self.running.retain(|s| s.id != id);
         self.batch_dirty = true;
         self.metrics.on_task_complete(id, self.clock);
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(self.clock, id.agent, Some(id.index), TraceEventKind::TaskComplete);
+        }
 
         let now = self.clock;
         let correcting = self.online_correction;
@@ -1142,8 +1326,13 @@ impl<B: ExecBackend> Engine<B> {
             self.push_task(tid, p, d);
         }
         if self.event_core {
-            for task in spawned_events {
+            for &task in &spawned_events {
                 self.scheduler.on_event(&EngineEvent::Spawn { task }, self.clock);
+            }
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            for task in spawned_events {
+                tr.push(self.clock, task.agent, Some(task.index), TraceEventKind::Spawn);
             }
         }
         if let Some((remaining, total)) = correction {
@@ -1157,6 +1346,9 @@ impl<B: ExecBackend> Engine<B> {
     fn complete_agent(&mut self, agent: AgentId) {
         self.scheduler.on_agent_complete(agent, self.clock);
         self.metrics.on_agent_complete(agent, self.clock);
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(self.clock, agent, None, TraceEventKind::Complete);
+        }
     }
 
     /// Scheduler introspection for tests.
@@ -1187,6 +1379,17 @@ impl<B: ExecBackend> Engine<B> {
     /// The prefix cache, when enabled.
     pub fn prefix_cache(&self) -> Option<&PrefixCache> {
         self.prefix.as_ref()
+    }
+
+    /// The trace recorder, when tracing is on (`cfg.trace`).
+    pub fn trace(&self) -> Option<&TraceRecorder> {
+        self.trace.as_ref()
+    }
+
+    /// Move the trace recorder out of the engine (end-of-run export; later
+    /// iterations would record into a fresh void, so only call when done).
+    pub fn take_trace(&mut self) -> Option<TraceRecorder> {
+        self.trace.take()
     }
 
     /// Per-sequence chunked-prefill accounting invariants (DESIGN.md §10),
@@ -2319,5 +2522,70 @@ mod tests {
             e.kv.check_invariants().unwrap();
             assert_eq!(e.kv.device_tokens(), 0);
         }
+    }
+
+    #[test]
+    fn trace_off_by_default_and_absent() {
+        let cfg = tiny_config(32, 16);
+        let mut e = engine(&cfg, Policy::Justitia);
+        assert!(e.trace().is_none(), "default config must not allocate a recorder");
+        e.submit(simple_agent(0, 0.0, 2, 20, 10), 100.0);
+        while e.has_work() {
+            e.step();
+        }
+        assert!(e.take_trace().is_none());
+    }
+
+    #[test]
+    fn trace_records_full_lifecycle() {
+        let mut cfg = tiny_config(32, 16);
+        cfg.trace = true;
+        cfg.trace_sample = 1;
+        let mut e = engine(&cfg, Policy::Justitia);
+        e.submit(simple_agent(0, 0.0, 2, 20, 10), 100.0);
+        while e.has_work() {
+            e.step();
+        }
+        let rec = e.take_trace().unwrap();
+        let count = |k: &str| rec.events().filter(|ev| ev.kind.name() == k).count();
+        assert_eq!(count("arrival"), 1);
+        assert_eq!(count("admitted"), 2, "one admission per task");
+        assert_eq!(count("first_token"), 2, "one first token per task");
+        assert_eq!(count("task_complete"), 2);
+        assert_eq!(count("complete"), 1);
+        // Stride 1 samples every iteration; each admission is audited, and
+        // Justitia explains its picks with virtual finish tags.
+        assert!(rec.sample_count() > 0);
+        assert_eq!(rec.pick_count(), 2);
+        assert!(rec.picks().all(|p| p.agent == 0 && p.winner_tag.is_some()));
+        // Timestamps are the engine clock: non-decreasing across the stream.
+        let ts: Vec<f64> = rec.events().map(|ev| ev.t).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        // The TTFT histogram fed off the same first-token transitions.
+        assert_eq!(e.metrics.ttft_samples(), 2);
+        assert!(e.metrics.ttft_mean() > 0.0);
+    }
+
+    #[test]
+    fn trace_streams_identical_across_cores() {
+        // Every emit site lives in code shared by the tick and event cores,
+        // so the recorders must compare equal stream for stream (the full
+        // randomized version is tests/prop_trace_identity.rs).
+        let mut recs = Vec::new();
+        for event_core in [false, true] {
+            let mut cfg = tiny_config(24, 8);
+            cfg.trace = true;
+            cfg.trace_sample = 2;
+            cfg.event_core = event_core;
+            let mut e = engine(&cfg, Policy::Justitia);
+            for i in 0..3 {
+                e.submit(simple_agent(i, 0.0, 2, 24, 8), 40.0);
+            }
+            while e.has_work() {
+                e.step();
+            }
+            recs.push(e.take_trace().unwrap());
+        }
+        assert_eq!(recs[0], recs[1]);
     }
 }

@@ -14,6 +14,7 @@ use crate::engine::Engine;
 use crate::metrics::{fair_ratios, fairness_summary, RunMetrics};
 use crate::predictor::{oracle::NoisyOracle, Predictor};
 use crate::sched::cost_model_for;
+use crate::trace::TraceRecorder;
 use crate::util::threadpool::ThreadPool;
 use crate::workload::{AgentClass, AgentId, Suite};
 
@@ -44,6 +45,20 @@ pub fn rate_scale(cfg: &Config) -> f64 {
 /// cache (or without prefix annotations) the map is identical to plain
 /// Eq. 1 costs, so the default path is unchanged bit for bit.
 pub fn run_policy(cfg: &Config, suite: &Suite, policy: Policy, source: &CostSource) -> RunMetrics {
+    run_policy_traced(cfg, suite, policy, source).0
+}
+
+/// [`run_policy`], but also hand back the engine's flight recorder when
+/// `cfg.trace` is on (`None` otherwise — the recorder is never allocated on
+/// the off path, see DESIGN.md §13). The CLI uses this to write
+/// `results/TRACE_run.json`; everything metric-only goes through
+/// [`run_policy`].
+pub fn run_policy_traced(
+    cfg: &Config,
+    suite: &Suite,
+    policy: Policy,
+    source: &CostSource,
+) -> (RunMetrics, Option<TraceRecorder>) {
     let model = cost_model_for(policy);
     // A trained-model run is a predictor run end to end: the engine derives
     // per-task scheduler tags from the agent-level prediction too (the
@@ -63,7 +78,8 @@ pub fn run_policy(cfg: &Config, suite: &Suite, policy: Policy, source: &CostSour
         CostSource::Noisy { .. } => noisy.as_mut().unwrap().cost(a),
         CostSource::Model(p) => p.predict(a.class, &a.input_text),
     });
-    std::mem::take(&mut engine.metrics)
+    let trace = engine.take_trace();
+    (std::mem::take(&mut engine.metrics), trace)
 }
 
 /// Convenience: oracle-cost run.
@@ -248,6 +264,26 @@ pub struct Fig9Row {
 /// starvation mechanism is identical.
 pub const FIG9_MICE_PER_SEC: f64 = 1.5;
 
+/// The Fig. 9 workload: one MRS elephant at t=0 plus a sustained stream of
+/// `n_mice` small agents, on a config whose batch slots are the second
+/// contended resource (vLLM max_num_seqs, scaled like M — §Calibration).
+/// Shared by [`fig9`] and [`trace_starvation`] so the starvation trace demo
+/// replays exactly the paper's scenario.
+pub fn fig9_suite(n_mice: usize, seed: u64) -> (Config, Suite) {
+    let mut cfg = Config::default();
+    cfg.max_batch = 8;
+    let mut gen = crate::workload::generator::Generator::new(seed);
+    let mut agents = vec![gen.agent(AgentClass::MapReduceSummarization, 0, 0.0)];
+    let mice_classes =
+        [AgentClass::KbqaVerification, AgentClass::CodeChecking, AgentClass::AlfworldInteraction];
+    let mut rng = crate::util::rng::Rng::with_stream(seed, 0x91ce);
+    for i in 0..n_mice {
+        let class = *rng.choose(&mice_classes);
+        agents.push(gen.agent(class, (i + 1) as u32, 1.0 + i as f64 / FIG9_MICE_PER_SEC));
+    }
+    (cfg, Suite::new(agents))
+}
+
 /// The starvation study: elephant JCT per mice count, SRJF vs Justitia.
 pub fn fig9(mice_counts: &[usize], seed: u64) -> Vec<Fig9Row> {
     let mut jobs = Vec::new();
@@ -258,24 +294,45 @@ pub fn fig9(mice_counts: &[usize], seed: u64) -> Vec<Fig9Row> {
     }
     let pool = ThreadPool::with_cpus();
     pool.map(jobs, move |(n_mice, policy)| {
-        let mut cfg = Config::default();
-        // Batch slots are the second contended resource (vLLM max_num_seqs);
-        // scaled to the simulator the same way M is (§Calibration).
-        cfg.max_batch = 8;
-        let mut gen = crate::workload::generator::Generator::new(seed);
-        let mut agents = vec![gen.agent(AgentClass::MapReduceSummarization, 0, 0.0)];
-        let mice_classes =
-            [AgentClass::KbqaVerification, AgentClass::CodeChecking, AgentClass::AlfworldInteraction];
-        let mut rng = crate::util::rng::Rng::with_stream(seed, 0x91ce);
-        for i in 0..n_mice {
-            let class = *rng.choose(&mice_classes);
-            agents.push(gen.agent(class, (i + 1) as u32, 1.0 + i as f64 / FIG9_MICE_PER_SEC));
-        }
-        let suite = Suite::new(agents);
+        let (cfg, suite) = fig9_suite(n_mice, seed);
         // After Suite::new re-sorting, the elephant is still agent 0 (t=0).
         let m = run_policy_oracle(&cfg, &suite, policy);
         Fig9Row { n_mice, policy, elephant_jct: m.jct(0).unwrap() }
     })
+}
+
+/// One traced arm of the starvation demo: the policy label, its elephant
+/// JCT, and the full flight recorder for the run.
+pub struct TraceStarvationArm {
+    /// Policy label ("srjf" / "justitia") — also the Perfetto process name.
+    pub label: &'static str,
+    /// The elephant's JCT under this policy (s).
+    pub elephant_jct: f64,
+    /// The run's flight recorder (events, samples, pick audit).
+    pub recorder: TraceRecorder,
+}
+
+/// The worked starvation example behind EXPERIMENTS.md "how to read a
+/// trace": the Fig. 9 elephant+mice suite replayed under SRJF and Justitia
+/// with the flight recorder on. SRJF's track shows the elephant parked in
+/// the waiting row with its virtual-time lag climbing; Justitia's shows the
+/// pampered pick (audit log) driving it to completion. The CLI exports the
+/// two recorders side by side as `results/TRACE_starvation.json`.
+pub fn trace_starvation(n_mice: usize, sample_stride: u32, seed: u64) -> Vec<TraceStarvationArm> {
+    [(Policy::Srjf, "srjf"), (Policy::Justitia, "justitia")]
+        .into_iter()
+        .map(|(policy, label)| {
+            let (mut cfg, suite) = fig9_suite(n_mice, seed);
+            cfg.trace = true;
+            cfg.trace_sample = sample_stride;
+            let (m, recorder) = run_policy_traced(&cfg, &suite, policy, &CostSource::Oracle);
+            TraceStarvationArm {
+                label,
+                elephant_jct: m.jct(0).unwrap_or(0.0),
+                recorder: recorder.expect("cfg.trace was set"),
+            }
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -591,6 +648,10 @@ pub struct PrefixSharingRow {
     pub avg_jct: f64,
     /// P99 JCT (s).
     pub p99_jct: f64,
+    /// Mean time-to-first-token (ms), anchored at task-ready time.
+    pub ttft_mean_ms: f64,
+    /// P99 time-to-first-token (ms).
+    pub ttft_p99_ms: f64,
     /// Max-min fair-share ratio vs the GPS fluid reference (costs deduped
     /// when the cache is on, plain Eq. 1 when off — the yardstick matches
     /// what the scheduler itself was told).
@@ -652,6 +713,8 @@ pub fn prefix_sharing(
                 cache_pages_peak: m.cache_pages_peak(),
                 avg_jct: m.avg_jct(),
                 p99_jct: m.p99_jct(),
+                ttft_mean_ms: m.ttft_mean() * 1e3,
+                ttft_p99_ms: m.ttft_percentile(99.0) * 1e3,
                 maxmin_ratio,
                 completed: m.completed_agents(),
             }
@@ -676,6 +739,10 @@ pub struct DagAgentsRow {
     pub avg_jct: f64,
     /// P99 JCT (s).
     pub p99_jct: f64,
+    /// Mean time-to-first-token (ms), anchored at task-ready time.
+    pub ttft_mean_ms: f64,
+    /// P99 time-to-first-token (ms).
+    pub ttft_p99_ms: f64,
     /// Max-min fair-share ratio vs the GPS fluid reference priced at the
     /// expanded (spawn-inclusive) ground-truth costs.
     pub maxmin_ratio: f64,
@@ -790,6 +857,8 @@ pub fn dag_agents(
             correction,
             avg_jct: m.avg_jct(),
             p99_jct: m.p99_jct(),
+            ttft_mean_ms: m.ttft_mean() * 1e3,
+            ttft_p99_ms: m.ttft_percentile(99.0) * 1e3,
             maxmin_ratio,
             spawned_tasks: m.spawned_tasks(),
             correction_error: m.correction_error_mean(),
@@ -835,6 +904,10 @@ pub struct ChunkedPrefillRow {
     pub decode_itl_p99_ms: f64,
     /// Mean decode inter-token latency (ms).
     pub decode_itl_mean_ms: f64,
+    /// Mean time-to-first-token (ms), anchored at task-ready time.
+    pub ttft_mean_ms: f64,
+    /// P99 time-to-first-token (ms).
+    pub ttft_p99_ms: f64,
     /// Prefill-pending sequences denied a chunk by the budget or a KV page
     /// shortage, summed over iterations.
     pub prefill_stalls: u64,
@@ -951,6 +1024,8 @@ pub fn chunked_prefill(
             p99_jct: m.p99_jct(),
             decode_itl_p99_ms: m.decode_itl_percentile(99.0) * 1e3,
             decode_itl_mean_ms: m.decode_itl_mean() * 1e3,
+            ttft_mean_ms: m.ttft_mean() * 1e3,
+            ttft_p99_ms: m.ttft_percentile(99.0) * 1e3,
             prefill_stalls: m.prefill_stalls(),
             maxmin_ratio,
             completed: m.completed_agents(),
@@ -990,6 +1065,10 @@ pub struct PreemptionRow {
     /// P99 JCT (s) — the acceptance metric: `Auto`+`PamperAware` must beat
     /// `Swap`+`Youngest` under a host pool sized below peak swap demand.
     pub p99_jct: f64,
+    /// Mean time-to-first-token (ms), anchored at task-ready time.
+    pub ttft_mean_ms: f64,
+    /// P99 time-to-first-token (ms).
+    pub ttft_p99_ms: f64,
     /// Swap-out preemptions performed.
     pub swap_outs: u64,
     /// Recompute preemptions performed.
@@ -1117,6 +1196,8 @@ pub fn preemption_cells(
             victim,
             avg_jct: m.avg_jct(),
             p99_jct: m.p99_jct(),
+            ttft_mean_ms: m.ttft_mean() * 1e3,
+            ttft_p99_ms: m.ttft_percentile(99.0) * 1e3,
             swap_outs: m.swap_out_count(),
             recomputes: m.recompute_count(),
             recomputed_tokens: m.recomputed_tokens(),
@@ -1230,6 +1311,54 @@ mod tests {
             srjf_growth > 1.5 * just_growth,
             "srjf growth {srjf_growth} should far exceed justitia {just_growth}"
         );
+    }
+
+    #[test]
+    fn trace_starvation_records_both_arms() {
+        let arms = trace_starvation(12, 4, 13);
+        assert_eq!(arms.len(), 2);
+        assert_eq!(arms[0].label, "srjf");
+        assert_eq!(arms[1].label, "justitia");
+        for arm in &arms {
+            assert!(arm.elephant_jct > 0.0, "{}: elephant never finished", arm.label);
+            assert!(arm.recorder.event_count() > 0, "{}: no events", arm.label);
+            assert!(arm.recorder.sample_count() > 0, "{}: no samples", arm.label);
+            // 13 agents arrive and complete on every arm.
+            let count = |k: &str| {
+                arm.recorder.events().filter(|e| e.kind.name() == k).count()
+            };
+            assert_eq!(count("arrival"), 13, "{}", arm.label);
+            assert_eq!(count("complete"), 13, "{}", arm.label);
+        }
+        // Justitia's audit log must show the pick stream (SRJF records picks
+        // too, just without virtual-time tags).
+        assert!(arms[1].recorder.pick_count() > 0);
+        assert!(arms[1].recorder.picks().any(|p| p.winner_tag.is_some()));
+        // The exported pair loads as one Chrome trace with two processes.
+        let parts: Vec<(u32, &str, &crate::trace::TraceRecorder)> = arms
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (i as u32, a.label, &a.recorder))
+            .collect();
+        let json = crate::trace::chrome_trace(&parts);
+        let events = json.get("traceEvents").as_arr().unwrap();
+        assert!(events.len() > 26, "trace too small: {}", events.len());
+    }
+
+    #[test]
+    fn experiment_rows_report_ttft() {
+        let rows = chunked_prefill(&Config::default(), 24, 3.0, &[512], 2048, 42);
+        for r in &rows {
+            assert!(
+                r.ttft_mean_ms > 0.0 && r.ttft_p99_ms >= r.ttft_mean_ms * 0.5,
+                "{} {:?} chunk {}: ttft mean {} p99 {}",
+                r.workload,
+                r.policy,
+                r.chunk,
+                r.ttft_mean_ms,
+                r.ttft_p99_ms
+            );
+        }
     }
 
     #[test]

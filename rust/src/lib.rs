@@ -39,6 +39,13 @@
 //! recomputing per victim under pluggable victim policies — up to
 //! `pamper-aware`, selective pampering applied to eviction
 //! ([`config::PreemptionMode`], [`config::VictimPolicy`], DESIGN.md §11).
+//!
+//! The [`trace`] module is the observability layer (DESIGN.md §13): a
+//! bounded flight recorder of lifecycle events, a per-iteration fairness
+//! sampler (virtual-time lag, realized-vs-GPS service gap), and a scheduler
+//! decision audit log — off by default and bit-identity-preserving, with a
+//! Chrome trace-event / Perfetto exporter and `/metrics`+`/trace` server
+//! endpoints.
 
 #![warn(missing_docs)]
 
@@ -56,5 +63,6 @@ pub mod runtime;
 pub mod sched;
 pub mod server;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;
 pub mod workload;

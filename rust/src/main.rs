@@ -33,6 +33,7 @@ fn main() {
         "online-correction",
         "chunked-prefill",
         "event-core",
+        "trace",
     ]);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
@@ -66,7 +67,8 @@ fn print_help() {
            run              run one policy over a generated suite (simulator)\n\
            cluster          multi-replica scale-out experiment (replicas x placement)\n\
            experiment       regenerate a paper figure/table (fig3..fig13, table1,\n\
-                            prefix_sharing, dag_agents, chunked_prefill, preemption, all)\n\
+                            prefix_sharing, dag_agents, chunked_prefill, preemption,\n\
+                            trace_demo, all)\n\
            gen-workload     write a workload trace JSON\n\
            train-predictor  train + evaluate the per-class MLP predictor\n\
            gps              dump the GPS fluid reference for a suite\n\n\
@@ -81,7 +83,10 @@ fn print_help() {
            --preemption swap|recompute|auto   --victim youngest|most-pages|\n\
                         cheapest-remaining|pamper-aware\n\
            --host-mem-pages N   --swap-bw TOKENS_PER_SEC\n\
-           --event-core   (event-driven engine core; bit-identical, faster)"
+           --event-core   (event-driven engine core; bit-identical, faster)\n\
+           --trace        (flight recorder + Chrome/Perfetto export; default off)\n\
+           --trace-sample N   (sample the time series every N iterations; default 8)\n\
+           --trace-cap N      (ring-buffer capacity per stream; default 65536)"
     );
 }
 
@@ -105,7 +110,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.policy.name()
     );
     let t0 = std::time::Instant::now();
-    let metrics = if cfg.use_predictor {
+    let trained = if cfg.use_predictor {
         let (pred, report) =
             justitia::predictor::train_per_class(CostModel::MemoryCentric, 100, 20, cfg.workload.seed);
         println!(
@@ -114,17 +119,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             report.infer_ms,
             report.train_secs
         );
-        exp::run_policy(&cfg, &suite, cfg.policy, &exp::CostSource::Model(&pred))
-    } else if cfg.noise_lambda > 1.0 {
-        exp::run_policy(
-            &cfg,
-            &suite,
-            cfg.policy,
-            &exp::CostSource::Noisy { lambda: cfg.noise_lambda, seed: cfg.workload.seed },
-        )
+        Some(pred)
     } else {
-        exp::run_policy_oracle(&cfg, &suite, cfg.policy)
+        None
     };
+    let source = match &trained {
+        Some(pred) => exp::CostSource::Model(pred),
+        None if cfg.noise_lambda > 1.0 => {
+            exp::CostSource::Noisy { lambda: cfg.noise_lambda, seed: cfg.workload.seed }
+        }
+        None => exp::CostSource::Oracle,
+    };
+    let (metrics, trace_rec) = exp::run_policy_traced(&cfg, &suite, cfg.policy, &source);
     println!(
         "completed {}/{} agents | avg JCT {:.1}s | P90 JCT {:.1}s | engine time {:.1}s | \
          iterations {} | swaps {} | sched delay mean {} (host wall {:.2}s)",
@@ -138,6 +144,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         fmt_ns(metrics.sched_latency_ms() * 1e6),
         t0.elapsed().as_secs_f64()
     );
+    if metrics.ttft_samples() > 0 {
+        println!(
+            "ttft: mean {:.1} ms, p99 {:.1} ms over {} first tokens",
+            metrics.ttft_mean() * 1e3,
+            metrics.ttft_percentile(99.0) * 1e3,
+            metrics.ttft_samples()
+        );
+    }
     if cfg.prefix_cache {
         println!(
             "prefix cache: hit rate {:.1}% ({}/{}), {} prefill tokens saved, peak {} pages",
@@ -181,6 +195,18 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .unwrap_or_else(|| "inf".into()),
             metrics.recompute_count(),
             metrics.recomputed_tokens()
+        );
+    }
+    if let Some(rec) = trace_rec {
+        std::fs::create_dir_all("results")?;
+        let json = justitia::trace::chrome_trace(&[(0, cfg.policy.name(), &rec)]);
+        std::fs::write("results/TRACE_run.json", json.dump())?;
+        println!(
+            "trace: {} events ({} dropped), {} samples, {} picks -> results/TRACE_run.json",
+            rec.event_count(),
+            rec.dropped_events(),
+            rec.sample_count(),
+            rec.pick_count()
         );
     }
     Ok(())
@@ -314,6 +340,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => 1,
     };
     let placement = Placement::by_name(args.get_or("placement", "cluster-vtime"))?;
+    let trace = args
+        .has("trace")
+        .then(|| (args.get_u64("trace-sample", 8) as u32, args.get_usize("trace-cap", 65536)));
     justitia::server::http::serve(
         std::path::Path::new(artifacts),
         port,
@@ -321,6 +350,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         replicas,
         placement,
         args.has("predict"),
+        trace,
     )
 }
 
@@ -532,6 +562,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                         ("cache_pages_peak", Json::Num(r.cache_pages_peak as f64)),
                         ("avg_jct", Json::Num(r.avg_jct)),
                         ("p99_jct", Json::Num(r.p99_jct)),
+                        ("ttft_mean_ms", Json::Num(r.ttft_mean_ms)),
+                        ("ttft_p99_ms", Json::Num(r.ttft_p99_ms)),
                         ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
                         ("completed", Json::Num(r.completed as f64)),
                     ])
@@ -566,6 +598,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                         ("correction", Json::Bool(r.correction)),
                         ("avg_jct", Json::Num(r.avg_jct)),
                         ("p99_jct", Json::Num(r.p99_jct)),
+                        ("ttft_mean_ms", Json::Num(r.ttft_mean_ms)),
+                        ("ttft_p99_ms", Json::Num(r.ttft_p99_ms)),
                         ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
                         ("spawned_tasks", Json::Num(r.spawned_tasks as f64)),
                         ("correction_error", Json::Num(r.correction_error)),
@@ -627,6 +661,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                         ("p99_jct", Json::Num(r.p99_jct)),
                         ("decode_itl_p99_ms", Json::Num(r.decode_itl_p99_ms)),
                         ("decode_itl_mean_ms", Json::Num(r.decode_itl_mean_ms)),
+                        ("ttft_mean_ms", Json::Num(r.ttft_mean_ms)),
+                        ("ttft_p99_ms", Json::Num(r.ttft_p99_ms)),
                         ("prefill_stalls", Json::Num(r.prefill_stalls as f64)),
                         ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
                         ("completed", Json::Num(r.completed as f64)),
@@ -679,6 +715,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                         ("victim", Json::Str(r.victim.name().into())),
                         ("avg_jct", Json::Num(r.avg_jct)),
                         ("p99_jct", Json::Num(r.p99_jct)),
+                        ("ttft_mean_ms", Json::Num(r.ttft_mean_ms)),
+                        ("ttft_p99_ms", Json::Num(r.ttft_p99_ms)),
                         ("swap_outs", Json::Num(r.swap_outs as f64)),
                         ("recomputes", Json::Num(r.recomputes as f64)),
                         ("recomputed_tokens", Json::Num(r.recomputed_tokens as f64)),
@@ -690,6 +728,36 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         );
         std::fs::write("results/preemption.json", json.pretty())?;
         out.line("(wrote results/preemption.json)".to_string());
+    }
+    if run_all || which == "trace_demo" {
+        let mut out = ResultsFile::new("trace_demo.txt");
+        out.line("=== Trace demo: Fig. 9 starvation scenario with the flight recorder on ===");
+        let n_mice = args.get_usize("mice", 40);
+        let stride = args.get_u64("trace-sample", 4) as u32;
+        let arms = exp::trace_starvation(n_mice, stride, seed);
+        for a in &arms {
+            out.line(format!(
+                "{:<10} elephant JCT {:>7.1}s | {} events ({} dropped), {} samples, {} picks",
+                a.label,
+                a.elephant_jct,
+                a.recorder.event_count(),
+                a.recorder.dropped_events(),
+                a.recorder.sample_count(),
+                a.recorder.pick_count()
+            ));
+        }
+        let parts: Vec<(u32, &str, &justitia::trace::TraceRecorder)> = arms
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (i as u32, a.label, &a.recorder))
+            .collect();
+        let json = justitia::trace::chrome_trace(&parts);
+        std::fs::write("results/TRACE_starvation.json", json.dump())?;
+        out.line(
+            "(wrote results/TRACE_starvation.json — load in Perfetto/chrome://tracing; \
+             see EXPERIMENTS.md \"How to read a trace\")"
+                .to_string(),
+        );
     }
     if run_all || which == "table1" {
         let mut out = ResultsFile::new("table1.txt");

@@ -96,6 +96,9 @@ pub struct RunMetrics {
     complete: HashMap<AgentId, f64>,
     task_admit: HashMap<TaskId, f64>,
     task_complete: HashMap<TaskId, f64>,
+    /// When each task became ready (dependencies met / spawned) — the TTFT
+    /// anchor: queueing delay counts toward the first token.
+    task_ready: HashMap<TaskId, f64>,
     iterations: u64,
     total_prefill_seqs: u64,
     total_decode_seqs: u64,
@@ -131,6 +134,9 @@ pub struct RunMetrics {
     /// Decode inter-token latency: every decoding sequence experiences its
     /// iteration's wall time as the gap between consecutive output tokens.
     decode_itl: LatencyHist,
+    /// Time to first token per task, anchored at task readiness (so
+    /// scheduler queueing delay is included — the fairness-visible part).
+    ttft: LatencyHist,
     /// Prefill-pending sequences that received no chunk in an iteration
     /// because the token budget was spent or no KV page could be acquired
     /// (chunked prefill only — always 0 with the flag off, where a pending
@@ -172,6 +178,20 @@ impl RunMetrics {
     /// Record a task admission.
     pub fn on_task_admitted(&mut self, task: TaskId, t: f64) {
         self.task_admit.insert(task, t);
+    }
+
+    /// Record a task becoming ready (the TTFT anchor).
+    pub fn on_task_ready(&mut self, task: TaskId, t: f64) {
+        self.task_ready.insert(task, t);
+    }
+
+    /// Record a task's first output token: TTFT = `t` − ready time. The
+    /// engine guarantees at most one call per task (preemption re-entries
+    /// do not re-fire).
+    pub fn on_first_token(&mut self, task: TaskId, t: f64) {
+        if let Some(&ready) = self.task_ready.get(&task) {
+            self.ttft.record((t - ready).max(0.0), 1);
+        }
     }
 
     /// Record a task completion.
@@ -312,6 +332,21 @@ impl RunMetrics {
         self.decode_itl.percentile(q)
     }
 
+    /// TTFT samples recorded (one per task that produced a token).
+    pub fn ttft_samples(&self) -> u64 {
+        self.ttft.count()
+    }
+
+    /// Mean time to first token (s), queueing delay included.
+    pub fn ttft_mean(&self) -> f64 {
+        self.ttft.mean()
+    }
+
+    /// TTFT percentile, `q` in [0, 100] (s).
+    pub fn ttft_percentile(&self, q: f64) -> f64 {
+        self.ttft.percentile(q)
+    }
+
     /// Number of §4.2 correction events recorded.
     pub fn correction_samples(&self) -> u64 {
         self.correction_error.count()
@@ -434,6 +469,7 @@ impl RunMetrics {
         self.complete.extend(&other.complete);
         self.task_admit.extend(&other.task_admit);
         self.task_complete.extend(&other.task_complete);
+        self.task_ready.extend(&other.task_ready);
         self.iterations += other.iterations;
         self.total_prefill_seqs += other.total_prefill_seqs;
         self.total_decode_seqs += other.total_decode_seqs;
@@ -451,6 +487,7 @@ impl RunMetrics {
         self.sched_latency.merge(&other.sched_latency);
         self.spawned_tasks += other.spawned_tasks;
         self.decode_itl.merge(&other.decode_itl);
+        self.ttft.merge(&other.ttft);
         self.prefill_stalls += other.prefill_stalls;
         self.correction_error.merge(&other.correction_error);
         self.correction_trace.extend(other.correction_trace.iter().copied());
@@ -894,6 +931,32 @@ mod tests {
         assert_eq!(m.decode_itl_samples(), 6);
         assert_eq!(m.prefill_stalls(), 3);
         assert!((m.decode_itl_percentile(99.0) / 0.4 - 1.0).abs() < 0.11);
+    }
+
+    #[test]
+    fn ttft_hist_anchors_at_task_ready_and_merges() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.ttft_samples(), 0);
+        assert_eq!(m.ttft_mean(), 0.0);
+        // Ready at 1.0, admitted at 3.0, first token at 5.0: TTFT = 4.0 —
+        // queueing delay (ready → admit) is included.
+        m.on_task_ready(tid(1, 0), 1.0);
+        m.on_task_admitted(tid(1, 0), 3.0);
+        m.on_first_token(tid(1, 0), 5.0);
+        assert_eq!(m.ttft_samples(), 1);
+        assert!((m.ttft_mean() - 4.0).abs() < 1e-12);
+        // A first token without a recorded ready time is ignored, not a
+        // panic (defensive: replica merges may see partial maps).
+        m.on_first_token(tid(9, 0), 2.0);
+        assert_eq!(m.ttft_samples(), 1);
+        // Merge is bucket-exact, like decode ITL.
+        let mut other = RunMetrics::new();
+        other.on_task_ready(tid(2, 0), 0.0);
+        other.on_first_token(tid(2, 0), 2.0);
+        m.merge(&other);
+        assert_eq!(m.ttft_samples(), 2);
+        assert!((m.ttft_mean() - 3.0).abs() < 1e-12);
+        assert!(m.ttft_percentile(99.0) >= m.ttft_percentile(10.0));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use crate::config::Policy;
 use crate::sched::vtime::VirtualClock;
-use crate::sched::{AgentInfo, AgentQueues, OrdF64, Scheduler, TaskInfo};
+use crate::sched::{AgentInfo, AgentQueues, OrdF64, PickExplanation, Scheduler, TaskInfo};
 use crate::workload::AgentId;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -191,6 +191,39 @@ impl Scheduler for Justitia {
         self.tags.get(&agent).copied()
     }
 
+    fn explain_pick(&mut self, picked: &TaskInfo, _now: f64) -> Option<PickExplanation> {
+        let winner = picked.id.agent;
+        // The runner-up is the smallest *live* heap entry of another agent:
+        // skim first so the head is live, then scan past stale entries
+        // (wrong tag, or no waiting tasks) — O(heap) but only on the traced
+        // path, never in the hot scheduler.
+        self.skim();
+        let mut runner: Option<(f64, AgentId)> = None;
+        for &Reverse((OrdF64(f), agent)) in self.heap.iter() {
+            if agent == winner
+                || f != self.current_tag(agent)
+                || !self.waiting.has_agent(agent)
+            {
+                continue;
+            }
+            if runner.map_or(true, |(rf, ra)| (f, agent) < (rf, ra)) {
+                runner = Some((f, agent));
+            }
+        }
+        Some(PickExplanation {
+            winner_tag: self.tags.get(&winner).copied(),
+            runner_up: runner.map(|(_, a)| a),
+            runner_up_tag: runner.map(|(f, _)| f),
+            // Selective pampering: the winner keeps the seat while more of
+            // its tasks wait (saturated consecutive service, §4.3).
+            pampered: self.waiting.agent_len(winner) > 1,
+        })
+    }
+
+    fn virtual_time(&mut self, now: f64) -> Option<f64> {
+        Some(self.vclock.vt(now))
+    }
+
     fn gps_finish_estimate(&mut self, cost: f64, now: f64) -> Option<f64> {
         // Probe the live virtual clock with a sentinel id (AgentId::MAX is
         // never assigned by Suite re-indexing); the clone-based simulation
@@ -342,6 +375,51 @@ mod tests {
         );
         assert_eq!(s.critical_path(4), Some(37.5));
         assert_eq!(s.critical_path(5), None);
+    }
+
+    #[test]
+    fn explain_pick_names_runner_up_and_pampering() {
+        let mut s = Justitia::new(100, 1.0);
+        s.on_agent_arrival(&info(1, 50.0, 0.0), 0.0);
+        s.on_agent_arrival(&info(2, 200.0, 0.0), 0.0);
+        s.push_task(task(1, 0, 0), 0.0);
+        s.push_task(task(1, 1, 1), 0.0);
+        s.push_task(task(2, 0, 2), 0.0);
+        let head = s.peek_next(0.0).unwrap();
+        assert_eq!(head.id.agent, 1);
+        let e = s.explain_pick(&head, 0.0).unwrap();
+        assert_eq!(e.winner_tag, Some(50.0));
+        assert_eq!(e.runner_up, Some(2));
+        assert_eq!(e.runner_up_tag, Some(200.0));
+        assert!(e.pampered, "a second task of agent 1 still waits");
+        // Drain agent 1's first task: the final task is no longer pampered.
+        s.pop_next(0.0);
+        let head = s.peek_next(0.0).unwrap();
+        let e = s.explain_pick(&head, 0.0).unwrap();
+        assert_eq!(e.winner_tag, Some(50.0));
+        assert!(!e.pampered);
+        // Last agent standing has no runner-up.
+        s.pop_next(0.0);
+        let head = s.peek_next(0.0).unwrap();
+        assert_eq!(head.id.agent, 2);
+        let e = s.explain_pick(&head, 0.0).unwrap();
+        assert_eq!(e.runner_up, None);
+        assert_eq!(e.runner_up_tag, None);
+        // Explaining must not perturb the pick order.
+        assert_eq!(s.pop_next(0.0).unwrap().id.agent, 2);
+        assert!(s.pop_next(0.0).is_none());
+    }
+
+    #[test]
+    fn virtual_time_tracks_gps_clock() {
+        let mut s = Justitia::new(10, 1.0);
+        assert_eq!(s.virtual_time(0.0), Some(0.0));
+        s.on_agent_arrival(&info(1, 100.0, 0.0), 0.0);
+        // One active agent: dV/dt = M = 10 per second.
+        assert_eq!(s.virtual_time(2.0), Some(20.0));
+        // vt is exact piecewise-linear integration: re-asking at the same
+        // instant returns the same value (path independence).
+        assert_eq!(s.virtual_time(2.0), Some(20.0));
     }
 
     #[test]

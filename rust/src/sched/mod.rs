@@ -19,6 +19,7 @@ pub mod vtime;
 use crate::config::Policy;
 use crate::cost::CostModel;
 pub use crate::engine::event::EngineEvent;
+pub use crate::trace::PickExplanation;
 use crate::workload::{AgentId, TaskId};
 
 /// What the scheduler learns about an agent on arrival. `cost` is the
@@ -129,6 +130,27 @@ pub trait Scheduler: Send {
     /// `None` for policies without a virtual clock (the dispatcher then
     /// falls back to its own mirror clocks).
     fn gps_finish_estimate(&mut self, _cost: f64, _now: f64) -> Option<f64> {
+        None
+    }
+
+    /// Explain the head-of-line pick the engine is about to take (`picked`
+    /// is what [`peek_next`](Self::peek_next) returned): the winning tag,
+    /// the best losing agent and its tag, and whether the pick continues
+    /// saturated consecutive service (selective pampering). Called only
+    /// when tracing is on, *before* `pop_next`, so the policy's queues are
+    /// intact. The default (`None`) records the pick without an
+    /// explanation — correct for tag-free policies.
+    fn explain_pick(&mut self, _picked: &TaskInfo, _now: f64) -> Option<PickExplanation> {
+        None
+    }
+
+    /// The policy's current virtual time V(now), if it keeps a GPS clock
+    /// (Justitia). The trace sampler combines it with
+    /// [`virtual_finish_tag`](Self::virtual_finish_tag) into per-agent lag
+    /// `V(t) − F_j` and the realized-vs-GPS max service gap. Advancing the
+    /// clock here is safe: `VirtualClock::advance` is exact piecewise-linear
+    /// integration, so extra calls never perturb later values.
+    fn virtual_time(&mut self, _now: f64) -> Option<f64> {
         None
     }
 
@@ -244,6 +266,11 @@ impl AgentQueues {
         self.queues.get(&agent).and_then(|q| q.front())
     }
 
+    /// Waiting tasks of one agent (pamper-status introspection).
+    pub fn agent_len(&self, agent: AgentId) -> usize {
+        self.queues.get(&agent).map(|q| q.len()).unwrap_or(0)
+    }
+
     /// Linear scan for the waiting agent minimizing `key` (ties by agent id).
     /// O(A) with A = agents having waiting work; used by the dynamic-priority
     /// policies (VTC, SRJF) where keys change continuously.
@@ -328,6 +355,31 @@ mod tests {
         }
         let s = build(Policy::JustitiaComputeCost, 1000, 1.0);
         assert_eq!(s.policy(), Policy::JustitiaComputeCost);
+    }
+
+    #[test]
+    fn agent_len_tracks_per_agent_queue() {
+        let mut q = AgentQueues::new();
+        assert_eq!(q.agent_len(1), 0);
+        q.push(task(1, 0, 0));
+        q.push(task(1, 1, 1));
+        q.push(task(2, 0, 2));
+        assert_eq!(q.agent_len(1), 2);
+        assert_eq!(q.agent_len(2), 1);
+        q.pop_agent(1);
+        assert_eq!(q.agent_len(1), 1);
+    }
+
+    #[test]
+    fn default_trace_hooks_are_inert() {
+        // Tag-free policies fall back to the trait defaults: no explanation,
+        // no virtual clock.
+        let mut s = build(Policy::Fcfs, 1000, 1.0);
+        s.on_agent_arrival(&AgentInfo::new(1, 0.0, 10.0), 0.0);
+        s.push_task(task(1, 0, 0), 0.0);
+        let head = s.peek_next(0.0).unwrap();
+        assert!(s.explain_pick(&head, 0.0).is_none());
+        assert!(s.virtual_time(0.0).is_none());
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //!                      (stages optional: omitted → generated from the class
 //!                      template with a fresh seed). Returns the agent id.
 //!   `GET  /agents/N` — status + JCT when complete.
-//!   `GET  /metrics`  — aggregate serving metrics (JSON).
+//!   `GET  /metrics`  — aggregate serving metrics, Prometheus text format.
+//!   `GET  /trace`    — the merged Chrome/Perfetto trace dump (404 unless
+//!                      the server was started with `--trace`).
 //!   `GET  /healthz`  — liveness.
 //!
 //! Architecture: acceptor threads parse requests and push submissions over a
@@ -71,8 +73,15 @@ pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
     Ok(Request { method, path, body })
 }
 
-/// Write an HTTP response.
-pub fn write_response(stream: &mut dyn Write, status: u16, body: &str) -> std::io::Result<()> {
+/// Write an HTTP response with the given content type (the routing table
+/// picks `application/json` for API routes and Prometheus' registered
+/// `text/plain` flavor for `/metrics`).
+pub fn write_response(
+    stream: &mut dyn Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
     let reason = match status {
         200 => "OK",
         202 => "Accepted",
@@ -82,7 +91,7 @@ pub fn write_response(stream: &mut dyn Write, status: u16, body: &str) -> std::i
     };
     write!(
         stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )
 }
@@ -97,6 +106,11 @@ pub(crate) struct Shared {
     /// oracle, and the engines derive per-task tags from the same
     /// prediction — the predictor-in-the-loop serving path (ISSUE 5).
     predictor: Option<crate::predictor::PerClassPredictor>,
+    /// Latest merged Chrome-trace dump, refreshed by the engine thread each
+    /// time it goes idle (`None` until the first refresh, or forever when
+    /// the server runs without `--trace`). Stored pre-serialized so the
+    /// `/trace` handler never touches the engines.
+    trace: Mutex<Option<String>>,
 }
 
 /// Parse an agent submission body into an AgentSpec.
@@ -152,7 +166,11 @@ pub fn parse_agent_submission(
 /// up behind a [`ClusterDispatcher`] using `placement`; with one replica the
 /// dispatcher is a transparent pass-through. With `use_predictor` a
 /// per-class cost predictor is trained at startup and submissions are
-/// priced by it (the schedulers never see oracle costs).
+/// priced by it (the schedulers never see oracle costs). `trace` is the
+/// `--trace` wiring: `Some((sample_stride, ring_cap))` turns every
+/// replica's flight recorder on and publishes the merged Chrome dump at
+/// `GET /trace`; `None` (the default) keeps the engines bit-identical to
+/// an untraced run and `/trace` answers 404.
 pub fn serve(
     artifacts: &std::path::Path,
     port: u16,
@@ -160,6 +178,7 @@ pub fn serve(
     replicas: usize,
     placement: Placement,
     use_predictor: bool,
+    trace: Option<(u32, usize)>,
 ) -> Result<()> {
     let predictor = if use_predictor {
         println!("training per-class cost predictor…");
@@ -179,6 +198,7 @@ pub fn serve(
         agents: Mutex::new(BTreeMap::new()),
         next_id: AtomicU32::new(0),
         predictor,
+        trace: Mutex::new(None),
     });
     let (tx, rx) = mpsc::channel::<(AgentSpec, f64)>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
@@ -236,6 +256,11 @@ pub fn serve(
                 // Per-task scheduler tags derive from the submitted Ĉ_j in
                 // predictor mode (see Engine::push_task).
                 cfg2.use_predictor = use_predictor;
+                if let Some((sample, cap)) = trace {
+                    cfg2.trace = true;
+                    cfg2.trace_sample = sample;
+                    cfg2.trace_cap = cap;
+                }
                 let sched = crate::sched::build(policy, cfg2.backend.kv_tokens, 1.0);
                 engines.push(Engine::new(&cfg2, sched, PjrtBackend::new(model)));
             }
@@ -256,7 +281,14 @@ pub fn serve(
                         }
                     }
                 } else {
-                    // Idle: block on the next submission.
+                    // Idle: publish a fresh trace dump (the only writer of
+                    // `shared.trace`, so `/trace` serves a consistent
+                    // snapshot), then block on the next submission.
+                    if trace.is_some() {
+                        if let Some(json) = cluster.merged_trace_chrome() {
+                            *shared.trace.lock().unwrap() = Some(json.dump());
+                        }
+                    }
                     match rx.recv() {
                         Ok((spec, cost)) => {
                             cluster.submit(spec, cost);
@@ -292,33 +324,99 @@ fn handle_conn(
     tx: &mpsc::Sender<(AgentSpec, f64)>,
 ) -> Result<()> {
     let req = parse_request(&mut stream)?;
-    let (status, body) = route(&req, shared, tx);
-    write_response(&mut stream, status, &body)?;
+    let (status, content_type, body) = route(&req, shared, tx);
+    write_response(&mut stream, status, content_type, &body)?;
     Ok(())
 }
 
-/// Route a request (separated from I/O for testability).
+/// The Prometheus text-format content type (the exposition format spec's
+/// registered flavor — scrapers key on the `version` parameter).
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+const JSON_CONTENT_TYPE: &str = "application/json";
+
+/// One Prometheus metric: `# HELP` + `# TYPE` + the sample line.
+fn prom_metric(out: &mut String, name: &str, kind: &str, help: &str, value: f64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    // NaN (empty-percentile) serializes as Prometheus' literal NaN.
+    if value.is_nan() {
+        let _ = writeln!(out, "{name} NaN");
+    } else {
+        let _ = writeln!(out, "{name} {value}");
+    }
+}
+
+/// Route a request (separated from I/O for testability). Returns
+/// `(status, content type, body)`.
 pub(crate) fn route(
     req: &Request,
     shared: &Shared,
     tx: &mpsc::Sender<(AgentSpec, f64)>,
-) -> (u16, String) {
+) -> (u16, &'static str, String) {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (200, obj([("ok", true.into())]).dump()),
+        ("GET", "/healthz") => (200, JSON_CONTENT_TYPE, obj([("ok", true.into())]).dump()),
         ("GET", "/metrics") => {
             let agents = shared.agents.lock().unwrap();
             let done: Vec<f64> = agents.values().filter_map(|(_, _, j)| *j).collect();
-            (
-                200,
-                obj([
-                    ("submitted", agents.len().into()),
-                    ("completed", done.len().into()),
-                    ("avg_jct_s", crate::util::stats::mean(&done).into()),
-                    ("p90_jct_s", crate::util::stats::percentile(&done, 90.0).into()),
-                ])
-                .dump(),
-            )
+            let mut out = String::new();
+            prom_metric(
+                &mut out,
+                "justitia_agents_submitted",
+                "counter",
+                "Agents submitted since server start.",
+                agents.len() as f64,
+            );
+            prom_metric(
+                &mut out,
+                "justitia_agents_completed",
+                "counter",
+                "Agents that finished every task.",
+                done.len() as f64,
+            );
+            prom_metric(
+                &mut out,
+                "justitia_agents_in_flight",
+                "gauge",
+                "Agents submitted but not yet complete.",
+                (agents.len() - done.len()) as f64,
+            );
+            prom_metric(
+                &mut out,
+                "justitia_jct_seconds_avg",
+                "gauge",
+                "Mean job completion time of completed agents.",
+                crate::util::stats::mean(&done),
+            );
+            prom_metric(
+                &mut out,
+                "justitia_jct_seconds_p90",
+                "gauge",
+                "90th-percentile job completion time of completed agents.",
+                crate::util::stats::percentile(&done, 90.0),
+            );
+            prom_metric(
+                &mut out,
+                "justitia_trace_available",
+                "gauge",
+                "1 when a /trace dump has been published, else 0.",
+                if shared.trace.lock().unwrap().is_some() { 1.0 } else { 0.0 },
+            );
+            (200, PROMETHEUS_CONTENT_TYPE, out)
         }
+        ("GET", "/trace") => match shared.trace.lock().unwrap().clone() {
+            Some(dump) => (200, JSON_CONTENT_TYPE, dump),
+            None => (
+                404,
+                JSON_CONTENT_TYPE,
+                obj([(
+                    "error",
+                    "no trace captured (start the server with --trace)".into(),
+                )])
+                .dump(),
+            ),
+        },
         ("POST", "/agents") => {
             let body = String::from_utf8_lossy(&req.body);
             // The agents lock is the critical section for id assignment:
@@ -347,9 +445,15 @@ pub(crate) fn route(
                         None => CostModel::MemoryCentric.agent_cost(&spec),
                     };
                     let _ = tx.send((spec, cost));
-                    (202, obj([("id", id.into()), ("predicted_cost", cost.into())]).dump())
+                    (
+                        202,
+                        JSON_CONTENT_TYPE,
+                        obj([("id", id.into()), ("predicted_cost", cost.into())]).dump(),
+                    )
                 }
-                Err(e) => (400, obj([("error", format!("{e:#}").into())]).dump()),
+                Err(e) => {
+                    (400, JSON_CONTENT_TYPE, obj([("error", format!("{e:#}").into())]).dump())
+                }
             }
         }
         ("GET", path) if path.starts_with("/agents/") => {
@@ -358,6 +462,7 @@ pub(crate) fn route(
             match id.and_then(|i| agents.get(&i).map(|e| (i, e.clone()))) {
                 Some((i, (class, _, jct))) => (
                     200,
+                    JSON_CONTENT_TYPE,
                     obj([
                         ("id", i.into()),
                         ("class", class.into()),
@@ -366,10 +471,12 @@ pub(crate) fn route(
                     ])
                     .dump(),
                 ),
-                None => (404, obj([("error", "no such agent".into())]).dump()),
+                None => {
+                    (404, JSON_CONTENT_TYPE, obj([("error", "no such agent".into())]).dump())
+                }
             }
         }
-        _ => (404, obj([("error", "no such route".into())]).dump()),
+        _ => (404, JSON_CONTENT_TYPE, obj([("error", "no such route".into())]).dump()),
     }
 }
 
@@ -399,9 +506,10 @@ mod tests {
     #[test]
     fn response_format() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, "{\"ok\":true}").unwrap();
+        write_response(&mut out, 200, "application/json", "{\"ok\":true}").unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Type: application/json"));
         assert!(s.contains("Content-Length: 11"));
         assert!(s.ends_with("{\"ok\":true}"));
     }
@@ -448,6 +556,7 @@ mod tests {
             predictor: Some(crate::predictor::PerClassPredictor {
                 models: std::collections::HashMap::new(),
             }),
+            trace: Mutex::new(None),
         };
         let (tx, rx) = mpsc::channel();
         let req = Request {
@@ -455,7 +564,7 @@ mod tests {
             path: "/agents".into(),
             body: br#"{"class": "EV"}"#.to_vec(),
         };
-        let (s, body) = route(&req, &shared, &tx);
+        let (s, _, body) = route(&req, &shared, &tx);
         assert_eq!(s, 202);
         assert!(body.contains("predicted_cost"), "response must echo the prediction: {body}");
         let (spec, cost) = rx.try_recv().unwrap();
@@ -473,6 +582,7 @@ mod tests {
             agents: Mutex::new(BTreeMap::new()),
             next_id: AtomicU32::new(0),
             predictor: None,
+            trace: Mutex::new(None),
         };
         let (tx, rx) = mpsc::channel();
         let req = |m: &str, p: &str, b: &str| Request {
@@ -480,21 +590,50 @@ mod tests {
             path: p.into(),
             body: b.as_bytes().to_vec(),
         };
-        let (s, _) = route(&req("GET", "/healthz", ""), &shared, &tx);
-        assert_eq!(s, 200);
-        let (s, body) = route(&req("POST", "/agents", r#"{"class": "EV"}"#), &shared, &tx);
+        let (s, ct, _) = route(&req("GET", "/healthz", ""), &shared, &tx);
+        assert_eq!((s, ct), (200, "application/json"));
+        let (s, _, body) = route(&req("POST", "/agents", r#"{"class": "EV"}"#), &shared, &tx);
         assert_eq!(s, 202);
         assert!(body.contains("\"id\":0"));
         assert!(rx.try_recv().is_ok(), "spec forwarded to engine channel");
-        let (s, body) = route(&req("GET", "/agents/0", ""), &shared, &tx);
+        let (s, _, body) = route(&req("GET", "/agents/0", ""), &shared, &tx);
         assert_eq!(s, 200);
         assert!(body.contains("\"done\":false"));
-        let (s, _) = route(&req("GET", "/agents/99", ""), &shared, &tx);
+        let (s, _, _) = route(&req("GET", "/agents/99", ""), &shared, &tx);
         assert_eq!(s, 404);
-        let (s, body) = route(&req("GET", "/metrics", ""), &shared, &tx);
+        let (s, ct, body) = route(&req("GET", "/metrics", ""), &shared, &tx);
         assert_eq!(s, 200);
-        assert!(body.contains("\"submitted\":1"));
-        let (s, _) = route(&req("GET", "/nope", ""), &shared, &tx);
+        assert_eq!(ct, PROMETHEUS_CONTENT_TYPE);
+        assert!(body.contains("# TYPE justitia_agents_submitted counter"));
+        assert!(body.contains("justitia_agents_submitted 1\n"));
+        assert!(body.contains("justitia_agents_completed 0\n"));
+        assert!(body.contains("justitia_agents_in_flight 1\n"));
+        assert!(body.contains("justitia_jct_seconds_avg 0\n"), "no completions yet: {body}");
+        assert!(body.contains("justitia_trace_available 0\n"));
+        let (s, _, _) = route(&req("GET", "/nope", ""), &shared, &tx);
         assert_eq!(s, 404);
+    }
+
+    #[test]
+    fn trace_endpoint_serves_published_dump_or_404() {
+        let shared = Shared {
+            agents: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU32::new(0),
+            predictor: None,
+            trace: Mutex::new(None),
+        };
+        let (tx, _rx) = mpsc::channel();
+        let req = Request { method: "GET".into(), path: "/trace".into(), body: Vec::new() };
+        let (s, _, body) = route(&req, &shared, &tx);
+        assert_eq!(s, 404);
+        assert!(body.contains("--trace"));
+        // The engine thread publishes; the route serves the snapshot as-is.
+        *shared.trace.lock().unwrap() = Some("{\"traceEvents\":[]}".into());
+        let (s, ct, body) = route(&req, &shared, &tx);
+        assert_eq!((s, ct), (200, "application/json"));
+        assert_eq!(body, "{\"traceEvents\":[]}");
+        let mreq = Request { method: "GET".into(), path: "/metrics".into(), body: Vec::new() };
+        let (_, _, metrics) = route(&mreq, &shared, &tx);
+        assert!(metrics.contains("justitia_trace_available 1\n"));
     }
 }

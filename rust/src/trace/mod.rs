@@ -1,0 +1,619 @@
+//! Flight-recorder tracing, fairness telemetry, and the scheduler decision
+//! audit log (DESIGN.md §13).
+//!
+//! Three bounded artifacts, all recorded on the engine clock (never wall
+//! time, so both engine cores emit identical streams by construction):
+//!
+//! 1. A ring-buffer **flight recorder** of structured lifecycle events
+//!    ([`TraceEvent`]): arrival → admission/blocked → prefill chunk →
+//!    decode batch → preempt{swap, recompute} → spawn → complete.
+//! 2. A **per-iteration sampler** ([`IterSample`], every `sample_stride`-th
+//!    iteration): batch occupancy, token-budget utilization, KV gauges,
+//!    queue depths, per-agent virtual-time lag, and the realized-vs-GPS max
+//!    service gap — the paper's fairness bound rendered as a live signal.
+//! 3. A **scheduler decision audit log** ([`PickDecision`], one per
+//!    head-of-line admission): winning tag, runner-up tag, pamper status —
+//!    so "why did Justitia starve client 3 at t=41s?" is answerable from
+//!    the artifact.
+//!
+//! Everything is bounded: each stream is a ring of at most `cap` entries
+//! with a drop counter, so a week-long server run costs O(cap) memory. The
+//! [`chrome_trace`] exporter renders recorders (one per replica) as Chrome
+//! trace-event / Perfetto JSON: one process track per replica, one thread
+//! row per agent, counter tracks for the sampled series.
+
+use crate::util::json::{obj, Json};
+use crate::workload::AgentId;
+use std::collections::VecDeque;
+
+/// Sentinel agent id for engine-level rows (decode-batch summaries): never
+/// assigned to a real agent (`Suite` re-indexing starts at 0 and the
+/// cluster dispatcher also reserves `AgentId::MAX` as its GPS probe).
+pub const ENGINE_ROW: AgentId = AgentId::MAX;
+
+/// What happened, with event-specific payload. Variant order follows the
+/// lifecycle: arrival → admission/blocked → prefill → decode → preemption →
+/// re-entry → spawn → completion.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEventKind {
+    /// Agent submitted (scheduler saw `on_agent_arrival`).
+    Arrival,
+    /// Task admitted into the running batch (KV acquired).
+    Admitted,
+    /// Head-of-line task failed KV admission; the queue is now gated.
+    Blocked,
+    /// A prefill chunk of `tokens` prompt tokens ran this iteration.
+    PrefillChunk {
+        /// Prompt tokens prefilled for this sequence this iteration.
+        tokens: u32,
+    },
+    /// A decode batch of `seqs` sequences retired (engine row, emitted on
+    /// sampled iterations only — see DESIGN.md §13 overhead model).
+    DecodeBatch {
+        /// Decoding sequences in the retired batch.
+        seqs: u32,
+    },
+    /// The sequence emitted its first output token (TTFT edge).
+    FirstToken,
+    /// Preempted: KV swapped out to the host pool.
+    PreemptSwap,
+    /// Preempted: KV discarded for recompute.
+    PreemptRecompute {
+        /// KV tokens discarded (all must be re-prefilled at re-entry).
+        dropped_tokens: u64,
+    },
+    /// Swapped-out sequence re-entered the running batch.
+    SwapIn,
+    /// Recompute-preempted sequence re-entered as a fresh prefill.
+    RecomputeReady,
+    /// Task completion spawned this child task (DAG workloads).
+    Spawn,
+    /// Task finished decoding and released its KV.
+    TaskComplete,
+    /// All tasks of the agent finished.
+    Complete,
+}
+
+impl TraceEventKind {
+    /// Stable lowercase name (JSON export, Perfetto event names).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEventKind::Arrival => "arrival",
+            TraceEventKind::Admitted => "admitted",
+            TraceEventKind::Blocked => "blocked",
+            TraceEventKind::PrefillChunk { .. } => "prefill_chunk",
+            TraceEventKind::DecodeBatch { .. } => "decode_batch",
+            TraceEventKind::FirstToken => "first_token",
+            TraceEventKind::PreemptSwap => "preempt_swap",
+            TraceEventKind::PreemptRecompute { .. } => "preempt_recompute",
+            TraceEventKind::SwapIn => "swap_in",
+            TraceEventKind::RecomputeReady => "recompute_ready",
+            TraceEventKind::Spawn => "spawn",
+            TraceEventKind::TaskComplete => "task_complete",
+            TraceEventKind::Complete => "complete",
+        }
+    }
+}
+
+/// One flight-recorder entry: a lifecycle event stamped with the engine
+/// clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Engine time (s).
+    pub t: f64,
+    /// Owning agent ([`ENGINE_ROW`] for engine-level events).
+    pub agent: AgentId,
+    /// Task index within the agent, when the event is task-scoped.
+    pub task: Option<u32>,
+    /// What happened.
+    pub kind: TraceEventKind,
+}
+
+/// One per-iteration telemetry sample (every `sample_stride`-th iteration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterSample {
+    /// Engine time (s) at the end of the sampled iteration.
+    pub t: f64,
+    /// Iteration ordinal (1-based, as counted by the metrics).
+    pub iteration: u64,
+    /// Sequences in the iteration's batch (prefills + decoders).
+    pub batch_seqs: u32,
+    /// Tokens the batch ran (prefill tokens + one per decoder).
+    pub batch_tokens: u64,
+    /// `batch_tokens / max_batched_tokens` (0 when chunking is off — the
+    /// budget is unbounded there, so utilization is undefined).
+    pub token_budget_util: f64,
+    /// Device KV pages free.
+    pub kv_free_pages: u64,
+    /// KV tokens swapped to host.
+    pub kv_swapped_tokens: u64,
+    /// Host swap-pool slots still free (`u64::MAX` = unbounded pool).
+    pub kv_host_free_tokens: u64,
+    /// Tasks waiting in the scheduler.
+    pub waiting: u64,
+    /// Running sequences.
+    pub running: u64,
+    /// Swapped-out sequences awaiting swap-in.
+    pub swapped_q: u64,
+    /// Recompute-preempted sequences awaiting re-entry.
+    pub recompute_q: u64,
+    /// Per-active-agent virtual-time lag `V(t) − F_j` (sorted by agent id;
+    /// positive ⇒ GPS would already have finished the agent, i.e. the real
+    /// system is behind the fluid yardstick for it). Empty for schedulers
+    /// without a virtual clock.
+    pub vt_lags: Vec<(AgentId, f64)>,
+    /// `max(0, max_j V(t) − F_j)` over active agents — the realized-vs-GPS
+    /// service gap the paper's fairness bound caps.
+    pub max_service_gap: f64,
+}
+
+/// One scheduler decision audit entry: why this head-of-line task won.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PickDecision {
+    /// Engine time (s) of the admission decision.
+    pub t: f64,
+    /// The winning agent.
+    pub agent: AgentId,
+    /// The winning task's index within the agent.
+    pub task_index: u32,
+    /// The winner's virtual finish tag F_j (`None` for tag-free policies).
+    pub winner_tag: Option<f64>,
+    /// The best losing agent, when the scheduler can name one.
+    pub runner_up: Option<AgentId>,
+    /// The runner-up's virtual finish tag.
+    pub runner_up_tag: Option<f64>,
+    /// Whether this pick continues saturated consecutive service of the
+    /// winning agent (selective pampering: more of its tasks still wait).
+    pub pampered: bool,
+}
+
+/// The explanation a [`Scheduler`](crate::sched::Scheduler) returns for a
+/// head-of-line pick (see `Scheduler::explain_pick`). Split from
+/// [`PickDecision`] so schedulers need not know the engine clock or task
+/// identity — the engine fills those in.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PickExplanation {
+    /// The winner's virtual finish tag, if the policy keeps one.
+    pub winner_tag: Option<f64>,
+    /// The best losing agent, if the policy can name one.
+    pub runner_up: Option<AgentId>,
+    /// The runner-up's tag.
+    pub runner_up_tag: Option<f64>,
+    /// Whether the pick continues saturated service of the winning agent.
+    pub pampered: bool,
+}
+
+/// Bounded flight recorder + sampler + audit log for one engine.
+///
+/// All three streams are rings: when `cap` is reached the oldest entry is
+/// dropped and the matching drop counter incremented, so the artifact
+/// always says how much history it lost. Equality compares full recorded
+/// state (streams + drop counters) — the trace-identity property test
+/// compares recorders across engine cores directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecorder {
+    cap: usize,
+    sample_stride: u32,
+    /// Iterations seen so far (sampling phase counter).
+    iter_count: u64,
+    events: VecDeque<TraceEvent>,
+    dropped_events: u64,
+    samples: VecDeque<IterSample>,
+    dropped_samples: u64,
+    picks: VecDeque<PickDecision>,
+    dropped_picks: u64,
+}
+
+impl TraceRecorder {
+    /// Recorder with ring capacity `cap` (entries per stream) sampling every
+    /// `sample_stride`-th iteration. Both are clamped to at least 1.
+    pub fn new(cap: usize, sample_stride: u32) -> Self {
+        TraceRecorder {
+            cap: cap.max(1),
+            sample_stride: sample_stride.max(1),
+            iter_count: 0,
+            events: VecDeque::new(),
+            dropped_events: 0,
+            samples: VecDeque::new(),
+            dropped_samples: 0,
+            picks: VecDeque::new(),
+            dropped_picks: 0,
+        }
+    }
+
+    /// Record a lifecycle event.
+    pub fn push(&mut self, t: f64, agent: AgentId, task: Option<u32>, kind: TraceEventKind) {
+        if self.events.len() >= self.cap {
+            self.events.pop_front();
+            self.dropped_events += 1;
+        }
+        self.events.push_back(TraceEvent { t, agent, task, kind });
+    }
+
+    /// Count one engine iteration; `true` when this iteration should be
+    /// sampled (every `sample_stride`-th, starting with the first).
+    pub fn tick_iteration(&mut self) -> bool {
+        let due = self.iter_count % self.sample_stride as u64 == 0;
+        self.iter_count += 1;
+        due
+    }
+
+    /// Record a telemetry sample.
+    pub fn push_sample(&mut self, sample: IterSample) {
+        if self.samples.len() >= self.cap {
+            self.samples.pop_front();
+            self.dropped_samples += 1;
+        }
+        self.samples.push_back(sample);
+    }
+
+    /// Record a scheduler decision audit entry.
+    pub fn push_pick(&mut self, pick: PickDecision) {
+        if self.picks.len() >= self.cap {
+            self.picks.pop_front();
+            self.dropped_picks += 1;
+        }
+        self.picks.push_back(pick);
+    }
+
+    /// Ring capacity per stream.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Sampling stride (iterations per sample).
+    pub fn sample_stride(&self) -> u32 {
+        self.sample_stride
+    }
+
+    /// Retained lifecycle events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Retained telemetry samples, oldest first.
+    pub fn samples(&self) -> impl Iterator<Item = &IterSample> {
+        self.samples.iter()
+    }
+
+    /// Retained audit entries, oldest first.
+    pub fn picks(&self) -> impl Iterator<Item = &PickDecision> {
+        self.picks.iter()
+    }
+
+    /// Lifecycle events evicted by the ring.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events
+    }
+
+    /// Samples evicted by the ring.
+    pub fn dropped_samples(&self) -> u64 {
+        self.dropped_samples
+    }
+
+    /// Audit entries evicted by the ring.
+    pub fn dropped_picks(&self) -> u64 {
+        self.dropped_picks
+    }
+
+    /// Retained event count (≤ `cap`).
+    pub fn event_count(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Retained sample count (≤ `cap`).
+    pub fn sample_count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Retained audit-entry count (≤ `cap`).
+    pub fn pick_count(&self) -> usize {
+        self.picks.len()
+    }
+}
+
+/// Seconds → Chrome trace-event microseconds.
+fn us(t: f64) -> Json {
+    Json::Num(t * 1e6)
+}
+
+fn event_args(kind: &TraceEventKind) -> Json {
+    match kind {
+        TraceEventKind::PrefillChunk { tokens } => {
+            obj([("tokens", Json::Num(*tokens as f64))])
+        }
+        TraceEventKind::DecodeBatch { seqs } => obj([("seqs", Json::Num(*seqs as f64))]),
+        TraceEventKind::PreemptRecompute { dropped_tokens } => {
+            obj([("dropped_tokens", Json::Num(*dropped_tokens as f64))])
+        }
+        _ => obj([]),
+    }
+}
+
+fn instant(name: &str, pid: u32, tid: AgentId, t: f64, args: Json) -> Json {
+    obj([
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("t".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", us(t)),
+        ("args", args),
+    ])
+}
+
+fn counter(name: &str, pid: u32, t: f64, args: Json) -> Json {
+    obj([
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("C".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("ts", us(t)),
+        ("args", args),
+    ])
+}
+
+fn metadata(name: &str, pid: u32, tid: Option<AgentId>, label: String) -> Json {
+    let mut fields = vec![
+        ("name".to_string(), Json::Str(name.into())),
+        ("ph".to_string(), Json::Str("M".into())),
+        ("pid".to_string(), Json::Num(pid as f64)),
+        ("args".to_string(), obj([("name", Json::Str(label))])),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid".to_string(), Json::Num(tid as f64)));
+    }
+    Json::Obj(fields.into_iter().collect())
+}
+
+/// Render recorders as Chrome trace-event / Perfetto JSON.
+///
+/// `parts` is one `(pid, label, recorder)` per track — a replica in cluster
+/// runs, a policy in side-by-side experiment dumps. Each part becomes a
+/// process with one thread row per agent (plus an `engine` row for
+/// batch-level events), `i`-phase instants for lifecycle events and
+/// scheduler picks, `X`-phase spans covering each agent's arrival→complete
+/// lifetime, and `C`-phase counter tracks for the sampled series.
+/// Timestamps are engine seconds scaled to microseconds. The result loads
+/// directly in `chrome://tracing` / [ui.perfetto.dev](https://ui.perfetto.dev).
+pub fn chrome_trace(parts: &[(u32, &str, &TraceRecorder)]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    for &(pid, label, rec) in parts {
+        out.push(metadata("process_name", pid, None, label.to_string()));
+        // Agent rows, discovered from the retained events in first-seen
+        // order; spans need each agent's first and last timestamp.
+        let mut order: Vec<AgentId> = Vec::new();
+        let mut bounds: std::collections::HashMap<AgentId, (f64, f64)> =
+            std::collections::HashMap::new();
+        for e in rec.events() {
+            bounds
+                .entry(e.agent)
+                .and_modify(|(lo, hi)| {
+                    *lo = lo.min(e.t);
+                    *hi = hi.max(e.t);
+                })
+                .or_insert_with(|| {
+                    order.push(e.agent);
+                    (e.t, e.t)
+                });
+        }
+        for &agent in &order {
+            let label = if agent == ENGINE_ROW {
+                "engine".to_string()
+            } else {
+                format!("agent {agent}")
+            };
+            out.push(metadata("thread_name", pid, Some(agent), label.clone()));
+            let (lo, hi) = bounds[&agent];
+            if agent != ENGINE_ROW && hi > lo {
+                out.push(obj([
+                    ("name", Json::Str(label)),
+                    ("cat", Json::Str("agent".into())),
+                    ("ph", Json::Str("X".into())),
+                    ("pid", Json::Num(pid as f64)),
+                    ("tid", Json::Num(agent as f64)),
+                    ("ts", us(lo)),
+                    ("dur", Json::Num((hi - lo) * 1e6)),
+                    ("args", obj([])),
+                ]));
+            }
+        }
+        for e in rec.events() {
+            out.push(instant(e.kind.name(), pid, e.agent, e.t, event_args(&e.kind)));
+        }
+        for p in rec.picks() {
+            let mut args = vec![
+                ("pampered".to_string(), Json::Bool(p.pampered)),
+                ("task_index".to_string(), Json::Num(p.task_index as f64)),
+            ];
+            if let Some(w) = p.winner_tag {
+                args.push(("winner_tag".to_string(), Json::Num(w)));
+            }
+            if let Some(r) = p.runner_up {
+                args.push(("runner_up".to_string(), Json::Num(r as f64)));
+            }
+            if let Some(rt) = p.runner_up_tag {
+                args.push(("runner_up_tag".to_string(), Json::Num(rt)));
+            }
+            out.push(instant("pick", pid, p.agent, p.t, Json::Obj(args.into_iter().collect())));
+        }
+        for s in rec.samples() {
+            out.push(counter(
+                "batch",
+                pid,
+                s.t,
+                obj([
+                    ("seqs", Json::Num(s.batch_seqs as f64)),
+                    ("tokens", Json::Num(s.batch_tokens as f64)),
+                    ("budget_util", Json::Num(s.token_budget_util)),
+                ]),
+            ));
+            out.push(counter(
+                "kv",
+                pid,
+                s.t,
+                obj([
+                    ("free_pages", Json::Num(s.kv_free_pages as f64)),
+                    ("swapped_tokens", Json::Num(s.kv_swapped_tokens as f64)),
+                    (
+                        "host_free_tokens",
+                        // Unbounded pools would render as 1.8e19 and flatten
+                        // every other counter; Perfetto has no "infinity".
+                        Json::Num(if s.kv_host_free_tokens == u64::MAX {
+                            -1.0
+                        } else {
+                            s.kv_host_free_tokens as f64
+                        }),
+                    ),
+                ]),
+            ));
+            out.push(counter(
+                "queues",
+                pid,
+                s.t,
+                obj([
+                    ("waiting", Json::Num(s.waiting as f64)),
+                    ("running", Json::Num(s.running as f64)),
+                    ("swapped", Json::Num(s.swapped_q as f64)),
+                    ("recompute", Json::Num(s.recompute_q as f64)),
+                ]),
+            ));
+            let mut fairness = vec![(
+                "max_service_gap".to_string(),
+                Json::Num(s.max_service_gap),
+            )];
+            for &(client, lag) in &s.vt_lags {
+                fairness.push((format!("vt_lag_{client}"), Json::Num(lag)));
+            }
+            out.push(counter("fairness", pid, s.t, Json::Obj(fairness.into_iter().collect())));
+        }
+        out.push(metadata(
+            "process_labels",
+            pid,
+            None,
+            format!(
+                "dropped: {} events, {} samples, {} picks",
+                rec.dropped_events(),
+                rec.dropped_samples(),
+                rec.dropped_picks()
+            ),
+        ));
+    }
+    obj([("traceEvents", Json::Arr(out)), ("displayTimeUnit", Json::Str("ms".into()))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = TraceRecorder::new(2, 1);
+        r.push(0.0, 1, None, TraceEventKind::Arrival);
+        r.push(1.0, 2, None, TraceEventKind::Arrival);
+        r.push(2.0, 3, None, TraceEventKind::Arrival);
+        assert_eq!(r.event_count(), 2);
+        assert_eq!(r.dropped_events(), 1);
+        let agents: Vec<AgentId> = r.events().map(|e| e.agent).collect();
+        assert_eq!(agents, vec![2, 3], "oldest entry evicted first");
+    }
+
+    #[test]
+    fn stride_samples_first_then_every_nth() {
+        let mut r = TraceRecorder::new(16, 4);
+        let due: Vec<bool> = (0..9).map(|_| r.tick_iteration()).collect();
+        assert_eq!(
+            due,
+            vec![true, false, false, false, true, false, false, false, true]
+        );
+    }
+
+    #[test]
+    fn stride_zero_clamps_to_one() {
+        let mut r = TraceRecorder::new(0, 0);
+        assert_eq!(r.cap(), 1);
+        assert_eq!(r.sample_stride(), 1);
+        assert!(r.tick_iteration());
+        assert!(r.tick_iteration());
+    }
+
+    fn sample(t: f64) -> IterSample {
+        IterSample {
+            t,
+            iteration: 1,
+            batch_seqs: 2,
+            batch_tokens: 34,
+            token_budget_util: 0.5,
+            kv_free_pages: 7,
+            kv_swapped_tokens: 0,
+            kv_host_free_tokens: u64::MAX,
+            waiting: 3,
+            running: 2,
+            swapped_q: 0,
+            recompute_q: 0,
+            vt_lags: vec![(0, -1.0), (1, 2.0)],
+            max_service_gap: 2.0,
+        }
+    }
+
+    #[test]
+    fn export_shape_is_chrome_trace() {
+        let mut r = TraceRecorder::new(64, 1);
+        r.push(0.0, 0, Some(0), TraceEventKind::Arrival);
+        r.push(0.5, 0, Some(0), TraceEventKind::Admitted);
+        r.push(1.0, 0, Some(0), TraceEventKind::PrefillChunk { tokens: 16 });
+        r.push(2.0, 0, None, TraceEventKind::Complete);
+        r.push(1.5, ENGINE_ROW, None, TraceEventKind::DecodeBatch { seqs: 3 });
+        r.push_sample(sample(1.5));
+        r.push_pick(PickDecision {
+            t: 0.5,
+            agent: 0,
+            task_index: 0,
+            winner_tag: Some(10.0),
+            runner_up: Some(1),
+            runner_up_tag: Some(12.0),
+            pampered: true,
+        });
+        let json = chrome_trace(&[(0, "replica 0", &r)]);
+        assert_eq!(json.get("displayTimeUnit").as_str(), Some("ms"));
+        let events = json.get("traceEvents").as_arr().unwrap();
+        // Reparse of the dump round-trips (the artifact is valid JSON).
+        let reparsed = Json::parse(&json.dump()).unwrap();
+        assert_eq!(&reparsed, &json);
+        let phase = |ph: &str| {
+            events.iter().filter(|e| e.get("ph").as_str() == Some(ph)).count()
+        };
+        assert!(phase("M") >= 3, "process + thread metadata");
+        assert_eq!(phase("X"), 1, "one agent lifetime span");
+        assert_eq!(phase("C"), 4, "batch/kv/queues/fairness counters");
+        assert_eq!(phase("i"), 6, "five lifecycle instants + one pick");
+        // The agent span covers arrival → complete in microseconds.
+        let span = events.iter().find(|e| e.get("ph").as_str() == Some("X")).unwrap();
+        assert_eq!(span.get("ts").as_f64(), Some(0.0));
+        assert_eq!(span.get("dur").as_f64(), Some(2e6));
+        // Unbounded host pool renders as -1, not u64::MAX.
+        let kv = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("kv"))
+            .unwrap();
+        assert_eq!(kv.get("args").get("host_free_tokens").as_f64(), Some(-1.0));
+        // Per-client virtual-time lags ride on the fairness counter.
+        let fairness = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("fairness"))
+            .unwrap();
+        assert_eq!(fairness.get("args").get("vt_lag_0").as_f64(), Some(-1.0));
+        assert_eq!(fairness.get("args").get("vt_lag_1").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn recorder_equality_detects_divergence() {
+        let mut a = TraceRecorder::new(8, 2);
+        let mut b = TraceRecorder::new(8, 2);
+        a.push(0.0, 1, Some(0), TraceEventKind::Admitted);
+        b.push(0.0, 1, Some(0), TraceEventKind::Admitted);
+        assert_eq!(a, b);
+        b.push(1.0, 1, Some(0), TraceEventKind::FirstToken);
+        assert_ne!(a, b);
+    }
+}

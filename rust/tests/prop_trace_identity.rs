@@ -1,0 +1,302 @@
+//! Differential property tests for the flight recorder (ISSUE 7 tentpole).
+//!
+//! Two guarantees, each over randomized tight-pool workloads × all six
+//! schedulers × {prefix cache, chunked prefill, preemption auto, event
+//! core} knob draws:
+//!
+//! 1. `--trace` is observation-only: turning the recorder on (any sample
+//!    stride, any ring cap) must leave the results JSON — per-agent JCTs,
+//!    per-task admit/complete times, makespan, counter metrics — byte
+//!    identical to the untraced run. The recorder is `Option<TraceRecorder>`
+//!    in the engine and every emit site reads engine state it never writes,
+//!    so any divergence is a tentpole bug (DESIGN.md §13).
+//! 2. The tick loop and the event-driven core must emit IDENTICAL trace
+//!    streams (events, iteration samples, pick audit — `TraceRecorder`
+//!    derives `PartialEq`): every emit site lives in code shared by both
+//!    cores, extending `prop_event_core_identity` to trace equality.
+
+use justitia::config::{BackendProfile, Config, Policy, PreemptionMode};
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::trace::TraceRecorder;
+use justitia::util::json::{obj, Json};
+use justitia::util::prop::{check, Config as PropConfig, Strategy};
+use justitia::util::rng::Rng;
+use justitia::workload::test_support::dag_agent;
+use justitia::workload::{AgentSpec, SpawnSpec, Suite};
+
+/// A randomized workload plus the knob draws tracing must be inert under.
+#[derive(Clone, Debug)]
+struct TraceScenario {
+    agents: Vec<AgentSpec>,
+    pages: u64,
+    page_size: u32,
+    prefix_cache: bool,
+    spawn: bool,
+    chunked: bool,
+    preempt_auto: bool,
+    host_tokens: Option<u64>,
+    swap_bw: f64,
+    /// Which engine core the trace-off/on comparison runs on.
+    event_core: bool,
+    /// Recorder knobs: stride exercises the sampler, a small cap exercises
+    /// ring-buffer eviction — neither may perturb the simulation.
+    sample_stride: u32,
+    trace_cap: usize,
+}
+
+struct TraceStrategy;
+
+impl Strategy for TraceStrategy {
+    type Value = TraceScenario;
+
+    fn generate(&self, rng: &mut Rng) -> TraceScenario {
+        let page_size = 8u32;
+        let pages = rng.range_u64(24, 48);
+        let m_tokens = pages * page_size as u64;
+        let n_agents = rng.range_u64(2, 6) as usize;
+        let spawn = rng.chance(0.5);
+        let mut agents = Vec::with_capacity(n_agents);
+        let mut t = 0.0;
+        for id in 0..n_agents {
+            t += rng.exponential(0.05);
+            let n_tasks = rng.range_u64(1, 4) as usize;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for i in 0..n_tasks {
+                let p = rng.range_u64(2, m_tokens / 3) as u32;
+                let d = rng.range_u64(1, 16) as u32;
+                let deps = if i > 0 && rng.chance(0.3) {
+                    vec![rng.below(i as u64) as u32]
+                } else {
+                    Vec::new()
+                };
+                tasks.push((p, d, deps));
+            }
+            let mut a = dag_agent(id as u32, t, tasks);
+            if spawn {
+                a.spawn = Some(SpawnSpec {
+                    prob: 0.6,
+                    branch: 2,
+                    max_depth: 1,
+                    seed: rng.next_u64(),
+                });
+            }
+            agents.push(a);
+        }
+        TraceScenario {
+            agents,
+            pages,
+            page_size,
+            prefix_cache: rng.chance(0.5),
+            spawn,
+            chunked: rng.chance(0.5),
+            preempt_auto: rng.chance(0.5),
+            host_tokens: match rng.below(3) {
+                0 => None,
+                1 => Some(m_tokens / 4),
+                _ => Some(0),
+            },
+            swap_bw: if rng.chance(0.5) { 1000.0 } else { 0.0 },
+            event_core: rng.chance(0.5),
+            sample_stride: [1u32, 3, 8][rng.below(3) as usize],
+            trace_cap: if rng.chance(0.3) { 128 } else { 65536 },
+        }
+    }
+
+    fn shrink(&self, v: &TraceScenario) -> Vec<TraceScenario> {
+        let mut out = Vec::new();
+        if v.agents.len() > 1 {
+            let mut w = v.clone();
+            w.agents.pop();
+            out.push(w);
+        }
+        for knob in 0..5 {
+            let mut w = v.clone();
+            let on = match knob {
+                0 => std::mem::replace(&mut w.prefix_cache, false),
+                1 => {
+                    let on = w.spawn;
+                    w.spawn = false;
+                    for a in &mut w.agents {
+                        a.spawn = None;
+                    }
+                    on
+                }
+                2 => std::mem::replace(&mut w.chunked, false),
+                3 => std::mem::replace(&mut w.preempt_auto, false),
+                _ => std::mem::replace(&mut w.event_core, false),
+            };
+            if on {
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+fn config_for(sc: &TraceScenario) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = BackendProfile {
+        name: "prop-trace".into(),
+        kv_tokens: sc.pages * sc.page_size as u64,
+        page_size: sc.page_size,
+        alpha: 1.0,
+        beta_prefill: 1e-3,
+        beta_decode: 0.0,
+        swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
+        host_kv_tokens: sc.host_tokens,
+        swap_bw_tokens_per_sec: sc.swap_bw,
+    };
+    cfg.max_batch = 64;
+    cfg.prefix_cache = sc.prefix_cache;
+    if sc.preempt_auto {
+        cfg.preemption = PreemptionMode::Auto;
+    }
+    if sc.chunked {
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 16;
+        cfg.max_batched_tokens = 48;
+    }
+    cfg
+}
+
+fn suite_for(sc: &TraceScenario) -> Suite {
+    let mut suite = Suite::new(sc.agents.clone());
+    if sc.prefix_cache {
+        justitia::workload::trace::annotate_families(&mut suite, 2, 16, 0xfa7e);
+    }
+    suite
+}
+
+/// Run one (scenario, policy, core, trace) configuration and canonicalize
+/// everything the engine observably computed into one JSON byte string,
+/// alongside the recorder (when tracing was on).
+fn replay(
+    sc: &TraceScenario,
+    policy: Policy,
+    event_core: bool,
+    trace: bool,
+) -> (String, Option<TraceRecorder>) {
+    let mut cfg = config_for(sc);
+    cfg.event_core = event_core;
+    cfg.trace = trace;
+    cfg.trace_sample = sc.sample_stride;
+    cfg.trace_cap = sc.trace_cap;
+    let suite = suite_for(sc);
+    let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+    let mut engine = Engine::new(&cfg, sched, SimBackend::unit_time());
+    let model = justitia::cost::CostModel::MemoryCentric;
+    let makespan = engine.run_suite(&suite, |a| model.agent_cost(a));
+    let m = &engine.metrics;
+    let mut tasks = Vec::new();
+    for a in &suite.agents {
+        for t in a.tasks.iter().chain(a.expand_spawns().iter()) {
+            tasks.push(Json::Arr(vec![
+                Json::Num(t.id.agent as f64),
+                Json::Num(t.id.index as f64),
+                m.task_admit_time(t.id).map(Json::Num).unwrap_or(Json::Null),
+                m.task_complete_time(t.id).map(Json::Num).unwrap_or(Json::Null),
+            ]));
+        }
+    }
+    let json = obj([
+        ("makespan", Json::Num(makespan)),
+        (
+            "jcts",
+            Json::Arr(
+                m.jcts()
+                    .into_iter()
+                    .map(|(a, j)| Json::Arr(vec![Json::Num(a as f64), Json::Num(j)]))
+                    .collect(),
+            ),
+        ),
+        ("tasks", Json::Arr(tasks)),
+        ("iterations", Json::Num(m.iterations() as f64)),
+        ("swap_outs", Json::Num(m.swap_out_count() as f64)),
+        ("recomputes", Json::Num(m.recompute_count() as f64)),
+        ("prefill_tokens", Json::Num(m.prefill_tokens_executed() as f64)),
+        ("prefix_hits", Json::Num(m.prefix_hits() as f64)),
+        ("spawned", Json::Num(m.spawned_tasks() as f64)),
+        ("stalls", Json::Num(m.prefill_stalls() as f64)),
+        ("ttft_samples", Json::Num(m.ttft_samples() as f64)),
+        ("ttft_mean", Json::Num(m.ttft_mean())),
+        ("ttft_p99", Json::Num(m.ttft_percentile(99.0))),
+    ])
+    .dump();
+    (json, engine.take_trace())
+}
+
+/// Guarantee 1: the recorder is observation-only — results JSON bytes match
+/// exactly with tracing off vs on, for every scheduler on the drawn core.
+#[test]
+fn prop_trace_off_vs_on_results_byte_identical() {
+    let cfg = PropConfig { cases: prop_cases(20), seed: 0x7ace_0ff0, max_shrink_steps: 60 };
+    check(&cfg, &TraceStrategy, |sc| {
+        for policy in Policy::all_paper_baselines() {
+            let (off_json, off_rec) = replay(sc, policy, sc.event_core, false);
+            let (on_json, on_rec) = replay(sc, policy, sc.event_core, true);
+            if off_rec.is_some() {
+                return Err(format!("{policy:?}: untraced run allocated a recorder"));
+            }
+            let rec = match on_rec {
+                Some(r) => r,
+                None => return Err(format!("{policy:?}: traced run lost its recorder")),
+            };
+            if rec.event_count() == 0 {
+                return Err(format!("{policy:?}: traced run recorded nothing"));
+            }
+            if off_json != on_json {
+                return Err(format!(
+                    "{policy:?} (event_core={}): --trace perturbed the results JSON\n off: {off_json}\n  on: {on_json}",
+                    sc.event_core
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Guarantee 2: both engine cores emit the identical trace stream (and, per
+/// prop_event_core_identity, identical results — re-checked here since the
+/// comparison is free).
+#[test]
+fn prop_trace_stream_identical_across_cores() {
+    let cfg = PropConfig { cases: prop_cases(20), seed: 0x7ace_c04e, max_shrink_steps: 60 };
+    check(&cfg, &TraceStrategy, |sc| {
+        for policy in Policy::all_paper_baselines() {
+            let (tick_json, tick_rec) = replay(sc, policy, false, true);
+            let (event_json, event_rec) = replay(sc, policy, true, true);
+            if tick_json != event_json {
+                return Err(format!("{policy:?}: cores disagree on results JSON"));
+            }
+            let (tick_rec, event_rec) = (tick_rec.unwrap(), event_rec.unwrap());
+            if tick_rec != event_rec {
+                let what = if !tick_rec.events().eq(event_rec.events()) {
+                    "lifecycle events"
+                } else if !tick_rec.samples().eq(event_rec.samples()) {
+                    "iteration samples"
+                } else if !tick_rec.picks().eq(event_rec.picks()) {
+                    "pick audit"
+                } else {
+                    "drop counters"
+                };
+                return Err(format!(
+                    "{policy:?}: trace streams diverged on {what} \
+                     (tick {} events / {} samples / {} picks, event {} / {} / {})",
+                    tick_rec.event_count(),
+                    tick_rec.sample_count(),
+                    tick_rec.pick_count(),
+                    event_rec.event_count(),
+                    event_rec.sample_count(),
+                    event_rec.pick_count(),
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn prop_cases(default: usize) -> usize {
+    std::env::var("JUSTITIA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}

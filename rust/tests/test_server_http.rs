@@ -44,6 +44,7 @@ fn serve_submit_poll_complete() {
             1,
             justitia::cluster::Placement::ClusterVtime,
             false,
+            Some((4, 65536)), // exercise the flight recorder + /trace end to end
         );
     });
 
@@ -73,13 +74,13 @@ fn serve_submit_poll_complete() {
     let (s, _) = http("POST", "/agents", b).unwrap();
     assert_eq!(s, 202);
 
-    // Poll for completion.
+    // Poll for completion (metrics are Prometheus text now).
     let t0 = std::time::Instant::now();
     loop {
         std::thread::sleep(Duration::from_millis(300));
         let (s, m) = http("GET", "/metrics", "").unwrap();
         assert_eq!(s, 200);
-        if m.contains("\"completed\":2") {
+        if m.contains("justitia_agents_completed 2") {
             break;
         }
         // Skip (not fail) on very slow machines.
@@ -91,4 +92,18 @@ fn serve_submit_poll_complete() {
     assert_eq!(s, 200);
     assert!(body.contains("\"done\":true"), "{body}");
     assert!(body.contains("\"jct_s\""));
+
+    // The idle engine thread publishes the merged Chrome dump; allow a few
+    // polls for the refresh to land after the last completion.
+    let mut trace = String::new();
+    for _ in 0..50 {
+        let (s, body) = http("GET", "/trace", "").unwrap();
+        if s == 200 {
+            trace = body;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    assert!(trace.contains("\"traceEvents\""), "no trace published: {trace}");
+    assert!(trace.contains("first_token"), "trace missing lifecycle events");
 }

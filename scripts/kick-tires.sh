@@ -80,12 +80,25 @@ echo "[9/10] engine hot-path bench (events/sec at 10k and 100k agents)"
 cp rust/results/BENCH_engine.json results/BENCH_engine.json
 
 echo "[10/10] collecting outputs under out/"
+# Fail LOUDLY when an expected artifact is missing (a bare `cp` miss used to
+# surface only later as a confusing CI upload error), naming the artifact
+# and listing what the run actually produced.
+collect() { # collect <produced> <collected-as>
+  if [ ! -f "$1" ]; then
+    echo "ERROR: expected artifact $1 was not produced by this run" >&2
+    echo "results/ contains:" >&2
+    ls -l results/ >&2 || true
+    exit 1
+  fi
+  cp "$1" "$2"
+}
 cp results/*.txt out/
-cp results/prefix_sharing.json out/BENCH_prefix.json
-cp results/dag_agents.json out/BENCH_dag.json
-cp results/chunked_prefill.json out/BENCH_chunked.json
-cp results/preemption.json out/BENCH_preempt.json
-cp results/BENCH_engine.json out/BENCH_engine.json
+collect results/prefix_sharing.json out/BENCH_prefix.json
+collect results/dag_agents.json out/BENCH_dag.json
+collect results/chunked_prefill.json out/BENCH_chunked.json
+collect results/preemption.json out/BENCH_preempt.json
+collect results/BENCH_engine.json out/BENCH_engine.json
+collect results/TRACE_starvation.json out/TRACE_starvation.json
 {
   echo "kick-tires run: agents=$AGENTS seed=$SEED date=$(date -u +%Y-%m-%dT%H:%M:%SZ)"
   echo "binary: $BIN"
@@ -94,6 +107,8 @@ cp results/BENCH_engine.json out/BENCH_engine.json
 
 echo
 echo "Done. Outputs:"
-ls -1 out/
+ls -l out/
 echo
-echo "Transcribe the numbers into EXPERIMENTS.md (paper-vs-measured tables)."
+echo "Transcribe the numbers into EXPERIMENTS.md (paper-vs-measured tables);"
+echo "load out/TRACE_starvation.json in Perfetto (see EXPERIMENTS.md, 'How to"
+echo "read a trace')."
