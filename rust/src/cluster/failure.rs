@@ -1,0 +1,272 @@
+//! Deterministic churn injection: replica crash / drain / join schedules
+//! plus a closed-loop queue-depth autoscaler (DESIGN.md §14).
+//!
+//! A [`FailureSchedule`] is an exogenous, fully-deterministic list of
+//! [`ChurnEvent`]s consumed by
+//! [`ClusterDispatcher::run_suite_churn`](crate::cluster::ClusterDispatcher::run_suite_churn),
+//! optionally augmented by an [`AutoscalePolicy`] that reacts to the live
+//! queue depth at fixed ticks. Determinism is the point: the same
+//! (suite, schedule, seed) triple replays the same churn run bit for bit,
+//! which is what lets `tests/prop_churn_conservation.rs` treat churn as just
+//! another adversarial input to every existing property.
+//!
+//! The empty schedule ([`FailureSchedule::none`]) is the OFF state: the
+//! dispatcher delegates straight to the immortal-pool drivers, so a
+//! churn-disabled run is byte-identical to one that never heard of this
+//! module (the bit-identity gate, asserted by
+//! `tests/test_elasticity_recovery.rs`).
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// What happens to the replica pool at one schedule point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnKind {
+    /// Replica `replica` dies instantly: device and host KV are lost;
+    /// in-flight agents are recovered through the recompute fold and
+    /// re-placed on the surviving pool.
+    Crash {
+        /// Pool slot that fails.
+        replica: usize,
+    },
+    /// Replica `replica` stops taking placements, finishes (or swaps out and
+    /// re-admits) its in-flight work, then leaves the pool. Nothing is lost.
+    Drain {
+        /// Pool slot that drains.
+        replica: usize,
+    },
+    /// One replica (re)joins the pool: the lowest-index departed slot is
+    /// revived with a fresh engine, or the pool grows by one if none is down.
+    Join,
+}
+
+/// One timestamped churn transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    /// Engine-seconds timestamp. Events take effect at the first iteration
+    /// boundary at or after `t` (replicas simulate in discrete iterations).
+    pub t: f64,
+    /// The transition.
+    pub kind: ChurnKind,
+}
+
+/// Closed-loop autoscaler evaluated at fixed ticks: joins a replica when the
+/// cluster-wide waiting queue per live replica exceeds `up_queue`, drains
+/// the highest-index live replica when it falls below `down_queue`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Seconds between control-loop evaluations.
+    pub interval: f64,
+    /// Join one replica when waiting-tasks-per-live-replica exceeds this.
+    pub up_queue: f64,
+    /// Drain one replica when total waiting tasks fall below this.
+    pub down_queue: f64,
+    /// Never drain below this many live replicas.
+    pub min_replicas: usize,
+    /// Never join above this many live replicas.
+    pub max_replicas: usize,
+}
+
+/// A deterministic churn plan: timestamped events plus an optional
+/// autoscaler. Empty (the default) means an immortal pool.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FailureSchedule {
+    /// Exogenous transitions, applied in (time, list-order) order.
+    pub events: Vec<ChurnEvent>,
+    /// Optional queue-depth control loop.
+    pub autoscale: Option<AutoscalePolicy>,
+}
+
+impl FailureSchedule {
+    /// The immortal pool: no events, no autoscaler.
+    pub fn none() -> Self {
+        FailureSchedule::default()
+    }
+
+    /// True when this schedule changes nothing — the dispatcher's signal to
+    /// take the byte-identical immortal-pool path.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.autoscale.is_none()
+    }
+
+    /// Parse the CLI/JSON DSL: a comma-separated event list, e.g.
+    /// `"crash@40:1,drain@60:0,join@90"` — `crash@T:R` kills replica R at
+    /// t=T, `drain@T:R` drains it, `join@T` adds/revives one replica.
+    pub fn parse(dsl: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for item in dsl.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = item
+                .split_once('@')
+                .with_context(|| format!("churn event '{item}': expected kind@time[:replica]"))?;
+            let (t_str, replica) = match rest.split_once(':') {
+                Some((t, r)) => (
+                    t,
+                    Some(
+                        r.parse::<usize>()
+                            .with_context(|| format!("churn event '{item}': bad replica"))?,
+                    ),
+                ),
+                None => (rest, None),
+            };
+            let t: f64 =
+                t_str.parse().with_context(|| format!("churn event '{item}': bad time"))?;
+            anyhow::ensure!(t >= 0.0 && t.is_finite(), "churn event '{item}': time must be >= 0");
+            let kind = match (kind, replica) {
+                ("crash", Some(r)) => ChurnKind::Crash { replica: r },
+                ("drain", Some(r)) => ChurnKind::Drain { replica: r },
+                ("join", None) => ChurnKind::Join,
+                ("crash" | "drain", None) => {
+                    bail!("churn event '{item}': {kind} needs a replica (kind@time:replica)")
+                }
+                ("join", Some(_)) => bail!("churn event '{item}': join takes no replica"),
+                _ => bail!("churn event '{item}': unknown kind (crash|drain|join)"),
+            };
+            events.push(ChurnEvent { t, kind });
+        }
+        Ok(FailureSchedule { events, autoscale: None })
+    }
+
+    /// Parse the autoscaler DSL: `"every=30,up=8,down=1,min=1,max=8"`
+    /// (all keys optional; shown values are the defaults).
+    pub fn parse_autoscale(dsl: &str) -> Result<AutoscalePolicy> {
+        let mut p = AutoscalePolicy {
+            interval: 30.0,
+            up_queue: 8.0,
+            down_queue: 1.0,
+            min_replicas: 1,
+            max_replicas: 8,
+        };
+        for item in dsl.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, val) = item
+                .split_once('=')
+                .with_context(|| format!("autoscale '{item}': expected key=value"))?;
+            match key {
+                "every" => p.interval = val.parse().context("autoscale every")?,
+                "up" => p.up_queue = val.parse().context("autoscale up")?,
+                "down" => p.down_queue = val.parse().context("autoscale down")?,
+                "min" => p.min_replicas = val.parse().context("autoscale min")?,
+                "max" => p.max_replicas = val.parse().context("autoscale max")?,
+                other => bail!("autoscale: unknown key '{other}' (every|up|down|min|max)"),
+            }
+        }
+        anyhow::ensure!(p.interval > 0.0, "autoscale interval must be > 0");
+        anyhow::ensure!(p.min_replicas >= 1, "autoscale min must be >= 1");
+        anyhow::ensure!(p.max_replicas >= p.min_replicas, "autoscale max must be >= min");
+        Ok(p)
+    }
+
+    /// Render back to the DSL (round-trips through [`parse`](Self::parse);
+    /// used by config echo and test shrink labels).
+    pub fn to_dsl(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                ChurnKind::Crash { replica } => format!("crash@{}:{replica}", e.t),
+                ChurnKind::Drain { replica } => format!("drain@{}:{replica}", e.t),
+                ChurnKind::Join => format!("join@{}", e.t),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// A seeded random schedule over `n_replicas` slots within `[0,
+    /// horizon)`: `n_events` draws of crash/drain/join with uniform times.
+    /// Replica 0 is never crashed or drained, so the pool always keeps one
+    /// immortal member and every generated schedule can finish any workload
+    /// (the property tests rely on this liveness guarantee).
+    pub fn random(seed: u64, n_replicas: usize, horizon: f64, n_events: usize) -> Self {
+        let mut rng = Rng::with_stream(seed, 0xc4u64);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            let t = rng.range_f64(0.0, horizon.max(1e-9));
+            let kind = if n_replicas <= 1 {
+                ChurnKind::Join
+            } else {
+                match rng.below(3) {
+                    0 => ChurnKind::Crash { replica: 1 + rng.below(n_replicas as u64 - 1) as usize },
+                    1 => ChurnKind::Drain { replica: 1 + rng.below(n_replicas as u64 - 1) as usize },
+                    _ => ChurnKind::Join,
+                }
+            };
+            events.push(ChurnEvent { t, kind });
+        }
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        FailureSchedule { events, autoscale: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_schedule_is_empty() {
+        assert!(FailureSchedule::none().is_empty());
+        assert!(FailureSchedule::parse("").unwrap().is_empty());
+        let mut s = FailureSchedule::none();
+        s.autoscale = Some(FailureSchedule::parse_autoscale("").unwrap());
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn dsl_roundtrip() {
+        let s = FailureSchedule::parse("crash@40:1, drain@60:0 ,join@90").unwrap();
+        assert_eq!(
+            s.events,
+            vec![
+                ChurnEvent { t: 40.0, kind: ChurnKind::Crash { replica: 1 } },
+                ChurnEvent { t: 60.0, kind: ChurnKind::Drain { replica: 0 } },
+                ChurnEvent { t: 90.0, kind: ChurnKind::Join },
+            ]
+        );
+        let again = FailureSchedule::parse(&s.to_dsl()).unwrap();
+        assert_eq!(again, s);
+    }
+
+    #[test]
+    fn dsl_rejects_malformed() {
+        assert!(FailureSchedule::parse("crash@40").is_err()); // missing replica
+        assert!(FailureSchedule::parse("join@10:2").is_err()); // join takes none
+        assert!(FailureSchedule::parse("flood@10:0").is_err()); // unknown kind
+        assert!(FailureSchedule::parse("crash@-5:0").is_err()); // negative time
+        assert!(FailureSchedule::parse("crash:0").is_err()); // missing @time
+    }
+
+    #[test]
+    fn autoscale_dsl_defaults_and_overrides() {
+        let d = FailureSchedule::parse_autoscale("").unwrap();
+        assert_eq!((d.interval, d.up_queue, d.down_queue), (30.0, 8.0, 1.0));
+        assert_eq!((d.min_replicas, d.max_replicas), (1, 8));
+        let p = FailureSchedule::parse_autoscale("every=10,up=4,down=0.5,min=2,max=6").unwrap();
+        assert_eq!((p.interval, p.up_queue, p.down_queue), (10.0, 4.0, 0.5));
+        assert_eq!((p.min_replicas, p.max_replicas), (2, 6));
+        assert!(FailureSchedule::parse_autoscale("every=0").is_err());
+        assert!(FailureSchedule::parse_autoscale("min=0").is_err());
+        assert!(FailureSchedule::parse_autoscale("min=4,max=2").is_err());
+        assert!(FailureSchedule::parse_autoscale("turbo=9").is_err());
+    }
+
+    #[test]
+    fn random_schedules_are_seeded_and_spare_replica_zero() {
+        let a = FailureSchedule::random(7, 4, 100.0, 12);
+        let b = FailureSchedule::random(7, 4, 100.0, 12);
+        assert_eq!(a, b, "same seed must reproduce the same schedule");
+        let c = FailureSchedule::random(8, 4, 100.0, 12);
+        assert_ne!(a, c, "different seeds should differ");
+        assert_eq!(a.events.len(), 12);
+        for e in &a.events {
+            assert!((0.0..100.0).contains(&e.t));
+            if let ChurnKind::Crash { replica } | ChurnKind::Drain { replica } = e.kind {
+                assert!(replica >= 1, "replica 0 is immortal by construction");
+                assert!(replica < 4);
+            }
+        }
+        assert!(a.events.windows(2).all(|w| w[0].t <= w[1].t), "sorted by time");
+    }
+
+    #[test]
+    fn single_replica_random_schedule_only_joins() {
+        let s = FailureSchedule::random(3, 1, 50.0, 6);
+        assert!(s.events.iter().all(|e| e.kind == ChurnKind::Join));
+    }
+}

@@ -26,16 +26,32 @@
 //! single-engine path and reproduces its results bit for bit (asserted by
 //! `rust/tests/test_cluster_determinism.rs`).
 
+pub mod failure;
 pub mod placement;
 
+pub use failure::{AutoscalePolicy, ChurnEvent, ChurnKind, FailureSchedule};
 pub use placement::Placement;
 
 use crate::engine::exec::ExecBackend;
-use crate::engine::Engine;
+use crate::engine::{Engine, RecoveredAgent};
 use crate::metrics::RunMetrics;
+use crate::trace::{TraceEventKind, TraceRecorder, ENGINE_ROW};
 use crate::workload::{AgentId, AgentSpec, Suite};
 use placement::Placer;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+
+/// Replica-slot health during a churn run (DESIGN.md §14). Slots are
+/// stable: a crashed or drained slot stays in the pool (ineligible, fresh
+/// or idle engine) so later `Join` events can revive it by index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Health {
+    /// Taking placements and stepping.
+    Live,
+    /// Graceful drain: stepping its in-flight work, no new placements.
+    Draining,
+    /// Departed: no placements, no stepping, awaiting a possible join.
+    Down,
+}
 
 /// Routes agents across N independent engine replicas.
 ///
@@ -53,8 +69,14 @@ use std::collections::HashMap;
 pub struct ClusterDispatcher<B: ExecBackend> {
     replicas: Vec<Engine<B>>,
     placer: Placer,
-    /// agent id → replica index, in placement order.
+    /// agent id → replica index, in placement order (a recovered agent's
+    /// entry moves to its recovery replica).
     assignments: HashMap<AgentId, usize>,
+    /// Crashed replicas' metrics and recorders, kept so cluster merges see
+    /// the work done before each crash: (slot index, metrics, recorder).
+    /// Empty unless a churn schedule ran — the immortal paths never touch
+    /// it, so churn-off merges are byte-identical to pre-elasticity output.
+    graveyard: Vec<(usize, RunMetrics, Option<TraceRecorder>)>,
 }
 
 impl<B: ExecBackend> ClusterDispatcher<B> {
@@ -75,6 +97,7 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
             replicas,
             placer: Placer::new(placement, n, capacity_tokens, rate_scale),
             assignments: HashMap::new(),
+            graveyard: Vec::new(),
         }
     }
 
@@ -138,10 +161,21 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
         // when the placer's decision is already determined (e.g. a
         // prefix-affinity family that has a home replica).
         let live: Vec<Option<f64>> = if self.placer.wants_live_estimates(group) {
+            let placer = &self.placer;
             self.replicas
                 .iter_mut()
                 .zip(&nows)
-                .map(|(e, &now)| e.scheduler_mut().gps_finish_estimate(predicted_cost, now))
+                .enumerate()
+                .map(|(r, (e, &now))| {
+                    // Departed/draining slots take no placements, so their
+                    // schedulers are never probed (a fresh post-crash engine
+                    // would otherwise look infinitely attractive).
+                    if placer.is_eligible(r) {
+                        e.scheduler_mut().gps_finish_estimate(predicted_cost, now)
+                    } else {
+                        None
+                    }
+                })
                 .collect()
         } else {
             vec![None; self.replicas.len()]
@@ -264,10 +298,376 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
         self.makespan()
     }
 
-    /// Merge all replicas' metrics into one cluster-level [`RunMetrics`]
-    /// (agent ids are globally unique, so the union is disjoint).
+    /// Replay a suite under a deterministic churn schedule (DESIGN.md §14):
+    /// replicas crash (losing all KV; in-flight agents recover through the
+    /// recompute fold and re-place on the survivors), drain gracefully
+    /// (finish in-flight work, take no placements, leave the pool), and
+    /// join (revive the lowest departed slot or grow the pool), while an
+    /// optional [`AutoscalePolicy`] reacts to live queue depth at fixed
+    /// ticks. `spawn_replica` builds a fresh engine for crash replacements
+    /// and pool growth. Returns the cluster makespan.
+    ///
+    /// An empty schedule delegates straight to
+    /// [`run_suite`](Self::run_suite), so churn-off runs are byte-identical
+    /// to the immortal-pool path by construction. Non-empty schedules switch
+    /// to online submit+step driving (arrivals interleave with churn), which
+    /// keeps replica clocks loosely synchronized so crash times mean the
+    /// same thing on every replica.
+    pub fn run_suite_churn<F, S>(
+        &mut self,
+        suite: &Suite,
+        predict: F,
+        schedule: &FailureSchedule,
+        spawn_replica: S,
+    ) -> f64
+    where
+        F: FnMut(&AgentSpec) -> f64,
+        S: FnMut() -> Engine<B>,
+    {
+        self.run_churn(suite, predict, schedule, spawn_replica, false)
+    }
+
+    /// [`run_suite_churn`](Self::run_suite_churn) with foreknowledge: slots
+    /// doomed to crash or drain are marked ineligible from t=0 (while at
+    /// least one other slot stays eligible), so no work ever lands on a
+    /// dying replica and nothing needs recovery. This is the oracle
+    /// baseline the elasticity experiment measures degradation against —
+    /// the best any dispatcher could do if failures were announced in
+    /// advance.
+    pub fn run_suite_churn_oracle<F, S>(
+        &mut self,
+        suite: &Suite,
+        predict: F,
+        schedule: &FailureSchedule,
+        spawn_replica: S,
+    ) -> f64
+    where
+        F: FnMut(&AgentSpec) -> f64,
+        S: FnMut() -> Engine<B>,
+    {
+        self.run_churn(suite, predict, schedule, spawn_replica, true)
+    }
+
+    /// Shared churn driver. Event loop invariants (DESIGN.md §14):
+    ///
+    /// * The next *boundary* is the earliest of: next trace arrival, next
+    ///   churn event, next autoscale tick (ticks only count while work
+    ///   remains, else they would spin forever on an idle pool).
+    /// * Between boundaries, the laggard live/draining replica with work
+    ///   steps (ties break toward the lowest index) until every such
+    ///   replica's clock reaches the boundary — the same laggard rule as
+    ///   online [`step`](Self::step), so replica clocks stay loosely
+    ///   synchronized and a crash at `t` means the same thing everywhere.
+    /// * At one boundary time, order is fixed: churn events, then the
+    ///   autoscale tick, then arrivals. Everything ties toward lower
+    ///   replica / earlier list index, so the whole run is deterministic.
+    fn run_churn<F, S>(
+        &mut self,
+        suite: &Suite,
+        mut predict: F,
+        schedule: &FailureSchedule,
+        mut spawn_replica: S,
+        oracle: bool,
+    ) -> f64
+    where
+        F: FnMut(&AgentSpec) -> f64,
+        S: FnMut() -> Engine<B>,
+    {
+        if schedule.is_empty() {
+            return self.run_suite(suite, predict);
+        }
+        let mut events = schedule.events.clone();
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        let mut health = vec![Health::Live; self.replicas.len()];
+        if oracle {
+            for ev in &events {
+                if let ChurnKind::Crash { replica } | ChurnKind::Drain { replica } = ev.kind {
+                    if replica < self.replicas.len()
+                        && self.placer.n_eligible() > 1
+                        && self.placer.is_eligible(replica)
+                    {
+                        self.placer.set_ineligible(replica);
+                    }
+                }
+            }
+        }
+        let mut ev_i = 0usize;
+        let mut arr_i = 0usize;
+        // Agents that arrived (or were recovered) while no replica was
+        // eligible, parked until a join: (spec, cost, original arrival).
+        let mut pending: VecDeque<(AgentSpec, f64, Option<f64>)> = VecDeque::new();
+        let mut next_tick = schedule.autoscale.as_ref().map(|a| a.interval);
+        loop {
+            let work_ahead = arr_i < suite.len()
+                || !pending.is_empty()
+                || self
+                    .replicas
+                    .iter()
+                    .zip(&health)
+                    .any(|(e, &h)| h != Health::Down && e.has_work());
+            let mut boundary = f64::INFINITY;
+            if let Some(a) = suite.agents.get(arr_i) {
+                boundary = boundary.min(a.arrival);
+            }
+            if let Some(ev) = events.get(ev_i) {
+                boundary = boundary.min(ev.t);
+            }
+            if let (Some(t), true) = (next_tick, work_ahead) {
+                boundary = boundary.min(t);
+            }
+
+            // Step live/draining replicas up to the boundary, laggard first.
+            loop {
+                let mut pick: Option<usize> = None;
+                for (r, e) in self.replicas.iter().enumerate() {
+                    if health[r] != Health::Down
+                        && e.has_work()
+                        && e.now() < boundary
+                        && pick.map(|p| e.now() < self.replicas[p].now()).unwrap_or(true)
+                    {
+                        pick = Some(r);
+                    }
+                }
+                let Some(r) = pick else { break };
+                let elapsed = self.replicas[r].step();
+                if elapsed == 0.0 && self.replicas[r].running_len() == 0 {
+                    // Blocked with nothing running: nothing will unblock this
+                    // replica before the boundary (mirror of the single-engine
+                    // run_suite idle skip), so jump its clock there.
+                    if boundary.is_finite() {
+                        self.replicas[r].advance_clock(boundary);
+                    } else {
+                        panic!(
+                            "stuck: replica {r} blocked with no future arrival, \
+                             churn event, or autoscale tick"
+                        );
+                    }
+                }
+            }
+
+            // Graceful-drain completion: a draining replica whose in-flight
+            // work finished leaves the pool (nothing was lost).
+            for r in 0..self.replicas.len() {
+                if health[r] == Health::Draining && !self.replicas[r].has_work() {
+                    health[r] = Health::Down;
+                    self.placer.on_replica_down(r);
+                }
+            }
+
+            if boundary.is_infinite() {
+                assert!(
+                    pending.is_empty(),
+                    "stuck: {} agents pending with no eligible replica and no scheduled join",
+                    pending.len()
+                );
+                break;
+            }
+
+            // Churn events due at this boundary. Stale targets (already-down
+            // slots, out-of-range indices) are no-ops: random schedules may
+            // name a slot twice.
+            while events.get(ev_i).map(|e| e.t <= boundary + 1e-12).unwrap_or(false) {
+                let ev = events[ev_i];
+                ev_i += 1;
+                match ev.kind {
+                    ChurnKind::Crash { replica } => {
+                        if replica < self.replicas.len() && health[replica] != Health::Down {
+                            self.crash_replica(
+                                replica,
+                                ev.t,
+                                &mut health,
+                                &mut spawn_replica,
+                                &mut pending,
+                            );
+                        }
+                    }
+                    ChurnKind::Drain { replica } => {
+                        if replica < self.replicas.len() && health[replica] == Health::Live {
+                            health[replica] = Health::Draining;
+                            self.placer.set_ineligible(replica);
+                            self.replicas[replica]
+                                .trace_churn(ENGINE_ROW, TraceEventKind::ReplicaDrain);
+                        }
+                    }
+                    ChurnKind::Join => {
+                        self.join_replica(ev.t, &mut health, &mut spawn_replica, &mut pending);
+                    }
+                }
+            }
+
+            // Autoscale tick.
+            if let (Some(tick), Some(pol)) = (next_tick, schedule.autoscale.as_ref()) {
+                if work_ahead && tick <= boundary + 1e-12 {
+                    let live: Vec<usize> = (0..self.replicas.len())
+                        .filter(|&r| health[r] == Health::Live)
+                        .collect();
+                    let waiting = live
+                        .iter()
+                        .map(|&r| self.replicas[r].waiting_len())
+                        .sum::<usize>()
+                        + pending.len();
+                    if (waiting as f64) > pol.up_queue * live.len() as f64
+                        && live.len() < pol.max_replicas
+                    {
+                        self.join_replica(tick, &mut health, &mut spawn_replica, &mut pending);
+                    } else if (waiting as f64) < pol.down_queue && live.len() > pol.min_replicas {
+                        // Scale in: drain the highest-index live replica.
+                        if let Some(&r) = live.last() {
+                            health[r] = Health::Draining;
+                            self.placer.set_ineligible(r);
+                            self.replicas[r]
+                                .trace_churn(ENGINE_ROW, TraceEventKind::ReplicaDrain);
+                        }
+                    }
+                    next_tick = Some(tick + pol.interval);
+                }
+            }
+
+            // Arrivals due at this boundary, in suite order. `predict` is
+            // called exactly once per agent here, preserving any stateful
+            // noise stream — same contract as place_suite.
+            while suite
+                .agents
+                .get(arr_i)
+                .map(|a| a.arrival <= boundary + 1e-12)
+                .unwrap_or(false)
+            {
+                let a = suite.agents[arr_i].clone();
+                arr_i += 1;
+                let cost = predict(&a);
+                if self.placer.n_eligible() == 0 {
+                    pending.push_back((a, cost, None));
+                } else {
+                    let t = a.arrival;
+                    self.place_churn(a, cost, t, None);
+                }
+            }
+        }
+        self.makespan()
+    }
+
+    /// Place one agent mid-churn-run at cluster time `t`: idle eligible
+    /// replicas whose clocks lag `t` are advanced first so the submission is
+    /// stamped at the true arrival time and the placer compares synchronized
+    /// clocks. For a recovered agent, `orig_arrival` re-stamps the original
+    /// arrival on the recovery replica (the graveyard-first merge order lets
+    /// this entry win, keeping the JCT anchored where the agent really
+    /// arrived) and emits a [`TraceEventKind::Recovered`] span marker.
+    fn place_churn(
+        &mut self,
+        spec: AgentSpec,
+        cost: f64,
+        t: f64,
+        orig_arrival: Option<f64>,
+    ) -> usize {
+        let id = spec.id;
+        for (r, e) in self.replicas.iter_mut().enumerate() {
+            if self.placer.is_eligible(r) && !e.has_work() && e.now() < t {
+                e.advance_clock(t);
+            }
+        }
+        let r = self.submit(spec, cost);
+        // Submission stamps the replica clock, which can overshoot `t` by
+        // one iteration on a busy replica; re-stamp the true arrival so
+        // JCTs measure from when the agent really arrived at the cluster.
+        self.replicas[r].metrics.on_agent_arrival(id, orig_arrival.unwrap_or(t));
+        if orig_arrival.is_some() {
+            self.replicas[r].trace_churn(id, TraceEventKind::Recovered);
+        }
+        r
+    }
+
+    /// Kill replica `r` at time `t`: salvage its incomplete agents through
+    /// [`Engine::extract_for_recovery`] (the recompute fold), graveyard its
+    /// metrics and recorder, swap a fresh engine into the slot (revivable by
+    /// a later join), and re-place the survivors on the eligible pool with
+    /// their virtual-time tags scaled to the remaining work.
+    fn crash_replica(
+        &mut self,
+        r: usize,
+        t: f64,
+        health: &mut [Health],
+        spawn_replica: &mut impl FnMut() -> Engine<B>,
+        pending: &mut VecDeque<(AgentSpec, f64, Option<f64>)>,
+    ) {
+        // The stepping loop may have carried the replica slightly past the
+        // event time within this boundary window; the crash lands at
+        // whichever is later.
+        let t = t.max(self.replicas[r].now());
+        if self.replicas[r].now() < t {
+            self.replicas[r].advance_clock(t);
+        }
+        let recovered = self.replicas[r].extract_for_recovery();
+        let lost: u64 = recovered.iter().map(|a| a.lost_tokens).sum();
+        self.replicas[r].trace_churn(ENGINE_ROW, TraceEventKind::ReplicaCrash);
+        self.replicas[r].metrics.on_replica_lost(recovered.len() as u64, lost);
+        let mut dead = std::mem::replace(&mut self.replicas[r], spawn_replica());
+        health[r] = Health::Down;
+        self.placer.on_replica_down(r);
+        let trace = dead.take_trace();
+        self.graveyard.push((r, std::mem::take(&mut dead.metrics), trace));
+        for ra in recovered {
+            if self.placer.n_eligible() == 0 {
+                pending.push_back((ra.spec, ra.predicted_cost, Some(ra.arrival)));
+            } else {
+                self.place_churn(ra.spec, ra.predicted_cost, t, Some(ra.arrival));
+            }
+        }
+    }
+
+    /// One replica joins at time `t`: revive the lowest-index departed slot
+    /// (a crashed slot already holds a fresh engine; a drain-departed slot
+    /// reuses its old idle one — a warm restart, harmless since it kept no
+    /// queued work), else grow the pool by one. Any parked agents place
+    /// immediately.
+    fn join_replica(
+        &mut self,
+        t: f64,
+        health: &mut Vec<Health>,
+        spawn_replica: &mut impl FnMut() -> Engine<B>,
+        pending: &mut VecDeque<(AgentSpec, f64, Option<f64>)>,
+    ) {
+        let r = match health.iter().position(|&h| h == Health::Down) {
+            Some(r) => {
+                health[r] = Health::Live;
+                self.placer.on_replica_up(r);
+                r
+            }
+            None => {
+                self.replicas.push(spawn_replica());
+                health.push(Health::Live);
+                self.placer.add_replica()
+            }
+        };
+        if self.replicas[r].now() < t {
+            self.replicas[r].advance_clock(t);
+        }
+        self.replicas[r].trace_churn(ENGINE_ROW, TraceEventKind::ReplicaJoin);
+        while let Some((spec, cost, orig)) = pending.pop_front() {
+            self.place_churn(spec, cost, t, orig);
+        }
+    }
+
+    /// Cumulative churn counters summed across live replicas and the
+    /// graveyard: (replicas_lost, recovered_agents, rescheduled_tokens).
+    /// All zero on immortal-pool runs.
+    pub fn churn_counters(&self) -> (u64, u64, u64) {
+        let m = self.merged_metrics();
+        (m.replicas_lost(), m.recovered_agents(), m.rescheduled_tokens())
+    }
+
+    /// Merge all replicas' metrics into one cluster-level [`RunMetrics`].
+    /// Agent ids are globally unique, so the union is disjoint — except
+    /// under churn, where a recovered agent appears in both its crashed
+    /// replica's ledger (graveyarded) and its recovery replica's. Graveyard
+    /// metrics merge *first* so the later, live-replica entries win merge's
+    /// last-writer-wins maps: completion comes from the recovery replica and
+    /// the JCT stays anchored at the original arrival (DESIGN.md §14).
     pub fn merged_metrics(&self) -> RunMetrics {
         let mut out = RunMetrics::new();
+        for (_, m, _) in &self.graveyard {
+            out.merge(m);
+        }
         for e in &self.replicas {
             out.merge(&e.metrics);
         }
@@ -280,14 +680,23 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
     /// when no replica carries a recorder — tracing off, the default — so
     /// the HTTP `/trace` endpoint can 404 instead of serving an empty dump.
     pub fn merged_trace_chrome(&self) -> Option<crate::util::json::Json> {
-        let labels: Vec<String> =
-            (0..self.replicas.len()).map(|r| format!("replica {r}")).collect();
-        let parts: Vec<(u32, &str, &crate::trace::TraceRecorder)> = self
+        let n = self.replicas.len();
+        // Live replicas keep pids 0..n (zero-churn output unchanged);
+        // graveyarded recorders — a crashed slot's history up to the crash —
+        // follow as extra processes with distinct pids.
+        let mut labels: Vec<String> = (0..n).map(|r| format!("replica {r}")).collect();
+        labels.extend(self.graveyard.iter().map(|(r, _, _)| format!("replica {r} (crashed)")));
+        let mut parts: Vec<(u32, &str, &crate::trace::TraceRecorder)> = self
             .replicas
             .iter()
             .enumerate()
             .filter_map(|(r, e)| e.trace().map(|t| (r as u32, labels[r].as_str(), t)))
             .collect();
+        for (gi, (_, _, tr)) in self.graveyard.iter().enumerate() {
+            if let Some(t) = tr {
+                parts.push(((n + gi) as u32, labels[n + gi].as_str(), t));
+            }
+        }
         if parts.is_empty() {
             None
         } else {
@@ -455,5 +864,150 @@ mod tests {
         let mut c = dispatcher(&cfg, 2, Placement::RoundRobin);
         assert_eq!(c.step(), 0.0);
         assert!(!c.has_work());
+    }
+
+    fn spawner(cfg: &Config) -> impl FnMut() -> Engine<SimBackend> + '_ {
+        move || {
+            let sched = crate::sched::build(Policy::Justitia, cfg.backend.kv_tokens, 1.0);
+            Engine::new(cfg, sched, SimBackend::new(&cfg.backend))
+        }
+    }
+
+    #[test]
+    fn empty_schedule_delegates_to_immortal_path() {
+        let cfg = Config::default();
+        let suite = small_suite(40, 11);
+        let model = CostModel::MemoryCentric;
+        let mut base = dispatcher(&cfg, 2, Placement::ClusterVtime);
+        base.run_suite(&suite, |a| model.agent_cost(a));
+        let mut churn = dispatcher(&cfg, 2, Placement::ClusterVtime);
+        churn.run_suite_churn(&suite, |a| model.agent_cost(a), &FailureSchedule::none(), {
+            spawner(&cfg)
+        });
+        assert_eq!(base.merged_metrics().jcts(), churn.merged_metrics().jcts());
+        assert_eq!(churn.churn_counters(), (0, 0, 0));
+    }
+
+    #[test]
+    fn crash_recovers_every_agent_deterministically() {
+        let cfg = Config::default();
+        let suite = small_suite(40, 11);
+        let model = CostModel::MemoryCentric;
+        let schedule = FailureSchedule::parse("crash@5:1").unwrap();
+        let run = || {
+            let mut c = dispatcher(&cfg, 2, Placement::ClusterVtime);
+            c.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, spawner(&cfg));
+            let m = c.merged_metrics();
+            assert_eq!(m.completed_agents(), 40, "crash must not lose agents");
+            assert_eq!(m.replicas_lost(), 1);
+            (m.jcts(), m.recovered_agents(), m.rescheduled_tokens())
+        };
+        let (jcts1, rec1, tok1) = run();
+        let (jcts2, rec2, tok2) = run();
+        assert_eq!(jcts1, jcts2, "churn replay must be deterministic");
+        assert_eq!((rec1, tok1), (rec2, tok2));
+        assert!(rec1 > 0, "a mid-run crash should catch in-flight agents");
+    }
+
+    #[test]
+    fn drain_strands_nothing_and_loses_nothing() {
+        let cfg = Config::default();
+        let suite = small_suite(40, 3);
+        let model = CostModel::MemoryCentric;
+        let schedule = FailureSchedule::parse("drain@4:1").unwrap();
+        let mut c = dispatcher(&cfg, 2, Placement::RoundRobin);
+        c.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, spawner(&cfg));
+        let m = c.merged_metrics();
+        assert_eq!(m.completed_agents(), 40, "drain must not strand agents");
+        assert_eq!(c.churn_counters(), (0, 0, 0), "graceful drain loses nothing");
+        // After the drain window every agent arriving later lands on slot 0.
+        for a in &suite.agents {
+            if a.arrival > 4.0 {
+                assert_eq!(c.replica_of(a.id), Some(0), "drained slot took a placement");
+            }
+        }
+    }
+
+    #[test]
+    fn join_grows_the_pool_and_takes_load() {
+        let cfg = Config::default();
+        let suite = small_suite(40, 5);
+        let model = CostModel::MemoryCentric;
+        let schedule = FailureSchedule::parse("join@2").unwrap();
+        let mut c = dispatcher(&cfg, 1, Placement::ClusterVtime);
+        c.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, spawner(&cfg));
+        assert_eq!(c.n_replicas(), 2, "join on a full pool must grow it");
+        let m = c.merged_metrics();
+        assert_eq!(m.completed_agents(), 40);
+        let counts = c.assignment_counts();
+        assert!(counts[1] > 0, "the joined replica should take placements: {counts:?}");
+    }
+
+    #[test]
+    fn crash_then_join_revives_the_same_slot() {
+        let cfg = Config::default();
+        let suite = small_suite(48, 13);
+        let model = CostModel::MemoryCentric;
+        let schedule = FailureSchedule::parse("crash@3:1,join@6").unwrap();
+        let mut c = dispatcher(&cfg, 2, Placement::ClusterVtime);
+        c.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, spawner(&cfg));
+        assert_eq!(c.n_replicas(), 2, "join should revive the crashed slot, not grow");
+        assert_eq!(c.merged_metrics().completed_agents(), 48);
+        assert!(
+            suite.agents.iter().any(|a| a.arrival > 6.0 && c.replica_of(a.id) == Some(1)),
+            "revived slot should take post-join placements"
+        );
+    }
+
+    #[test]
+    fn autoscaler_joins_under_queue_pressure() {
+        let cfg = Config::default();
+        // Heavy burst on one replica with an eager autoscaler.
+        let suite = small_suite(80, 42);
+        let model = CostModel::MemoryCentric;
+        let mut schedule = FailureSchedule::none();
+        schedule.autoscale =
+            Some(FailureSchedule::parse_autoscale("every=2,up=2,down=0,min=1,max=4").unwrap());
+        let mut c = dispatcher(&cfg, 1, Placement::ClusterVtime);
+        c.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, spawner(&cfg));
+        assert!(c.n_replicas() > 1, "queue pressure should have triggered a join");
+        assert_eq!(c.merged_metrics().completed_agents(), 80);
+    }
+
+    #[test]
+    fn oracle_dispatcher_avoids_the_doomed_replica() {
+        let cfg = Config::default();
+        let suite = small_suite(40, 11);
+        let model = CostModel::MemoryCentric;
+        let schedule = FailureSchedule::parse("crash@5:1").unwrap();
+        let mut c = dispatcher(&cfg, 2, Placement::ClusterVtime);
+        c.run_suite_churn_oracle(&suite, |a| model.agent_cost(a), &schedule, spawner(&cfg));
+        let m = c.merged_metrics();
+        assert_eq!(m.completed_agents(), 40);
+        assert_eq!(m.replicas_lost(), 1, "the replica still crashes under the oracle");
+        assert_eq!(m.recovered_agents(), 0, "but nothing was placed on it");
+        assert_eq!(c.assignment_counts()[1], 0);
+    }
+
+    #[test]
+    fn churn_trace_marks_crash_and_recovery() {
+        let mut cfg = Config::default();
+        cfg.trace = true;
+        let suite = small_suite(40, 11);
+        let model = CostModel::MemoryCentric;
+        let schedule = FailureSchedule::parse("crash@5:1").unwrap();
+        let mut c = dispatcher(&cfg, 2, Placement::ClusterVtime);
+        c.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, spawner(&cfg));
+        let json = c.merged_trace_chrome().expect("tracing on");
+        let events = json.get("traceEvents").as_arr().unwrap();
+        let processes: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("name").as_str() == Some("process_name"))
+            .filter_map(|e| e.get("args").get("name").as_str())
+            .collect();
+        assert_eq!(processes, vec!["replica 0", "replica 1", "replica 1 (crashed)"]);
+        let names: Vec<&str> = events.iter().filter_map(|e| e.get("name").as_str()).collect();
+        assert!(names.contains(&"replica_crash"), "crash transition must be traced");
+        assert!(names.contains(&"recovered"), "recovered re-placement must be traced");
     }
 }

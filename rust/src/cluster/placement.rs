@@ -28,15 +28,25 @@
 //!   Agents without a family — and the *first* agent of each family — fall
 //!   back to the cluster-vtime rule, so prefix locality is bought without
 //!   abandoning the fairness yardstick (cf. Locality-aware Fair Scheduling,
-//!   Cao et al. 2025). The family→home mirror is best-effort by design: it
-//!   is not invalidated when the home replica later evicts the chain (the
-//!   routed agent then simply misses and re-primes the cache there), and it
-//!   retains one entry per family for the placer's lifetime — fine for
-//!   trace replay and bounded serve runs; an eviction-feedback channel
-//!   would be needed before an unbounded multi-tenant deployment.
+//!   Cao et al. 2025). The family→home mirror is best-effort for *eviction*:
+//!   it is not invalidated when the home replica merely evicts the chain
+//!   (the routed agent then simply misses and re-primes the cache there).
+//!   It IS invalidated when the home replica leaves the pool
+//!   ([`Placer::on_replica_down`]) — a departed replica's radix tree is
+//!   gone and routing a family at a dead slot would black-hole placements,
+//!   so the next family member re-homes via the vtime fallback (regression:
+//!   `tests/test_elasticity_recovery.rs::family_rehomes_after_home_crash`).
+//!   An eviction-feedback channel would still be needed before an unbounded
+//!   multi-tenant deployment.
 //!
 //! All four are deterministic: ties break toward the lowest replica index,
 //! so a cluster run is exactly reproducible from (suite, seed, placement).
+//!
+//! Elasticity (DESIGN.md §14): every slot carries an eligibility bit. The
+//! churn driver clears it on drain-start and crash and sets it on join;
+//! every policy then chooses among eligible slots only. With all slots
+//! eligible — the immortal default — each policy's decision sequence is
+//! bit-identical to the pre-elasticity placer.
 
 use crate::sched::vtime::VirtualClock;
 use crate::workload::AgentId;
@@ -152,7 +162,15 @@ pub(crate) struct Placer {
     pub(crate) loads: Vec<ReplicaLoad>,
     /// Prefix-affinity mirror: family id → replica whose radix tree holds
     /// the family's chain (the replica its first agent was routed to).
+    /// Entries are purged when their home leaves the pool (see module docs).
     family_home: HashMap<u64, usize>,
+    /// Per-slot placement eligibility: false while a slot is draining or
+    /// down. All-true in the immortal default.
+    eligible: Vec<bool>,
+    /// One replica's KV capacity M — kept so joined slots get fresh mirrors.
+    capacity_tokens: u64,
+    /// Nominal iterations/second — ditto.
+    rate_scale: f64,
 }
 
 impl Placer {
@@ -162,11 +180,52 @@ impl Placer {
             rr_next: 0,
             loads: (0..n).map(|_| ReplicaLoad::new(capacity_tokens, rate_scale)).collect(),
             family_home: HashMap::new(),
+            eligible: vec![true; n],
+            capacity_tokens,
+            rate_scale,
         }
     }
 
     pub(crate) fn policy(&self) -> Placement {
         self.policy
+    }
+
+    /// Whether slot `r` currently takes placements.
+    pub(crate) fn is_eligible(&self, r: usize) -> bool {
+        self.eligible[r]
+    }
+
+    /// Slots currently taking placements.
+    pub(crate) fn n_eligible(&self) -> usize {
+        self.eligible.iter().filter(|&&e| e).count()
+    }
+
+    /// Stop routing to slot `r` (drain-start: the replica still runs its
+    /// in-flight work, so its load mirror and family homes stay intact).
+    pub(crate) fn set_ineligible(&mut self, r: usize) {
+        self.eligible[r] = false;
+    }
+
+    /// Slot `r` left the pool (crash, or drain completed): stop routing to
+    /// it, reset its load mirror, and purge family homes pointing at it —
+    /// its radix tree is gone, so surviving family members must re-home via
+    /// the vtime fallback instead of black-holing at a dead slot.
+    pub(crate) fn on_replica_down(&mut self, r: usize) {
+        self.eligible[r] = false;
+        self.loads[r] = ReplicaLoad::new(self.capacity_tokens, self.rate_scale);
+        self.family_home.retain(|_, home| *home != r);
+    }
+
+    /// Slot `r` (re)joined the pool with a fresh engine.
+    pub(crate) fn on_replica_up(&mut self, r: usize) {
+        self.eligible[r] = true;
+    }
+
+    /// Grow the pool by one fresh, eligible slot; returns its index.
+    pub(crate) fn add_replica(&mut self) -> usize {
+        self.loads.push(ReplicaLoad::new(self.capacity_tokens, self.rate_scale));
+        self.eligible.push(true);
+        self.loads.len() - 1
     }
 
     /// Whether the next [`place`](Self::place) call for `prefix_group`
@@ -175,12 +234,14 @@ impl Placer {
     /// prefix-affinity family that has a home) — lets the dispatcher skip
     /// probing every replica's scheduler on the hot path.
     pub(crate) fn wants_live_estimates(&self, prefix_group: Option<u64>) -> bool {
-        if self.loads.len() == 1 {
+        if self.n_eligible() == 1 {
             return false;
         }
         match self.policy {
             Placement::ClusterVtime => true,
             Placement::PrefixAffinity => {
+                // A home entry always points at an eligible slot (purged on
+                // departure), so a homed family never needs estimates.
                 prefix_group.and_then(|g| self.family_home.get(&g)).is_none()
             }
             _ => false,
@@ -202,29 +263,50 @@ impl Placer {
     ) -> usize {
         debug_assert_eq!(nows.len(), self.loads.len());
         let n = self.loads.len();
+        // Only eligible slots compete; with every slot eligible (the
+        // immortal default) each arm below reduces to the pre-elasticity
+        // decision bit for bit.
+        let elig: Vec<usize> = (0..n).filter(|&r| self.eligible[r]).collect();
+        assert!(!elig.is_empty(), "placement with no eligible replica");
         let vtime_choice = |loads: &[ReplicaLoad]| {
-            argmin_f64((0..n).map(|r| {
-                live_estimates
+            argmin_over(elig.iter().map(|&r| {
+                let v = live_estimates
                     .and_then(|es| es[r])
-                    .unwrap_or_else(|| loads[r].vclock.hypothetical_gps_finish(agent, cost, nows[r]))
+                    .unwrap_or_else(|| loads[r].vclock.hypothetical_gps_finish(agent, cost, nows[r]));
+                (r, v)
             }))
         };
         let chosen = match self.policy {
-            _ if n == 1 => 0,
+            _ if elig.len() == 1 => elig[0],
             Placement::RoundRobin => {
-                let r = self.rr_next % n;
-                self.rr_next = (self.rr_next + 1) % n;
+                // Cyclic scan from the cursor to the next eligible slot.
+                let r = (0..n)
+                    .map(|k| (self.rr_next + k) % n)
+                    .find(|&r| self.eligible[r])
+                    .expect("eligible slot exists");
+                self.rr_next = (r + 1) % n;
                 r
             }
-            Placement::LeastLoaded => argmin_f64((0..n).map(|r| self.loads[r].backlog_at(nows[r]))),
+            Placement::LeastLoaded => {
+                let backlogs: Vec<(usize, f64)> = elig
+                    .iter()
+                    .map(|&r| {
+                        let b = self.loads[r].backlog_at(nows[r]);
+                        (r, b)
+                    })
+                    .collect();
+                argmin_over(backlogs.into_iter())
+            }
             Placement::ClusterVtime => vtime_choice(&self.loads),
             Placement::PrefixAffinity => {
                 match prefix_group.and_then(|g| self.family_home.get(&g).copied()) {
-                    // The family's chain is cached there — follow it.
-                    Some(home) => home,
-                    // First of its family (or no family): fall back to the
-                    // fairness-preserving cluster-vtime rule.
-                    None => vtime_choice(&self.loads),
+                    // The family's chain is cached there — follow it (homes
+                    // at departed slots are purged, so `home` is eligible
+                    // unless the slot is mid-drain; then fall through).
+                    Some(home) if self.eligible[home] => home,
+                    // First of its family (or no family, or home draining):
+                    // the fairness-preserving cluster-vtime rule.
+                    _ => vtime_choice(&self.loads),
                 }
             }
         };
@@ -238,14 +320,18 @@ impl Placer {
     }
 }
 
-/// Index of the minimum value; ties break toward the lowest index.
-fn argmin_f64(it: impl Iterator<Item = f64>) -> usize {
+/// Slot index of the minimum value over `(index, value)` pairs; ties break
+/// toward the earliest pair (slots are iterated in ascending index order, so
+/// this is the lowest eligible index — same rule as before elasticity).
+fn argmin_over(it: impl Iterator<Item = (usize, f64)>) -> usize {
     let mut best = 0usize;
     let mut best_v = f64::INFINITY;
-    for (i, v) in it.enumerate() {
-        if v < best_v {
+    let mut first = true;
+    for (i, v) in it {
+        if first || v < best_v {
             best = i;
             best_v = v;
+            first = false;
         }
     }
     best
@@ -339,5 +425,67 @@ mod tests {
                 assert_eq!(p.place(i, 100.0, Some(3), &[i as f64], None), 0);
             }
         }
+    }
+
+    #[test]
+    fn round_robin_skips_ineligible_slots() {
+        let mut p = Placer::new(Placement::RoundRobin, 3, 100, 1.0);
+        let nows = [0.0, 0.0, 0.0];
+        assert_eq!(p.place(0, 10.0, None, &nows, None), 0);
+        p.on_replica_down(1);
+        let seq: Vec<usize> = (1..5).map(|i| p.place(i, 10.0, None, &nows, None)).collect();
+        assert_eq!(seq, vec![2, 0, 2, 0], "cursor cycles over the live slots");
+        p.on_replica_up(1);
+        assert_eq!(p.place(5, 10.0, None, &nows, None), 1, "revived slot rejoins the cycle");
+    }
+
+    #[test]
+    fn vtime_and_least_loaded_ignore_down_slots() {
+        for policy in [Placement::ClusterVtime, Placement::LeastLoaded] {
+            let mut p = Placer::new(policy, 2, 10, 1.0);
+            // Load replica 0 heavily, then kill the empty replica 1: the
+            // heavy slot must win anyway — it is the only eligible one.
+            assert_eq!(p.place(0, 500.0, None, &[0.0, 0.0], None), 0);
+            p.on_replica_down(1);
+            assert_eq!(p.place(1, 10.0, None, &[0.0, 0.0], None), 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn family_home_purged_when_home_goes_down() {
+        let mut p = Placer::new(Placement::PrefixAffinity, 2, 10, 1.0);
+        // Family 7 homes on replica 0 and sticks there despite the load…
+        assert_eq!(p.place(0, 500.0, Some(7), &[0.0, 0.0], None), 0);
+        assert_eq!(p.place(1, 100.0, Some(7), &[0.0, 0.0], None), 0);
+        // …until replica 0 leaves the pool: the home entry is purged and the
+        // next member re-homes on a live slot instead of black-holing.
+        p.on_replica_down(0);
+        assert_eq!(p.place(2, 100.0, Some(7), &[1.0, 1.0], None), 1);
+        // The re-home sticks: later members follow the new home.
+        p.on_replica_up(0);
+        assert_eq!(p.place(3, 100.0, Some(7), &[2.0, 2.0], None), 1);
+    }
+
+    #[test]
+    fn draining_home_defers_without_rehoming() {
+        let mut p = Placer::new(Placement::PrefixAffinity, 2, 10, 1.0);
+        assert_eq!(p.place(0, 100.0, Some(9), &[0.0, 0.0], None), 0);
+        // Drain-start: the home still holds the cache but takes no new work.
+        p.set_ineligible(0);
+        assert_eq!(p.place(1, 100.0, Some(9), &[0.0, 0.0], None), 1);
+        // The home entry survives the drain *start* (not the departure), so
+        // an aborted drain would resume routing there.
+        p.on_replica_up(0);
+        assert_eq!(p.place(2, 100.0, Some(9), &[1.0, 1.0], None), 0);
+    }
+
+    #[test]
+    fn add_replica_grows_the_pool() {
+        let mut p = Placer::new(Placement::RoundRobin, 2, 100, 1.0);
+        assert_eq!(p.add_replica(), 2);
+        assert_eq!(p.n_eligible(), 3);
+        let nows = [0.0, 0.0, 0.0];
+        let seq: Vec<usize> = (0..3).map(|i| p.place(i, 10.0, None, &nows, None)).collect();
+        assert_eq!(seq, vec![0, 1, 2]);
     }
 }

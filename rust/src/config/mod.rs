@@ -3,7 +3,7 @@
 //! are fully reproducible from a single file (`configs/*.json`).
 
 use crate::cli::Args;
-use crate::cluster::Placement;
+use crate::cluster::{FailureSchedule, Placement};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -396,6 +396,15 @@ pub struct Config {
     pub noise_lambda: f64,
     /// Multi-replica scale-out knobs.
     pub cluster: ClusterConfig,
+    /// Deterministic churn schedule for cluster runs (DESIGN.md §14):
+    /// replica crash / drain / join events plus an optional queue-depth
+    /// autoscaler. Empty by default — the immortal pool — and cluster
+    /// drivers delegate to the pre-elasticity path when empty, so a
+    /// churn-off run is byte-identical to a build without the subsystem
+    /// (`tests/test_elasticity_recovery.rs`). Lives here rather than on
+    /// [`ClusterConfig`] because the schedule carries f64 times and
+    /// `ClusterConfig` derives `Eq`.
+    pub failures: FailureSchedule,
     /// Enable the radix-tree prefix cache (copy-on-write KV sharing across
     /// inferences with equal prompt prefixes). Off by default: the disabled
     /// engine path is bit-identical to a build without the cache.
@@ -463,6 +472,7 @@ impl Default for Config {
             use_predictor: false,
             noise_lambda: 1.0,
             cluster: ClusterConfig::default(),
+            failures: FailureSchedule::none(),
             prefix_cache: false,
             online_correction: false,
             chunked_prefill: false,
@@ -584,6 +594,12 @@ impl Config {
                 cfg.cluster.placement = Placement::by_name(x)?;
             }
         }
+        if let Some(x) = v.get("failures").as_str() {
+            cfg.failures = FailureSchedule::parse(x)?;
+        }
+        if let Some(x) = v.get("autoscale").as_str() {
+            cfg.failures.autoscale = Some(FailureSchedule::parse_autoscale(x)?);
+        }
         let w = v.get("workload");
         if w.as_obj().is_some() {
             if let Some(x) = w.get("n_agents").as_u64() {
@@ -647,6 +663,15 @@ impl Config {
         }
         if let Some(p) = args.get("placement") {
             self.cluster.placement = Placement::by_name(p)?;
+        }
+        if let Some(f) = args.get("failures") {
+            let autoscale = self.failures.autoscale.take();
+            self.failures = FailureSchedule::parse(f).context("--failures")?;
+            self.failures.autoscale = autoscale;
+        }
+        if let Some(a) = args.get("autoscale") {
+            self.failures.autoscale =
+                Some(FailureSchedule::parse_autoscale(a).context("--autoscale")?);
         }
         if args.has("prefix-cache") {
             self.prefix_cache = true;
@@ -722,6 +747,7 @@ impl Config {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::ChurnKind;
 
     #[test]
     fn profiles_resolve() {
@@ -935,6 +961,42 @@ mod tests {
         assert!(cfg.trace);
         assert_eq!(cfg.trace_sample, 2);
         assert_eq!(cfg.trace_cap, 512);
+    }
+
+    #[test]
+    fn elasticity_knobs() {
+        // Default: empty schedule — the immortal pool, bit-identical path.
+        let cfg = Config::default();
+        assert!(cfg.failures.is_empty());
+        // JSON takes the same DSL strings as the CLI.
+        let j = Json::parse(
+            r#"{"failures": "crash@40:1,join@90", "autoscale": "every=10,up=4"}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.failures.events.len(), 2);
+        assert_eq!(cfg.failures.events[0].kind, ChurnKind::Crash { replica: 1 });
+        let a = cfg.failures.autoscale.as_ref().unwrap();
+        assert_eq!((a.interval, a.up_queue), (10.0, 4.0));
+        // Malformed DSL is rejected.
+        assert!(Config::from_json(&Json::parse(r#"{"failures": "melt@4"}"#).unwrap()).is_err());
+        assert!(Config::from_json(&Json::parse(r#"{"autoscale": "every=0"}"#).unwrap()).is_err());
+        // CLI overrides; --failures replaces events but keeps a previously
+        // configured autoscaler (they are orthogonal knobs).
+        let args = crate::cli::Args::parse(
+            ["run", "--failures", "drain@5:0,join@9", "--autoscale", "every=7,min=2"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let cfg = Config::from_json(&j).unwrap().apply_args(&args).unwrap();
+        assert_eq!(cfg.failures.events.len(), 2);
+        assert_eq!(cfg.failures.events[0].kind, ChurnKind::Drain { replica: 0 });
+        let a = cfg.failures.autoscale.as_ref().unwrap();
+        assert_eq!((a.interval, a.min_replicas), (7.0, 2));
+        // DSL round-trips through the echo form.
+        assert_eq!(FailureSchedule::parse(&cfg.failures.to_dsl()).unwrap().events,
+                   cfg.failures.events);
     }
 
     #[test]

@@ -145,6 +145,27 @@ impl AgentState {
     }
 }
 
+/// One in-flight agent salvaged from a crashed replica
+/// ([`Engine::extract_for_recovery`], DESIGN.md §14): its remaining task DAG
+/// with generated tokens folded into prompts via the recompute path, ready
+/// to re-submit through the live placement policy.
+#[derive(Debug, Clone)]
+pub struct RecoveredAgent {
+    /// The remaining work as a fresh spec: surviving tasks densely
+    /// re-indexed, deps filtered to survivors, in-flight sequences folded.
+    pub spec: AgentSpec,
+    /// The agent's originally recorded arrival time — the JCT anchor the
+    /// churn driver re-stamps on the recovery replica.
+    pub arrival: f64,
+    /// Scheduler-facing prediction for the remaining work: the original
+    /// prediction scaled by the cost-model ratio of remaining to original
+    /// work, so the recovery replica's virtual-time tag lands where the
+    /// agent's residual service would (pampering survives migration).
+    pub predicted_cost: f64,
+    /// Device+host KV tokens the crash destroyed for this agent.
+    pub lost_tokens: u64,
+}
+
 /// The serving engine.
 pub struct Engine<B: ExecBackend> {
     /// The paged KV-cache allocator (single source of truth for pages).
@@ -1451,6 +1472,135 @@ impl<B: ExecBackend> Engine<B> {
     /// Predicted cost recorded for an agent at submission.
     pub fn predicted_cost(&self, agent: AgentId) -> Option<f64> {
         self.agents.get(&agent).map(|a| a.predicted_cost)
+    }
+
+    /// Cluster-layer trace hook: record a churn transition (crash / drain /
+    /// join / recovered re-placement, DESIGN.md §14) at the current engine
+    /// clock. No-op when tracing is off, like every other emit site.
+    pub fn trace_churn(&mut self, agent: AgentId, kind: TraceEventKind) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(self.clock, agent, None, kind);
+        }
+    }
+
+    /// Salvage every incomplete agent from this (about-to-be-discarded)
+    /// replica for re-placement on the surviving pool — the crash-recovery
+    /// half of DESIGN.md §14. The engine itself is left untouched: the
+    /// caller replaces it wholesale, so its KV, scheduler, and queues die
+    /// with it and only the returned specs matter.
+    ///
+    /// Per agent, the remaining work is rebuilt as a fresh [`AgentSpec`]:
+    ///
+    /// * Completed tasks (per the metrics ledger) are dropped; their deps on
+    ///   surviving tasks were already released, so edges into them vanish.
+    /// * In-flight sequences (running / swapped / recompute-queued) get the
+    ///   recompute fold — generated tokens become prompt, the decode target
+    ///   shrinks accordingly — exactly what `drop_for_recompute` re-entry
+    ///   does within one replica, because a crash IS a recompute preemption
+    ///   whose re-entry happens on a different replica. Their shared-prefix
+    ///   annotation is clamped to the sequence's shareable cap so folded
+    ///   (agent-private) tokens never enter the family's radix chain.
+    /// * Surviving tasks are densely re-indexed (the engine requires
+    ///   `tasks[i].id.index == i`) in original-index order, which preserves
+    ///   topology: spawned survivors' only dep was their completed parent.
+    ///   Re-indexing means a carried spawn rule draws fresh decisions on the
+    ///   new replica — deterministic and conservation-safe, but a recovered
+    ///   run is NOT replay-identical to an uninterrupted one (nor could it
+    ///   be: the crash destroyed real work).
+    ///
+    /// Ordering is deterministic (ascending agent id); `lost_tokens` counts
+    /// the device+host KV the crash destroyed.
+    pub fn extract_for_recovery(&self) -> Vec<RecoveredAgent> {
+        // In-flight fold state by task id. Recompute-queued sequences are
+        // already folded (and hold no KV); running/swapped ones fold here.
+        let mut folded: HashMap<TaskId, (u32, u32, u32)> = HashMap::new();
+        let mut lost: HashMap<AgentId, u64> = HashMap::new();
+        for s in self.running.iter().chain(self.swapped.iter()) {
+            let prompt = s.prompt + s.generated;
+            let decode = (s.target_decode - s.generated).max(1);
+            folded.insert(s.id, (prompt, decode, s.shareable));
+            *lost.entry(s.id.agent).or_insert(0) +=
+                self.kv.seq_tokens(s.id).unwrap_or(0) as u64;
+        }
+        for s in &self.recompute {
+            folded.insert(s.id, (s.prompt, s.target_decode.max(1), s.shareable));
+        }
+        let mut ids: Vec<AgentId> = self
+            .agents
+            .iter()
+            .filter(|(_, st)| st.tasks_remaining > 0)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let st = &self.agents[&id];
+            // Surviving tasks in original-index order: statics, then spawned.
+            let mut spawned: Vec<&InferenceSpec> = st.spawned.values().collect();
+            spawned.sort_by_key(|t| t.id.index);
+            let survivors: Vec<&InferenceSpec> = st
+                .spec
+                .tasks
+                .iter()
+                .chain(spawned)
+                .filter(|t| self.metrics.task_complete_time(t.id).is_none())
+                .collect();
+            debug_assert_eq!(survivors.len(), st.tasks_remaining);
+            let remap: HashMap<u32, u32> = survivors
+                .iter()
+                .enumerate()
+                .map(|(new, t)| (t.id.index, new as u32))
+                .collect();
+            let tasks: Vec<InferenceSpec> = survivors
+                .iter()
+                .enumerate()
+                .map(|(new, t)| {
+                    let (prompt, decode, cap) = folded
+                        .get(&t.id)
+                        .copied()
+                        .unwrap_or((t.prompt_tokens, t.decode_tokens, u32::MAX));
+                    InferenceSpec {
+                        id: TaskId { agent: id, index: new as u32 },
+                        stage: t.stage,
+                        deps: t
+                            .deps
+                            .iter()
+                            .filter_map(|d| remap.get(&d.index))
+                            .map(|&i| TaskId { agent: id, index: i })
+                            .collect(),
+                        prompt_tokens: prompt,
+                        decode_tokens: decode,
+                        kind: t.kind,
+                        prefix_group: t
+                            .prefix_group
+                            .map(|g| PrefixGroup { id: g.id, tokens: g.tokens.min(cap) }),
+                    }
+                })
+                .collect();
+            let arrival = self.metrics.agent_arrival_time(id).unwrap_or(st.spec.arrival);
+            let spec = AgentSpec {
+                id,
+                class: st.spec.class,
+                arrival,
+                tasks,
+                spawn: st.spec.spawn.clone(),
+                input_text: st.spec.input_text.clone(),
+            };
+            // Scale the original prediction by the model-cost ratio of the
+            // remaining work, so the recovery replica's virtual-time tag
+            // (F = V(t) + cost) lands where the agent's residual service
+            // would — pampering decisions survive the migration.
+            let orig_cost = self.cost_model.agent_cost(&st.spec).max(1e-12);
+            let rem_cost = self.cost_model.agent_cost(&spec);
+            let predicted_cost = (st.predicted_cost * rem_cost / orig_cost).max(1e-9);
+            out.push(RecoveredAgent {
+                spec,
+                arrival,
+                predicted_cost,
+                lost_tokens: lost.get(&id).copied().unwrap_or(0),
+            });
+        }
+        out
     }
 
     /// Drive the engine over a whole suite to completion, injecting arrivals

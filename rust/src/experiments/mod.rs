@@ -6,7 +6,7 @@
 //! (`justitia experiment <id>`) print them. DESIGN.md §6 maps experiment ids
 //! to modules; EXPERIMENTS.md records paper-vs-measured.
 
-use crate::cluster::{ClusterDispatcher, Placement};
+use crate::cluster::{ClusterDispatcher, FailureSchedule, Placement};
 use crate::config::{Config, Policy, PreemptionMode, VictimPolicy, WorkloadConfig};
 use crate::cost::CostModel;
 use crate::engine::exec::SimBackend;
@@ -535,6 +535,13 @@ pub struct ClusterRow {
     pub completed: usize,
     /// Cluster makespan (s): the slowest replica's engine time.
     pub makespan: f64,
+    /// Replica crashes suffered (0 on immortal-pool runs).
+    pub replicas_lost: u64,
+    /// Agents salvaged off crashed replicas through the recompute fold.
+    pub recovered_agents: u64,
+    /// KV tokens (device + host) destroyed by crashes and re-derived on the
+    /// recovery replicas.
+    pub rescheduled_tokens: u64,
 }
 
 /// The cluster scale-out experiment: one §5.1 suite replayed through
@@ -597,7 +604,23 @@ pub fn cluster_scaleout(
         // overstating slowdowns for placements that scatter families and
         // therefore realize less physical sharing.
         let oracle = crate::cost::oracle_costs(cfg.prefix_cache, &suite, model);
-        let makespan = cluster.run_suite_parallel(&suite, |a| oracle[&a.id], inner_threads);
+        let makespan = if cfg.failures.is_empty() {
+            cluster.run_suite_parallel(&suite, |a| oracle[&a.id], inner_threads)
+        } else {
+            // Churn run: online submit+step driving with crash recovery.
+            // Crash replacements and pool growth get fresh engines built
+            // exactly like the originals.
+            let schedule = cfg.failures.clone();
+            let spawn_cfg = cfg.clone();
+            cluster.run_suite_churn(&suite, |a| oracle[&a.id], &schedule, || {
+                let sched = crate::sched::build(
+                    policy,
+                    spawn_cfg.backend.kv_tokens,
+                    rate_scale(&spawn_cfg),
+                );
+                Engine::new(&spawn_cfg, sched, SimBackend::new(&spawn_cfg.backend))
+            })
+        };
         let m = cluster.merged_metrics();
 
         // Fairness yardstick: the whole cluster as ONE GPS server of
@@ -620,6 +643,135 @@ pub fn cluster_scaleout(
             maxmin_ratio,
             completed: m.completed_agents(),
             makespan,
+            replicas_lost: m.replicas_lost(),
+            recovered_agents: m.recovered_agents(),
+            rescheduled_tokens: m.rescheduled_tokens(),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Elasticity under churn — crash/drain/join with recompute-path recovery vs
+// an oracle dispatcher that knows the failure schedule (DESIGN.md §14)
+// ---------------------------------------------------------------------------
+
+/// One (scenario, dispatcher) row of the elasticity experiment.
+pub struct ElasticityRow {
+    /// Scenario label ("immortal", "drain-1", "crash-1", "crash-2+join").
+    pub scenario: &'static str,
+    /// True for the oracle dispatcher (schedule known in advance: doomed
+    /// replicas take no placements, nothing needs recovery).
+    pub oracle: bool,
+    /// Average JCT across all agents (s).
+    pub avg_jct: f64,
+    /// P99 JCT (s).
+    pub p99_jct: f64,
+    /// Max-min fair-share ratio vs the N×M GPS fluid reference.
+    pub maxmin_ratio: f64,
+    /// Agents completed (conservation demands the full suite).
+    pub completed: usize,
+    /// Cluster makespan (s).
+    pub makespan: f64,
+    /// Replica crashes suffered.
+    pub replicas_lost: u64,
+    /// Agents salvaged off crashed replicas.
+    pub recovered_agents: u64,
+    /// KV tokens destroyed by crashes and re-derived elsewhere.
+    pub rescheduled_tokens: u64,
+}
+
+/// The elasticity experiment: one suite replayed through an N-replica
+/// Justitia cluster under increasing churn, each non-trivial schedule run
+/// twice — *reactively* (failures strike unannounced; in-flight agents fold
+/// their generated tokens into fresh prompts and re-place on the survivors)
+/// and through the *oracle* dispatcher ([`ClusterDispatcher::run_suite_churn_oracle`])
+/// that knew the schedule at t=0. The JCT/fairness gap between each pair is
+/// the price of blind recovery; the gap to the immortal baseline is the
+/// price of churn itself. Churn times are fractions of the arrival window so
+/// failures always strike mid-run regardless of suite size.
+pub fn elasticity(
+    base: &Config,
+    n_agents: usize,
+    density: f64,
+    replicas: usize,
+    seed: u64,
+) -> Vec<ElasticityRow> {
+    let replicas = replicas.max(3);
+    let mut cfg = base.clone();
+    cfg.workload.n_agents = n_agents;
+    cfg.workload.seed = seed;
+    cfg.workload = cfg.workload.clone().with_density(density);
+    cfg.cluster =
+        crate::config::ClusterConfig { replicas, placement: Placement::ClusterVtime };
+    let w = cfg.workload.window_secs;
+    let schedules: Vec<(&'static str, FailureSchedule)> = vec![
+        ("immortal", FailureSchedule::none()),
+        ("drain-1", FailureSchedule::parse(&format!("drain@{}:1", 0.25 * w)).unwrap()),
+        ("crash-1", FailureSchedule::parse(&format!("crash@{}:1", 0.25 * w)).unwrap()),
+        (
+            "crash-2+join",
+            FailureSchedule::parse(&format!(
+                "crash@{}:1,crash@{}:2,join@{}",
+                0.2 * w,
+                0.4 * w,
+                0.5 * w
+            ))
+            .unwrap(),
+        ),
+    ];
+    let mut jobs: Vec<(&'static str, FailureSchedule, bool)> = Vec::new();
+    for (name, s) in schedules {
+        let trivial = s.is_empty();
+        jobs.push((name, s.clone(), false));
+        if !trivial {
+            jobs.push((name, s, true));
+        }
+    }
+    let policy = Policy::Justitia;
+    let suite = crate::workload::trace::build_suite(&cfg.workload);
+    let model = cost_model_for(policy);
+    let costs = crate::cost::oracle_costs(cfg.prefix_cache, &suite, model);
+    // One shared yardstick for every scenario: the immortal N×M GPS fluid.
+    // Degradation numbers then isolate what churn does to the *real* system
+    // while the ideal it is judged against stays fixed.
+    let triples: Vec<(crate::workload::AgentId, f64, f64)> =
+        suite.agents.iter().map(|a| (a.id, a.arrival, costs[&a.id])).collect();
+    let gps = crate::sched::gps::run(
+        &triples,
+        cfg.backend.kv_tokens * replicas as u64,
+        rate_scale(&cfg),
+    );
+    let suite = std::sync::Arc::new(suite);
+    let costs = std::sync::Arc::new(costs);
+    let gps = std::sync::Arc::new(gps);
+    let cfg = std::sync::Arc::new(cfg);
+    let pool = ThreadPool::with_cpus();
+    pool.map(jobs, move |(scenario, schedule, oracle)| {
+        let cfg = std::sync::Arc::clone(&cfg);
+        let mut cluster = build_sim_cluster(&cfg, policy);
+        let spawn_cfg = std::sync::Arc::clone(&cfg);
+        let spawn = move || {
+            let sched =
+                crate::sched::build(policy, spawn_cfg.backend.kv_tokens, rate_scale(&spawn_cfg));
+            Engine::new(&spawn_cfg, sched, SimBackend::new(&spawn_cfg.backend))
+        };
+        let makespan = if oracle {
+            cluster.run_suite_churn_oracle(&suite, |a| costs[&a.id], &schedule, spawn)
+        } else {
+            cluster.run_suite_churn(&suite, |a| costs[&a.id], &schedule, spawn)
+        };
+        let m = cluster.merged_metrics();
+        ElasticityRow {
+            scenario,
+            oracle,
+            avg_jct: m.avg_jct(),
+            p99_jct: m.p99_jct(),
+            maxmin_ratio: maxmin_vs_gps(&suite, &m, &gps),
+            completed: m.completed_agents(),
+            makespan,
+            replicas_lost: m.replicas_lost(),
+            recovered_agents: m.recovered_agents(),
+            rescheduled_tokens: m.rescheduled_tokens(),
         }
     })
 }

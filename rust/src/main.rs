@@ -5,8 +5,8 @@
 //! justitia serve        [--artifacts DIR] [--policy P] [--port N] [--replicas R] [--placement PL]
 //! justitia run          [--policy P] [--backend B] [--agents N] [--density D] [--seed S]
 //! justitia cluster      [--replicas R] [--placement PL] [--agents N] [--density D] [--seed S]
-//! justitia experiment   <fig3|fig7|...|fig13|table1|prefix_sharing|dag_agents|chunked_prefill|all>
-//!                       [--agents N] [--seed S]
+//! justitia experiment   <fig3|fig7|...|fig13|table1|prefix_sharing|dag_agents|chunked_prefill|
+//!                        preemption|trace_demo|elasticity|all> [--agents N] [--seed S]
 //! justitia gen-workload [--agents N] [--density D] [--seed S] --out FILE
 //! justitia train-predictor [--samples N] [--seed S]
 //! justitia gps          [--agents N] [--density D] [--seed S]   (GPS reference dump)
@@ -68,7 +68,7 @@ fn print_help() {
            cluster          multi-replica scale-out experiment (replicas x placement)\n\
            experiment       regenerate a paper figure/table (fig3..fig13, table1,\n\
                             prefix_sharing, dag_agents, chunked_prefill, preemption,\n\
-                            trace_demo, all)\n\
+                            trace_demo, elasticity, all)\n\
            gen-workload     write a workload trace JSON\n\
            train-predictor  train + evaluate the per-class MLP predictor\n\
            gps              dump the GPS fluid reference for a suite\n\n\
@@ -83,6 +83,9 @@ fn print_help() {
            --preemption swap|recompute|auto   --victim youngest|most-pages|\n\
                         cheapest-remaining|pamper-aware\n\
            --host-mem-pages N   --swap-bw TOKENS_PER_SEC\n\
+           --failures DSL (replica churn schedule, e.g. crash@40:1,drain@60:0,join@90;\n\
+                           empty = immortal pool, bit-identical to pre-elasticity runs)\n\
+           --autoscale DSL (queue-depth autoscaler, e.g. every=30,up=8,down=1,min=1,max=8)\n\
            --event-core   (event-driven engine core; bit-identical, faster)\n\
            --trace        (flight recorder + Chrome/Perfetto export; default off)\n\
            --trace-sample N   (sample the time series every N iterations; default 8)\n\
@@ -256,6 +259,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             r.maxmin_ratio,
             r.completed
         ));
+    }
+    if !cfg.failures.is_empty() {
+        out.line(format!("churn schedule: [{}]", cfg.failures.to_dsl()));
+        for r in &rows {
+            if r.replicas_lost > 0 {
+                out.line(format!(
+                    "churn {}x {}: {} replicas lost, {} agents recovered, {} KV tokens rescheduled",
+                    r.replicas,
+                    r.placement.name(),
+                    r.replicas_lost,
+                    r.recovered_agents,
+                    r.rescheduled_tokens
+                ));
+            }
+        }
     }
     if counts.len() > 1 {
         let base = rows.iter().find(|r| r.replicas == counts[0]);
@@ -758,6 +776,80 @@ fn cmd_experiment(args: &Args) -> Result<()> {
              see EXPERIMENTS.md \"How to read a trace\")"
                 .to_string(),
         );
+    }
+    if run_all || which == "elasticity" {
+        let mut out = ResultsFile::new("elasticity.txt");
+        out.line("=== Elasticity: replica churn (crash/drain/join) vs an oracle dispatcher ===");
+        let replicas = args.get_usize("replicas", 3).max(3);
+        let rows = exp::elasticity(&Config::default(), n, 3.0, replicas, seed);
+        out.line(format!(
+            "workload: {n} agents at 3x density on {replicas} Justitia replicas; churn times \
+             are fractions of the arrival window; `oracle` rows know the schedule at t=0"
+        ));
+        out.line(format!(
+            "{:<13} {:<7} {:>9} {:>9} {:>9} {:>8} {:>5} {:>5} {:>6} {:>12}",
+            "scenario",
+            "mode",
+            "avgJCT",
+            "p99JCT",
+            "makespan",
+            "maxmin",
+            "done",
+            "lost",
+            "recov",
+            "resched-tok"
+        ));
+        for r in &rows {
+            out.line(format!(
+                "{:<13} {:<7} {:>8.1}s {:>8.1}s {:>8.1}s {:>7.2}x {:>5} {:>5} {:>6} {:>12}",
+                r.scenario,
+                if r.oracle { "oracle" } else { "churn" },
+                r.avg_jct,
+                r.p99_jct,
+                r.makespan,
+                r.maxmin_ratio,
+                r.completed,
+                r.replicas_lost,
+                r.recovered_agents,
+                r.rescheduled_tokens
+            ));
+        }
+        // Headline: what blind recovery costs vs announced failures.
+        for sc in ["drain-1", "crash-1", "crash-2+join"] {
+            let churn = rows.iter().find(|r| r.scenario == sc && !r.oracle);
+            let orac = rows.iter().find(|r| r.scenario == sc && r.oracle);
+            if let (Some(c), Some(o)) = (churn, orac) {
+                out.line(format!(
+                    "degradation {sc}: avg JCT {:+.1}% vs oracle, p99 {:+.1}%, \
+                     maxmin {:.2}x -> {:.2}x",
+                    100.0 * (c.avg_jct / o.avg_jct.max(1e-9) - 1.0),
+                    100.0 * (c.p99_jct / o.p99_jct.max(1e-9) - 1.0),
+                    o.maxmin_ratio,
+                    c.maxmin_ratio
+                ));
+            }
+        }
+        // Machine-readable copy for kick-tires / CI smoke artifacts.
+        let json = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    justitia::util::json::obj([
+                        ("scenario", Json::Str(r.scenario.into())),
+                        ("oracle", Json::Bool(r.oracle)),
+                        ("avg_jct", Json::Num(r.avg_jct)),
+                        ("p99_jct", Json::Num(r.p99_jct)),
+                        ("makespan", Json::Num(r.makespan)),
+                        ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
+                        ("completed", Json::Num(r.completed as f64)),
+                        ("replicas_lost", Json::Num(r.replicas_lost as f64)),
+                        ("recovered_agents", Json::Num(r.recovered_agents as f64)),
+                        ("rescheduled_tokens", Json::Num(r.rescheduled_tokens as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write("results/elasticity.json", json.pretty())?;
+        out.line("(wrote results/elasticity.json)".to_string());
     }
     if run_all || which == "table1" {
         let mut out = ResultsFile::new("table1.txt");

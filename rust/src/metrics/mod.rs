@@ -144,6 +144,14 @@ pub struct RunMetrics {
     prefill_stalls: u64,
     /// (engine time, device tokens, per-agent tokens) — Fig. 3 timeline.
     pub kv_samples: Vec<KvSample>,
+    /// Replica crashes this run absorbed (churn runs only, DESIGN.md §14).
+    replicas_lost: u64,
+    /// In-flight agents salvaged from crashed replicas and re-placed.
+    recovered_agents: u64,
+    /// Device+host KV tokens destroyed by crashes — all of which the
+    /// recovered agents must re-prefill on their new replica (the churn
+    /// analogue of `recomputed_tokens`).
+    rescheduled_tokens: u64,
 }
 
 /// One KV-occupancy sample (Fig. 3 timeline).
@@ -272,6 +280,17 @@ impl RunMetrics {
         self.kv_samples.push(KvSample { t, device_tokens, per_agent });
     }
 
+    /// Record a replica crash (churn runs, DESIGN.md §14): `recovered`
+    /// in-flight agents were salvaged for re-placement and `tokens` of their
+    /// KV (device + host) were destroyed. The churn driver books this on the
+    /// crashed replica's metrics before graveyarding them, so cluster merges
+    /// aggregate churn the same way they aggregate every other counter.
+    pub fn on_replica_lost(&mut self, recovered: u64, tokens: u64) {
+        self.replicas_lost += 1;
+        self.recovered_agents += recovered;
+        self.rescheduled_tokens += tokens;
+    }
+
     // ---- derived quantities ---------------------------------------------
 
     /// Agents completed so far.
@@ -314,6 +333,21 @@ impl RunMetrics {
     /// Prefill-chunk stall events (0 unless chunked prefill ran).
     pub fn prefill_stalls(&self) -> u64 {
         self.prefill_stalls
+    }
+
+    /// Replica crashes absorbed (0 unless a churn schedule ran).
+    pub fn replicas_lost(&self) -> u64 {
+        self.replicas_lost
+    }
+
+    /// In-flight agents salvaged from crashed replicas and re-placed.
+    pub fn recovered_agents(&self) -> u64 {
+        self.recovered_agents
+    }
+
+    /// KV tokens destroyed by replica crashes (to be re-prefilled).
+    pub fn rescheduled_tokens(&self) -> u64 {
+        self.rescheduled_tokens
     }
 
     /// Decode inter-token latency samples recorded (decoders × iterations).
@@ -462,8 +496,12 @@ impl RunMetrics {
     /// Fold another run's metrics into this one. Used by the cluster
     /// dispatcher to merge per-replica metrics into cluster totals; agent
     /// and task ids must be disjoint (each agent runs on exactly one
-    /// replica). Engine time becomes the max (cluster makespan); counters
-    /// add; scheduling-latency statistics combine exactly.
+    /// replica) — except under churn, where a recovered agent appears on
+    /// both its crashed and its recovery replica: the driver merges
+    /// graveyard metrics first, so later (live-replica) entries win the
+    /// per-key maps and JCTs stay anchored at the original arrival
+    /// (DESIGN.md §14). Engine time becomes the max (cluster makespan);
+    /// counters add; scheduling-latency statistics combine exactly.
     pub fn merge(&mut self, other: &RunMetrics) {
         self.arrival.extend(&other.arrival);
         self.complete.extend(&other.complete);
@@ -494,6 +532,9 @@ impl RunMetrics {
         self.correction_trace.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         self.kv_samples.extend(other.kv_samples.iter().cloned());
         self.kv_samples.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        self.replicas_lost += other.replicas_lost;
+        self.recovered_agents += other.recovered_agents;
+        self.rescheduled_tokens += other.rescheduled_tokens;
     }
 
     /// Mean scheduling-decision latency in milliseconds (Fig. 12).

@@ -72,6 +72,16 @@ pub enum TraceEventKind {
     TaskComplete,
     /// All tasks of the agent finished.
     Complete,
+    /// This replica crashed: device+host KV lost, in-flight agents recovered
+    /// (engine row; churn runs only, DESIGN.md §14).
+    ReplicaCrash,
+    /// This replica began a graceful drain: no new placements (engine row).
+    ReplicaDrain,
+    /// This replica (re)joined the pool (engine row).
+    ReplicaJoin,
+    /// A crash-recovered agent was re-placed on this replica with its
+    /// generated tokens folded into the prompt (agent row).
+    Recovered,
 }
 
 impl TraceEventKind {
@@ -91,6 +101,10 @@ impl TraceEventKind {
             TraceEventKind::Spawn => "spawn",
             TraceEventKind::TaskComplete => "task_complete",
             TraceEventKind::Complete => "complete",
+            TraceEventKind::ReplicaCrash => "replica_crash",
+            TraceEventKind::ReplicaDrain => "replica_drain",
+            TraceEventKind::ReplicaJoin => "replica_join",
+            TraceEventKind::Recovered => "recovered",
         }
     }
 }

@@ -1,0 +1,271 @@
+//! Churn conservation property (DESIGN.md §14): under *random* failure /
+//! drain / join schedules — composed with every scheduler and the
+//! {prefix cache, DAG + spawning, chunked prefill, preemption-auto} knob
+//! draws — the cluster must conserve work and memory:
+//!
+//! * no agent is lost or duplicated (every agent completes exactly once in
+//!   the merged metrics),
+//! * KV page accounting balances on every surviving replica, and the device
+//!   pool drains to zero at end of run (prefix cache off; the cache pins
+//!   pages by design),
+//! * the whole churn run is replay-deterministic for a fixed seed.
+//!
+//! Random schedules spare replica 0 ([`FailureSchedule::random`]), so every
+//! generated scenario is guaranteed completable.
+
+use justitia::cluster::{ClusterDispatcher, FailureSchedule, Placement};
+use justitia::config::{BackendProfile, Config, Policy, PreemptionMode};
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::util::prop::{check, Config as PropConfig, Strategy};
+use justitia::util::rng::Rng;
+use justitia::workload::test_support::dag_agent;
+use justitia::workload::{AgentSpec, SpawnSpec, Suite};
+
+#[derive(Clone, Debug)]
+struct ChurnScenario {
+    agents: Vec<AgentSpec>,
+    pages: u64,
+    page_size: u32,
+    prefix_cache: bool,
+    spawn: bool,
+    chunked: bool,
+    preempt_auto: bool,
+    host_tokens: Option<u64>,
+    swap_bw: f64,
+    /// Replica pool size the random schedule churns over.
+    n_replicas: usize,
+    /// Seed for [`FailureSchedule::random`].
+    churn_seed: u64,
+    /// Number of churn events drawn.
+    n_events: usize,
+}
+
+struct ChurnStrategy;
+
+impl Strategy for ChurnStrategy {
+    type Value = ChurnScenario;
+
+    fn generate(&self, rng: &mut Rng) -> ChurnScenario {
+        let page_size = 8u32;
+        let pages = rng.range_u64(24, 48);
+        let m_tokens = pages * page_size as u64;
+        let n_agents = rng.range_u64(2, 7) as usize;
+        let spawn = rng.chance(0.5);
+        let mut agents = Vec::with_capacity(n_agents);
+        let mut t = 0.0;
+        for id in 0..n_agents {
+            t += rng.exponential(0.05);
+            let n_tasks = rng.range_u64(1, 5) as usize;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for i in 0..n_tasks {
+                let p = rng.range_u64(2, m_tokens / 3) as u32;
+                let d = rng.range_u64(1, 16) as u32;
+                let deps = if i > 0 && rng.chance(0.3) {
+                    vec![rng.below(i as u64) as u32]
+                } else {
+                    Vec::new()
+                };
+                tasks.push((p, d, deps));
+            }
+            let mut a = dag_agent(id as u32, t, tasks);
+            if spawn {
+                a.spawn = Some(SpawnSpec {
+                    prob: 0.6,
+                    branch: 2,
+                    max_depth: 1,
+                    seed: rng.next_u64(),
+                });
+            }
+            agents.push(a);
+        }
+        ChurnScenario {
+            agents,
+            pages,
+            page_size,
+            prefix_cache: rng.chance(0.5),
+            spawn,
+            chunked: rng.chance(0.5),
+            preempt_auto: rng.chance(0.5),
+            host_tokens: match rng.below(3) {
+                0 => None,
+                1 => Some(m_tokens / 4),
+                _ => Some(0),
+            },
+            swap_bw: if rng.chance(0.5) { 1000.0 } else { 0.0 },
+            n_replicas: rng.range_u64(2, 4) as usize,
+            churn_seed: rng.next_u64(),
+            n_events: rng.range_u64(1, 6) as usize,
+        }
+    }
+
+    fn shrink(&self, v: &ChurnScenario) -> Vec<ChurnScenario> {
+        let mut out = Vec::new();
+        if v.agents.len() > 1 {
+            let mut w = v.clone();
+            w.agents.pop();
+            out.push(w);
+        }
+        if v.n_events > 1 {
+            let mut w = v.clone();
+            w.n_events -= 1;
+            out.push(w);
+        }
+        for knob in 0..4 {
+            let mut w = v.clone();
+            let on = match knob {
+                0 => std::mem::replace(&mut w.prefix_cache, false),
+                1 => {
+                    let on = w.spawn;
+                    w.spawn = false;
+                    for a in &mut w.agents {
+                        a.spawn = None;
+                    }
+                    on
+                }
+                2 => std::mem::replace(&mut w.chunked, false),
+                _ => std::mem::replace(&mut w.preempt_auto, false),
+            };
+            if on {
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+fn config_for(sc: &ChurnScenario) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = BackendProfile {
+        name: "prop-churn".into(),
+        kv_tokens: sc.pages * sc.page_size as u64,
+        page_size: sc.page_size,
+        alpha: 1.0,
+        beta_prefill: 1e-3,
+        beta_decode: 0.0,
+        swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
+        host_kv_tokens: sc.host_tokens,
+        swap_bw_tokens_per_sec: sc.swap_bw,
+    };
+    cfg.max_batch = 64;
+    cfg.prefix_cache = sc.prefix_cache;
+    if sc.preempt_auto {
+        cfg.preemption = PreemptionMode::Auto;
+    }
+    if sc.chunked {
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 16;
+        cfg.max_batched_tokens = 48;
+    }
+    cfg
+}
+
+fn suite_for(sc: &ChurnScenario) -> Suite {
+    let mut suite = Suite::new(sc.agents.clone());
+    if sc.prefix_cache {
+        justitia::workload::trace::annotate_families(&mut suite, 2, 16, 0xfa7e);
+    }
+    suite
+}
+
+fn engine_for(cfg: &Config, policy: Policy) -> Engine<SimBackend> {
+    let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+    Engine::new(cfg, sched, SimBackend::unit_time())
+}
+
+/// One churn replay. Returns the merged-run fingerprint and runs the
+/// per-replica conservation checks.
+fn replay(
+    sc: &ChurnScenario,
+    policy: Policy,
+) -> Result<(f64, Vec<(u32, f64)>, (u64, u64, u64)), String> {
+    let cfg = config_for(sc);
+    let suite = suite_for(sc);
+    let horizon = suite.agents.last().map(|a| a.arrival).unwrap_or(0.0) + 30.0;
+    let schedule = FailureSchedule::random(sc.churn_seed, sc.n_replicas, horizon, sc.n_events);
+    let replicas = (0..sc.n_replicas).map(|_| engine_for(&cfg, policy)).collect();
+    let mut cluster =
+        ClusterDispatcher::new(replicas, Placement::ClusterVtime, cfg.backend.kv_tokens, 1.0);
+    let model = justitia::cost::CostModel::MemoryCentric;
+    let makespan =
+        cluster.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, || {
+            engine_for(&cfg, policy)
+        });
+
+    let m = cluster.merged_metrics();
+    // Conservation of agents: each completes exactly once in the merge.
+    if m.completed_agents() != suite.len() {
+        return Err(format!(
+            "{policy:?}: {}/{} agents completed under schedule [{}]",
+            m.completed_agents(),
+            suite.len(),
+            schedule.to_dsl()
+        ));
+    }
+    let jcts = m.jcts();
+    if jcts.len() != suite.len() {
+        return Err(format!(
+            "{policy:?}: {} JCT entries for {} agents (lost or duplicated)",
+            jcts.len(),
+            suite.len()
+        ));
+    }
+    // Conservation of memory on every surviving replica.
+    for r in 0..cluster.n_replicas() {
+        let e = cluster.replica(r);
+        e.check_kv_invariants().map_err(|err| format!("{policy:?}: replica {r}: {err}"))?;
+        if sc.chunked {
+            e.check_chunked_accounting()
+                .map_err(|err| format!("{policy:?}: replica {r}: {err}"))?;
+        }
+        if !sc.prefix_cache && e.kv.device_tokens() != 0 {
+            return Err(format!(
+                "{policy:?}: replica {r} holds {} device tokens after completion",
+                e.kv.device_tokens()
+            ));
+        }
+    }
+    Ok((makespan, jcts, cluster.churn_counters()))
+}
+
+#[test]
+fn prop_churn_conserves_agents_and_kv_across_schedulers() {
+    let cfg = PropConfig { cases: prop_cases(20), seed: 0xc4a0_5eed, max_shrink_steps: 60 };
+    check(&cfg, &ChurnStrategy, |sc| {
+        for policy in [
+            Policy::Fcfs,
+            Policy::Sjf,
+            Policy::AgentFcfs,
+            Policy::Vtc,
+            Policy::Srjf,
+            Policy::Justitia,
+        ] {
+            replay(sc, policy)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_churn_replay_is_deterministic() {
+    let cfg = PropConfig { cases: prop_cases(12), seed: 0xd373_c4a0, max_shrink_steps: 40 };
+    check(&cfg, &ChurnStrategy, |sc| {
+        for policy in [Policy::Fcfs, Policy::Justitia] {
+            let a = replay(sc, policy)?;
+            let b = replay(sc, policy)?;
+            if a != b {
+                return Err(format!(
+                    "{policy:?}: same (suite, schedule, seed) diverged across replays \
+                     (makespan {} vs {}, counters {:?} vs {:?})",
+                    a.0, b.0, a.2, b.2
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn prop_cases(default: usize) -> usize {
+    std::env::var("JUSTITIA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}

@@ -10,6 +10,7 @@
 //! is untouched by it); any divergence here is a bug in the event core's
 //! dirty tracking, cached batch composition, or clock advancement.
 
+use justitia::cluster::{ClusterDispatcher, FailureSchedule, Placement};
 use justitia::config::{BackendProfile, Config, Policy, PreemptionMode};
 use justitia::engine::exec::SimBackend;
 use justitia::engine::Engine;
@@ -35,6 +36,9 @@ struct IdentityScenario {
     preempt_auto: bool,
     host_tokens: Option<u64>,
     swap_bw: f64,
+    /// Seed for the random churn schedule the cluster identity test draws
+    /// ([`FailureSchedule::random`]); ignored by the single-engine tests.
+    churn_seed: u64,
 }
 
 struct IdentityStrategy;
@@ -91,6 +95,7 @@ impl Strategy for IdentityStrategy {
                 _ => Some(0),
             },
             swap_bw: if rng.chance(0.5) { 1000.0 } else { 0.0 },
+            churn_seed: rng.next_u64(),
         }
     }
 
@@ -254,6 +259,67 @@ fn prop_event_core_identity_with_default_knobs() {
                 return Err(format!(
                     "{policy:?}: default-knob divergence (tick {:?} vs event {:?})",
                     tick.3, event.3
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Merged-cluster fingerprint of one churn replay on the given core.
+fn replay_churn(
+    sc: &IdentityScenario,
+    policy: Policy,
+    event_core: bool,
+) -> (f64, Vec<(u32, f64)>, (u64, u64, u64), [u64; 4]) {
+    let mut cfg = config_for(sc);
+    cfg.event_core = event_core;
+    let suite = suite_for(sc);
+    let horizon = suite.agents.last().map(|a| a.arrival).unwrap_or(0.0) + 30.0;
+    let schedule = FailureSchedule::random(sc.churn_seed, 3, horizon, 4);
+    let engine_for = |cfg: &Config| {
+        let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+        Engine::new(cfg, sched, SimBackend::unit_time())
+    };
+    let replicas = (0..3).map(|_| engine_for(&cfg)).collect();
+    let mut cluster =
+        ClusterDispatcher::new(replicas, Placement::ClusterVtime, cfg.backend.kv_tokens, 1.0);
+    let model = justitia::cost::CostModel::MemoryCentric;
+    let makespan =
+        cluster.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, || engine_for(&cfg));
+    let m = cluster.merged_metrics();
+    (
+        makespan,
+        m.jcts(),
+        cluster.churn_counters(),
+        [m.iterations(), m.swap_out_count(), m.recompute_count(), m.prefill_tokens_executed()],
+    )
+}
+
+/// Churn runs drive every replica through `Engine::step`, whose batch
+/// composition is exactly the machinery `event_core` rewires — so a random
+/// crash/drain/join schedule over a 3-replica cluster (recovery fold,
+/// re-placement, drains and joins included) must replay bit-identically on
+/// both cores, for every scheduler.
+#[test]
+fn prop_event_core_identity_under_churn() {
+    let cfg = PropConfig { cases: prop_cases(10), seed: 0xc4a0_e7c0, max_shrink_steps: 40 };
+    check(&cfg, &IdentityStrategy, |sc| {
+        for policy in [
+            Policy::Fcfs,
+            Policy::Sjf,
+            Policy::AgentFcfs,
+            Policy::Vtc,
+            Policy::Srjf,
+            Policy::Justitia,
+        ] {
+            let tick = replay_churn(sc, policy, false);
+            let event = replay_churn(sc, policy, true);
+            if tick != event {
+                return Err(format!(
+                    "{policy:?}: cores diverged under churn (makespan {} vs {}, \
+                     churn counters {:?} vs {:?}, metric counters {:?} vs {:?})",
+                    tick.0, event.0, tick.2, event.2, tick.3, event.3
                 ));
             }
         }

@@ -15,6 +15,7 @@
 //!    derives `PartialEq`): every emit site lives in code shared by both
 //!    cores, extending `prop_event_core_identity` to trace equality.
 
+use justitia::cluster::{ClusterDispatcher, FailureSchedule, Placement};
 use justitia::config::{BackendProfile, Config, Policy, PreemptionMode};
 use justitia::engine::exec::SimBackend;
 use justitia::engine::Engine;
@@ -43,6 +44,9 @@ struct TraceScenario {
     /// ring-buffer eviction — neither may perturb the simulation.
     sample_stride: u32,
     trace_cap: usize,
+    /// Seed for the random churn schedule the cluster inertness test draws
+    /// ([`FailureSchedule::random`]); ignored by the single-engine tests.
+    churn_seed: u64,
 }
 
 struct TraceStrategy;
@@ -100,6 +104,7 @@ impl Strategy for TraceStrategy {
             event_core: rng.chance(0.5),
             sample_stride: [1u32, 3, 8][rng.below(3) as usize],
             trace_cap: if rng.chance(0.3) { 128 } else { 65536 },
+            churn_seed: rng.next_u64(),
         }
     }
 
@@ -290,6 +295,85 @@ fn prop_trace_stream_identical_across_cores() {
                     event_rec.event_count(),
                     event_rec.sample_count(),
                     event_rec.pick_count(),
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// One churn replay over a 3-replica cluster; canonicalizes the merged-run
+/// results into a JSON byte string alongside the merged Chrome export (which
+/// exists only when tracing was on).
+fn replay_churn(
+    sc: &TraceScenario,
+    policy: Policy,
+    trace: bool,
+) -> (String, Option<Json>) {
+    let mut cfg = config_for(sc);
+    cfg.event_core = sc.event_core;
+    cfg.trace = trace;
+    cfg.trace_sample = sc.sample_stride;
+    cfg.trace_cap = sc.trace_cap;
+    let suite = suite_for(sc);
+    let horizon = suite.agents.last().map(|a| a.arrival).unwrap_or(0.0) + 30.0;
+    let schedule = FailureSchedule::random(sc.churn_seed, 3, horizon, 4);
+    let engine_for = |cfg: &Config| {
+        let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+        Engine::new(cfg, sched, SimBackend::unit_time())
+    };
+    let replicas = (0..3).map(|_| engine_for(&cfg)).collect();
+    let mut cluster =
+        ClusterDispatcher::new(replicas, Placement::ClusterVtime, cfg.backend.kv_tokens, 1.0);
+    let model = justitia::cost::CostModel::MemoryCentric;
+    let makespan =
+        cluster.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, || engine_for(&cfg));
+    let m = cluster.merged_metrics();
+    let json = obj([
+        ("makespan", Json::Num(makespan)),
+        (
+            "jcts",
+            Json::Arr(
+                m.jcts()
+                    .into_iter()
+                    .map(|(a, j)| Json::Arr(vec![Json::Num(a as f64), Json::Num(j)]))
+                    .collect(),
+            ),
+        ),
+        ("iterations", Json::Num(m.iterations() as f64)),
+        ("swap_outs", Json::Num(m.swap_out_count() as f64)),
+        ("recomputes", Json::Num(m.recompute_count() as f64)),
+        ("prefill_tokens", Json::Num(m.prefill_tokens_executed() as f64)),
+        ("replicas_lost", Json::Num(m.replicas_lost() as f64)),
+        ("recovered", Json::Num(m.recovered_agents() as f64)),
+        ("rescheduled_tokens", Json::Num(m.rescheduled_tokens() as f64)),
+    ])
+    .dump();
+    (json, cluster.merged_trace_chrome())
+}
+
+/// Guarantee 1 extended to the churn driver: with a random crash / drain /
+/// join schedule running (recovery fold, re-placement, graveyard merge
+/// included), `--trace` must still be observation-only — the merged results
+/// are byte-identical with tracing off vs on, and only the traced run
+/// produces a Chrome export.
+#[test]
+fn prop_trace_inert_under_churn() {
+    let cfg = PropConfig { cases: prop_cases(12), seed: 0x7ace_c4a0, max_shrink_steps: 40 };
+    check(&cfg, &TraceStrategy, |sc| {
+        for policy in [Policy::Fcfs, Policy::Vtc, Policy::Justitia] {
+            let (off_json, off_chrome) = replay_churn(sc, policy, false);
+            let (on_json, on_chrome) = replay_churn(sc, policy, true);
+            if off_chrome.is_some() {
+                return Err(format!("{policy:?}: untraced churn run produced a Chrome export"));
+            }
+            if on_chrome.is_none() {
+                return Err(format!("{policy:?}: traced churn run lost its Chrome export"));
+            }
+            if off_json != on_json {
+                return Err(format!(
+                    "{policy:?} (event_core={}): --trace perturbed a churn run\n off: {off_json}\n  on: {on_json}",
+                    sc.event_core
                 ));
             }
         }

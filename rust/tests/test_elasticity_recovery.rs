@@ -1,0 +1,175 @@
+//! Elasticity/recovery acceptance tests (DESIGN.md §14):
+//!
+//! * **Bit-identity gate** — a zero-event [`FailureSchedule`] must make
+//!   `run_suite_churn` byte-identical to `run_suite_parallel` across all six
+//!   schedulers: the churn subsystem is invisible until a schedule is
+//!   non-empty.
+//! * **Crash + rejoin** — losing a replica mid-run completes every agent,
+//!   with average JCT no better than the immortal baseline (a crash destroys
+//!   real work; recovery can only pay, never profit).
+//! * **Drain** — graceful departure strands no agent and loses no KV.
+//! * **Family re-homing** — a shared-prefix family whose `PrefixAffinity`
+//!   home replica crashes re-homes on a surviving replica instead of
+//!   following a dangling slot (the satellite bug fix:
+//!   `Placer::on_replica_down` purges `family_home` entries).
+
+use justitia::cluster::{ClusterDispatcher, FailureSchedule, Placement};
+use justitia::config::{Config, Policy, WorkloadConfig};
+use justitia::cost::CostModel;
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::workload::trace;
+
+const POLICIES: [Policy; 6] =
+    [Policy::Fcfs, Policy::Sjf, Policy::AgentFcfs, Policy::Vtc, Policy::Srjf, Policy::Justitia];
+
+fn engine_for(cfg: &Config, policy: Policy) -> Engine<SimBackend> {
+    let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+    Engine::new(cfg, sched, SimBackend::new(&cfg.backend))
+}
+
+fn cluster_for(cfg: &Config, n: usize, policy: Policy, p: Placement) -> ClusterDispatcher<SimBackend> {
+    let replicas = (0..n).map(|_| engine_for(cfg, policy)).collect();
+    ClusterDispatcher::new(replicas, p, cfg.backend.kv_tokens, 1.0)
+}
+
+fn suite_of(n: usize, seed: u64) -> justitia::workload::Suite {
+    let wl = WorkloadConfig { n_agents: n, seed, ..Default::default() }.with_density(3.0);
+    trace::build_suite(&wl)
+}
+
+/// Everything a run observably produced, for byte-identity comparison.
+fn fingerprint(m: &justitia::metrics::RunMetrics) -> (Vec<(u32, f64)>, usize, u64, u64, u64) {
+    (m.jcts(), m.completed_agents(), m.iterations(), m.swap_out_count(), m.prefill_tokens_executed())
+}
+
+#[test]
+fn zero_event_schedule_is_byte_identical_across_all_schedulers() {
+    let cfg = Config::default();
+    let suite = suite_of(40, 17);
+    let model = CostModel::MemoryCentric;
+    for policy in POLICIES {
+        let mut base = cluster_for(&cfg, 3, policy, Placement::ClusterVtime);
+        base.run_suite_parallel(&suite, |a| model.agent_cost(a), 2);
+        let mut churn = cluster_for(&cfg, 3, policy, Placement::ClusterVtime);
+        churn.run_suite_churn(&suite, |a| model.agent_cost(a), &FailureSchedule::none(), || {
+            engine_for(&cfg, policy)
+        });
+        assert_eq!(
+            fingerprint(&base.merged_metrics()),
+            fingerprint(&churn.merged_metrics()),
+            "{policy:?}: empty FailureSchedule must not perturb the immortal path"
+        );
+        assert_eq!(churn.churn_counters(), (0, 0, 0));
+    }
+}
+
+#[test]
+fn crash_and_rejoin_completes_all_and_never_beats_immortal() {
+    let cfg = Config::default();
+    let suite = suite_of(60, 5);
+    let model = CostModel::MemoryCentric;
+    for policy in [Policy::Justitia, Policy::Vtc, Policy::Fcfs] {
+        let mut immortal = cluster_for(&cfg, 2, policy, Placement::ClusterVtime);
+        immortal.run_suite(&suite, |a| model.agent_cost(a));
+        let baseline = immortal.merged_metrics().avg_jct();
+
+        let schedule = FailureSchedule::parse("crash@6:1,join@12").unwrap();
+        let mut churn = cluster_for(&cfg, 2, policy, Placement::ClusterVtime);
+        churn.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, || {
+            engine_for(&cfg, policy)
+        });
+        let m = churn.merged_metrics();
+        assert_eq!(m.completed_agents(), 60, "{policy:?}: crash+rejoin lost agents");
+        assert_eq!(m.replicas_lost(), 1);
+        assert!(
+            m.avg_jct() >= baseline - 1e-6,
+            "{policy:?}: churn run (avg JCT {:.3}s) cannot beat the immortal pool \
+             ({baseline:.3}s) — a crash destroys real work",
+            m.avg_jct()
+        );
+    }
+}
+
+#[test]
+fn drain_never_strands_an_agent() {
+    let cfg = Config::default();
+    let suite = suite_of(50, 23);
+    let model = CostModel::MemoryCentric;
+    for p in Placement::ALL {
+        let schedule = FailureSchedule::parse("drain@5:1").unwrap();
+        let mut c = cluster_for(&cfg, 3, Policy::Justitia, p);
+        c.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, || {
+            engine_for(&cfg, Policy::Justitia)
+        });
+        let m = c.merged_metrics();
+        assert_eq!(m.completed_agents(), 50, "{p:?}: drain stranded agents");
+        assert_eq!(c.churn_counters(), (0, 0, 0), "{p:?}: graceful drain must lose nothing");
+    }
+}
+
+/// The satellite bug fix: with `PrefixAffinity`, a family's cached home
+/// replica must be invalidated when that replica leaves the pool. Before the
+/// fix, `family_home` kept routing the family to the dead slot.
+#[test]
+fn prefix_family_rehomes_after_home_replica_crashes() {
+    let mut cfg = Config::default();
+    cfg.workload = WorkloadConfig { n_agents: 24, seed: 9, ..Default::default() }
+        .with_density(3.0)
+        .with_shared_prefix(4, 256);
+    cfg.prefix_cache = true;
+    let suite = trace::build_suite(&cfg.workload);
+    let model = CostModel::MemoryCentric;
+    // Crash every replica but 0 early: whatever homes families had, any
+    // member arriving afterwards must land on a surviving (eligible) slot.
+    let schedule = FailureSchedule::parse("crash@2:1,crash@2:2").unwrap();
+    let mut c = cluster_for(&cfg, 3, Policy::Justitia, Placement::PrefixAffinity);
+    c.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, || {
+        engine_for(&cfg, Policy::Justitia)
+    });
+    let m = c.merged_metrics();
+    assert_eq!(m.completed_agents(), 24, "family members must not follow a dead home");
+    for a in &suite.agents {
+        if a.arrival > 2.0 {
+            assert_eq!(
+                c.replica_of(a.id),
+                Some(0),
+                "agent {} (arrival {:.1}s) was routed to a crashed replica",
+                a.id,
+                a.arrival
+            );
+        }
+    }
+}
+
+/// Virtual-time carry-over: a recovered agent's scheduler tag is its
+/// original prediction scaled to the remaining work, so pampering decisions
+/// survive migration. Indirect check: with Justitia, a crash must not
+/// invert fairness catastrophically — the max-min spread under churn stays
+/// within a small factor of the immortal run's.
+#[test]
+fn recovery_preserves_fairness_order_of_magnitude() {
+    let cfg = Config::default();
+    let suite = suite_of(60, 5);
+    let model = CostModel::MemoryCentric;
+    let spread = |m: &justitia::metrics::RunMetrics| {
+        let jcts = m.jcts();
+        let max = jcts.iter().map(|(_, j)| *j).fold(0.0f64, f64::max);
+        let min = jcts.iter().map(|(_, j)| *j).fold(f64::INFINITY, f64::min);
+        max / min.max(1e-9)
+    };
+    let mut immortal = cluster_for(&cfg, 2, Policy::Justitia, Placement::ClusterVtime);
+    immortal.run_suite(&suite, |a| model.agent_cost(a));
+    let base = spread(&immortal.merged_metrics());
+
+    let schedule = FailureSchedule::parse("crash@6:1,join@12").unwrap();
+    let mut churn = cluster_for(&cfg, 2, Policy::Justitia, Placement::ClusterVtime);
+    churn.run_suite_churn(&suite, |a| model.agent_cost(a), &schedule, || {
+        engine_for(&cfg, Policy::Justitia)
+    });
+    let after = spread(&churn.merged_metrics());
+    assert!(
+        after < base * 10.0 + 10.0,
+        "crash recovery blew up the JCT spread: {base:.2}x -> {after:.2}x"
+    );
+}
