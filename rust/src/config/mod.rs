@@ -294,6 +294,56 @@ impl VictimPolicy {
     ];
 }
 
+/// How each iteration's token budget is split between running decodes and
+/// pending prefill chunks (DESIGN.md §15). Only meaningful with
+/// [`chunked_prefill`](Config::chunked_prefill) — without a finite budget
+/// there is nothing to split, and every policy is inert. Default
+/// [`Static`](BatchPolicyKind::Static) reproduces the pre-policy batch
+/// composition bit for bit (`prop_batch_policy_identity`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BatchPolicyKind {
+    /// Today's behavior: decodes take one token each, prefills greedily fill
+    /// whatever budget remains. The bit-identical default.
+    Static,
+    /// Reserve [`decode_reserve`](Config::decode_reserve) tokens of the
+    /// budget for decodes: prefill chunks may never use more than
+    /// `max_batched_tokens − decode_reserve` tokens per iteration.
+    FixedSplit,
+    /// FairBatching-style closed loop (arxiv 2510.14392): shrink the prefill
+    /// share when the windowed p99 ITL of running decodes breaches the
+    /// tightest class SLO, grow it back when latency is comfortable and
+    /// TTFT pressure (waiting prefills / TTFT deadline misses) dominates,
+    /// with hysteresis and a cooldown to prevent oscillation.
+    FairBatching,
+}
+
+impl BatchPolicyKind {
+    /// Parse a batch-policy name.
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "static" => Ok(BatchPolicyKind::Static),
+            "fixed-split" => Ok(BatchPolicyKind::FixedSplit),
+            "fairbatching" => Ok(BatchPolicyKind::FairBatching),
+            other => bail!(
+                "unknown batch policy '{other}' (static|fixed-split|fairbatching)"
+            ),
+        }
+    }
+
+    /// Display name (CLI/JSON key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchPolicyKind::Static => "static",
+            BatchPolicyKind::FixedSplit => "fixed-split",
+            BatchPolicyKind::FairBatching => "fairbatching",
+        }
+    }
+
+    /// Every batch policy (experiment sweeps).
+    pub const ALL: [BatchPolicyKind; 3] =
+        [BatchPolicyKind::Static, BatchPolicyKind::FixedSplit, BatchPolicyKind::FairBatching];
+}
+
 /// Workload-suite configuration (§5.1 Workloads).
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
@@ -440,6 +490,16 @@ pub struct Config {
     /// How preemption victims are ranked. Default [`VictimPolicy::Youngest`]
     /// reproduces the pre-subsystem victim choice bit for bit.
     pub victim: VictimPolicy,
+    /// How each iteration's token budget is split between decodes and
+    /// prefill chunks (DESIGN.md §15). Default
+    /// [`BatchPolicyKind::Static`] reproduces the pre-policy composition
+    /// bit for bit (`prop_batch_policy_identity`); only meaningful with
+    /// [`chunked_prefill`](Config::chunked_prefill).
+    pub batch_policy: BatchPolicyKind,
+    /// Tokens of [`max_batched_tokens`](Config::max_batched_tokens) reserved
+    /// for decodes under [`BatchPolicyKind::FixedSplit`]: prefill chunks may
+    /// use at most `max_batched_tokens − decode_reserve` per iteration.
+    pub decode_reserve: u32,
     /// Drive suites through the event/calendar-queue core (DESIGN.md §12):
     /// arrivals fire from a deterministic binary-heap calendar, batch
     /// composition is incremental between events, and the scheduler receives
@@ -480,6 +540,8 @@ impl Default for Config {
             prefill_chunk: 512,
             preemption: PreemptionMode::Swap,
             victim: VictimPolicy::Youngest,
+            batch_policy: BatchPolicyKind::Static,
+            decode_reserve: 256,
             event_core: false,
             trace: false,
             trace_sample: 8,
@@ -569,6 +631,12 @@ impl Config {
         }
         if let Some(x) = v.get("victim").as_str() {
             cfg.victim = VictimPolicy::by_name(x)?;
+        }
+        if let Some(x) = v.get("batch_policy").as_str() {
+            cfg.batch_policy = BatchPolicyKind::by_name(x)?;
+        }
+        if let Some(x) = v.get("decode_reserve").as_u64() {
+            cfg.decode_reserve = x as u32;
         }
         if let Some(x) = v.get("event_core").as_bool() {
             cfg.event_core = x;
@@ -712,6 +780,12 @@ impl Config {
         }
         if let Some(v) = args.get("victim") {
             self.victim = VictimPolicy::by_name(v)?;
+        }
+        if let Some(b) = args.get("batch-policy") {
+            self.batch_policy = BatchPolicyKind::by_name(b)?;
+        }
+        if let Some(r) = args.get("decode-reserve") {
+            self.decode_reserve = r.parse().context("--decode-reserve")?;
         }
         if args.has("event-core") {
             self.event_core = true;
@@ -1054,6 +1128,34 @@ mod tests {
         assert_eq!(cfg.victim, VictimPolicy::MostPages);
         assert_eq!(cfg.backend.host_kv_tokens, Some(32 * 16));
         assert_eq!(cfg.backend.swap_bw_tokens_per_sec, 20000.0);
+    }
+
+    #[test]
+    fn batch_policy_knobs() {
+        // Defaults: the bit-identical static split.
+        let cfg = Config::default();
+        assert_eq!(cfg.batch_policy, BatchPolicyKind::Static);
+        assert_eq!(cfg.decode_reserve, 256);
+        // Name round-trips.
+        for k in BatchPolicyKind::ALL {
+            assert_eq!(BatchPolicyKind::by_name(k.name()).unwrap(), k);
+        }
+        assert!(BatchPolicyKind::by_name("sarathi").is_err());
+        // JSON.
+        let j = Json::parse(r#"{"batch_policy": "fairbatching", "decode_reserve": 512}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.batch_policy, BatchPolicyKind::FairBatching);
+        assert_eq!(cfg.decode_reserve, 512);
+        // CLI.
+        let args = crate::cli::Args::parse(
+            ["run", "--batch-policy", "fixed-split", "--decode-reserve", "128"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let cfg = Config::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.batch_policy, BatchPolicyKind::FixedSplit);
+        assert_eq!(cfg.decode_reserve, 128);
     }
 
     #[test]

@@ -1,0 +1,556 @@
+//! Batch formation as a first-class policy (DESIGN.md §15).
+//!
+//! Chunked prefill (DESIGN.md §10) gave every engine iteration a shared token
+//! budget but hard-coded how that budget is split: decodes take one token
+//! each, then pending prefill chunks greedily fill whatever is left. That
+//! static split is exactly the tension FairBatching (arxiv 2510.14392)
+//! targets — prefill admission steals decode headroom and inflates the ITL
+//! tail of running agents — and it was measurable here (log-bucket ITL
+//! histogram, `beta_mixed`) but not steerable.
+//!
+//! This module extracts the split into a [`BatchPolicy`]: each iteration the
+//! engine shows the policy the batch state ([`BatchObs`]) and receives a
+//! prefill token/slot allowance ([`BatchPlan`]). The fair queue still decides
+//! *which* prefills get the prefill share — the policy only sizes the share,
+//! so fairness ordering and batch sizing stay orthogonal, composable axes.
+//!
+//! Three implementations:
+//!
+//! * [`StaticBudget`] — the default. Unbounded allowance: every `min` in the
+//!   composition loop is an arithmetic identity, so the engine is
+//!   bit-identical to the pre-policy code on both cores
+//!   (`prop_batch_policy_identity`).
+//! * [`FixedSplit`] — reserve a configured number of tokens for decodes;
+//!   prefill may never use more than `budget − reserve`. With reserve 0 this
+//!   degenerates to `StaticBudget` (also property-tested).
+//! * [`FairBatching`] — a closed loop over SLO pressure: shrink the prefill
+//!   share multiplicatively when the windowed p99 ITL of running decodes
+//!   breaches the tightest active class SLO, grow it additively when latency
+//!   is comfortably inside the SLO *and* TTFT pressure (pending prefill work
+//!   or TTFT deadline misses) dominates. A hysteresis band (grow only below
+//!   `0.8 × SLO`) plus a cooldown between adjustments prevents the
+//!   shrink/grow limit cycle a naive bang-bang controller produces.
+//!
+//! Policies are only consulted in chunk mode: without a finite budget there
+//! is nothing to split, so every policy is inert when `chunked_prefill` is
+//! off (the third property in `prop_batch_policy_identity`).
+
+use crate::config::{BatchPolicyKind, Config};
+
+/// Resolved per-iteration batching knobs. Consolidates the tri-state config
+/// surface (`chunked_prefill: bool` + two `u32` knobs with `u32::MAX`
+/// sentinels previously threaded through engine fields) into one value built
+/// once at `Engine::new`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Max prompt tokens one sequence may prefill per iteration
+    /// (`u32::MAX` = unchunked atomic admission).
+    pub chunk: u32,
+    /// Per-iteration token budget shared by decodes and prefill chunks
+    /// (`u32::MAX` = unbounded).
+    pub budget: u32,
+    /// Which [`BatchPolicy`] sizes the prefill share each iteration.
+    pub kind: BatchPolicyKind,
+    /// Decode reservation for [`BatchPolicyKind::FixedSplit`].
+    pub decode_reserve: u32,
+}
+
+impl BatchConfig {
+    /// Resolve the legacy config surface. `chunked_prefill = false` maps both
+    /// knobs to the `u32::MAX` sentinel (the unchunked engine); when enabled
+    /// the knobs are clamped to ≥ 1, preserving the documented degenerate
+    /// case that `prefill_chunk = u32::MAX` with an unbounded budget is
+    /// bit-identical to chunking off.
+    pub fn resolve(cfg: &Config) -> Self {
+        let (chunk, budget) = if cfg.chunked_prefill {
+            (cfg.prefill_chunk.max(1), cfg.max_batched_tokens.max(1))
+        } else {
+            (u32::MAX, u32::MAX)
+        };
+        BatchConfig { chunk, budget, kind: cfg.batch_policy, decode_reserve: cfg.decode_reserve }
+    }
+
+    /// Is per-iteration budgeting active? False for the classical
+    /// whole-prompt admission path.
+    pub fn chunk_mode(&self) -> bool {
+        self.chunk != u32::MAX || self.budget != u32::MAX
+    }
+}
+
+/// What a [`BatchPolicy`] sees when the engine composes an iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchObs {
+    /// The configured per-iteration token budget (`BatchConfig::budget`).
+    pub total_budget: u32,
+    /// Budget remaining after earlier composition bookkeeping (currently the
+    /// full budget — decodes are charged inside the loop).
+    pub budget: u32,
+    /// Running sequences currently in decode (prefill complete).
+    pub decoders: u32,
+    /// Running sequences still owing prefill work (fresh, swapped-in, or
+    /// recompute re-entries at the head of the fair queue).
+    pub prefills_pending: u32,
+    /// Agents parked in the waiting set (admission-blocked TTFT pressure).
+    pub waiting: u64,
+    /// Free device KV pages.
+    pub kv_free_pages: u64,
+}
+
+/// The policy's answer: how much of this iteration goes to prefill.
+/// `u32::MAX` means "no cap" for either field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Max prompt tokens this iteration may spend on prefill chunks.
+    pub prefill_tokens: u32,
+    /// Max distinct sequences that may prefill this iteration.
+    pub prefill_seqs: u32,
+}
+
+impl BatchPlan {
+    /// The unbounded plan: composition reduces to the pre-policy arithmetic.
+    pub fn unbounded() -> Self {
+        BatchPlan { prefill_tokens: u32::MAX, prefill_seqs: u32::MAX }
+    }
+}
+
+/// One controller adjustment, exported to the flight recorder so batch-policy
+/// decisions join the scheduler pick audit in the Chrome trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchAudit {
+    /// Prefill share of the budget after the adjustment (0.1 ..= 1.0).
+    pub prefill_share: f64,
+    /// The share in tokens at the current budget.
+    pub prefill_tokens: u32,
+    /// Windowed p99 ITL (ms) that triggered the adjustment.
+    pub itl_p99_ms: f64,
+    /// True if the share grew (TTFT pressure won), false if it shrank
+    /// (ITL breach won).
+    pub grew: bool,
+}
+
+/// Per-iteration batch composition policy. Implementations must be cheap:
+/// `plan` runs once per engine iteration on the hot path (chunk mode only).
+///
+/// Feedback methods are only invoked when the engine runs with
+/// `wants_feedback()` policies in chunk mode, always from code shared by the
+/// tick and event cores, so a feedback-free policy adds zero work and the
+/// two cores cannot diverge through this trait.
+pub trait BatchPolicy: Send {
+    /// Size the prefill share for the iteration being composed.
+    fn plan(&mut self, obs: &BatchObs) -> BatchPlan;
+
+    /// Display name (trace audit rows, `run` output).
+    fn name(&self) -> &'static str;
+
+    /// Does this policy consume latency feedback? Lets the engine skip the
+    /// per-iteration SLO bookkeeping for open-loop policies.
+    fn wants_feedback(&self) -> bool {
+        false
+    }
+
+    /// One engine iteration retired with `decoders` running decodes, each
+    /// observing `itl_ms` inter-token latency; `min_slo_ms` is the tightest
+    /// p99-ITL SLO among those decoders' classes.
+    fn on_iteration(&mut self, _itl_ms: f64, _min_slo_ms: f64, _decoders: u32) {}
+
+    /// A sequence produced its first token `ttft_ms` after task-ready,
+    /// against a `slo_ms` TTFT deadline.
+    fn on_first_token(&mut self, _ttft_ms: f64, _slo_ms: f64) {}
+
+    /// Drain the audit entry for the most recent adjustment, if any. Only
+    /// called when tracing is enabled; never affects `plan`.
+    fn audit(&mut self) -> Option<BatchAudit> {
+        None
+    }
+}
+
+/// Instantiate the configured policy.
+pub fn build(batch: &BatchConfig) -> Box<dyn BatchPolicy> {
+    match batch.kind {
+        BatchPolicyKind::Static => Box::new(StaticBudget),
+        BatchPolicyKind::FixedSplit => Box::new(FixedSplit { reserve: batch.decode_reserve }),
+        BatchPolicyKind::FairBatching => Box::new(FairBatching::new()),
+    }
+}
+
+/// Today's behavior: decodes one token each, prefill fills the rest. The
+/// unbounded plan makes every `min` in the composition loop an identity.
+pub struct StaticBudget;
+
+impl BatchPolicy for StaticBudget {
+    fn plan(&mut self, _obs: &BatchObs) -> BatchPlan {
+        BatchPlan::unbounded()
+    }
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// Reserve `reserve` tokens of the budget for decodes. Prefill chunks may
+/// use at most `total_budget − reserve` tokens per iteration; decodes are
+/// never capped (a reservation only withholds, it does not schedule).
+pub struct FixedSplit {
+    /// Tokens withheld from prefill each iteration.
+    pub reserve: u32,
+}
+
+impl BatchPolicy for FixedSplit {
+    fn plan(&mut self, obs: &BatchObs) -> BatchPlan {
+        // MAX budget (policy active without chunking) keeps MAX allowance:
+        // saturating_sub would otherwise invent a finite cap from nothing.
+        if obs.total_budget == u32::MAX {
+            return BatchPlan::unbounded();
+        }
+        BatchPlan {
+            prefill_tokens: obs.total_budget.saturating_sub(self.reserve),
+            prefill_seqs: u32::MAX,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed-split"
+    }
+}
+
+/// Closed-loop prefill/decode reallocation (FairBatching, arxiv 2510.14392).
+///
+/// The controller holds a prefill share in `[MIN_SHARE, 1.0]`, starting at
+/// 1.0 (= `StaticBudget` until pressure appears):
+///
+/// * **Shrink** (`share ×= SHRINK`) when the p99 of the last
+///   [`ITL_WINDOW`] ITL samples breaches the tightest active SLO — running
+///   decodes are visibly suffering from mixed-batch interference.
+/// * **Grow** (`share += GROW_STEP`) only when p99 ITL is below
+///   `GROW_MARGIN ×` SLO *and* TTFT pressure is live (pending prefill work
+///   at plan time, or a TTFT deadline miss since the last adjustment).
+///
+/// The asymmetric band between `GROW_MARGIN × SLO` and `SLO` is the
+/// hysteresis: a share that pushed p99 into the band stays put instead of
+/// oscillating. [`COOLDOWN`] iterations must pass between adjustments so
+/// each new share is measured before the next move (the ITL window must
+/// partially refill under the new split).
+pub struct FairBatching {
+    /// Current prefill share of the budget.
+    share: f64,
+    /// Ring of recent per-iteration ITL samples (ms).
+    itl_window: [f64; Self::ITL_WINDOW],
+    /// Valid samples in `itl_window` (≤ ITL_WINDOW).
+    itl_len: usize,
+    /// Next write slot in the ring.
+    itl_next: usize,
+    /// Tightest p99-ITL SLO (ms) seen among recent decoders.
+    min_slo_ms: f64,
+    /// Feedback events since the last adjustment.
+    since_adjust: u32,
+    /// TTFT deadline misses since the last adjustment.
+    ttft_misses: u32,
+    /// Prefill work was pending at the most recent `plan` call.
+    prefill_pressure: bool,
+    /// Audit entry for the most recent adjustment, drained by the tracer.
+    pending_audit: Option<BatchAudit>,
+}
+
+impl FairBatching {
+    /// ITL ring capacity: enough samples for a stable p99 estimate without
+    /// remembering pressure from a regime that has already passed.
+    const ITL_WINDOW: usize = 64;
+    /// Floor on the prefill share — prefill must never fully starve or TTFT
+    /// diverges (and admission, which frees KV for decodes, stalls with it).
+    const MIN_SHARE: f64 = 0.1;
+    /// Multiplicative shrink on SLO breach (fast backoff).
+    const SHRINK: f64 = 0.7;
+    /// Additive growth under slack (slow recovery) — the classic AIMD shape.
+    const GROW_STEP: f64 = 0.05;
+    /// Grow only when p99 ITL is below this fraction of the SLO.
+    const GROW_MARGIN: f64 = 0.8;
+    /// Minimum feedback events between adjustments.
+    const COOLDOWN: u32 = 8;
+    /// Minimum ring occupancy before the p99 estimate is trusted.
+    const MIN_SAMPLES: usize = 8;
+
+    /// A fresh controller at full prefill share.
+    pub fn new() -> Self {
+        FairBatching {
+            share: 1.0,
+            itl_window: [0.0; Self::ITL_WINDOW],
+            itl_len: 0,
+            itl_next: 0,
+            min_slo_ms: f64::INFINITY,
+            since_adjust: 0,
+            ttft_misses: 0,
+            prefill_pressure: false,
+            pending_audit: None,
+        }
+    }
+
+    /// Current prefill share (tests; the engine only sees plans).
+    pub fn share(&self) -> f64 {
+        self.share
+    }
+
+    /// p99 of the current ITL window (sorted copy — 64 elements, off the
+    /// per-token path: only runs on feedback events past the cooldown).
+    fn itl_p99_ms(&self) -> f64 {
+        if self.itl_len == 0 {
+            return 0.0;
+        }
+        let mut v = self.itl_window[..self.itl_len].to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((self.itl_len as f64) * 0.99).ceil() as usize;
+        v[idx.clamp(1, self.itl_len) - 1]
+    }
+
+    /// Apply the control law after new feedback.
+    fn adjust(&mut self) {
+        self.since_adjust = self.since_adjust.saturating_add(1);
+        if self.since_adjust < Self::COOLDOWN
+            || self.itl_len < Self::MIN_SAMPLES
+            || !self.min_slo_ms.is_finite()
+        {
+            return;
+        }
+        let p99 = self.itl_p99_ms();
+        let breach = p99 > self.min_slo_ms;
+        let slack = p99 < Self::GROW_MARGIN * self.min_slo_ms;
+        let ttft_pressure = self.ttft_misses > 0 || self.prefill_pressure;
+        let old = self.share;
+        if breach {
+            self.share = (self.share * Self::SHRINK).max(Self::MIN_SHARE);
+        } else if slack && ttft_pressure {
+            self.share = (self.share + Self::GROW_STEP).min(1.0);
+        }
+        if self.share != old {
+            self.since_adjust = 0;
+            self.ttft_misses = 0;
+            self.pending_audit =
+                Some(BatchAudit { prefill_share: self.share, prefill_tokens: 0, itl_p99_ms: p99, grew: self.share > old });
+        }
+    }
+}
+
+impl Default for FairBatching {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchPolicy for FairBatching {
+    fn plan(&mut self, obs: &BatchObs) -> BatchPlan {
+        self.prefill_pressure = obs.prefills_pending > 0 || obs.waiting > 0;
+        if obs.total_budget == u32::MAX {
+            return BatchPlan::unbounded();
+        }
+        let tokens = ((obs.total_budget as f64) * self.share).max(1.0) as u32;
+        if let Some(a) = self.pending_audit.as_mut() {
+            a.prefill_tokens = tokens;
+        }
+        BatchPlan { prefill_tokens: tokens, prefill_seqs: u32::MAX }
+    }
+
+    fn name(&self) -> &'static str {
+        "fairbatching"
+    }
+
+    fn wants_feedback(&self) -> bool {
+        true
+    }
+
+    fn on_iteration(&mut self, itl_ms: f64, min_slo_ms: f64, decoders: u32) {
+        if decoders == 0 {
+            return;
+        }
+        self.itl_window[self.itl_next] = itl_ms;
+        self.itl_next = (self.itl_next + 1) % Self::ITL_WINDOW;
+        self.itl_len = (self.itl_len + 1).min(Self::ITL_WINDOW);
+        // Track the tightest SLO currently in play; decays only by restart,
+        // which is fine — classes don't leave a suite mid-run.
+        if min_slo_ms < self.min_slo_ms {
+            self.min_slo_ms = min_slo_ms;
+        }
+        self.adjust();
+    }
+
+    fn on_first_token(&mut self, ttft_ms: f64, slo_ms: f64) {
+        if ttft_ms > slo_ms {
+            self.ttft_misses = self.ttft_misses.saturating_add(1);
+        }
+    }
+
+    fn audit(&mut self) -> Option<BatchAudit> {
+        self.pending_audit.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(total: u32) -> BatchObs {
+        BatchObs {
+            total_budget: total,
+            budget: total,
+            decoders: 4,
+            prefills_pending: 2,
+            waiting: 3,
+            kv_free_pages: 10,
+        }
+    }
+
+    #[test]
+    fn batch_config_resolution_round_trips() {
+        // Off: both knobs collapse to the sentinel, chunk mode is false.
+        let cfg = Config::default();
+        let b = BatchConfig::resolve(&cfg);
+        assert_eq!((b.chunk, b.budget), (u32::MAX, u32::MAX));
+        assert!(!b.chunk_mode());
+        assert_eq!(b.kind, BatchPolicyKind::Static);
+
+        // On: the legacy knobs flow through, clamped to >= 1.
+        let cfg = Config {
+            chunked_prefill: true,
+            prefill_chunk: 128,
+            max_batched_tokens: 1024,
+            batch_policy: BatchPolicyKind::FixedSplit,
+            decode_reserve: 64,
+            ..Config::default()
+        };
+        let b = BatchConfig::resolve(&cfg);
+        assert_eq!((b.chunk, b.budget), (128, 1024));
+        assert!(b.chunk_mode());
+        assert_eq!((b.kind, b.decode_reserve), (BatchPolicyKind::FixedSplit, 64));
+
+        // Degenerate: chunking "on" with MAX knobs stays the sentinel pair
+        // (MAX.max(1) == MAX) — the documented bit-identical case.
+        let cfg = Config {
+            chunked_prefill: true,
+            prefill_chunk: u32::MAX,
+            max_batched_tokens: u32::MAX,
+            ..Config::default()
+        };
+        let b = BatchConfig::resolve(&cfg);
+        assert_eq!((b.chunk, b.budget), (u32::MAX, u32::MAX));
+    }
+
+    #[test]
+    fn static_budget_is_unbounded() {
+        let mut p = StaticBudget;
+        for total in [64, 2048, u32::MAX] {
+            assert_eq!(p.plan(&obs(total)), BatchPlan::unbounded());
+        }
+        assert!(!p.wants_feedback());
+        assert!(p.audit().is_none());
+    }
+
+    #[test]
+    fn fixed_split_reserves_decode_tokens() {
+        let mut p = FixedSplit { reserve: 256 };
+        assert_eq!(p.plan(&obs(2048)).prefill_tokens, 1792);
+        // Reserve beyond the budget floors at zero prefill, not underflow.
+        assert_eq!(p.plan(&obs(100)).prefill_tokens, 0);
+        // Unbounded budget stays unbounded (policy inert without chunking).
+        assert_eq!(p.plan(&obs(u32::MAX)), BatchPlan::unbounded());
+        // Zero reserve degenerates to the static plan's token count.
+        let mut z = FixedSplit { reserve: 0 };
+        assert_eq!(z.plan(&obs(2048)).prefill_tokens, 2048);
+    }
+
+    #[test]
+    fn fairbatching_shrinks_on_itl_breach() {
+        let mut p = FairBatching::new();
+        p.plan(&obs(2048)); // register prefill pressure
+        for _ in 0..64 {
+            p.on_iteration(300.0, 150.0, 4); // p99 way over SLO
+        }
+        assert!(p.share() < 1.0, "share must shrink under sustained breach");
+        let a = p.audit().expect("adjustment must leave an audit entry");
+        assert!(!a.grew);
+        assert!(a.itl_p99_ms > 150.0);
+    }
+
+    #[test]
+    fn fairbatching_grows_only_under_slack_and_ttft_pressure() {
+        let mut p = FairBatching::new();
+        p.plan(&obs(2048));
+        // Shrink first so there is room to grow.
+        for _ in 0..64 {
+            p.on_iteration(300.0, 150.0, 4);
+        }
+        let low = p.share();
+        assert!(low < 1.0);
+        // Comfortable ITL but NO ttft pressure: a full-share plan with an
+        // empty queue clears the pressure bit, so the share must hold
+        // (hysteresis: inside the band nothing moves).
+        let idle =
+            BatchObs { prefills_pending: 0, waiting: 0, ..obs(2048) };
+        p.plan(&idle);
+        for _ in 0..128 {
+            p.on_iteration(100.0, 150.0, 4);
+        }
+        assert_eq!(p.share(), low, "no growth without TTFT pressure");
+        // Now with pressure: misses + pending prefill → additive growth.
+        p.plan(&obs(2048));
+        p.on_first_token(20_000.0, 10_000.0);
+        for _ in 0..256 {
+            p.on_iteration(100.0, 150.0, 4);
+        }
+        assert!(p.share() > low, "slack + TTFT pressure must grow the share");
+    }
+
+    #[test]
+    fn fairbatching_share_stays_bounded_under_extreme_inputs() {
+        let mut p = FairBatching::new();
+        p.plan(&obs(2048));
+        // Hammer with breaches: share must floor at MIN_SHARE, not 0.
+        for _ in 0..10_000 {
+            p.on_iteration(1.0e9, 1.0e-9, 8);
+            p.on_first_token(1.0e9, 1.0e-9);
+        }
+        assert!(p.share() >= FairBatching::MIN_SHARE - 1e-12);
+        let plan = p.plan(&obs(2048));
+        assert!(plan.prefill_tokens >= 1, "prefill never fully starves");
+        // Hammer with slack + pressure: share must cap at 1.0.
+        let mut p = FairBatching::new();
+        for _ in 0..10_000 {
+            p.plan(&obs(2048));
+            p.on_first_token(1.0e9, 1.0e-9);
+            p.on_iteration(1.0e-6, 1.0e9, 8);
+        }
+        assert!(p.share() <= 1.0 + 1e-12);
+        assert!(p.plan(&obs(2048)).prefill_tokens <= 2048);
+    }
+
+    #[test]
+    fn fairbatching_cooldown_limits_adjustment_rate() {
+        let mut p = FairBatching::new();
+        p.plan(&obs(2048));
+        let mut adjustments = 0u32;
+        for _ in 0..640 {
+            p.on_iteration(300.0, 150.0, 4);
+            if p.audit().is_some() {
+                adjustments += 1;
+            }
+        }
+        // 640 feedback events / cooldown 8 = at most 80 moves; the warmup
+        // (MIN_SAMPLES) and the MIN_SHARE floor only reduce the count.
+        assert!(adjustments >= 1, "sustained breach must adjust at least once");
+        assert!(
+            adjustments <= 640 / FairBatching::COOLDOWN,
+            "cooldown must bound adjustment frequency ({adjustments})"
+        );
+        // Zero-decoder iterations are not feedback.
+        let before = p.share();
+        for _ in 0..100 {
+            p.on_iteration(1.0e9, 1.0e-9, 0);
+        }
+        assert_eq!(p.share(), before);
+    }
+
+    #[test]
+    fn build_matches_kind() {
+        for kind in BatchPolicyKind::ALL {
+            let b = BatchConfig { chunk: 512, budget: 2048, kind, decode_reserve: 256 };
+            assert_eq!(build(&b).name(), kind.name());
+        }
+    }
+}

@@ -16,6 +16,7 @@
 //! engine/scheduler code — DESIGN.md substitution T1 hinges on this.
 
 pub mod arena;
+pub mod batch;
 pub mod event;
 pub mod exec;
 
@@ -25,9 +26,10 @@ use crate::kv::{BlockAllocator, KvError};
 use crate::metrics::RunMetrics;
 use crate::prefix::{PrefixCache, PrefixMatch};
 use crate::sched::{AgentInfo, Scheduler, TaskInfo};
-use crate::trace::{IterSample, PickDecision, TraceEventKind, TraceRecorder, ENGINE_ROW};
-use crate::workload::{AgentId, AgentSpec, InferenceSpec, PrefixGroup, Suite, TaskId};
+use crate::trace::{BatchDecision, IterSample, PickDecision, TraceEventKind, TraceRecorder, ENGINE_ROW};
+use crate::workload::{AgentClass, AgentId, AgentSpec, InferenceSpec, PrefixGroup, Suite, TaskId};
 use arena::Arena;
+use batch::{BatchConfig, BatchObs, BatchPolicy};
 use event::{EngineEvent, EventKind, EventQueue};
 use exec::{ExecBackend, IterationBatch};
 use std::collections::{HashMap, VecDeque};
@@ -77,6 +79,11 @@ struct SeqState {
     /// prefill completion must not re-record TTFT, while a mid-prefill
     /// valve victim that never produced a token still gets one.
     first_token_done: bool,
+    /// The owning agent's class, cached at admission: SLO deadline verdicts
+    /// (TTFT / p99 ITL) are judged per token against the class targets
+    /// (DESIGN.md §15) and an agent-map lookup per decoder per iteration
+    /// would put a hash on the hot path. Survives swap and recompute.
+    class: AgentClass,
 }
 
 /// Per-agent progress tracking: dependency-count release over the task DAG
@@ -217,14 +224,21 @@ pub struct Engine<B: ExecBackend> {
     /// estimate and re-derive the scheduler's tags. Off ⇒ bit-identical to
     /// an engine without the loop.
     online_correction: bool,
-    /// Max prompt tokens one sequence prefills per iteration (DESIGN.md
-    /// §10). `u32::MAX` when `cfg.chunked_prefill` is off — the whole
-    /// uncached prompt runs in one iteration, which is the classical
-    /// atomic-admission engine bit for bit.
-    prefill_chunk: u32,
-    /// Per-iteration token budget shared by decodes (one token each) and
-    /// prefill chunks; `u32::MAX` when chunking is off.
-    token_budget: u32,
+    /// Resolved per-iteration batching knobs (DESIGN.md §10/§15): chunk
+    /// size and token budget (`u32::MAX` sentinels when `chunked_prefill`
+    /// is off — the classical atomic-admission engine bit for bit) plus the
+    /// batch-policy selection, consolidated from the legacy tri-state
+    /// config surface at construction.
+    batch: BatchConfig,
+    /// The batch-formation policy sizing each iteration's prefill share
+    /// (DESIGN.md §15). Consulted only in chunk mode; the default
+    /// [`batch::StaticBudget`] returns the unbounded plan, reducing
+    /// composition to the pre-policy arithmetic bit for bit
+    /// (`prop_batch_policy_identity`).
+    batch_policy: Box<dyn BatchPolicy>,
+    /// Cached `batch_policy.wants_feedback()`: lets step-5 bookkeeping skip
+    /// all SLO-feedback work for open-loop policies with one branch.
+    batch_feedback: bool,
     /// Event/calendar-queue core (`cfg.event_core`, DESIGN.md §12): suites
     /// run off a deterministic event calendar, batch composition becomes
     /// incremental between events, and the scheduler receives
@@ -265,6 +279,9 @@ impl<B: ExecBackend> Engine<B> {
         } else {
             base_model
         };
+        let batch = BatchConfig::resolve(cfg);
+        let batch_policy = batch::build(&batch);
+        let batch_feedback = batch_policy.wants_feedback();
         Engine {
             kv,
             prefix: cfg.prefix_cache.then(|| PrefixCache::new(cfg.backend.page_size)),
@@ -299,12 +316,9 @@ impl<B: ExecBackend> Engine<B> {
             // suite-deduplicated predictions. Correction therefore composes
             // with the cache (the historical gate is gone).
             online_correction: cfg.online_correction,
-            prefill_chunk: if cfg.chunked_prefill { cfg.prefill_chunk.max(1) } else { u32::MAX },
-            token_budget: if cfg.chunked_prefill {
-                cfg.max_batched_tokens.max(1)
-            } else {
-                u32::MAX
-            },
+            batch,
+            batch_policy,
+            batch_feedback,
             event_core: cfg.event_core,
             batch_dirty: true,
             decode_cache: Vec::new(),
@@ -534,6 +548,7 @@ impl<B: ExecBackend> Engine<B> {
                 }
                 let task = self.scheduler.pop_next(self.clock).unwrap();
                 let spec_decode = self.task_decode(task.id);
+                let class = self.agents[&task.id.agent].spec.class;
                 self.running.push(SeqState {
                     id: task.id,
                     prompt: task.prompt_tokens,
@@ -547,6 +562,7 @@ impl<B: ExecBackend> Engine<B> {
                     served: 0.0,
                     recompute_refill: false,
                     first_token_done: false,
+                    class,
                 });
                 self.batch_dirty = true;
                 self.metrics.on_task_admitted(task.id, self.clock);
@@ -626,7 +642,7 @@ impl<B: ExecBackend> Engine<B> {
         let mut stalls: u64 = 0;
         // Real chunking in effect (not the flag-off / degenerate path whose
         // bit-identity to the atomic engine is guaranteed).
-        let chunk_mode = self.prefill_chunk != u32::MAX || self.token_budget != u32::MAX;
+        let chunk_mode = self.batch.chunk_mode();
         // Incremental composition (event core, DESIGN.md §12): outside chunk
         // mode the batch is a pure function of running-set membership, so
         // when no admission, swap, preemption, completion, or prefill
@@ -646,11 +662,55 @@ impl<B: ExecBackend> Engine<B> {
                 prefill = Vec::new();
                 decode = Vec::new();
                 stalls = 0;
-                let mut budget = self.token_budget;
+                let mut budget = self.batch.budget;
                 for s in &self.running {
                     if !s.needs_prefill {
                         decode.push(s.id);
                         budget = budget.saturating_sub(1);
+                    }
+                }
+                // Batch-policy consultation (DESIGN.md §15, chunk mode
+                // only): the policy sizes this iteration's prefill share;
+                // the fair queue already decided *which* sequences hold the
+                // prefill cursors. The default StaticBudget returns the
+                // unbounded plan, making every `min`/`saturating_sub` below
+                // an arithmetic identity — the pre-policy composition bit
+                // for bit (`prop_batch_policy_identity`).
+                let mut prefill_budget = u32::MAX;
+                let mut prefill_slots = u32::MAX;
+                if chunk_mode {
+                    let obs = BatchObs {
+                        total_budget: self.batch.budget,
+                        budget,
+                        decoders: decode.len() as u32,
+                        prefills_pending: (self.running.len() - decode.len()) as u32,
+                        waiting: self.scheduler.waiting_len() as u64,
+                        kv_free_pages: self.kv.free_pages() as u64,
+                    };
+                    let bplan = self.batch_policy.plan(&obs);
+                    prefill_budget = bplan.prefill_tokens;
+                    prefill_slots = bplan.prefill_seqs;
+                    if decode.is_empty() {
+                        // No decode headroom to protect: a reservation (or a
+                        // shrunken share) must not push an all-prefill batch
+                        // into the starvation valve below.
+                        prefill_budget = u32::MAX;
+                        prefill_slots = u32::MAX;
+                    }
+                    if self.trace.is_some() {
+                        // Adjustments join the pick audit (drained here, in
+                        // shared-core code, so both cores emit identically;
+                        // the drain never feeds back into `plan`).
+                        if let Some(a) = self.batch_policy.audit() {
+                            self.trace.as_mut().unwrap().push_batch(BatchDecision {
+                                t: self.clock,
+                                policy: self.batch_policy.name(),
+                                prefill_share: a.prefill_share,
+                                prefill_tokens: a.prefill_tokens,
+                                itl_p99_ms: a.itl_p99_ms,
+                                grew: a.grew,
+                            });
+                        }
                     }
                 }
                 for i in 0..self.running.len() {
@@ -661,7 +721,11 @@ impl<B: ExecBackend> Engine<B> {
                         }
                         (s.id, s.prefilled, s.prompt - s.prefilled)
                     };
-                    let mut take = remaining.min(self.prefill_chunk).min(budget);
+                    if prefill_slots == 0 {
+                        stalls += 1; // policy's sequence allowance exhausted
+                        continue;
+                    }
+                    let mut take = remaining.min(self.batch.chunk).min(budget).min(prefill_budget);
                     if take == 0 && remaining > 0 {
                         stalls += 1; // budget spent before this sequence's turn
                         continue;
@@ -690,6 +754,8 @@ impl<B: ExecBackend> Engine<B> {
                     plan[i] = Some(take);
                     prefill.push((id, take));
                     budget = budget.saturating_sub(take);
+                    prefill_budget = prefill_budget.saturating_sub(take);
+                    prefill_slots = prefill_slots.saturating_sub(1);
                 }
                 if !prefill.is_empty() || !decode.is_empty() {
                     break;
@@ -763,6 +829,12 @@ impl<B: ExecBackend> Engine<B> {
         let mut service: Vec<(AgentId, f64)> = Vec::new();
         let mut stalled = 0usize;
         let page_size = self.kv.page_size();
+        // Every decoder experienced this iteration's wall time as its
+        // inter-token gap; judged below against each class's p99-ITL budget
+        // and fed (aggregated) to a closed-loop batch policy.
+        let itl_ms = result.elapsed * 1e3;
+        let mut fb_decoders = 0u32;
+        let mut fb_min_slo_ms = f64::INFINITY;
         for (i, s) in self.running.iter_mut().enumerate() {
             if s.needs_prefill {
                 // Stalled sequences ran no chunk: no progress, no service.
@@ -788,7 +860,14 @@ impl<B: ExecBackend> Engine<B> {
                 // token.
                 if !s.first_token_done {
                     s.first_token_done = true;
-                    self.metrics.on_first_token(s.id, self.clock);
+                    if let Some(ttft) = self.metrics.on_first_token(s.id, self.clock) {
+                        let slo_ms = s.class.ttft_slo_ms();
+                        let ttft_ms = ttft * 1e3;
+                        self.metrics.on_ttft_deadline(s.class, ttft_ms > slo_ms);
+                        if self.batch_feedback {
+                            self.batch_policy.on_first_token(ttft_ms, slo_ms);
+                        }
+                    }
                     if let Some(tr) = self.trace.as_mut() {
                         tr.push(
                             self.clock,
@@ -825,6 +904,20 @@ impl<B: ExecBackend> Engine<B> {
             match self.kv.append_token(s.id) {
                 Ok(()) => {
                     s.generated += 1;
+                    // ITL deadline verdict for sequences that entered this
+                    // iteration as decoders (`plan[i]` is `None`; a prefill
+                    // completer's first token is TTFT, not ITL — and the
+                    // cached-batch fast path carries only decoders).
+                    if plan.get(i).copied().flatten().is_none() {
+                        let slo_ms = s.class.itl_p99_slo_ms();
+                        self.metrics.on_itl_deadlines(s.class, 1, (itl_ms > slo_ms) as u64);
+                        if self.batch_feedback {
+                            fb_decoders += 1;
+                            if slo_ms < fb_min_slo_ms {
+                                fb_min_slo_ms = slo_ms;
+                            }
+                        }
+                    }
                     // With the cache on, memory-centric service is the
                     // sequence's *physical* occupancy: private tokens in
                     // full, each shared page split across its sharers
@@ -863,6 +956,12 @@ impl<B: ExecBackend> Engine<B> {
                 self.running[0].id,
                 self.kv.capacity_tokens()
             );
+        }
+        if self.batch_feedback && fb_decoders > 0 {
+            // One aggregated sample per iteration (not per decoder): the
+            // controller windows iterations, and the tightest SLO among the
+            // decoders that actually appended is the breach threshold.
+            self.batch_policy.on_iteration(itl_ms, fb_min_slo_ms, fb_decoders);
         }
         for (agent, delta) in service {
             self.scheduler.on_service(agent, delta);
@@ -921,10 +1020,10 @@ impl<B: ExecBackend> Engine<B> {
             return;
         }
         let batch_tokens = prefill_tokens + decode.len() as u64;
-        let token_budget_util = if self.token_budget == u32::MAX {
+        let token_budget_util = if self.batch.budget == u32::MAX {
             0.0 // chunking off: the budget is unbounded, utilization undefined
         } else {
-            batch_tokens as f64 / self.token_budget as f64
+            batch_tokens as f64 / self.batch.budget as f64
         };
         // Virtual-time lag per active agent, sorted by id: HashMap iteration
         // order is nondeterministic and must not leak into the artifact.
@@ -1009,7 +1108,7 @@ impl<B: ExecBackend> Engine<B> {
         }
         match lookup {
             Some(m) => {
-                let admit_tokens = admission_tokens(prompt_tokens, m.tokens, self.prefill_chunk);
+                let admit_tokens = admission_tokens(prompt_tokens, m.tokens, self.batch.chunk);
                 // Only spend cached chains when eviction can actually make
                 // this admission fit; an infeasible request must not flush
                 // other families' prefixes.
@@ -1026,7 +1125,7 @@ impl<B: ExecBackend> Engine<B> {
                 Some((m.tokens, m.path, shareable))
             }
             None => {
-                let admit_tokens = admission_tokens(prompt_tokens, 0, self.prefill_chunk);
+                let admit_tokens = admission_tokens(prompt_tokens, 0, self.batch.chunk);
                 if !self.kv.can_admit(admit_tokens) {
                     return None;
                 }

@@ -6,7 +6,7 @@
 //! justitia run          [--policy P] [--backend B] [--agents N] [--density D] [--seed S]
 //! justitia cluster      [--replicas R] [--placement PL] [--agents N] [--density D] [--seed S]
 //! justitia experiment   <fig3|fig7|...|fig13|table1|prefix_sharing|dag_agents|chunked_prefill|
-//!                        preemption|trace_demo|elasticity|all> [--agents N] [--seed S]
+//!                        fairbatching|preemption|trace_demo|elasticity|all> [--agents N] [--seed S]
 //! justitia gen-workload [--agents N] [--density D] [--seed S] --out FILE
 //! justitia train-predictor [--samples N] [--seed S]
 //! justitia gps          [--agents N] [--density D] [--seed S]   (GPS reference dump)
@@ -15,7 +15,7 @@
 use anyhow::{bail, Result};
 use justitia::cli::Args;
 use justitia::cluster::Placement;
-use justitia::config::{BackendProfile, Config, Policy};
+use justitia::config::{BackendProfile, BatchPolicyKind, Config, Policy};
 use justitia::cost::CostModel;
 use justitia::experiments as exp;
 use justitia::util::bench::{fmt_ns, ResultsFile};
@@ -67,8 +67,8 @@ fn print_help() {
            run              run one policy over a generated suite (simulator)\n\
            cluster          multi-replica scale-out experiment (replicas x placement)\n\
            experiment       regenerate a paper figure/table (fig3..fig13, table1,\n\
-                            prefix_sharing, dag_agents, chunked_prefill, preemption,\n\
-                            trace_demo, elasticity, all)\n\
+                            prefix_sharing, dag_agents, chunked_prefill, fairbatching,\n\
+                            preemption, trace_demo, elasticity, all)\n\
            gen-workload     write a workload trace JSON\n\
            train-predictor  train + evaluate the per-class MLP predictor\n\
            gps              dump the GPS fluid reference for a suite\n\n\
@@ -80,6 +80,7 @@ fn print_help() {
            --prefix-cache   --prefix-fanout F   --prefix-tokens T\n\
            --dag   --spawn-prob P   --branch B   --online-correction\n\
            --chunked-prefill   --prefill-chunk C   --max-batched-tokens T\n\
+           --batch-policy static|fixed-split|fairbatching   --decode-reserve T\n\
            --preemption swap|recompute|auto   --victim youngest|most-pages|\n\
                         cheapest-remaining|pamper-aware\n\
            --host-mem-pages N   --swap-bw TOKENS_PER_SEC\n\
@@ -155,6 +156,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             metrics.ttft_samples()
         );
     }
+    let class_deadlines = metrics.class_deadlines();
+    if !class_deadlines.is_empty() {
+        let per: Vec<String> = class_deadlines
+            .iter()
+            .map(|(c, d)| format!("{} {:.1}%", c.short_name(), d.miss_rate() * 100.0))
+            .collect();
+        println!(
+            "slo deadlines: miss rate {:.1}% overall [{}]",
+            metrics.deadline_miss_rate() * 100.0,
+            per.join(", ")
+        );
+    }
     if cfg.prefix_cache {
         println!(
             "prefix cache: hit rate {:.1}% ({}/{}), {} prefill tokens saved, peak {} pages",
@@ -178,6 +191,11 @@ fn cmd_run(args: &Args) -> Result<()> {
             metrics.decode_itl_percentile(99.0) * 1e3,
             metrics.prefill_stalls()
         );
+        let reserve = match cfg.batch_policy {
+            BatchPolicyKind::FixedSplit => format!(" (decode reserve {} tokens)", cfg.decode_reserve),
+            _ => String::new(),
+        };
+        println!("batch policy: {}{reserve}", cfg.batch_policy.name());
     }
     if cfg.online_correction {
         println!(
@@ -681,6 +699,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                         ("decode_itl_mean_ms", Json::Num(r.decode_itl_mean_ms)),
                         ("ttft_mean_ms", Json::Num(r.ttft_mean_ms)),
                         ("ttft_p99_ms", Json::Num(r.ttft_p99_ms)),
+                        ("deadline_miss_rate", Json::Num(r.deadline_miss_rate)),
                         ("prefill_stalls", Json::Num(r.prefill_stalls as f64)),
                         ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
                         ("completed", Json::Num(r.completed as f64)),
@@ -690,6 +709,65 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         );
         std::fs::write("results/chunked_prefill.json", json.pretty())?;
         out.line("(wrote results/chunked_prefill.json)".to_string());
+    }
+    if run_all || which == "fairbatching" {
+        let mut out = ResultsFile::new("fairbatching.txt");
+        out.line("=== FairBatching: batch-policy sweep (closed-loop prefill/decode split) ===");
+        let rows = exp::fairbatching(&Config::default(), n, 3.0, seed);
+        out.line(format!(
+            "workload: {n} agents at 3x density; chunked prefill on everywhere \
+             (chunk 512 / budget 2048); beta_mixed 2e-6 prices prefill/decode \
+             interference on every arm (stock profiles keep it 0)"
+        ));
+        out.line(exp::FairBatchingRow::table_header());
+        for r in &rows {
+            out.line(r.table_row());
+        }
+        for w in exp::FAIRBATCH_WORKLOADS {
+            let get = |b: BatchPolicyKind| {
+                rows.iter().find(|r| {
+                    r.workload == w && r.policy == Policy::Justitia && r.batch == b
+                })
+            };
+            if let (Some(st), Some(fb)) =
+                (get(BatchPolicyKind::Static), get(BatchPolicyKind::FairBatching))
+            {
+                out.line(format!(
+                    "headline {w} (Justitia): decode ITL p99 {:.1} ms -> {:.1} ms, \
+                     ttft p99 {:.0} ms -> {:.0} ms, deadline miss {:.1}% -> {:.1}%",
+                    st.decode_itl_p99_ms,
+                    fb.decode_itl_p99_ms,
+                    st.ttft_p99_ms,
+                    fb.ttft_p99_ms,
+                    st.deadline_miss_rate * 100.0,
+                    fb.deadline_miss_rate * 100.0
+                ));
+            }
+        }
+        // Machine-readable copy for kick-tires / CI smoke artifacts.
+        let json = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    justitia::util::json::obj([
+                        ("workload", Json::Str(r.workload.into())),
+                        ("policy", Json::Str(r.policy.name().into())),
+                        ("batch_policy", Json::Str(r.batch.name().into())),
+                        ("avg_jct", Json::Num(r.avg_jct)),
+                        ("p99_jct", Json::Num(r.p99_jct)),
+                        ("decode_itl_p99_ms", Json::Num(r.decode_itl_p99_ms)),
+                        ("decode_itl_mean_ms", Json::Num(r.decode_itl_mean_ms)),
+                        ("ttft_mean_ms", Json::Num(r.ttft_mean_ms)),
+                        ("ttft_p99_ms", Json::Num(r.ttft_p99_ms)),
+                        ("deadline_miss_rate", Json::Num(r.deadline_miss_rate)),
+                        ("prefill_stalls", Json::Num(r.prefill_stalls as f64)),
+                        ("maxmin_ratio", Json::Num(r.maxmin_ratio)),
+                        ("completed", Json::Num(r.completed as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write("results/fairbatching.json", json.pretty())?;
+        out.line("(wrote results/fairbatching.json)".to_string());
     }
     if run_all || which == "preemption" {
         let mut out = ResultsFile::new("preemption.txt");

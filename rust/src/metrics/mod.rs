@@ -2,7 +2,7 @@
 //! scheduling-decision latency (paper §5 metrics).
 
 use crate::util::stats::{self, Welford};
-use crate::workload::{AgentId, TaskId};
+use crate::workload::{AgentClass, AgentId, TaskId};
 use std::collections::HashMap;
 use std::time::Duration;
 
@@ -152,6 +152,45 @@ pub struct RunMetrics {
     /// recovered agents must re-prefill on their new replica (the churn
     /// analogue of `recomputed_tokens`).
     rescheduled_tokens: u64,
+    /// Per-class SLO deadline hit/miss counters (DESIGN.md §15), indexed by
+    /// [`AgentClass::idx`]. Arrays, not maps: the engine records one ITL
+    /// verdict per decoder per iteration, so this sits on the hot path.
+    deadlines: [ClassDeadlines; 9],
+}
+
+/// SLO deadline counters for one agent class: TTFT deadlines are judged
+/// once per task (at first token), ITL deadlines once per decoder per
+/// iteration against the class's p99 budget.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassDeadlines {
+    /// First-token events judged against the class TTFT SLO.
+    pub ttft_total: u64,
+    /// ... of which missed the deadline.
+    pub ttft_miss: u64,
+    /// Decoder-iterations judged against the class p99-ITL SLO.
+    pub itl_total: u64,
+    /// ... of which exceeded the budget.
+    pub itl_miss: u64,
+}
+
+impl ClassDeadlines {
+    /// Fold another class's counters in (cluster merge).
+    fn add(&mut self, other: &ClassDeadlines) {
+        self.ttft_total += other.ttft_total;
+        self.ttft_miss += other.ttft_miss;
+        self.itl_total += other.itl_total;
+        self.itl_miss += other.itl_miss;
+    }
+
+    /// Miss rate over all judged deadlines (0 when nothing was judged).
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.ttft_total + self.itl_total;
+        if total == 0 {
+            0.0
+        } else {
+            (self.ttft_miss + self.itl_miss) as f64 / total as f64
+        }
+    }
 }
 
 /// One KV-occupancy sample (Fig. 3 timeline).
@@ -195,11 +234,29 @@ impl RunMetrics {
 
     /// Record a task's first output token: TTFT = `t` − ready time. The
     /// engine guarantees at most one call per task (preemption re-entries
-    /// do not re-fire).
-    pub fn on_first_token(&mut self, task: TaskId, t: f64) {
-        if let Some(&ready) = self.task_ready.get(&task) {
-            self.ttft.record((t - ready).max(0.0), 1);
-        }
+    /// do not re-fire). Returns the recorded TTFT (s) so the engine can
+    /// judge the class deadline and feed the batch-policy loop without
+    /// recomputing the ready anchor.
+    pub fn on_first_token(&mut self, task: TaskId, t: f64) -> Option<f64> {
+        let &ready = self.task_ready.get(&task)?;
+        let ttft = (t - ready).max(0.0);
+        self.ttft.record(ttft, 1);
+        Some(ttft)
+    }
+
+    /// Record one TTFT deadline verdict for `class`.
+    pub fn on_ttft_deadline(&mut self, class: AgentClass, miss: bool) {
+        let d = &mut self.deadlines[class.idx()];
+        d.ttft_total += 1;
+        d.ttft_miss += miss as u64;
+    }
+
+    /// Record `total` decoder-iterations of `class`, `miss` of which
+    /// exceeded the class's p99-ITL budget.
+    pub fn on_itl_deadlines(&mut self, class: AgentClass, total: u64, miss: u64) {
+        let d = &mut self.deadlines[class.idx()];
+        d.itl_total += total;
+        d.itl_miss += miss;
     }
 
     /// Record a task completion.
@@ -348,6 +405,32 @@ impl RunMetrics {
     /// KV tokens destroyed by replica crashes (to be re-prefilled).
     pub fn rescheduled_tokens(&self) -> u64 {
         self.rescheduled_tokens
+    }
+
+    /// Aggregate SLO deadline-miss rate across every class and both
+    /// deadline kinds (0 when no deadline was ever judged — e.g. runs
+    /// without class annotations).
+    pub fn deadline_miss_rate(&self) -> f64 {
+        let (mut miss, mut total) = (0u64, 0u64);
+        for d in &self.deadlines {
+            miss += d.ttft_miss + d.itl_miss;
+            total += d.ttft_total + d.itl_total;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            miss as f64 / total as f64
+        }
+    }
+
+    /// Per-class deadline counters, paper order, classes with at least one
+    /// judged deadline only.
+    pub fn class_deadlines(&self) -> Vec<(AgentClass, ClassDeadlines)> {
+        AgentClass::ALL
+            .into_iter()
+            .map(|c| (c, self.deadlines[c.idx()]))
+            .filter(|(_, d)| d.ttft_total + d.itl_total > 0)
+            .collect()
     }
 
     /// Decode inter-token latency samples recorded (decoders × iterations).
@@ -535,6 +618,9 @@ impl RunMetrics {
         self.replicas_lost += other.replicas_lost;
         self.recovered_agents += other.recovered_agents;
         self.rescheduled_tokens += other.rescheduled_tokens;
+        for (mine, theirs) in self.deadlines.iter_mut().zip(other.deadlines.iter()) {
+            mine.add(theirs);
+        }
     }
 
     /// Mean scheduling-decision latency in milliseconds (Fig. 12).
@@ -998,6 +1084,34 @@ mod tests {
         assert_eq!(m.ttft_samples(), 2);
         assert!((m.ttft_mean() - 3.0).abs() < 1e-12);
         assert!(m.ttft_percentile(99.0) >= m.ttft_percentile(10.0));
+    }
+
+    #[test]
+    fn deadline_counters_index_by_class_and_merge() {
+        let mut m = RunMetrics::new();
+        assert_eq!(m.deadline_miss_rate(), 0.0);
+        assert!(m.class_deadlines().is_empty());
+        // 2 TTFT verdicts (1 miss) for a small class, 8 ITL verdicts
+        // (2 misses) for a large one.
+        m.on_ttft_deadline(AgentClass::EquationVerification, true);
+        m.on_ttft_deadline(AgentClass::EquationVerification, false);
+        m.on_itl_deadlines(AgentClass::DocumentMerging, 8, 2);
+        assert!((m.deadline_miss_rate() - 3.0 / 10.0).abs() < 1e-12);
+        let per = m.class_deadlines();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].0, AgentClass::EquationVerification);
+        assert_eq!((per[0].1.ttft_total, per[0].1.ttft_miss), (2, 1));
+        assert_eq!(per[1].0, AgentClass::DocumentMerging);
+        assert!((per[1].1.miss_rate() - 0.25).abs() < 1e-12);
+        // Merge adds elementwise per class (cluster totals).
+        let mut other = RunMetrics::new();
+        other.on_ttft_deadline(AgentClass::EquationVerification, true);
+        other.on_itl_deadlines(AgentClass::SelfConsistency, 4, 4);
+        m.merge(&other);
+        assert!((m.deadline_miss_rate() - 8.0 / 15.0).abs() < 1e-12);
+        let per = m.class_deadlines();
+        assert_eq!(per.len(), 3);
+        assert_eq!((per[0].1.ttft_total, per[0].1.ttft_miss), (3, 2));
     }
 
     #[test]

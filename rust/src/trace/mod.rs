@@ -181,10 +181,32 @@ pub struct PickDecision {
     pub pampered: bool,
 }
 
+/// One batch-policy controller adjustment (DESIGN.md §15): the engine
+/// records these alongside [`PickDecision`]s so the Chrome trace shows *why*
+/// the prefill share moved next to *which* prefills then won it — one
+/// audit schema across both decision kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchDecision {
+    /// Engine time (s) of the iteration that applied the new share.
+    pub t: f64,
+    /// The policy that moved (`BatchPolicy::name`).
+    pub policy: &'static str,
+    /// Prefill share of the token budget after the adjustment.
+    pub prefill_share: f64,
+    /// The share in tokens at the current budget.
+    pub prefill_tokens: u32,
+    /// Windowed p99 ITL (ms) that triggered the move.
+    pub itl_p99_ms: f64,
+    /// True = the share grew (TTFT pressure), false = shrank (ITL breach).
+    pub grew: bool,
+}
+
 /// The explanation a [`Scheduler`](crate::sched::Scheduler) returns for a
 /// head-of-line pick (see `Scheduler::explain_pick`). Split from
 /// [`PickDecision`] so schedulers need not know the engine clock or task
-/// identity — the engine fills those in.
+/// identity — the engine fills those in. Batch-policy audit entries
+/// ([`BatchDecision`]) deliberately mirror this typed-struct shape so both
+/// decision streams export through the same instant-event schema.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct PickExplanation {
     /// The winner's virtual finish tag, if the policy keeps one.
@@ -216,6 +238,8 @@ pub struct TraceRecorder {
     dropped_samples: u64,
     picks: VecDeque<PickDecision>,
     dropped_picks: u64,
+    batches: VecDeque<BatchDecision>,
+    dropped_batches: u64,
 }
 
 impl TraceRecorder {
@@ -232,6 +256,8 @@ impl TraceRecorder {
             dropped_samples: 0,
             picks: VecDeque::new(),
             dropped_picks: 0,
+            batches: VecDeque::new(),
+            dropped_batches: 0,
         }
     }
 
@@ -268,6 +294,15 @@ impl TraceRecorder {
             self.dropped_picks += 1;
         }
         self.picks.push_back(pick);
+    }
+
+    /// Record a batch-policy adjustment audit entry.
+    pub fn push_batch(&mut self, decision: BatchDecision) {
+        if self.batches.len() >= self.cap {
+            self.batches.pop_front();
+            self.dropped_batches += 1;
+        }
+        self.batches.push_back(decision);
     }
 
     /// Ring capacity per stream.
@@ -323,6 +358,21 @@ impl TraceRecorder {
     /// Retained audit-entry count (≤ `cap`).
     pub fn pick_count(&self) -> usize {
         self.picks.len()
+    }
+
+    /// Retained batch-policy adjustments, oldest first.
+    pub fn batch_decisions(&self) -> impl Iterator<Item = &BatchDecision> {
+        self.batches.iter()
+    }
+
+    /// Batch-policy adjustments evicted by the ring.
+    pub fn dropped_batches(&self) -> u64 {
+        self.dropped_batches
+    }
+
+    /// Retained batch-adjustment count (≤ `cap`).
+    pub fn batch_count(&self) -> usize {
+        self.batches.len()
     }
 }
 
@@ -451,6 +501,24 @@ pub fn chrome_trace(parts: &[(u32, &str, &TraceRecorder)]) -> Json {
             }
             out.push(instant("pick", pid, p.agent, p.t, Json::Obj(args.into_iter().collect())));
         }
+        for b in rec.batch_decisions() {
+            // Batch-policy adjustments land on the engine row (they size the
+            // whole iteration, not one agent) with the pick-style instant
+            // schema.
+            out.push(instant(
+                "batch_policy",
+                pid,
+                ENGINE_ROW,
+                b.t,
+                obj([
+                    ("policy", Json::Str(b.policy.into())),
+                    ("prefill_share", Json::Num(b.prefill_share)),
+                    ("prefill_tokens", Json::Num(b.prefill_tokens as f64)),
+                    ("itl_p99_ms", Json::Num(b.itl_p99_ms)),
+                    ("grew", Json::Bool(b.grew)),
+                ]),
+            ));
+        }
         for s in rec.samples() {
             out.push(counter(
                 "batch",
@@ -506,10 +574,11 @@ pub fn chrome_trace(parts: &[(u32, &str, &TraceRecorder)]) -> Json {
             pid,
             None,
             format!(
-                "dropped: {} events, {} samples, {} picks",
+                "dropped: {} events, {} samples, {} picks, {} batch decisions",
                 rec.dropped_events(),
                 rec.dropped_samples(),
-                rec.dropped_picks()
+                rec.dropped_picks(),
+                rec.dropped_batches()
             ),
         ));
     }
@@ -588,6 +657,14 @@ mod tests {
             runner_up_tag: Some(12.0),
             pampered: true,
         });
+        r.push_batch(BatchDecision {
+            t: 1.25,
+            policy: "fairbatching",
+            prefill_share: 0.7,
+            prefill_tokens: 1433,
+            itl_p99_ms: 180.0,
+            grew: false,
+        });
         let json = chrome_trace(&[(0, "replica 0", &r)]);
         assert_eq!(json.get("displayTimeUnit").as_str(), Some("ms"));
         let events = json.get("traceEvents").as_arr().unwrap();
@@ -600,7 +677,16 @@ mod tests {
         assert!(phase("M") >= 3, "process + thread metadata");
         assert_eq!(phase("X"), 1, "one agent lifetime span");
         assert_eq!(phase("C"), 4, "batch/kv/queues/fairness counters");
-        assert_eq!(phase("i"), 6, "five lifecycle instants + one pick");
+        assert_eq!(phase("i"), 7, "five lifecycle instants + pick + batch_policy");
+        // Batch-policy adjustments ride the engine row with the pick schema.
+        let bp = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("batch_policy"))
+            .unwrap();
+        assert_eq!(bp.get("tid").as_f64(), Some(ENGINE_ROW as f64));
+        assert_eq!(bp.get("args").get("policy").as_str(), Some("fairbatching"));
+        assert_eq!(bp.get("args").get("prefill_share").as_f64(), Some(0.7));
+        assert_eq!(bp.get("args").get("grew").as_bool(), Some(false));
         // The agent span covers arrival → complete in microseconds.
         let span = events.iter().find(|e| e.get("ph").as_str() == Some("X")).unwrap();
         assert_eq!(span.get("ts").as_f64(), Some(0.0));
@@ -629,5 +715,20 @@ mod tests {
         assert_eq!(a, b);
         b.push(1.0, 1, Some(0), TraceEventKind::FirstToken);
         assert_ne!(a, b);
+        // The batch-decision ring participates in recorder equality too
+        // (the trace-identity property compares recorders wholesale).
+        let mut c = TraceRecorder::new(8, 2);
+        let mut d = TraceRecorder::new(8, 2);
+        c.push_batch(BatchDecision {
+            t: 0.0,
+            policy: "fairbatching",
+            prefill_share: 0.5,
+            prefill_tokens: 1024,
+            itl_p99_ms: 200.0,
+            grew: true,
+        });
+        assert_ne!(c, d);
+        d.push_batch(c.batch_decisions().next().unwrap().clone());
+        assert_eq!(c, d);
     }
 }

@@ -350,6 +350,45 @@ impl AgentClass {
     pub fn in_bucket(bucket: SizeBucket) -> Vec<AgentClass> {
         AgentClass::ALL.into_iter().filter(|c| c.size_bucket() == bucket).collect()
     }
+
+    /// Position in [`AgentClass::ALL`] (paper order). O(1) — metrics index
+    /// per-class deadline counters with this.
+    pub fn idx(&self) -> usize {
+        match self {
+            AgentClass::MapReduceSummarization => 0,
+            AgentClass::PlanAndExecution => 1,
+            AgentClass::CodeChecking => 2,
+            AgentClass::KbqaVerification => 3,
+            AgentClass::EquationVerification => 4,
+            AgentClass::FactVerification => 5,
+            AgentClass::AlfworldInteraction => 6,
+            AgentClass::DocumentMerging => 7,
+            AgentClass::SelfConsistency => 8,
+        }
+    }
+
+    /// TTFT SLO (ms), bucketed by agent size: interactive small agents
+    /// expect a first token within seconds; batch-flavored large agents
+    /// tolerate minutes of queueing (DESIGN.md §15). Drives the
+    /// FairBatching TTFT-pressure signal and the deadline-miss metric.
+    pub fn ttft_slo_ms(&self) -> f64 {
+        match self.size_bucket() {
+            SizeBucket::Small => 10_000.0,
+            SizeBucket::Medium => 30_000.0,
+            SizeBucket::Large => 120_000.0,
+        }
+    }
+
+    /// p99 inter-token-latency SLO (ms) by size bucket: the streaming
+    /// experience budget each running decode is entitled to. The tightest
+    /// SLO among running decoders is the FairBatching breach threshold.
+    pub fn itl_p99_slo_ms(&self) -> f64 {
+        match self.size_bucket() {
+            SizeBucket::Small => 150.0,
+            SizeBucket::Medium => 250.0,
+            SizeBucket::Large => 500.0,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -396,6 +435,20 @@ mod tests {
             }
             assert!(!t.theme.is_empty());
         }
+    }
+
+    #[test]
+    fn slo_targets_follow_size_buckets() {
+        for (i, c) in AgentClass::ALL.into_iter().enumerate() {
+            assert_eq!(c.idx(), i, "{c:?} idx must match paper order");
+            assert!(c.ttft_slo_ms() > 0.0 && c.itl_p99_slo_ms() > 0.0);
+        }
+        // Tighter buckets get tighter deadlines, monotonically.
+        use AgentClass::*;
+        assert!(EquationVerification.ttft_slo_ms() < SelfConsistency.ttft_slo_ms());
+        assert!(SelfConsistency.ttft_slo_ms() < DocumentMerging.ttft_slo_ms());
+        assert!(EquationVerification.itl_p99_slo_ms() < SelfConsistency.itl_p99_slo_ms());
+        assert!(SelfConsistency.itl_p99_slo_ms() < DocumentMerging.itl_p99_slo_ms());
     }
 
     #[test]

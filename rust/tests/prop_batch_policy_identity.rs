@@ -1,0 +1,300 @@
+//! Differential tests for the batch-policy seam (ISSUE 9 tentpole): pulling
+//! per-iteration batch composition out of `Engine::step()` behind the
+//! [`BatchPolicy`] trait must not move a single bit on the default path.
+//!
+//! Three identities, each across all six schedulers and randomized knob
+//! draws ({prefix cache, DAG + dynamic spawning, preemption-auto} × both
+//! engine cores):
+//!
+//! 1. `StaticBudget` with chunked prefill ON replays bit-identically on the
+//!    tick loop and the event core — the policy returns an unbounded plan,
+//!    so every `min`/`saturating_sub` in composition is an arithmetic
+//!    identity and the seam is invisible.
+//! 2. `FixedSplit` with `decode_reserve = 0` is bit-identical to
+//!    `StaticBudget`: a zero reservation can never bind (the shared
+//!    iteration budget is always at most the total the split is taken
+//!    from), so the two policies must produce the same schedule.
+//! 3. Without chunked prefill there is no token budget to split, so ALL
+//!    three policies — including the closed-loop `FairBatching` — are
+//!    inert: `plan()` is never consulted and every policy replays the
+//!    `StaticBudget` schedule exactly.
+//!
+//! [`BatchPolicy`]: justitia::engine::batch::BatchPolicy
+
+use justitia::config::{BackendProfile, BatchPolicyKind, Config, Policy, PreemptionMode};
+use justitia::engine::exec::SimBackend;
+use justitia::engine::Engine;
+use justitia::util::prop::{check, Config as PropConfig, Strategy};
+use justitia::util::rng::Rng;
+use justitia::workload::test_support::dag_agent;
+use justitia::workload::{AgentSpec, SpawnSpec, Suite};
+
+const ALL_POLICIES: [Policy; 6] = [
+    Policy::Fcfs,
+    Policy::Sjf,
+    Policy::AgentFcfs,
+    Policy::Vtc,
+    Policy::Srjf,
+    Policy::Justitia,
+];
+
+/// A randomized workload plus the knob draws the batch-policy seam must be
+/// invisible under.
+#[derive(Clone, Debug)]
+struct BatchScenario {
+    agents: Vec<AgentSpec>,
+    pages: u64,
+    page_size: u32,
+    prefix_cache: bool,
+    spawn: bool,
+    /// `PreemptionMode::Auto` with a bounded host pool (else default Swap).
+    preempt_auto: bool,
+    host_tokens: Option<u64>,
+    swap_bw: f64,
+    /// Run on the event core instead of the tick loop.
+    event_core: bool,
+}
+
+struct BatchStrategy;
+
+impl Strategy for BatchStrategy {
+    type Value = BatchScenario;
+
+    fn generate(&self, rng: &mut Rng) -> BatchScenario {
+        let page_size = 8u32;
+        let pages = rng.range_u64(24, 48);
+        let m_tokens = pages * page_size as u64;
+        let n_agents = rng.range_u64(2, 7) as usize;
+        let spawn = rng.chance(0.5);
+        let mut agents = Vec::with_capacity(n_agents);
+        let mut t = 0.0;
+        for id in 0..n_agents {
+            t += rng.exponential(0.05);
+            let n_tasks = rng.range_u64(1, 5) as usize;
+            let mut tasks = Vec::with_capacity(n_tasks);
+            for i in 0..n_tasks {
+                // Prompts up to a third of the pool force preemption traffic
+                // while every sequence still fits an empty pool; they also
+                // span several 16-token chunks, so the budget genuinely
+                // splits prefills across iterations.
+                let p = rng.range_u64(2, m_tokens / 3) as u32;
+                let d = rng.range_u64(1, 16) as u32;
+                let deps = if i > 0 && rng.chance(0.3) {
+                    vec![rng.below(i as u64) as u32]
+                } else {
+                    Vec::new()
+                };
+                tasks.push((p, d, deps));
+            }
+            let mut a = dag_agent(id as u32, t, tasks);
+            if spawn {
+                a.spawn = Some(SpawnSpec {
+                    prob: 0.6,
+                    branch: 2,
+                    max_depth: 1,
+                    seed: rng.next_u64(),
+                });
+            }
+            agents.push(a);
+        }
+        BatchScenario {
+            agents,
+            pages,
+            page_size,
+            prefix_cache: rng.chance(0.5),
+            spawn,
+            preempt_auto: rng.chance(0.5),
+            host_tokens: match rng.below(3) {
+                0 => None,
+                1 => Some(m_tokens / 4),
+                _ => Some(0),
+            },
+            swap_bw: if rng.chance(0.5) { 1000.0 } else { 0.0 },
+            event_core: rng.chance(0.5),
+        }
+    }
+
+    fn shrink(&self, v: &BatchScenario) -> Vec<BatchScenario> {
+        let mut out = Vec::new();
+        if v.agents.len() > 1 {
+            let mut w = v.clone();
+            w.agents.pop();
+            out.push(w);
+        }
+        for knob in 0..4 {
+            let mut w = v.clone();
+            let on = match knob {
+                0 => std::mem::replace(&mut w.prefix_cache, false),
+                1 => {
+                    let on = w.spawn;
+                    w.spawn = false;
+                    for a in &mut w.agents {
+                        a.spawn = None;
+                    }
+                    on
+                }
+                2 => std::mem::replace(&mut w.preempt_auto, false),
+                _ => std::mem::replace(&mut w.event_core, false),
+            };
+            if on {
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+fn config_for(sc: &BatchScenario, chunked: bool, batch: BatchPolicyKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = BackendProfile {
+        name: "prop-batch".into(),
+        kv_tokens: sc.pages * sc.page_size as u64,
+        page_size: sc.page_size,
+        alpha: 1.0,
+        beta_prefill: 1e-3,
+        beta_decode: 0.0,
+        swap_cost_per_token: 0.0,
+        beta_mixed: 0.0,
+        host_kv_tokens: sc.host_tokens,
+        swap_bw_tokens_per_sec: sc.swap_bw,
+    };
+    cfg.max_batch = 64;
+    cfg.prefix_cache = sc.prefix_cache;
+    cfg.event_core = sc.event_core;
+    if sc.preempt_auto {
+        cfg.preemption = PreemptionMode::Auto;
+    }
+    if chunked {
+        cfg.chunked_prefill = true;
+        cfg.prefill_chunk = 16;
+        cfg.max_batched_tokens = 48;
+    }
+    cfg.batch_policy = batch;
+    if batch == BatchPolicyKind::FixedSplit {
+        cfg.decode_reserve = 0;
+    }
+    cfg
+}
+
+fn suite_for(sc: &BatchScenario) -> Suite {
+    let mut suite = Suite::new(sc.agents.clone());
+    if sc.prefix_cache {
+        justitia::workload::trace::annotate_families(&mut suite, 2, 16, 0xfa7e);
+    }
+    suite
+}
+
+/// Everything the engine observably computed, in exact (bit-level) form.
+type Trace = (f64, Vec<(u32, f64)>, Vec<(u32, u32, Option<f64>, Option<f64>)>, [u64; 7]);
+
+fn replay(sc: &BatchScenario, policy: Policy, chunked: bool, batch: BatchPolicyKind) -> Trace {
+    let cfg = config_for(sc, chunked, batch);
+    let suite = suite_for(sc);
+    let sched = justitia::sched::build(policy, cfg.backend.kv_tokens, 1.0);
+    let mut engine = Engine::new(&cfg, sched, SimBackend::unit_time());
+    let model = justitia::cost::CostModel::MemoryCentric;
+    let makespan = engine.run_suite(&suite, |a| model.agent_cost(a));
+    let m = &engine.metrics;
+    let mut tasks = Vec::new();
+    for a in &suite.agents {
+        for t in a.tasks.iter().chain(a.expand_spawns().iter()) {
+            tasks.push((
+                t.id.agent,
+                t.id.index,
+                m.task_admit_time(t.id),
+                m.task_complete_time(t.id),
+            ));
+        }
+    }
+    (
+        makespan,
+        m.jcts(),
+        tasks,
+        [
+            m.iterations(),
+            m.swap_out_count(),
+            m.recompute_count(),
+            m.prefill_tokens_executed(),
+            m.prefix_hits(),
+            m.spawned_tasks(),
+            m.prefill_stalls(),
+        ],
+    )
+}
+
+/// Property 1: `StaticBudget` with chunked prefill ON is bit-identical on
+/// the tick loop and the event core — the trait seam never moves a bit on
+/// the default policy. (The scenario's `event_core` draw is overridden so
+/// every case compares both cores directly.)
+#[test]
+fn prop_static_budget_identity_across_cores() {
+    let cfg = PropConfig { cases: prop_cases(20), seed: 0xba7c_0001, max_shrink_steps: 60 };
+    check(&cfg, &BatchStrategy, |sc| {
+        for policy in ALL_POLICIES {
+            let mut tick_sc = sc.clone();
+            tick_sc.event_core = false;
+            let mut event_sc = sc.clone();
+            event_sc.event_core = true;
+            let tick = replay(&tick_sc, policy, true, BatchPolicyKind::Static);
+            let event = replay(&event_sc, policy, true, BatchPolicyKind::Static);
+            if tick != event {
+                return Err(format!(
+                    "{policy:?}: StaticBudget diverged across cores \
+                     (tick counters {:?} vs event {:?}, makespan {} vs {})",
+                    tick.3, event.3, tick.0, event.0
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property 2: `FixedSplit` with a zero decode reservation replays the
+/// `StaticBudget` schedule exactly — the reservation arithmetic is a pure
+/// no-op at reserve 0, on whichever core the scenario drew.
+#[test]
+fn prop_fixed_split_zero_reserve_is_static() {
+    let cfg = PropConfig { cases: prop_cases(20), seed: 0xba7c_0002, max_shrink_steps: 60 };
+    check(&cfg, &BatchStrategy, |sc| {
+        for policy in ALL_POLICIES {
+            let st = replay(sc, policy, true, BatchPolicyKind::Static);
+            let fs = replay(sc, policy, true, BatchPolicyKind::FixedSplit);
+            if st != fs {
+                return Err(format!(
+                    "{policy:?}: FixedSplit(reserve=0) diverged from Static \
+                     (static counters {:?} vs fixed-split {:?})",
+                    st.3, fs.3
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property 3: without chunked prefill there is no budget to split, so every
+/// batch policy — the closed-loop `FairBatching` included — is inert and
+/// replays the `StaticBudget` schedule bit-for-bit.
+#[test]
+fn prop_all_policies_inert_without_chunking() {
+    let cfg = PropConfig { cases: prop_cases(15), seed: 0xba7c_0003, max_shrink_steps: 40 };
+    check(&cfg, &BatchStrategy, |sc| {
+        for policy in ALL_POLICIES {
+            let base = replay(sc, policy, false, BatchPolicyKind::Static);
+            for batch in [BatchPolicyKind::FixedSplit, BatchPolicyKind::FairBatching] {
+                let other = replay(sc, policy, false, batch);
+                if base != other {
+                    return Err(format!(
+                        "{policy:?}: {batch:?} not inert without chunking \
+                         (static counters {:?} vs {:?})",
+                        base.3, other.3
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn prop_cases(default: usize) -> usize {
+    std::env::var("JUSTITIA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
