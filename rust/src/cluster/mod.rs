@@ -119,6 +119,7 @@ impl<B: ExecBackend> ClusterDispatcher<B> {
     /// Number of agents placed on each replica so far.
     pub fn assignment_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.replicas.len()];
+        // simlint::allow(unordered-iter): commutative per-replica count, order-independent
         for &r in self.assignments.values() {
             counts[r] += 1;
         }

@@ -213,6 +213,7 @@ impl Placer {
     pub(crate) fn on_replica_down(&mut self, r: usize) {
         self.eligible[r] = false;
         self.loads[r] = ReplicaLoad::new(self.capacity_tokens, self.rate_scale);
+        // simlint::allow(unordered-iter): pure per-entry predicate; resulting map state is order-independent
         self.family_home.retain(|_, home| *home != r);
     }
 

@@ -296,7 +296,7 @@ impl FairBatching {
             return 0.0;
         }
         let mut v = self.itl_window[..self.itl_len].to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let idx = ((self.itl_len as f64) * 0.99).ceil() as usize;
         v[idx.clamp(1, self.itl_len) - 1]
     }

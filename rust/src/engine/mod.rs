@@ -32,7 +32,7 @@ use arena::Arena;
 use batch::{BatchConfig, BatchObs, BatchPolicy};
 use event::{EngineEvent, EventKind, EventQueue};
 use exec::{ExecBackend, IterationBatch};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// Runtime state of one admitted sequence.
 #[derive(Debug, Clone)]
@@ -93,7 +93,9 @@ struct SeqState {
 struct AgentState {
     spec: AgentSpec,
     /// Tasks discovered at runtime via the spawn rule, keyed by task index.
-    spawned: HashMap<u32, InferenceSpec>,
+    /// BTreeMap (not HashMap): recovery snapshots iterate it in index order
+    /// (simlint R1 / DESIGN.md §16).
+    spawned: BTreeMap<u32, InferenceSpec>,
     /// Unfinished-dependency count per *static* task (indexed by task
     /// index; spawned tasks depend only on their just-completed parent and
     /// are released immediately, so they never enter this table).
@@ -135,7 +137,7 @@ impl AgentState {
             predicted_cost,
             observed_cost: 0.0,
             true_total,
-            spawned: HashMap::new(),
+            spawned: BTreeMap::new(),
             dep_remaining,
             dependents,
             spec,
@@ -352,6 +354,7 @@ impl<B: ExecBackend> Engine<B> {
         } else {
             0.0
         };
+        // simlint::allow(ambient-nondet): observation-only overhead clock (Fig. 12); never read back into sim state
         let t0 = std::time::Instant::now();
         self.scheduler.on_agent_arrival(
             &AgentInfo { id, arrival, cost: predicted_cost, critical_path },
@@ -425,6 +428,7 @@ impl<B: ExecBackend> Engine<B> {
     /// One engine iteration: admission, then a model step, then bookkeeping.
     /// Returns the iteration's wall time in engine seconds.
     pub fn step(&mut self) -> f64 {
+        // simlint::allow(ambient-nondet): observation-only overhead clock (Fig. 12); never read back into sim state
         let t0 = std::time::Instant::now();
         let mut swap_in_tokens = 0u32;
         let mut swap_out_tokens = 0u32;
@@ -1032,7 +1036,7 @@ impl<B: ExecBackend> Engine<B> {
         if let Some(v) = self.scheduler.virtual_time(self.clock) {
             let mut ids: Vec<AgentId> = self
                 .agents
-                .iter()
+                .iter() // simlint::allow(unordered-iter): ids collected then sorted ascending below
                 .filter(|(_, a)| a.tasks_remaining > 0)
                 .map(|(&id, _)| id)
                 .collect();
@@ -1626,7 +1630,7 @@ impl<B: ExecBackend> Engine<B> {
         }
         let mut ids: Vec<AgentId> = self
             .agents
-            .iter()
+            .iter() // simlint::allow(unordered-iter): ids collected then sorted ascending below
             .filter(|(_, st)| st.tasks_remaining > 0)
             .map(|(&id, _)| id)
             .collect();
@@ -1634,9 +1638,9 @@ impl<B: ExecBackend> Engine<B> {
         let mut out = Vec::with_capacity(ids.len());
         for id in ids {
             let st = &self.agents[&id];
-            // Surviving tasks in original-index order: statics, then spawned.
-            let mut spawned: Vec<&InferenceSpec> = st.spawned.values().collect();
-            spawned.sort_by_key(|t| t.id.index);
+            // Surviving tasks in original-index order: statics, then spawned
+            // (a BTreeMap keyed by index, so `.values()` is already sorted).
+            let spawned: Vec<&InferenceSpec> = st.spawned.values().collect();
             let survivors: Vec<&InferenceSpec> = st
                 .spec
                 .tasks
@@ -1903,15 +1907,14 @@ fn serve_delta_decode(model: CostModel, prompt: u32, generated: u32) -> f64 {
 }
 
 fn per_agent_tokens(running: &[SeqState], kv: &BlockAllocator) -> Vec<(AgentId, u64)> {
-    let mut by_agent: HashMap<AgentId, u64> = HashMap::new();
+    // BTreeMap so the fold drains in ascending agent order directly.
+    let mut by_agent: BTreeMap<AgentId, u64> = BTreeMap::new();
     for s in running {
         if let Some(t) = kv.seq_tokens(s.id) {
             *by_agent.entry(s.id.agent).or_insert(0) += t as u64;
         }
     }
-    let mut v: Vec<_> = by_agent.into_iter().collect();
-    v.sort();
-    v
+    by_agent.into_iter().collect()
 }
 
 #[cfg(test)]

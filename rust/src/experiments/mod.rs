@@ -237,7 +237,7 @@ pub fn fig8(n_agents: usize, density: f64, seed: u64) -> Fig8Result {
         let s = fairness_summary(&r);
         summaries.push((p, s.frac_not_delayed, s.worst_delay_pct, s.avg_delay_pct_of_delayed));
         let mut rs: Vec<f64> = r.into_iter().map(|(_, x)| x).collect();
-        rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rs.sort_by(|a, b| a.total_cmp(b));
         ratios.push((p, rs));
     }
     Fig8Result { ratios, summaries }

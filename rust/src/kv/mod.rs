@@ -552,6 +552,7 @@ impl BlockAllocator {
         }
         let mut dev_tokens = 0u64;
         let mut swap_tokens = 0u64;
+        // simlint::allow(unordered-iter): invariant check accumulates commutatively; first-error text is diagnostic-only
         for (id, a) in &self.seqs {
             match a.residence {
                 KvResidence::Device => {

@@ -547,7 +547,7 @@ impl RunMetrics {
     pub fn jcts(&self) -> Vec<(AgentId, f64)> {
         let mut v: Vec<(AgentId, f64)> = self
             .complete
-            .iter()
+            .iter() // simlint::allow(unordered-iter): collected then re-sorted by agent id below
             .filter_map(|(a, &c)| self.arrival.get(a).map(|&ar| (*a, c - ar)))
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
@@ -612,9 +612,9 @@ impl RunMetrics {
         self.prefill_stalls += other.prefill_stalls;
         self.correction_error.merge(&other.correction_error);
         self.correction_trace.extend(other.correction_trace.iter().copied());
-        self.correction_trace.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        self.correction_trace.sort_by(|a, b| a.0.total_cmp(&b.0));
         self.kv_samples.extend(other.kv_samples.iter().cloned());
-        self.kv_samples.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        self.kv_samples.sort_by(|a, b| a.t.total_cmp(&b.t));
         self.replicas_lost += other.replicas_lost;
         self.recovered_agents += other.recovered_agents;
         self.rescheduled_tokens += other.rescheduled_tokens;

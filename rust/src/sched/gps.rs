@@ -38,7 +38,7 @@ pub fn run(
     rate_scale: f64,
 ) -> GpsResult {
     let mut sorted: Vec<_> = agents.to_vec();
-    sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    sorted.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
     let mut vc = VirtualClock::new(capacity_tokens, rate_scale);
     let mut tags = HashMap::new();
     for (id, arrival, cost) in &sorted {
@@ -98,9 +98,9 @@ mod tests {
             vec![(1, 0.0, 300.0), (2, 0.0, 100.0), (3, 1.0, 50.0), (4, 2.0, 400.0)];
         let r = run(&agents, 50, 1.0);
         let mut by_tag: Vec<_> = agents.iter().map(|(id, ..)| *id).collect();
-        by_tag.sort_by(|a, b| r.tags[a].partial_cmp(&r.tags[b]).unwrap());
+        by_tag.sort_by(|a, b| r.tags[a].total_cmp(&r.tags[b]));
         let mut by_finish: Vec<_> = agents.iter().map(|(id, ..)| *id).collect();
-        by_finish.sort_by(|a, b| r.finish[a].partial_cmp(&r.finish[b]).unwrap());
+        by_finish.sort_by(|a, b| r.finish[a].total_cmp(&r.finish[b]));
         assert_eq!(by_tag, by_finish);
     }
 

@@ -243,8 +243,12 @@ impl AgentQueues {
         self.queues.get(&agent).map(|q| !q.is_empty()).unwrap_or(false)
     }
 
-    /// Agents that currently have waiting tasks.
+    /// Agents that currently have waiting tasks. Iteration order is the
+    /// hash map's and therefore unspecified: every consumer must reduce it
+    /// order-independently (`min_agent_by` takes a total-order minimum with
+    /// an agent-id tie-break; policy `pick`s collect-and-sort first).
     pub fn waiting_agents(&self) -> impl Iterator<Item = AgentId> + '_ {
+        // simlint::allow(unordered-iter): consumers reduce order-independently; min_agent_by ties broken by agent id
         self.queues.iter().filter(|(_, q)| !q.is_empty()).map(|(&a, _)| a)
     }
 
@@ -277,7 +281,7 @@ impl AgentQueues {
     pub fn min_agent_by<F: FnMut(AgentId) -> f64>(&self, mut key: F) -> Option<AgentId> {
         self.waiting_agents()
             .map(|a| (a, key(a)))
-            .min_by(|(a1, k1), (a2, k2)| k1.partial_cmp(k2).unwrap().then(a1.cmp(a2)))
+            .min_by(|(a1, k1), (a2, k2)| k1.total_cmp(k2).then(a1.cmp(a2)))
             .map(|(a, _)| a)
     }
 }
@@ -296,7 +300,11 @@ impl PartialOrd for OrdF64 {
 
 impl Ord for OrdF64 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).expect("NaN scheduling key")
+        // IEEE-754 total order: for the NaN-free keys documented above this
+        // agrees with the old panicking comparison (except -0.0 < 0.0), and
+        // a NaN that slips through sorts to a fixed slot instead of aborting
+        // a replay mid-run.
+        self.0.total_cmp(&other.0)
     }
 }
 

@@ -43,7 +43,7 @@ impl Vtc {
 
     fn min_active_counter(&self) -> f64 {
         self.active
-            .iter()
+            .iter() // simlint::allow(unordered-iter): commutative min fold, order-independent
             .filter_map(|a| self.counters.get(a))
             .fold(f64::INFINITY, |m, &c| m.min(c))
     }

@@ -118,7 +118,7 @@ impl Bencher {
             iters += 1;
         }
         let mut sorted = samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let s = Summary {
             name: name.to_string(),
             iters,

@@ -260,7 +260,7 @@ mod tests {
         assert!((mean - 0.787).abs() < 0.02, "mean={mean}");
         // Positive skew: median < mean.
         let mut sorted = xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         assert!(sorted[n / 2] < mean);
     }
 

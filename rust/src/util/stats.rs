@@ -23,7 +23,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, q)
 }
 
@@ -58,7 +58,7 @@ pub fn cdf_points(xs: &[f64], n_points: usize) -> Vec<(f64, f64)> {
         return Vec::new();
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     let mut out = Vec::with_capacity(n_points);
     for i in 0..n_points {

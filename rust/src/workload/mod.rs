@@ -326,7 +326,7 @@ pub struct Suite {
 impl Suite {
     /// Sort by arrival and re-index ids to 0..n.
     pub fn new(mut agents: Vec<AgentSpec>) -> Self {
-        agents.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        agents.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         // Re-index so ids follow arrival order (stable, deterministic).
         // Dependency TaskIds are intra-agent, so they are re-stamped too.
         for (i, a) in agents.iter_mut().enumerate() {

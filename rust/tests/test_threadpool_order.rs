@@ -1,0 +1,122 @@
+//! Model-checks the assumption `test_parallel_replica_determinism` relies
+//! on but never exercises adversarially: `ThreadPool::map()` returns
+//! results in *input* order no matter what order the workers *complete* in.
+//!
+//! Loom can't model-check this pool (std `mpsc` isn't loom-instrumented and
+//! the crate builds with zero dependencies), so the schedule space is
+//! driven explicitly instead: with 4 items resident on 4 workers, a
+//! condvar turnstile forces the items to complete in each of the 4! = 24
+//! possible orders, which covers every completion-order interleaving the
+//! reinstall loop `out[i] = Some(r)` can observe for 4 in-flight results.
+//! CI additionally runs this file under ThreadSanitizer (ci.yml `tsan`
+//! job) to check the same code for data races rather than orderings.
+
+use justitia::util::threadpool::ThreadPool;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// All permutations of `0..n` in lexicographic order (deterministic).
+fn permutations(n: usize) -> Vec<Vec<usize>> {
+    if n == 0 {
+        return vec![vec![]];
+    }
+    let mut out = Vec::new();
+    for rest in permutations(n - 1) {
+        for slot in 0..=rest.len() {
+            let mut p = rest.clone();
+            p.insert(slot, n - 1);
+            out.push(p);
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Run `n` items on `n` workers, forcing completion order `perm`
+/// (`perm[k]` = the item that completes k-th), and return `map()`'s output.
+fn forced_order_map(n: usize, perm: &[usize]) -> Vec<usize> {
+    // rank[item] = position in the forced completion order.
+    let mut rank = vec![0usize; n];
+    for (k, &item) in perm.iter().enumerate() {
+        rank[item] = k;
+    }
+    let turnstile = Arc::new((Mutex::new(0usize), Condvar::new()));
+    let pool = ThreadPool::new(n);
+    let items: Vec<(usize, usize)> = (0..n).map(|i| (i, rank[i])).collect();
+    let ts = Arc::clone(&turnstile);
+    pool.map(items, move |(i, my_rank)| {
+        let (lock, cv) = &*ts;
+        let mut turn = lock.lock().unwrap();
+        // Every item occupies its own worker, so all n closures reach this
+        // wait concurrently; release them strictly in rank order.
+        while *turn != my_rank {
+            let (t, timeout) = cv
+                .wait_timeout(turn, Duration::from_secs(30))
+                .expect("turnstile poisoned");
+            turn = t;
+            assert!(!timeout.timed_out(), "turnstile deadlock: item {i} rank {my_rank}");
+        }
+        *turn += 1;
+        cv.notify_all();
+        // The result encodes the item id; map() must slot it at index i
+        // regardless of when it was produced.
+        i * 100 + 7
+    })
+}
+
+#[test]
+fn map_order_preserved_under_all_24_completion_orders() {
+    let expected: Vec<usize> = (0..4).map(|i| i * 100 + 7).collect();
+    let perms = permutations(4);
+    assert_eq!(perms.len(), 24);
+    for perm in perms {
+        let out = forced_order_map(4, &perm);
+        assert_eq!(out, expected, "input order broken under completion order {perm:?}");
+    }
+}
+
+#[test]
+fn map_order_preserved_under_reverse_completion_stress() {
+    // 8 workers, 8 resident items forced to complete in exact reverse
+    // order — the adversarial extreme — repeated to catch flaky reinstalls.
+    let n = 8;
+    let reverse: Vec<usize> = (0..n).rev().collect();
+    let expected: Vec<usize> = (0..n).map(|i| i * 100 + 7).collect();
+    for _ in 0..20 {
+        assert_eq!(forced_order_map(n, &reverse), expected);
+    }
+}
+
+#[test]
+fn map_results_invariant_in_worker_count() {
+    // The same workload must produce the same output vector whatever the
+    // pool width — including width 1 (fully sequential) and widths where
+    // items queue behind one another.
+    let items: Vec<u64> = (0..200).collect();
+    let expected: Vec<u64> = items.iter().map(|&x| x.wrapping_mul(x) ^ 0x5a).collect();
+    for workers in [1, 2, 3, 5, 8, 16] {
+        let pool = ThreadPool::new(workers);
+        let out = pool.map(items.clone(), |x| x.wrapping_mul(x) ^ 0x5a);
+        assert_eq!(out, expected, "workers = {workers}");
+    }
+}
+
+#[test]
+fn map_heavy_contention_many_more_items_than_workers() {
+    // Items vastly outnumber workers, with unequal per-item work so fast
+    // items routinely finish before slow earlier ones.
+    let pool = ThreadPool::new(4);
+    let items: Vec<u32> = (0..500).collect();
+    let out = pool.map(items, |x| {
+        // Unequal deterministic work: later items spin less.
+        let spins = (500 - x) as u64 * 37;
+        let mut acc = x as u64;
+        for i in 0..spins {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        (x, acc)
+    });
+    for (i, (x, _)) in out.iter().enumerate() {
+        assert_eq!(*x, i as u32, "slot {i} holds item {x}");
+    }
+}

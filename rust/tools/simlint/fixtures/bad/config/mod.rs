@@ -1,0 +1,18 @@
+// Fixture: knob defaults that drift from the committed manifest.
+pub struct Config {
+    pub fairness: bool,
+    pub max_batch: u32,
+    pub new_feature: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            // Mismatch: manifest pins `false`.
+            fairness: true,
+            max_batch: 64,
+            // Unregistered: not present in the manifest at all.
+            new_feature: false,
+        }
+    }
+}

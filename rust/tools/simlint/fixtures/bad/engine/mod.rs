@@ -1,0 +1,39 @@
+// Fixture: known-bad core module. Every site here must be flagged.
+use std::collections::{HashMap, HashSet};
+
+pub struct Engine {
+    agents: HashMap<u32, u64>,
+    live: HashSet<u32>,
+}
+
+impl Engine {
+    // R1: `for` over an unordered map field.
+    pub fn total(&self) -> u64 {
+        let mut sum = 0;
+        for (_, v) in &self.agents {
+            sum += v;
+        }
+        sum
+    }
+
+    // R1: `.keys()` / `.iter()` on unordered collections.
+    pub fn ids(&self) -> Vec<u32> {
+        self.agents.keys().copied().collect()
+    }
+
+    pub fn live_ids(&self) -> Vec<u32> {
+        self.live.iter().copied().collect()
+    }
+
+    // R1: `.drain()` on a local bound to a hash collection.
+    pub fn flush(&mut self) -> usize {
+        let mut pending: HashMap<u32, u64> = HashMap::new();
+        std::mem::swap(&mut pending, &mut self.agents);
+        pending.drain().count()
+    }
+
+    // R2: wall-clock read on the replay path.
+    pub fn stamp(&self) -> std::time::Instant {
+        std::time::Instant::now()
+    }
+}

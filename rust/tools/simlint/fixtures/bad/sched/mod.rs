@@ -1,0 +1,24 @@
+// Fixture: NaN-unsafe ordering and bad annotations. All flagged.
+
+// R3: `.partial_cmp(..).unwrap()` in a sort key.
+pub fn pick(keys: &mut Vec<(u32, f64)>) {
+    keys.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+}
+
+// Annotation with an empty justification: itself a violation.
+pub fn pick_min(keys: &[(u32, f64)]) -> Option<u32> {
+    keys.iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()) // simlint::allow(nan-order)
+        .map(|(id, _)| *id)
+}
+
+// R2: unseeded RNG and ambient environment reads in core.
+pub fn jitter() -> u64 {
+    let _ = std::env::var("SEED");
+    let mut rng = thread_rng();
+    rng.next_u64()
+}
+
+// Stale annotation: suppresses nothing on the next code line.
+// simlint::allow(unordered-iter): nothing unordered here
+pub fn noop() {}

@@ -1,0 +1,16 @@
+// Fixture: knob defaults in lockstep with the manifest.
+pub struct Config {
+    pub fairness: bool,
+    pub max_batch: u32,
+    pub backend: Backend,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            fairness: false,
+            max_batch: 64,
+            backend: Backend::default(),
+        }
+    }
+}

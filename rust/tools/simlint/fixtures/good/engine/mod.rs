@@ -1,0 +1,42 @@
+// Fixture: determinism-clean core module. Nothing here may be flagged.
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Engine {
+    // Ordered map: iteration is deterministic, no annotation needed.
+    agents: BTreeMap<u32, u64>,
+    // Hash map is fine as long as access stays keyed.
+    cache: HashMap<u32, u64>,
+    names: Vec<String>,
+}
+
+impl Engine {
+    pub fn total(&self) -> u64 {
+        let mut sum = 0;
+        for (_, v) in &self.agents {
+            sum += v;
+        }
+        sum
+    }
+
+    // Keyed access into a hash map: not iteration, not flagged.
+    pub fn lookup(&self, id: u32) -> Option<u64> {
+        self.cache.get(&id).copied()
+    }
+
+    // Vec iteration: ordered, not flagged even though the method names match.
+    pub fn all_names(&self) -> Vec<String> {
+        self.names.iter().cloned().collect()
+    }
+
+    // Hash iteration folded through a commutative reduction, justified
+    // by an own-line annotation covering the next code line.
+    pub fn cache_total(&self) -> u64 {
+        // simlint::allow(unordered-iter): commutative sum, order-independent
+        self.cache.values().sum()
+    }
+
+    // Same-line annotation form.
+    pub fn cache_len_hint(&self) -> usize {
+        self.cache.keys().count() // simlint::allow(unordered-iter): count only, order-free
+    }
+}

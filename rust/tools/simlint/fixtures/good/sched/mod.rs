@@ -1,0 +1,20 @@
+// Fixture: NaN-safe float ordering — the patterns the contract requires.
+
+pub fn pick(keys: &mut Vec<(u32, f64)>) {
+    // Total order over floats: no panic, NaN has a defined slot.
+    keys.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+}
+
+#[derive(PartialEq, PartialOrd)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+pub fn pick_min(keys: &[(u32, f64)]) -> Option<u32> {
+    keys.iter().min_by_key(|(id, k)| (OrdF64(*k), *id)).map(|(id, _)| *id)
+}

@@ -1,0 +1,27 @@
+// Fixture: util/ is exempt by path — wall-clock and env reads here are the
+// whole point of a benchmarking module and must NOT be flagged.
+use std::collections::HashMap;
+
+pub fn time_it<F: FnOnce()>(f: F) -> std::time::Duration {
+    let t0 = std::time::Instant::now();
+    f();
+    t0.elapsed()
+}
+
+pub fn workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+pub fn env_override() -> Option<String> {
+    std::env::var("BENCH_FILTER").ok()
+}
+
+pub fn histogram(xs: &[u64]) -> HashMap<u64, usize> {
+    let mut h = HashMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0) += 1;
+    }
+    // Unordered iteration outside core scope: allowed by path.
+    let _ = h.iter().count();
+    h
+}

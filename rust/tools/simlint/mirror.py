@@ -1,0 +1,548 @@
+#!/usr/bin/env python3
+"""Reference mirror of the simlint rule semantics (DESIGN.md §16).
+
+The Rust binary (`cargo run -p simlint`) is authoritative; this mirror
+re-implements the lexer and the four rules line-for-line so the contract can
+be audited in environments without a cargo toolchain (e.g. minimal review
+containers), and doubles as an executable specification: if the two ever
+disagree on this tree, one of them has a bug.
+
+Usage:
+    python3 mirror.py [--root DIR] [--manifest FILE|--no-manifest]
+
+Exit status mirrors the binary: 0 clean, 1 violations.
+"""
+
+import os
+import sys
+
+RULES = ("unordered-iter", "ambient-nondet", "nan-order", "knob-default")
+CORE_PREFIXES = ("engine/", "sched/", "cluster/", "kv/", "prefix/", "cost/", "metrics/")
+ITER_METHODS = {
+    "iter", "iter_mut", "keys", "values", "values_mut", "drain",
+    "into_iter", "into_keys", "into_values", "retain",
+}
+
+IDENT, PUNCT, LIT, LIFETIME = "Ident", "Punct", "Lit", "Lifetime"
+
+
+# ---------------------------------------------------------------- lexer ----
+
+def parse_annotation(comment, line):
+    t = comment.lstrip("/!").lstrip()
+    if not t.startswith("simlint::allow("):
+        return None
+    rest = t[len("simlint::allow("):]
+    close = rest.find(")")
+    if close < 0:
+        return None
+    rule = rest[:close].strip()
+    after = rest[close + 1:]
+    reason = after[1:].strip() if after.startswith(":") else ""
+    return {"line": line, "own_line": False, "rule": rule, "reason": reason}
+
+
+def char_literal_end(b, i):
+    j = i + 1
+    if j >= len(b):
+        return None
+    if b[j] == "\\":
+        j += 2
+        if j <= len(b) and j - 1 < len(b) and b[j - 1] == "u" and j < len(b) and b[j] == "{":
+            while j < len(b) and b[j] != "}":
+                j += 1
+            j += 1
+    elif b[j] == "'":
+        return None
+    else:
+        j += 1
+    return j + 1 if (j < len(b) and b[j] == "'") else None
+
+
+def is_raw_or_byte_string(b, i):
+    j = i
+    if b[j] == "b":
+        j += 1
+    if j < len(b) and b[j] == "r":
+        j += 1
+    while j < len(b) and b[j] == "#":
+        j += 1
+    return (
+        j > i
+        and j < len(b)
+        and b[j] == '"'
+        and (b[i] == "r" or (b[i] == "b" and j > i + 1) or (i + 1 < len(b) and b[i + 1] == '"'))
+    )
+
+
+def lex(src):
+    b = src
+    toks, annotations = [], []
+    code_lines = set()
+    i, line = 0, 1
+    n = len(b)
+    while i < n:
+        c = b[i]
+        if c == "\n":
+            line += 1
+            i += 1
+        elif c.isspace():
+            i += 1
+        elif c == "/" and i + 1 < n and b[i + 1] == "/":
+            j = i + 2
+            while j < n and b[j] != "\n":
+                j += 1
+            ann = parse_annotation(b[i + 2:j], line)
+            if ann:
+                annotations.append(ann)
+            i = j
+        elif c == "/" and i + 1 < n and b[i + 1] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if b[i] == "\n":
+                    line += 1
+                    i += 1
+                elif b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+        elif c == '"':
+            l0 = line
+            i += 1
+            while i < n:
+                if b[i] == "\\":
+                    i += 2
+                elif b[i] == "\n":
+                    line += 1
+                    i += 1
+                elif b[i] == '"':
+                    i += 1
+                    break
+                else:
+                    i += 1
+            code_lines.add(l0)
+            toks.append(('""', l0, LIT))
+        elif c in "rb" and is_raw_or_byte_string(b, i):
+            l0 = line
+            if b[i] == "b":
+                i += 1
+            raw = i < n and b[i] == "r"
+            if raw:
+                i += 1
+            hashes = 0
+            while i < n and b[i] == "#":
+                hashes += 1
+                i += 1
+            i += 1  # opening quote
+            while i < n:
+                if b[i] == "\n":
+                    line += 1
+                    i += 1
+                elif b[i] == "\\" and not raw:
+                    i += 2
+                elif b[i] == '"':
+                    j, h = i + 1, 0
+                    while h < hashes and j < n and b[j] == "#":
+                        h += 1
+                        j += 1
+                    if h == hashes:
+                        i = j
+                        break
+                    i += 1
+                else:
+                    i += 1
+            code_lines.add(l0)
+            toks.append(('""', l0, LIT))
+        elif c == "'":
+            l0 = line
+            end = char_literal_end(b, i)
+            if end is not None:
+                i = end
+                code_lines.add(l0)
+                toks.append(("' '", l0, LIT))
+            else:
+                j = i + 1
+                while j < n and (b[j].isalnum() or b[j] == "_"):
+                    j += 1
+                code_lines.add(l0)
+                toks.append((b[i:j], l0, LIFETIME))
+                i = j
+        elif c.isalpha() or c == "_":
+            l0 = line
+            j = i
+            while j < n and (b[j].isalnum() or b[j] == "_"):
+                j += 1
+            code_lines.add(l0)
+            toks.append((b[i:j], l0, IDENT))
+            i = j
+        elif c.isdigit():
+            l0 = line
+            j = i
+            while j < n:
+                d = b[j]
+                if d.isalnum() or d == "_":
+                    j += 1
+                elif d == "." and j + 1 < n and b[j + 1] != "." and not b[j + 1].isalpha():
+                    j += 1
+                elif d in "+-" and j > i and b[j - 1] in "eE":
+                    j += 1
+                else:
+                    break
+            code_lines.add(l0)
+            toks.append((b[i:j], l0, LIT))
+            i = j
+        else:
+            code_lines.add(line)
+            toks.append((c, line, PUNCT))
+            i += 1
+    for ann in annotations:
+        ann["own_line"] = ann["line"] not in code_lines
+    return toks, annotations, code_lines
+
+
+def next_code_line(toks, line):
+    for (_, l, _) in toks:
+        if l > line:
+            return l
+    return None
+
+
+# ---------------------------------------------------------------- rules ----
+
+def is_core(rel):
+    return rel.startswith(CORE_PREFIXES)
+
+
+def collect_hash_names(toks):
+    names = set()
+    for i, (text, _, kind) in enumerate(toks):
+        if kind != IDENT or text not in ("HashMap", "HashSet"):
+            continue
+        if i + 1 >= len(toks) or toks[i + 1][0] != "<":
+            continue
+        j = i
+        while j >= 2 and toks[j - 1][0] == ":" and toks[j - 2][0] == ":":
+            if j >= 3 and toks[j - 3][2] == IDENT:
+                j -= 3
+            else:
+                break
+        while j >= 1 and (toks[j - 1][0] in ("&", "mut") or toks[j - 1][2] == LIFETIME):
+            j -= 1
+        if j >= 2 and toks[j - 1][0] == ":" and toks[j - 2][2] == IDENT:
+            name = toks[j - 2][0]
+            before = toks[j - 3][0] if j >= 3 else None
+            if name != "self" and before != ":":
+                names.add(name)
+    i = 0
+    while i < len(toks):
+        if toks[i][2] == IDENT and toks[i][0] == "let":
+            j = i + 1
+            if j < len(toks) and toks[j][0] == "mut":
+                j += 1
+            if j < len(toks) and toks[j][2] == IDENT:
+                k, depth, has_hash = j + 1, 0, False
+                while k < len(toks):
+                    t = toks[k][0]
+                    if t in "([{":
+                        depth += 1
+                    elif t in ")]}":
+                        depth -= 1
+                    elif t == ";" and depth <= 0:
+                        break
+                    elif t in ("HashMap", "HashSet"):
+                        has_hash = True
+                    k += 1
+                if has_hash:
+                    names.add(toks[j][0])
+                i = k
+                continue
+        i += 1
+    return names
+
+
+def r1(rel, toks, names):
+    out = []
+    for i, (text, _, kind) in enumerate(toks):
+        if kind == IDENT and text in names:
+            prev = toks[i - 1][0] if i >= 1 else None
+            if prev == ".":
+                recv_ok = i >= 2 and toks[i - 2][0] == "self"
+            elif prev == ":":
+                recv_ok = False
+            else:
+                recv_ok = True
+            if (
+                recv_ok
+                and i + 3 < len(toks)
+                and toks[i + 1][0] == "."
+                and toks[i + 3][0] == "("
+                and toks[i + 2][0] in ITER_METHODS
+            ):
+                m = toks[i + 2]
+                out.append((rel, m[1], "unordered-iter",
+                            "iteration (`.%s()`) over unordered `%s`" % (m[0], text)))
+        if kind == IDENT and text == "for":
+            j, depth, found_in = i + 1, 0, None
+            while j < len(toks) and j < i + 64:
+                t = toks[j][0]
+                if t in "([":
+                    depth += 1
+                elif t in ")]":
+                    depth -= 1
+                elif t in "{;":
+                    break
+                elif t == "in" and depth == 0 and toks[j][2] == IDENT:
+                    found_in = j
+                    break
+                j += 1
+            if found_in is None:
+                continue
+            j = found_in + 1
+            while j < len(toks) and toks[j][0] in ("&", "mut"):
+                j += 1
+            if (
+                j + 1 < len(toks)
+                and toks[j][0] == "self"
+                and toks[j + 1][0] == "."
+            ):
+                name_idx, brace_idx = j + 2, j + 3
+            else:
+                name_idx, brace_idx = j, j + 1
+            if brace_idx < len(toks):
+                nm = toks[name_idx]
+                if nm[2] == IDENT and nm[0] in names and toks[brace_idx][0] == "{":
+                    out.append((rel, nm[1], "unordered-iter",
+                                "`for` over unordered `%s`" % nm[0]))
+    return out
+
+
+def r2(rel, toks):
+    out = []
+
+    def path2(i, a, b2):
+        return (
+            toks[i][0] == a
+            and i + 3 < len(toks)
+            and toks[i + 1][0] == ":"
+            and toks[i + 2][0] == ":"
+            and toks[i + 3][0] == b2
+        )
+
+    for i, (text, line, kind) in enumerate(toks):
+        if kind != IDENT:
+            continue
+        if path2(i, "Instant", "now"):
+            out.append((rel, line, "ambient-nondet", "`Instant::now()`"))
+        elif text == "SystemTime":
+            out.append((rel, line, "ambient-nondet", "`SystemTime`"))
+        elif text in ("thread_rng", "ThreadRng"):
+            out.append((rel, line, "ambient-nondet", "`thread_rng`"))
+        elif (
+            text == "env"
+            and i + 3 < len(toks)
+            and toks[i + 1][0] == ":"
+            and toks[i + 2][0] == ":"
+            and toks[i + 3][0] in ("var", "vars", "var_os", "vars_os", "args", "args_os", "temp_dir")
+        ):
+            out.append((rel, line, "ambient-nondet", "`std::env` read"))
+        elif path2(i, "thread", "current"):
+            out.append((rel, line, "ambient-nondet", "`thread::current()`"))
+        elif text == "available_parallelism":
+            out.append((rel, line, "ambient-nondet", "`available_parallelism()`"))
+    return out
+
+
+def r3(rel, toks):
+    out = []
+    for i, (text, line, kind) in enumerate(toks):
+        if (
+            kind == IDENT
+            and text == "partial_cmp"
+            and i >= 1
+            and toks[i - 1][0] == "."
+            and i + 1 < len(toks)
+            and toks[i + 1][0] == "("
+        ):
+            out.append((rel, line, "nan-order", "`.partial_cmp(..)` call"))
+    return out
+
+
+def apply_annotations(rel, candidates, toks, annotations):
+    violations, allowed, stale = [], [], []
+    used = set()
+    for c in candidates:
+        hit = None
+        for ai, a in enumerate(annotations):
+            if a["rule"] == c[2] and (
+                a["line"] == c[1]
+                or (a["own_line"] and next_code_line(toks, a["line"]) == c[1])
+            ):
+                hit = ai
+                break
+        if hit is not None:
+            used.add(hit)
+            a = annotations[hit]
+            if a["reason"] == "":
+                violations.append((rel, a["line"], c[2], "allow annotation has no justification"))
+            else:
+                allowed.append(c)
+        else:
+            violations.append(c)
+    for ai, a in enumerate(annotations):
+        if ai not in used and a["rule"] in RULES:
+            stale.append((rel, a["line"], "stale-allow",
+                          "simlint::allow(%s) suppresses nothing" % a["rule"]))
+        elif a["rule"] not in RULES:
+            violations.append((rel, a["line"], "unknown-rule",
+                               "unknown simlint rule `%s`" % a["rule"]))
+    return violations, allowed, stale
+
+
+def lint_file(rel, src):
+    toks, annotations, _ = lex(src)
+    candidates = []
+    if is_core(rel):
+        names = collect_hash_names(toks)
+        candidates += r1(rel, toks, names)
+        candidates += r2(rel, toks)
+    candidates += r3(rel, toks)
+    return apply_annotations(rel, candidates, toks, annotations)
+
+
+def default_impl_fields(toks):
+    i = 0
+    n = len(toks)
+    while i + 3 < n:
+        if (toks[i][0], toks[i + 1][0], toks[i + 2][0], toks[i + 3][0]) == ("impl", "Default", "for", "Config"):
+            break
+        i += 1
+    if i + 3 >= n:
+        return None
+    while i + 1 < n and not (toks[i][0] == "fn" and toks[i + 1][0] == "default"):
+        i += 1
+    while i + 1 < n and not (toks[i][0] == "Config" and toks[i + 1][0] == "{"):
+        i += 1
+    if i + 1 >= n:
+        return None
+    fields = []
+    j = i + 2
+    while j < n and toks[j][0] != "}":
+        if toks[j][2] != IDENT or j + 1 >= n or toks[j + 1][0] != ":":
+            return None
+        name, line = toks[j][0], toks[j][1]
+        k, depth, value = j + 2, 0, ""
+        while k < n:
+            t = toks[k][0]
+            if t in "([{":
+                depth += 1
+            elif t in ")]":
+                depth -= 1
+            elif t == "}":
+                if depth > 0:
+                    depth -= 1
+                else:
+                    break
+            elif t == "," and depth == 0:
+                break
+            value += t
+            k += 1
+        fields.append((name, value, line))
+        j = k + 1 if (k < n and toks[k][0] == ",") else k
+    return fields
+
+
+def r4(rel, config_src, manifest_rel, manifest_src):
+    out = []
+    toks, _, _ = lex(config_src)
+    manifest = []
+    for ln, raw in enumerate(manifest_src.splitlines()):
+        t = raw.strip()
+        if not t or t.startswith("#"):
+            continue
+        if "=" in t:
+            k, _, v = t.partition("=")
+            manifest.append((k.strip(), "".join(v.split()), ln + 1))
+        else:
+            out.append((manifest_rel, ln + 1, "knob-default", "manifest line is not `field = value`"))
+    fields = default_impl_fields(toks)
+    if fields is None:
+        out.append((rel, 1, "knob-default", "no `impl Default for Config` literal found"))
+        return out
+    for name, value, line in fields:
+        pin = next((w for k, w, _ in manifest if k == name), None)
+        if pin is None:
+            out.append((rel, line, "knob-default", "knob `%s` is not registered" % name))
+        elif pin != value:
+            out.append((rel, line, "knob-default",
+                        "default for knob `%s` is `%s` but manifest pins `%s`" % (name, value, pin)))
+    for k, _, ln in manifest:
+        if not any(f[0] == k for f in fields):
+            out.append((manifest_rel, ln, "knob-default", "manifest registers knob `%s` with no field" % k))
+    return out
+
+
+# ----------------------------------------------------------------- main ----
+
+def run(root, manifest):
+    files = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for f in sorted(filenames):
+            if f.endswith(".rs"):
+                files.append(os.path.join(dirpath, f))
+    files.sort()
+    violations, allowed, stale = [], [], []
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        v, a, s = lint_file(rel, src)
+        violations += v
+        allowed += a
+        stale += s
+    if manifest:
+        cfg = os.path.join(root, "config/mod.rs")
+        if os.path.exists(cfg):
+            with open(cfg, encoding="utf-8") as fh:
+                config_src = fh.read()
+            with open(manifest, encoding="utf-8") as fh:
+                manifest_src = fh.read()
+            violations += r4("config/mod.rs", config_src, os.path.basename(manifest), manifest_src)
+    violations.sort(key=lambda d: (d[0], d[1]))
+    stale.sort(key=lambda d: (d[0], d[1]))
+    return len(files), violations, allowed, stale
+
+
+def main(argv):
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.join(here, "../../src")
+    manifest = os.path.join(here, "knob_defaults.manifest")
+    args = list(argv)
+    while args:
+        a = args.pop(0)
+        if a == "--root":
+            root = args.pop(0)
+        elif a == "--manifest":
+            manifest = args.pop(0)
+        elif a == "--no-manifest":
+            manifest = None
+        else:
+            print("unknown argument %r" % a, file=sys.stderr)
+            return 2
+    nfiles, violations, allowed, stale = run(root, manifest)
+    for f, l, r, m in violations:
+        print("%s:%s: simlint[%s] %s" % (f, l, r, m))
+    for f, l, r, m in stale:
+        print("%s:%s: simlint[%s] %s (warning)" % (f, l, r, m))
+    print("simlint: %d files, %d violations, %d allowed (annotated), %d stale annotations"
+          % (nfiles, len(violations), len(allowed), len(stale)))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

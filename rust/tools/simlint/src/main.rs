@@ -1,0 +1,71 @@
+//! simlint CLI: `cargo run -p simlint [-- --root <src> --manifest <file>]`.
+//!
+//! Exits 0 when the tree has zero unannotated violations, 1 otherwise
+//! (stale annotations warn but do not fail the gate; an `--strict-stale`
+//! flag upgrades them). Defaults resolve relative to this crate's own
+//! manifest dir, so the bare invocation from anywhere in the workspace
+//! lints `rust/src` against the committed knob manifest.
+
+use simlint::{run, Options};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut manifest: Option<PathBuf> = None;
+    let mut skip_manifest = false;
+    let mut strict_stale = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--manifest" => manifest = args.next().map(PathBuf::from),
+            "--no-manifest" => skip_manifest = true,
+            "--strict-stale" => strict_stale = true,
+            "--help" | "-h" => {
+                println!(
+                    "simlint — determinism-contract lint (DESIGN.md §16)\n\n\
+                     USAGE: simlint [--root DIR] [--manifest FILE | --no-manifest] [--strict-stale]\n\n\
+                     Rules: unordered-iter, ambient-nondet, nan-order, knob-default.\n\
+                     Suppress a site with `// simlint::allow(<rule>): <justification>`."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("simlint: unknown argument `{other}` (try --help)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let tool_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let root = root.unwrap_or_else(|| tool_dir.join("../../src"));
+    let manifest = if skip_manifest {
+        None
+    } else {
+        Some(manifest.unwrap_or_else(|| tool_dir.join("knob_defaults.manifest")))
+    };
+
+    let report = match run(&Options { root, manifest }) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("simlint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    for d in &report.violations {
+        println!("{}", d.render());
+    }
+    for d in &report.stale {
+        println!("{} (warning)", d.render());
+    }
+    println!("{}", report.summary());
+
+    if report.violations.is_empty() && (!strict_stale || report.stale.is_empty()) {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,663 @@
+//! The four determinism-contract rules (DESIGN.md §16).
+//!
+//! All rules operate on the token stream produced by [`crate::lexer`]:
+//!
+//! * **R1 `unordered-iter`** — no iteration over `HashMap` / `HashSet` in
+//!   the core modules (`engine/`, `sched/`, `cluster/`, `kv/`, `prefix/`,
+//!   `cost/`, `metrics/`). Hash-bound names are collected from field /
+//!   parameter type ascriptions (`name: HashMap<...>`) and `let` statements
+//!   whose initializer mentions a hash collection; iteration is any of
+//!   `.iter() .iter_mut() .keys() .values() .values_mut() .drain()
+//!   .into_iter() .into_keys() .into_values() .retain()` on such a name
+//!   (as `self.name` or a bare local), or a `for _ in [&]name` loop.
+//! * **R2 `ambient-nondet`** — no ambient nondeterminism in core modules:
+//!   `Instant::now`, `SystemTime`, `thread_rng`, `std::env` reads,
+//!   `thread::current` (thread-id inspection), `available_parallelism`.
+//!   Paths outside the core list (`util/`, `server/`, ...) are exempt.
+//! * **R3 `nan-order`** — no `.partial_cmp(..)` call sites anywhere in the
+//!   tree: float ordering must go through `f64::total_cmp` or the `OrdF64`
+//!   wrapper, both of which are total (a `fn partial_cmp` *definition*
+//!   delegating to a total order is fine and is not flagged).
+//! * **R4 `knob-default`** — every field default in `impl Default for
+//!   Config` must byte-match (modulo whitespace) the committed
+//!   `knob_defaults.manifest`, mechanizing the "new subsystems default
+//!   OFF = bit-identical" policy: adding or flipping a knob forces a
+//!   reviewed manifest diff.
+//!
+//! Any site can be accepted with an inline
+//! `// simlint::allow(<rule>): <justification>` comment on the same line
+//! or on a comment-only line directly above (the annotation then covers
+//! the next code line). An annotation with an empty justification is
+//! itself a violation; one that suppresses nothing is reported as stale.
+
+use crate::lexer::{lex, Annotation, Lexed, Tok, TokKind};
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// Rule identifiers, also the annotation keys.
+pub const RULES: [&str; 4] = ["unordered-iter", "ambient-nondet", "nan-order", "knob-default"];
+
+/// Core-module path prefixes (relative to the source root) covered by R1
+/// and R2. `util/` (incl. `util::bench`), `server/`, `workload/`,
+/// `predictor/`, `runtime/`, `trace/`, `experiments/` and the binary
+/// front-ends are exempt by omission: they run off the replay path or are
+/// proven observation-only (`prop_trace_identity`).
+pub const CORE_PREFIXES: [&str; 7] =
+    ["engine/", "sched/", "cluster/", "kv/", "prefix/", "cost/", "metrics/"];
+
+/// One diagnostic.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    /// Path relative to the scanned root.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// Rule id.
+    pub rule: &'static str,
+    /// Human-readable message.
+    pub msg: String,
+}
+
+impl Diag {
+    /// `file:line: simlint[rule] msg` — the format CI greps for.
+    pub fn render(&self) -> String {
+        format!("{}:{}: simlint[{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Outcome of linting one file (R1–R3).
+#[derive(Debug, Default)]
+pub struct FileReport {
+    /// Unsuppressed violations.
+    pub violations: Vec<Diag>,
+    /// Sites suppressed by a justified annotation.
+    pub allowed: Vec<Diag>,
+    /// Annotations that matched no candidate site.
+    pub stale: Vec<Diag>,
+}
+
+fn is_core(rel: &str) -> bool {
+    CORE_PREFIXES.iter().any(|p| rel.starts_with(p))
+}
+
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// Lint one file's source (rules R1–R3). `rel` is the path relative to the
+/// source root, with `/` separators.
+pub fn lint_file(rel: &str, src: &str) -> FileReport {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let mut candidates: Vec<Diag> = Vec::new();
+
+    if is_core(rel) {
+        let hash_names = collect_hash_names(toks);
+        candidates.extend(r1_unordered_iter(rel, toks, &hash_names));
+        candidates.extend(r2_ambient_nondet(rel, toks));
+    }
+    candidates.extend(r3_nan_order(rel, toks));
+
+    apply_annotations(rel, candidates, &lexed)
+}
+
+/// Split candidate violations into suppressed and live using the file's
+/// annotations; flag empty justifications and stale annotations.
+fn apply_annotations(rel: &str, candidates: Vec<Diag>, lexed: &Lexed) -> FileReport {
+    let mut rep = FileReport::default();
+    let mut used: BTreeSet<usize> = BTreeSet::new();
+    for c in candidates {
+        match find_annotation(&lexed.annotations, lexed, c.line, c.rule) {
+            Some(ai) => {
+                used.insert(ai);
+                let ann = &lexed.annotations[ai];
+                if ann.reason.is_empty() {
+                    rep.violations.push(Diag {
+                        file: rel.into(),
+                        line: ann.line,
+                        rule: c.rule,
+                        msg: format!(
+                            "allow annotation for `{}` has no justification — write the reason after the colon",
+                            c.rule
+                        ),
+                    });
+                } else {
+                    rep.allowed.push(c);
+                }
+            }
+            None => rep.violations.push(c),
+        }
+    }
+    for (i, ann) in lexed.annotations.iter().enumerate() {
+        if !used.contains(&i) && RULES.contains(&ann.rule.as_str()) {
+            rep.stale.push(Diag {
+                file: rel.into(),
+                line: ann.line,
+                rule: "stale-allow",
+                msg: format!("simlint::allow({}) suppresses nothing on this line", ann.rule),
+            });
+        } else if !RULES.contains(&ann.rule.as_str()) {
+            rep.violations.push(Diag {
+                file: rel.into(),
+                line: ann.line,
+                rule: "unknown-rule",
+                msg: format!("unknown simlint rule `{}` in allow annotation", ann.rule),
+            });
+        }
+    }
+    rep
+}
+
+/// An annotation covers a candidate at `line` when it names the same rule
+/// and sits on that line, or sits alone on a comment line whose next code
+/// line is `line`.
+fn find_annotation(
+    annotations: &[Annotation],
+    lexed: &Lexed,
+    line: u32,
+    rule: &str,
+) -> Option<usize> {
+    annotations.iter().position(|a| {
+        a.rule == rule
+            && (a.line == line || (a.own_line && lexed.next_code_line(a.line) == Some(line)))
+    })
+}
+
+/// Collect identifiers bound to `HashMap` / `HashSet` in this file:
+/// `name: [&[mut]] [std::collections::]Hash{Map,Set}<...>` type ascriptions
+/// (struct fields, fn params, typed lets) plus `let [mut] name = ...` whose
+/// statement mentions a hash type. Single-file and name-based by design —
+/// see DESIGN.md §16 for the soundness discussion.
+fn collect_hash_names(toks: &[Tok]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident
+            || (toks[i].text != "HashMap" && toks[i].text != "HashSet")
+        {
+            continue;
+        }
+        if toks.get(i + 1).map(|t| t.text.as_str()) != Some("<") {
+            continue;
+        }
+        // Walk backwards over the optional path / reference decoration to
+        // find a `name :` ascription.
+        let mut j = i;
+        while j >= 2 && toks[j - 1].text == ":" && toks[j - 2].text == ":" {
+            // `std :: collections ::` or any path prefix
+            if j >= 3 && toks[j - 3].kind == TokKind::Ident {
+                j -= 3;
+            } else {
+                break;
+            }
+        }
+        while j >= 1
+            && (toks[j - 1].text == "&"
+                || toks[j - 1].text == "mut"
+                || toks[j - 1].kind == TokKind::Lifetime)
+        {
+            j -= 1;
+        }
+        if j >= 2 && toks[j - 1].text == ":" && toks[j - 2].kind == TokKind::Ident {
+            // Exclude `::` (path segment) and `struct X:` style false hits.
+            let name = &toks[j - 2].text;
+            let before = j.checked_sub(3).map(|k| toks[k].text.as_str());
+            if name != "self" && before != Some(":") {
+                names.insert(name.clone());
+            }
+        }
+    }
+    // `let [mut] name` statements whose initializer mentions a hash type.
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Ident && toks[i].text == "let" {
+            let mut j = i + 1;
+            if toks.get(j).map(|t| t.text.as_str()) == Some("mut") {
+                j += 1;
+            }
+            if let Some(name_tok) = toks.get(j) {
+                if name_tok.kind == TokKind::Ident {
+                    // Scan the statement (to `;` at depth 0) for a hash type.
+                    let mut k = j + 1;
+                    let mut depth = 0i32;
+                    let mut has_hash = false;
+                    while k < toks.len() {
+                        let t = &toks[k].text;
+                        match t.as_str() {
+                            "(" | "[" | "{" => depth += 1,
+                            ")" | "]" | "}" => depth -= 1,
+                            ";" if depth <= 0 => break,
+                            "HashMap" | "HashSet" => has_hash = true,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    if has_hash {
+                        names.insert(name_tok.text.clone());
+                    }
+                    i = k;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    names
+}
+
+/// R1: iteration over hash-ordered collections in core modules.
+fn r1_unordered_iter(rel: &str, toks: &[Tok], names: &BTreeSet<String>) -> Vec<Diag> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        // `[self.]name . method (` with method in the iteration set.
+        if toks[i].kind == TokKind::Ident && names.contains(&toks[i].text) {
+            let recv_ok = match i.checked_sub(1).map(|k| toks[k].text.as_str()) {
+                Some(".") => i >= 2 && toks[i - 2].text == "self",
+                Some(":") => false, // path segment `x::name`
+                _ => true, // bare local
+            };
+            if recv_ok
+                && toks.get(i + 1).map(|t| t.text.as_str()) == Some(".")
+                && toks.get(i + 3).map(|t| t.text.as_str()) == Some("(")
+            {
+                if let Some(m) = toks.get(i + 2) {
+                    if ITER_METHODS.contains(&m.text.as_str()) {
+                        out.push(Diag {
+                            file: rel.into(),
+                            line: m.line,
+                            rule: "unordered-iter",
+                            msg: format!(
+                                "iteration (`.{}()`) over unordered `{}` — use BTreeMap/BTreeSet, collect-and-sort, or justify with simlint::allow(unordered-iter)",
+                                m.text, toks[i].text
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        // `for pat in [&][mut] [self.]name {`
+        if toks[i].kind == TokKind::Ident && toks[i].text == "for" {
+            let mut j = i + 1;
+            let mut depth = 0i32;
+            let mut found_in = None;
+            while j < toks.len() && j < i + 64 {
+                match toks[j].text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" | ";" => break,
+                    "in" if depth == 0 && toks[j].kind == TokKind::Ident => {
+                        found_in = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let Some(mut j) = found_in.map(|j| j + 1) else { continue };
+            while j < toks.len() && (toks[j].text == "&" || toks[j].text == "mut") {
+                j += 1;
+            }
+            // Receiver: `self . name` or bare `name`, directly followed by
+            // `{` (a method-call tail is already covered above).
+            let (name_idx, brace_idx) = if toks.get(j).map(|t| t.text.as_str()) == Some("self")
+                && toks.get(j + 1).map(|t| t.text.as_str()) == Some(".")
+            {
+                (j + 2, j + 3)
+            } else {
+                (j, j + 1)
+            };
+            if let (Some(name), Some(brace)) = (toks.get(name_idx), toks.get(brace_idx)) {
+                if name.kind == TokKind::Ident
+                    && names.contains(&name.text)
+                    && brace.text == "{"
+                {
+                    out.push(Diag {
+                        file: rel.into(),
+                        line: name.line,
+                        rule: "unordered-iter",
+                        msg: format!(
+                            "`for` over unordered `{}` — use BTreeMap/BTreeSet, collect-and-sort, or justify with simlint::allow(unordered-iter)",
+                            name.text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// R2: ambient nondeterminism in core modules.
+fn r2_ambient_nondet(rel: &str, toks: &[Tok]) -> Vec<Diag> {
+    let mut out = Vec::new();
+    let flag = |out: &mut Vec<Diag>, line: u32, what: &str| {
+        out.push(Diag {
+            file: rel.into(),
+            line,
+            rule: "ambient-nondet",
+            msg: format!(
+                "{what} in a core module — core state must be a pure function of config + seed; move it off the replay path or justify with simlint::allow(ambient-nondet)"
+            ),
+        });
+    };
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let path2 = |a: &str, b: &str| {
+            toks[i].text == a
+                && toks.get(i + 1).map(|t| t.text.as_str()) == Some(":")
+                && toks.get(i + 2).map(|t| t.text.as_str()) == Some(":")
+                && toks.get(i + 3).map(|t| t.text.as_str()) == Some(b)
+        };
+        if path2("Instant", "now") {
+            flag(&mut out, toks[i].line, "`Instant::now()` (wall-clock read)");
+        } else if toks[i].text == "SystemTime" {
+            flag(&mut out, toks[i].line, "`SystemTime` (wall-clock read)");
+        } else if toks[i].text == "thread_rng" || toks[i].text == "ThreadRng" {
+            flag(&mut out, toks[i].line, "`thread_rng` (unseeded RNG)");
+        } else if toks[i].text == "env"
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some(":")
+            && toks.get(i + 2).map(|t| t.text.as_str()) == Some(":")
+            && matches!(
+                toks.get(i + 3).map(|t| t.text.as_str()),
+                Some("var" | "vars" | "var_os" | "vars_os" | "args" | "args_os" | "temp_dir")
+            )
+        {
+            flag(&mut out, toks[i].line, "`std::env` read (ambient environment)");
+        } else if path2("thread", "current") {
+            flag(&mut out, toks[i].line, "`thread::current()` (thread-id inspection)");
+        } else if toks[i].text == "available_parallelism" {
+            flag(&mut out, toks[i].line, "`available_parallelism()` (machine-dependent width)");
+        }
+    }
+    out
+}
+
+/// R3: NaN-unsafe float ordering — any `.partial_cmp(` call site.
+fn r3_nan_order(rel: &str, toks: &[Tok]) -> Vec<Diag> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind == TokKind::Ident
+            && toks[i].text == "partial_cmp"
+            && i >= 1
+            && toks[i - 1].text == "."
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some("(")
+        {
+            out.push(Diag {
+                file: rel.into(),
+                line: toks[i].line,
+                rule: "nan-order",
+                msg: "`.partial_cmp(..)` call — NaN-unsafe ordering; use `f64::total_cmp` or `OrdF64` (both total), or justify with simlint::allow(nan-order)".into(),
+            });
+        }
+    }
+    out
+}
+
+/// R4: knob-default audit. Parses `impl Default for Config` in the config
+/// source and cross-checks every `field: value` against the manifest
+/// (`field = value` lines, `#` comments; values compared with all
+/// whitespace removed). Returns violations only — R4 sites are not
+/// annotatable; the manifest *is* the allow-list.
+pub fn r4_knob_defaults(rel: &str, config_src: &str, manifest_rel: &str, manifest_src: &str) -> Vec<Diag> {
+    let mut out = Vec::new();
+    let lexed = lex(config_src);
+    let toks = &lexed.toks;
+
+    // Manifest: `name = value` per line.
+    let mut manifest: Vec<(String, String, u32)> = Vec::new();
+    for (ln, line) in manifest_src.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        match t.split_once('=') {
+            Some((k, v)) => manifest.push((
+                k.trim().to_string(),
+                v.chars().filter(|c| !c.is_whitespace()).collect(),
+                ln as u32 + 1,
+            )),
+            None => out.push(Diag {
+                file: manifest_rel.into(),
+                line: ln as u32 + 1,
+                rule: "knob-default",
+                msg: format!("manifest line is not `field = value`: `{t}`"),
+            }),
+        }
+    }
+
+    let Some(fields) = default_impl_fields(toks) else {
+        out.push(Diag {
+            file: rel.into(),
+            line: 1,
+            rule: "knob-default",
+            msg: "no `impl Default for Config` with a `Config { .. }` literal found".into(),
+        });
+        return out;
+    };
+
+    for (name, value, line) in &fields {
+        match manifest.iter().find(|(k, _, _)| k == name) {
+            None => out.push(Diag {
+                file: rel.into(),
+                line: *line,
+                rule: "knob-default",
+                msg: format!(
+                    "knob `{name}` is not registered in {manifest_rel} — new knobs must default to the OFF/sentinel state and be recorded there (ROADMAP: \"new subsystems default OFF = bit-identical\")"
+                ),
+            }),
+            Some((_, want, _)) if want != value => out.push(Diag {
+                file: rel.into(),
+                line: *line,
+                rule: "knob-default",
+                msg: format!(
+                    "default for knob `{name}` is `{value}` but {manifest_rel} pins `{want}` — changing a default breaks replay identity; update the manifest in the same reviewed diff if intended"
+                ),
+            }),
+            _ => {}
+        }
+    }
+    for (name, _, ln) in &manifest {
+        if !fields.iter().any(|(f, _, _)| f == name) {
+            out.push(Diag {
+                file: manifest_rel.into(),
+                line: *ln,
+                rule: "knob-default",
+                msg: format!("manifest registers knob `{name}` but `impl Default for Config` has no such field"),
+            });
+        }
+    }
+    out
+}
+
+/// Extract `field: value` pairs (value = token texts joined without
+/// whitespace) from the `Config { ... }` literal inside
+/// `impl Default for Config`.
+fn default_impl_fields(toks: &[Tok]) -> Option<Vec<(String, String, u32)>> {
+    let mut i = 0;
+    // Find `impl Default for Config`.
+    while i + 3 < toks.len() {
+        if toks[i].text == "impl"
+            && toks[i + 1].text == "Default"
+            && toks[i + 2].text == "for"
+            && toks[i + 3].text == "Config"
+        {
+            break;
+        }
+        i += 1;
+    }
+    if i + 3 >= toks.len() {
+        return None;
+    }
+    // Skip past `fn default` so the impl header's own `Config {` is not
+    // mistaken for the struct literal.
+    while i + 1 < toks.len() && !(toks[i].text == "fn" && toks[i + 1].text == "default") {
+        i += 1;
+    }
+    // Find the `Config {` literal inside the body.
+    while i + 1 < toks.len() && !(toks[i].text == "Config" && toks[i + 1].text == "{") {
+        i += 1;
+    }
+    if i + 1 >= toks.len() {
+        return None;
+    }
+    let mut fields = Vec::new();
+    let mut j = i + 2;
+    while j < toks.len() && toks[j].text != "}" {
+        // field name
+        if toks[j].kind != TokKind::Ident || toks.get(j + 1).map(|t| t.text.as_str()) != Some(":")
+        {
+            return None;
+        }
+        let name = toks[j].text.clone();
+        let line = toks[j].line;
+        let mut k = j + 2;
+        let mut depth = 0i32;
+        let mut value = String::new();
+        while k < toks.len() {
+            let t = &toks[k].text;
+            match t.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "}" if depth > 0 => depth -= 1,
+                "}" => break,
+                "," if depth == 0 => break,
+                _ => {}
+            }
+            if !(t == "," && depth == 0) && !(t == "}" && depth < 0) {
+                value.push_str(t);
+            }
+            k += 1;
+        }
+        fields.push((name, value, line));
+        j = if toks.get(k).map(|t| t.text.as_str()) == Some(",") { k + 1 } else { k };
+    }
+    Some(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_scope() {
+        assert!(is_core("engine/mod.rs"));
+        assert!(is_core("sched/gps.rs"));
+        assert!(is_core("metrics/mod.rs"));
+        assert!(!is_core("util/bench.rs"));
+        assert!(!is_core("server/http.rs"));
+        assert!(!is_core("main.rs"));
+    }
+
+    #[test]
+    fn r1_flags_self_field_and_bare_local() {
+        let src = "struct S { m: HashMap<u32, u32> }\nimpl S { fn f(&self) { for x in self.m.values() { } } }\nfn g() { let mut s = HashSet::new(); s.iter(); }\n";
+        let rep = lint_file("engine/x.rs", src);
+        assert_eq!(rep.violations.iter().filter(|d| d.rule == "unordered-iter").count(), 2);
+    }
+
+    #[test]
+    fn r1_keyed_access_is_fine_and_vec_fields_are_not_flagged() {
+        let src = "struct S { m: HashMap<u32, u32>, v: Vec<u32> }\nimpl S { fn f(&self) -> Option<&u32> { for x in self.v.iter() { }\n self.m.get(&1) } }\n";
+        let rep = lint_file("kv/x.rs", src);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn r1_for_loop_over_ref() {
+        let src = "struct S { seqs: HashMap<u32, u32> }\nimpl S { fn f(&self) { for (a, b) in &self.seqs { } } }\n";
+        let rep = lint_file("kv/x.rs", src);
+        assert_eq!(rep.violations.len(), 1);
+        assert_eq!(rep.violations[0].line, 2);
+    }
+
+    #[test]
+    fn r1_not_applied_outside_core() {
+        let src = "fn g() { let mut s = HashSet::new(); s.iter(); }\n";
+        assert!(lint_file("util/x.rs", src).violations.is_empty());
+    }
+
+    #[test]
+    fn r1_other_receiver_not_flagged() {
+        // `suite.agents` where `agents` names a hash field of a *different*
+        // struct: the `x.name` receiver form is only matched for `self`.
+        let src = "struct S { agents: HashMap<u32, u32> }\nfn f(suite: &Suite) { for a in suite.agents.iter() { } }\n";
+        assert!(lint_file("engine/x.rs", src).violations.is_empty());
+    }
+
+    #[test]
+    fn annotation_same_line_and_own_line() {
+        let src = "struct S { m: HashMap<u32, u32> }\nimpl S { fn f(&self) {\n// simlint::allow(unordered-iter): re-sorted by key below\nfor x in &self.m { }\nself.m.keys(); // simlint::allow(unordered-iter): min over total order\n} }\n";
+        let rep = lint_file("engine/x.rs", src);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.allowed.len(), 2);
+        assert!(rep.stale.is_empty());
+    }
+
+    #[test]
+    fn empty_reason_is_a_violation() {
+        let src = "fn f(x: f64, y: f64) { x.partial_cmp(&y); } // simlint::allow(nan-order)\n";
+        let rep = lint_file("util/x.rs", src);
+        assert_eq!(rep.violations.len(), 1);
+        assert!(rep.violations[0].msg.contains("no justification"));
+    }
+
+    #[test]
+    fn stale_annotation_reported() {
+        let src = "// simlint::allow(ambient-nondet): nothing here\nfn f() {}\n";
+        let rep = lint_file("engine/x.rs", src);
+        assert!(rep.violations.is_empty());
+        assert_eq!(rep.stale.len(), 1);
+    }
+
+    #[test]
+    fn r2_patterns() {
+        let src = "fn f() { let t = std::time::Instant::now(); let e = std::env::var(\"X\"); let id = thread::current().id(); }\n";
+        let rep = lint_file("cluster/x.rs", src);
+        assert_eq!(rep.violations.len(), 3);
+        assert!(lint_file("server/x.rs", src).violations.is_empty());
+    }
+
+    #[test]
+    fn r3_call_flagged_definition_not() {
+        let src = "impl PartialOrd for X { fn partial_cmp(&self, o: &Self) -> Option<Ordering> { Some(self.cmp(o)) } }\nfn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let rep = lint_file("workload/x.rs", src);
+        assert_eq!(rep.violations.len(), 1);
+        assert_eq!(rep.violations[0].line, 2);
+    }
+
+    #[test]
+    fn r4_matches_and_mismatches() {
+        let cfg = "pub struct Config { pub a: bool, pub b: u32 }\nimpl Default for Config {\n fn default() -> Self {\n Config { a: false, b: Foo::bar(1, 2), }\n }\n}\n";
+        let ok = "# comment\na = false\nb = Foo::bar(1, 2)\n";
+        assert!(r4_knob_defaults("config/mod.rs", cfg, "m", ok).is_empty());
+        let drift = "a = true\nb = Foo::bar(1, 2)\n";
+        let d = r4_knob_defaults("config/mod.rs", cfg, "m", drift);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].msg.contains("knob `a`"));
+        let missing = "a = false\n";
+        let d = r4_knob_defaults("config/mod.rs", cfg, "m", missing);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].msg.contains("not registered"));
+        let extra = "a = false\nb = Foo::bar(1, 2)\nzz = 1\n";
+        let d = r4_knob_defaults("config/mod.rs", cfg, "m", extra);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].msg.contains("no such field"));
+    }
+
+    #[test]
+    fn r4_nested_braces_in_value() {
+        let cfg = "impl Default for Config { fn default() -> Self { Config { w: WorkloadConfig { n: 3 }, b: false } } }\n";
+        let ok = "w = WorkloadConfig { n: 3 }\nb = false\n";
+        assert!(r4_knob_defaults("config/mod.rs", cfg, "m", ok).is_empty(), "nested literal");
+    }
+}

@@ -25,9 +25,15 @@ while [ $# -gt 0 ]; do
 done
 
 echo "== Kick Tires: Justitia reproduction =="
-echo "[1/12] cargo build --release"
+echo "[1/13] cargo build --release"
 (cd rust && cargo build --release)
 BIN="$ROOT/rust/target/release/justitia"
+
+echo "[2/13] simlint determinism-contract gate"
+# Blocking, same as CI: unannotated unordered iteration / ambient
+# nondeterminism / NaN-unsafe ordering / knob-default drift all fail the
+# run. The last line is the summary CI also surfaces.
+(cd rust && cargo run -q -p simlint)
 
 rm -rf out
 mkdir -p out
@@ -36,46 +42,46 @@ cd "$ROOT"
 rm -rf results
 mkdir -p results
 
-echo "[2/12] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
+echo "[3/13] paper experiments (figs 3, 7-13, table 1) — $AGENTS agents, seed $SEED"
 "$BIN" experiment all --agents "$AGENTS" --seed "$SEED"
 
-echo "[3/12] cluster scale-out sweep (1/2/4/8 replicas x 4 placements)"
+echo "[4/13] cluster scale-out sweep (1/2/4/8 replicas x 4 placements)"
 "$BIN" cluster --agents "$AGENTS" --seed "$SEED"
 mv results/cluster.txt results/cluster_sweep.txt
 
-echo "[4/12] prefix-sharing sweep (radix-tree KV dedup off vs on)"
+echo "[5/13] prefix-sharing sweep (radix-tree KV dedup off vs on)"
 # `experiment all` above already ran the sweep with these arguments; only
 # re-run if its JSON artifact is somehow missing.
 if [ ! -f results/prefix_sharing.json ]; then
   "$BIN" experiment prefix_sharing --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[5/12] DAG-agents sweep (map-reduce/tree/pipeline, correction off vs on)"
+echo "[6/13] DAG-agents sweep (map-reduce/tree/pipeline, correction off vs on)"
 if [ ! -f results/dag_agents.json ]; then
   "$BIN" experiment dag_agents --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[6/12] chunked-prefill sweep (chunk x budget vs atomic admission)"
+echo "[7/13] chunked-prefill sweep (chunk x budget vs atomic admission)"
 if [ ! -f results/chunked_prefill.json ]; then
   "$BIN" experiment chunked_prefill --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[7/12] fairbatching sweep (batch policy x scheduler x workload)"
+echo "[8/13] fairbatching sweep (batch policy x scheduler x workload)"
 if [ ! -f results/fairbatching.json ]; then
   "$BIN" experiment fairbatching --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[8/12] preemption sweep (host tier x mode x victim)"
+echo "[9/13] preemption sweep (host tier x mode x victim)"
 if [ ! -f results/preemption.json ]; then
   "$BIN" experiment preemption --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[9/12] elasticity sweep (replica churn vs schedule-aware oracle)"
+echo "[10/13] elasticity sweep (replica churn vs schedule-aware oracle)"
 if [ ! -f results/elasticity.json ]; then
   "$BIN" experiment elasticity --agents "$AGENTS" --seed "$SEED"
 fi
 
-echo "[10/12] event-core mega scale-out (1M agents, 64 replicas, all cores)"
+echo "[11/13] event-core mega scale-out (1M agents, 64 replicas, all cores)"
 # ISSUE 6 acceptance: the event-driven core + parallel replica simulation
 # push cluster_scaleout to 1M agents across 64 replicas inside the smoke
 # budget. Single job => run_suite_parallel hands every core to the replicas.
@@ -83,13 +89,13 @@ echo "[10/12] event-core mega scale-out (1M agents, 64 replicas, all cores)"
   --event-core --density 3 --seed "$SEED"
 mv results/cluster.txt results/cluster_mega.txt
 
-echo "[11/12] engine hot-path bench (events/sec at 10k and 100k agents)"
+echo "[12/13] engine hot-path bench (events/sec at 10k and 100k agents)"
 # No JUSTITIA_BENCH_BASELINE here: the regression gate runs in the dedicated
 # bench-engine CI job; the smoke run only emits the artifact.
 (cd rust && cargo bench --bench bench_engine_hot_path)
 cp rust/results/BENCH_engine.json results/BENCH_engine.json
 
-echo "[12/12] collecting outputs under out/"
+echo "[13/13] collecting outputs under out/"
 # Fail LOUDLY when an expected artifact is missing (a bare `cp` miss used to
 # surface only later as a confusing CI upload error), naming the artifact
 # and listing what the run actually produced.
